@@ -1,0 +1,72 @@
+//! Capacity planner: given a model, context length, and rack constraints,
+//! report the §III-C / §VI-B tradeoffs a deployment engineer needs —
+//! max simultaneous users, instances per rack, power, and latency.
+//!
+//!   cargo run --release --example capacity_planner [-- <model>]
+
+use npserve::config::hw::RackSpec;
+use npserve::config::models::{find_model, model_zoo};
+use npserve::mapper::map_model;
+use npserve::power::deployment_power;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or("granite-3.3-8b".into());
+    let Some(model) = find_model(&name) else {
+        eprintln!("unknown model `{name}`; known:");
+        for m in model_zoo() {
+            eprintln!("  {}", m.name);
+        }
+        std::process::exit(1);
+    };
+    let rack = RackSpec::northpole_42u();
+    let chip = rack.node.card.chip;
+
+    println!(
+        "capacity plan: {} ({}), rack budget {:.1} kW air-cooled",
+        model.name, model.precision, rack.power_budget_w / 1e3
+    );
+    println!(
+        "| context | users | cards | nodes | inst/rack | ITL est | rack tok/s | power kW | of budget |"
+    );
+    println!(
+        "|---------|-------|-------|-------|-----------|---------|------------|----------|-----------|"
+    );
+    for ctx in [1024u32, 2048, 4096, 8192] {
+        // binary-search the largest mini-batch whose whole KV cache fits
+        // on-chip at this context (the §III-C constraint); the mapping
+        // shape itself depends on the batch, so each probe remaps
+        let (mut lo, mut hi) = (0u32, 257u32);
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if map_model(&model, mid, ctx, &rack).is_ok() {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let users = lo;
+        if users == 0 {
+            println!("| {ctx:>7} |     0 | context too large for on-chip KV |");
+            continue;
+        }
+        let map = map_model(&model, users, ctx, &rack).unwrap();
+        let inst = map.instances_per_rack(&rack);
+        let itl = map.itl_estimate(&chip, ctx / 2);
+        let rack_tps = inst as f64 * users as f64 / itl;
+        let p = deployment_power(
+            &rack,
+            (inst * map.n_nodes(&rack)).min(rack.nodes_per_rack),
+            inst * map.n_cards(),
+            1.0,
+        );
+        println!(
+            "| {ctx:>7} | {users:>5} | {:>5} | {:>5} | {inst:>9} | {:>6.2}ms | {rack_tps:>10.0} | {:>8.1} | {:>8.0}% |",
+            map.n_cards(),
+            map.n_nodes(&rack),
+            itl * 1e3,
+            p.total_w / 1e3,
+            100.0 * p.budget_fraction(),
+        );
+    }
+    println!("\n(the 2k/28 vs 4k/14 rows for granite-3.3-8b are Table II's configurations)");
+}

@@ -1,0 +1,50 @@
+//! Quickstart: map a model to NorthPole hardware, estimate its serving
+//! characteristics, and run a short simulated workload.
+//!
+//!   cargo run --release --example quickstart
+
+use npserve::config::hw::RackSpec;
+use npserve::config::models::find_model;
+use npserve::mapper::map_model;
+use npserve::metrics::BatchMetrics;
+use npserve::pipeline::sim::{simulate, SimConfig};
+use npserve::util::stats::fmt_time;
+
+fn main() {
+    let rack = RackSpec::northpole_42u();
+    let chip = rack.node.card.chip;
+
+    // 1. pick a model from the zoo (Table I) and map it
+    let model = find_model("granite-3.3-8b").expect("model zoo");
+    let mapping = map_model(&model, 28, 2048, &rack).expect("fits on-chip");
+    println!("== mapping (Fig 2) ==");
+    println!(
+        "{}: {} cards over {} nodes ({} pipeline stages, micro-batch {})",
+        model.name,
+        mapping.n_cards(),
+        mapping.n_nodes(&rack),
+        mapping.stages.len(),
+        mapping.micro_batch
+    );
+    println!(
+        "instances per rack: {} | max users: {} @2k, {} @4k",
+        mapping.instances_per_rack(&rack),
+        mapping.max_users(&chip, 2048),
+        mapping.max_users(&chip, 4096)
+    );
+
+    // 2. analytic latency estimate from the calibrated chip model
+    println!("\n== estimates ==");
+    println!(
+        "decode ITL ≈ {} (paper: 2.8 ms)",
+        fmt_time(mapping.itl_estimate(&chip, 1024))
+    );
+
+    // 3. short simulated serving run (Table II methodology, small counts)
+    println!("\n== simulated serving run ==");
+    let rep = simulate(&mapping, &rack, SimConfig::table2(2048, 28, 28));
+    let met = BatchMetrics::from_records(&rep.seqs);
+    println!("| ctx  | batch | TTFT_s ms | ITL_s ms | ITPS_B   | OTPS_B   | EOTPS_B  |");
+    println!("{}", met.table2_row(2048, 28));
+    println!("\nnext: `cargo run --release --example e2e_inference` for real tokens via PJRT");
+}

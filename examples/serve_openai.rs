@@ -1,0 +1,56 @@
+//! Serve a model behind the OpenAI streaming chat-completions endpoint and
+//! exercise it with in-process HTTP clients — the full §IV cloud path:
+//! HTTP → broker (priority queues) → LLM instance → SSE stream back.
+//!
+//!   cargo run --release --example serve_openai [-- artifacts/granite-tiny]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use npserve::api::http::http_request;
+use npserve::api::ApiServer;
+use npserve::broker::Broker;
+use npserve::runtime::Engine;
+use npserve::service::{LlmInstance, SharedEngine};
+
+fn main() {
+    let dir = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts/granite-tiny"));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts at {dir:?} — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = SharedEngine(Arc::new(Engine::load(&dir).expect("engine")));
+    let model = engine.manifest.model.clone();
+    let inst = LlmInstance::start(engine);
+    let broker = Broker::new();
+    let worker = inst.serve_broker(broker.clone(), &model, vec![0, 1, 2], 8);
+    let api = ApiServer::serve("127.0.0.1:0", broker.clone()).expect("bind");
+    println!("serving `{model}` at http://{}", api.addr());
+
+    // non-streaming completion
+    let body = format!(
+        r#"{{"model":"{model}","messages":[{{"role":"user","content":"3+4="}}],"max_tokens":4}}"#
+    );
+    let (st, resp) = http_request(api.addr(), "POST", "/v1/chat/completions", &body).unwrap();
+    println!("\nPOST /v1/chat/completions -> {st}");
+    println!("{}", String::from_utf8_lossy(&resp));
+
+    // streaming completion (SSE)
+    let body = format!(
+        r#"{{"model":"{model}","stream":true,"messages":[{{"role":"user","content":"Cab="}}],"max_tokens":4}}"#
+    );
+    let (st, resp) = http_request(api.addr(), "POST", "/v1/chat/completions", &body).unwrap();
+    println!("\nPOST /v1/chat/completions (stream) -> {st}");
+    for line in String::from_utf8_lossy(&resp).lines().take(8) {
+        if !line.is_empty() {
+            println!("  {line}");
+        }
+    }
+
+    broker.close(&model);
+    let served = worker.join().unwrap();
+    println!("\nserved {served} requests; shutting down.");
+}

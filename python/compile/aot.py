@@ -1,0 +1,173 @@
+"""AOT export: lower every model stage to HLO text + manifest for rust.
+
+Python runs ONCE, here; the rust coordinator is self-contained afterwards.
+
+Interchange is HLO **text** (not a serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True, so
+the rust side unwraps a tuple for every stage (Literal::to_tuple*).
+
+Usage:
+  python -m compile.aot --model granite-test --out ../artifacts
+  python -m compile.aot --model granite-tiny --out ../artifacts \
+      --ckpt ../artifacts/silq/granite-tiny.quant.npz
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the stage weights ARE the artifact (the
+    # card's on-chip contents); the default elides them as `{...}` and the
+    # text parser would fill garbage.
+    return comp.as_hlo_text(True)
+
+
+def _sig(avals) -> List[Dict]:
+    out = []
+    for a in avals:
+        out.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+def build_stages(cfg: M.ModelConfig, qp) -> Dict[str, Tuple]:
+    """Stage name -> (callable, example_arg_specs)."""
+    B, T, D = cfg.batch_slots, cfg.prefill_chunk, cfg.d_model
+    L, Hkv, Dh = cfg.max_context, cfg.n_kv_heads, cfg.d_head
+    f32, i32, s8 = jnp.float32, jnp.int32, jnp.int8
+
+    def spec(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    cache = spec((B, Hkv, L, Dh), s8)
+    stages: Dict[str, Tuple] = {}
+
+    stages["embed_prefill"] = (
+        lambda tokens: (M.embed_prefill_stage(qp, cfg, tokens),),
+        [spec((1, T), i32)],
+    )
+    stages["embed_decode"] = (
+        lambda tokens: (M.embed_decode_stage(qp, cfg, tokens),),
+        [spec((B,), i32)],
+    )
+    for i in range(cfg.n_layers):
+        stages[f"attn_prefill_{i}"] = (
+            (lambda i: lambda h, kc, vc, slot, off: M.attn_prefill_stage(
+                qp, cfg, i, h, kc, vc, slot, off))(i),
+            [spec((1, T, D), f32), cache, cache, spec((), i32), spec((), i32)],
+        )
+        stages[f"attn_decode_{i}"] = (
+            (lambda i: lambda h, kc, vc, pos: M.attn_decode_stage(
+                qp, cfg, i, h, kc, vc, pos))(i),
+            [spec((B, D), f32), cache, cache, spec((B,), i32)],
+        )
+        stages[f"mlp_prefill_{i}"] = (
+            (lambda i: lambda h: (M.mlp_stage(qp, cfg, i, h),))(i),
+            [spec((1, T, D), f32)],
+        )
+        stages[f"mlp_decode_{i}"] = (
+            (lambda i: lambda h: (M.mlp_stage(qp, cfg, i, h),))(i),
+            [spec((B, D), f32)],
+        )
+    for j in range(cfg.lmhead_shards):
+        stages[f"lmhead_{j}"] = (
+            (lambda j: lambda h: (M.lmhead_stage(qp, cfg, j, h),))(j),
+            [spec((B, D), f32)],
+        )
+        stages[f"lmhead1_{j}"] = (
+            (lambda j: lambda h: (M.lmhead_stage(qp, cfg, j, h),))(j),
+            [spec((1, D), f32)],
+        )
+    return stages
+
+
+def export(cfg: M.ModelConfig, params: Dict[str, np.ndarray], outdir: str) -> dict:
+    qp = M.quantize_params(params, cfg)
+    os.makedirs(outdir, exist_ok=True)
+    stages = build_stages(cfg, qp)
+    manifest = {
+        "model": cfg.name,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_head": cfg.d_head,
+            "d_ff": cfg.d_ff, "batch_slots": cfg.batch_slots,
+            "prefill_chunk": cfg.prefill_chunk, "max_context": cfg.max_context,
+            "lmhead_shards": cfg.lmhead_shards, "shard_vocab": cfg.shard_vocab,
+            "a_bits": cfg.a_bits, "c_bits": cfg.c_bits, "w_bits": cfg.w_bits,
+            "k_scale": cfg.k_scale, "v_scale": cfg.v_scale,
+            "rope_theta": cfg.rope_theta, "eps": cfg.eps,
+            "param_count": cfg.param_count(),
+        },
+        "format": "hlo-text/return-tuple",
+        "stages": {},
+    }
+    for name, (fn, specs) in stages.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *specs)
+        manifest["stages"][name] = {
+            "file": fname,
+            "inputs": _sig(specs),
+            "outputs": _sig(jax.tree_util.tree_leaves(out_avals)),
+        }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def load_params(cfg: M.ModelConfig, ckpt: str | None, seed: int):
+    if ckpt and os.path.exists(ckpt):
+        data = np.load(ckpt)
+        params = {k: data[k] for k in data.files}
+        print(f"loaded checkpoint {ckpt} ({len(params)} tensors)")
+        return params
+    if ckpt:
+        print(f"WARNING: checkpoint {ckpt} not found; using random init")
+    return M.init_params(cfg, seed)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="granite-test", choices=sorted(M.CONFIGS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--ckpt", default=None, help=".npz parameter checkpoint")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = M.CONFIGS[args.model]
+    params = load_params(cfg, args.ckpt, args.seed)
+    outdir = os.path.join(args.out, cfg.name)
+    manifest = export(cfg, params, outdir)
+    n = len(manifest["stages"])
+    total = sum(
+        os.path.getsize(os.path.join(outdir, s["file"]))
+        for s in manifest["stages"].values()
+    )
+    print(f"exported {n} stages for {cfg.name} "
+          f"({cfg.param_count()/1e6:.2f}M params, {total/1e6:.1f} MB HLO text) "
+          f"-> {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp oracles (ref.py)."""
+
+from .quant_matmul import quant_matmul
+from .rmsnorm import rmsnorm_quant
+from .swiglu import swiglu
+from .attention import decode_attention, prefill_attention
+
+__all__ = [
+    "quant_matmul",
+    "rmsnorm_quant",
+    "swiglu",
+    "decode_attention",
+    "prefill_attention",
+]

@@ -1,0 +1,120 @@
+"""GQA attention over a quantized, resident KV cache — Pallas kernels.
+
+The paper's key enabler (§III-C) is that the entire KV cache lives in
+on-chip memory, so decode attention at micro-batch 1 is a single-row matvec
+against a resident cache block. These kernels express that:
+
+* grid walks (batch, kv-head): each step sees one sequence's cache block for
+  one kv head — the NorthPole core-group holding that head's cache;
+* the cache arrives as int8 (C8) and is dequantized at the VMEM edge;
+* queries are a single row (decode) or a chunk (prefill), i.e. the kernels
+  are tiled on the head/cache dimensions, NOT the batch dimension — this is
+  what "efficient at micro-batch size 1" means for the kernel.
+
+Hardware adaptation: a GPU flash-attention kernel would tile KV into
+shared-memory pages and iterate; here the BlockSpec hands the whole resident
+block to the kernel (NorthPole never pages KV), and softmax runs at f32 in
+VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, k_scale, v_scale, dh):
+    """One (sequence, kv-head) step: q [1, G, Dh] against cache [1, L, Dh]."""
+    q = q_ref[0, 0]                                # [G, Dh] f32
+    k = k_ref[0, 0].astype(jnp.float32) * k_scale  # [L, Dh]
+    v = v_ref[0, 0].astype(jnp.float32) * v_scale  # [L, Dh]
+    length = len_ref[0, 0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / jnp.sqrt(jnp.float32(dh)))
+    mask = jnp.arange(k.shape[0])[None, :] < length
+    scores = jnp.where(mask, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("k_scale", "v_scale"))
+def decode_attention(q, k_q, v_q, lengths, k_scale: float, v_scale: float):
+    """Single-token GQA attention, batch of independent sequences.
+
+    q:        f32 [B, H, Dh]
+    k_q, v_q: int8 [B, Hkv, L, Dh]  (C8 cache, static scales)
+    lengths:  int32 [B]             valid entries per sequence
+    Returns f32 [B, H, Dh].
+    """
+    B, H, Dh = q.shape
+    _, Hkv, L, _ = k_q.shape
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Dh)
+    len2 = lengths.reshape(B, 1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, k_scale=k_scale, v_scale=v_scale, dh=Dh),
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, L, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, L, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), jnp.float32),
+        interpret=True,
+    )(qg, k_q, v_q, len2)
+    return out.reshape(B, H, Dh)
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, off_ref, o_ref, *, k_scale, v_scale, dh):
+    """One (sequence, kv-head) step: chunk q [T, G, Dh] vs cache [L, Dh]."""
+    q = q_ref[0, 0]                                # [T, G, Dh]
+    k = k_ref[0, 0].astype(jnp.float32) * k_scale  # [L, Dh]
+    v = v_ref[0, 0].astype(jnp.float32) * v_scale
+    off = off_ref[0, 0]
+    T, G, _ = q.shape
+    L = k.shape[0]
+    scores = jnp.einsum("tgd,ld->tgl", q, k) * (1.0 / jnp.sqrt(jnp.float32(dh)))
+    j = jnp.arange(L)[None, None, :]
+    i = jnp.arange(T)[:, None, None]
+    scores = jnp.where(j <= i + off, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.einsum("tgl,ld->tgd", p, v)
+
+
+@functools.partial(jax.jit, static_argnames=("k_scale", "v_scale"))
+def prefill_attention(q, k_q, v_q, pos_offset, k_scale: float, v_scale: float):
+    """Causal chunked-prefill attention.
+
+    q:        f32 [B, T, H, Dh]     chunk of queries starting at pos_offset
+    k_q, v_q: int8 [B, Hkv, L, Dh]  cache already holding [0, off+T)
+    pos_offset: int32 [B]           absolute position of q[:, 0] per sequence
+    Returns f32 [B, T, H, Dh].
+    """
+    B, T, H, Dh = q.shape
+    _, Hkv, L, _ = k_q.shape
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, Dh).transpose(0, 2, 1, 3, 4)  # [B,Hkv,T,G,Dh]
+    off2 = pos_offset.reshape(B, 1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, k_scale=k_scale, v_scale=v_scale, dh=Dh),
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, T, G, Dh), lambda b, h: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, L, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, L, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T, G, Dh), lambda b, h: (b, h, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, T, G, Dh), jnp.float32),
+        interpret=True,
+    )(qg, k_q, v_q, off2)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, T, H, Dh)

@@ -1,0 +1,86 @@
+"""W4A8 quantized matmul as a Pallas kernel.
+
+This is the NorthPole core-array analog: int4 weights stay resident in
+"on-chip" memory (VMEM blocks), int8 activations stream through, and the
+product accumulates at full precision — §II-A's "all weights reside on-chip"
+dataflow expressed as a Pallas BlockSpec schedule.
+
+Hardware adaptation (DESIGN.md §3): the 16x16 NorthPole core array doing
+int-MAC is mapped to MXU-shaped tiles — values are dequantized at the VMEM
+edge and fed to the matrix unit with f32 accumulation, mirroring the
+core-array accumulators. Tiles default to multiples of (8, 128) so the same
+BlockSpecs lower cleanly for a real TPU; interpret=True is used on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, w_ref, ws_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K reduction."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Dequantize at the VMEM edge; accumulate in f32 (MXU-style).
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        # Per-output-channel weight scales applied once, at the end.
+        o_ref[...] = o_ref[...] * ws_ref[...][None, :]
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of dim that is <= pref (keeps grids exact)."""
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def quant_matmul(x_q, x_s, w_q, w_s, bm: int = 128, bn: int = 128, bk: int = 256):
+    """Compute (x_q * x_s) @ (w_q * w_s) with integer inputs.
+
+    x_q: int8 [M, K]; x_s: f32 [M, 1] per-row scales (A8 dynamic).
+    w_q: int8 [K, N] holding int4 values; w_s: f32 [N] per-channel scales.
+    Returns f32 [M, N].
+    """
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (K, K2)
+    bm = _pick_block(M, bm)
+    bn = _pick_block(N, bn)
+    bk = _pick_block(K, bk)
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((bn,), lambda m, n, k: (n,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=True,
+    )(x_q, w_q, w_s)
+    # Per-row activation scale is a rank-1 broadcast; cheaper outside the grid.
+    return out * x_s
+
+
+def vmem_bytes(bm: int, bn: int, bk: int) -> int:
+    """Estimated VMEM working set of one grid step (for the perf model)."""
+    return bm * bk * 1 + bk * bn * 1 + bn * 4 + bm * bn * 4

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels (interpret=True) match these
+references to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def quant_matmul_ref(x_q, x_s, w_q, w_s):
+    """W4A8 matmul oracle.
+
+    x_q: int8 [M, K], x_s: f32 [M, 1] per-row activation scales.
+    w_q: int8 [K, N] (int4-valued), w_s: f32 [N] per-channel weight scales.
+    Returns f32 [M, N] = (x_q*x_s) @ (w_q*w_s).
+    """
+    acc = jnp.dot(
+        x_q.astype(jnp.float32), w_q.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return acc * x_s * w_s[None, :]
+
+
+def rmsnorm_ref(x, g, eps=1e-6):
+    """Plain RMSNorm: x * rsqrt(mean(x^2) + eps) * g."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * g[None, :]
+
+
+def rmsnorm_quant_ref(x, g, eps=1e-6):
+    """RMSNorm followed by dynamic A8 quantization.
+
+    x: f32 [M, D], g: f32 [D].
+    Returns (q int8 [M, D], s f32 [M, 1]) with rmsnorm(x)*g ≈ q*s.
+    """
+    y = rmsnorm_ref(x, g, eps)
+    s = jnp.maximum(jnp.max(jnp.abs(y), axis=-1, keepdims=True) / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(y / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def swiglu_ref(gate, up):
+    """SwiGLU elementwise: silu(gate) * up."""
+    return (gate * jnp.reciprocal(1.0 + jnp.exp(-gate))) * up
+
+
+def decode_attention_ref(q, k_q, v_q, k_scale, v_scale, lengths):
+    """Single-token GQA attention against a quantized KV cache.
+
+    q:        f32 [B, H, Dh]       query for the current token
+    k_q, v_q: int8 [B, Hkv, L, Dh] quantized cache (C8)
+    k_scale, v_scale: f32 scalars  static cache scales
+    lengths:  int32 [B]            valid cache entries per sequence
+    Returns f32 [B, H, Dh].
+    """
+    B, H, Dh = q.shape
+    Hkv, L = k_q.shape[1], k_q.shape[2]
+    group = H // Hkv
+    k = jnp.repeat(k_q.astype(jnp.float32) * k_scale, group, axis=1)
+    v = jnp.repeat(v_q.astype(jnp.float32) * v_scale, group, axis=1)
+    scores = jnp.einsum("bhd,bhld->bhl", q, k) / jnp.sqrt(jnp.float32(Dh))
+    mask = jnp.arange(L)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    p = _softmax(scores)
+    return jnp.einsum("bhl,bhld->bhd", p, v)
+
+
+def prefill_attention_ref(q, k_q, v_q, k_scale, v_scale, pos_offset):
+    """Causal chunked-prefill attention against the quantized cache.
+
+    q:        f32 [B, T, H, Dh]    queries for a chunk starting at pos_offset
+    k_q, v_q: int8 [B, Hkv, L, Dh] cache that already contains entries
+                                   [0, pos_offset + T) for this sequence
+    pos_offset: int32 scalar       absolute position of q[:, 0]
+    Returns f32 [B, T, H, Dh]. Query i attends to cache[j] for
+    j <= pos_offset + i.
+    """
+    B, T, H, Dh = q.shape
+    Hkv, L = k_q.shape[1], k_q.shape[2]
+    group = H // Hkv
+    k = jnp.repeat(k_q.astype(jnp.float32) * k_scale, group, axis=1)
+    v = jnp.repeat(v_q.astype(jnp.float32) * v_scale, group, axis=1)
+    scores = jnp.einsum("bthd,bhld->bhtl", q, k) / jnp.sqrt(jnp.float32(Dh))
+    j = jnp.arange(L)[None, None, None, :]
+    i = jnp.arange(T)[None, None, :, None]
+    mask = j <= (i + pos_offset)
+    scores = jnp.where(mask, scores, -1e30)
+    p = _softmax(scores)
+    return jnp.einsum("bhtl,bhld->bthd", p, v)

@@ -1,0 +1,65 @@
+"""Fused RMSNorm + A8 activation quantization as a Pallas kernel.
+
+On NorthPole every activation tensor leaving a compute block is re-quantized
+to the layer's activation precision before it is written to core memory
+(§III-B). Fusing the norm with the quantizer keeps the f32 intermediate
+entirely inside the kernel (VMEM), exactly like the chip never materializes
+the f32 tensor in shared memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_quant_kernel(x_ref, g_ref, q_ref, s_ref, *, eps: float):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * (1.0 / jnp.sqrt(ms + eps)) * g_ref[...][None, :]
+    s = jnp.maximum(jnp.max(jnp.abs(y), axis=-1, keepdims=True) / 127.0, 1e-8)
+    q_ref[...] = jnp.clip(jnp.round(y / s), -127, 127).astype(jnp.int8)
+    s_ref[...] = s.astype(jnp.float32)
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm"))
+def rmsnorm_quant(x, g, eps: float = 1e-6, bm: int = 128):
+    """RMSNorm then dynamic symmetric int8 quantization, fused.
+
+    x: f32 [M, D]; g: f32 [D].
+    Returns (q int8 [M, D], s f32 [M, 1]).
+    The row dimension is blocked; D stays whole (the norm is a full-row
+    reduction, the natural NorthPole layout keeps a row within one core
+    group).
+    """
+    M, D = x.shape
+    bm = _pick_block(M, bm)
+    grid = (M // bm,)
+    q, s = pl.pallas_call(
+        functools.partial(_rmsnorm_quant_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, D), lambda m: (m, 0)),
+            pl.BlockSpec((D,), lambda m: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, D), lambda m: (m, 0)),
+            pl.BlockSpec((bm, 1), lambda m: (m, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, D), jnp.int8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, g)
+    return q, s

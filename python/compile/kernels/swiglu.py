@@ -1,0 +1,47 @@
+"""Fused SwiGLU gate as a Pallas kernel: silu(gate) * up.
+
+A small elementwise kernel, but fusing it keeps the two f32 matmul outputs
+from round-tripping through "off-core" memory between the MLP's up
+projection and down projection — the NorthPole MLP block computes the whole
+gate on-card (§III, Fig 2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...]
+    o_ref[...] = g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u_ref[...]
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def swiglu(gate, up, bm: int = 128, bn: int = 512):
+    """silu(gate) * up, elementwise over [M, N]."""
+    M, N = gate.shape
+    bm = _pick_block(M, bm)
+    bn = _pick_block(N, bn)
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
+            pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=True,
+    )(gate, up)

@@ -1,0 +1,400 @@
+"""Layer-2: Granite-3.3-style decoder-only transformer, staged for NorthPole.
+
+The model is expressed as *stage functions* that mirror the paper's card
+mapping (§III-A, Fig 2): the attention block and the MLP block of every
+transformer layer are separate stages (separate NorthPole cards for the 8B
+model), the embedding is its own stage, and the output layer is split into
+tensor-parallel shards. Each stage closes over its quantized weights so that
+`aot.py` lowers them into the stage's HLO artifact as constants — the
+compile-time analog of "weights reside entirely in on-chip memory".
+
+Precision follows §III-B A8-C8-W4: int4 per-channel weights, dynamic int8
+activations, static-scale int8 KV cache.
+
+Stage I/O contract (shared with rust/src/runtime — see manifest.json):
+
+  embed_prefill : tokens i32[1,T]                                -> h f32[1,T,D]
+  embed_decode  : tokens i32[B]                                  -> h f32[B,D]
+  attn_prefill_i: (h f32[1,T,D], kc s8[B,Hkv,L,Dh], vc s8[...],
+                   slot i32[], pos_off i32[])                    -> (h', kc', vc')
+  attn_decode_i : (h f32[B,D], kc, vc, positions i32[B])         -> (h', kc', vc')
+  mlp_prefill_i : h f32[1,T,D]                                   -> h'
+  mlp_decode_i  : h f32[B,D]                                     -> h'
+  lmhead_j      : h f32[B,D]                                     -> logits f32[B,V/S]
+  lmhead1_j     : h f32[1,D]                                     -> logits f32[1,V/S]
+
+Prefill runs one sequence at a time (B=1 chunks of T tokens) writing into
+that sequence's cache slot; decode runs the whole mini-batch of B slots —
+exactly the sequence-worker / slot model of §IV.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels import (
+    decode_attention,
+    prefill_attention,
+    quant_matmul,
+    rmsnorm_quant,
+    swiglu,
+)
+
+
+# --------------------------------------------------------------------------
+# Configurations
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + precision + serving-shape configuration."""
+
+    name: str = "granite-tiny"
+    vocab: int = 384
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 384
+    rope_theta: float = 10000.0
+    eps: float = 1e-6
+    # precision (A{a}-C{c}-W{w}) — §III-B
+    a_bits: int = 8
+    c_bits: int = 8
+    w_bits: int = 4
+    # static KV-cache scales (C8), calibrated constants baked into artifacts
+    k_scale: float = 0.05
+    v_scale: float = 0.05
+    # serving shapes
+    batch_slots: int = 8        # decode mini-batch slots (N in §III-C)
+    prefill_chunk: int = 32     # T: prefill chunk length
+    max_context: int = 256      # L: on-chip KV capacity per sequence
+    lmhead_shards: int = 4      # output-layer tensor parallelism (Fig 2)
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def shard_vocab(self) -> int:
+        assert self.vocab % self.lmhead_shards == 0
+        return self.vocab // self.lmhead_shards
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        dh, h, hkv = self.d_head, self.n_heads, self.n_kv_heads
+        per_layer = d * (h * dh) + 2 * d * (hkv * dh) + (h * dh) * d + 3 * d * f + 2 * d
+        return v * d + self.n_layers * per_layer + d + d * v
+
+
+# Named configurations. Full-size configs are used by the rust mapper/simulator
+# (shapes only); the tiny/small ones are actually lowered and executed.
+CONFIGS: Dict[str, ModelConfig] = {
+    # test-scale: fast pytest sweeps
+    "granite-test": ModelConfig(
+        name="granite-test", vocab=64, d_model=32, n_layers=2, n_heads=2,
+        n_kv_heads=1, d_ff=64, batch_slots=4, prefill_chunk=8, max_context=32,
+        lmhead_shards=4,
+    ),
+    # demo-scale: the end-to-end serving example (a few M params)
+    "granite-tiny": ModelConfig(name="granite-tiny"),
+    # a bigger CPU-runnable config for throughput experiments
+    "granite-small": ModelConfig(
+        name="granite-small", vocab=384, d_model=256, n_layers=6, n_heads=8,
+        n_kv_heads=4, d_ff=768, batch_slots=8, prefill_chunk=64,
+        max_context=512,
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Float32 parameters, truncated-normal-ish init (numpy, offline)."""
+    r = np.random.default_rng(seed)
+    d, f = cfg.d_model, cfg.d_ff
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    def w(shape, scale):
+        return (r.standard_normal(shape) * scale).astype(np.float32)
+
+    p: Dict[str, np.ndarray] = {
+        "embed": w((cfg.vocab, d), 0.02),
+        "final_g": np.ones(d, np.float32),
+        "lmhead": w((d, cfg.vocab), 0.02),
+    }
+    for i in range(cfg.n_layers):
+        s_in = 1.0 / np.sqrt(d)
+        s_ff = 1.0 / np.sqrt(f)
+        p[f"l{i}.g1"] = np.ones(d, np.float32)
+        p[f"l{i}.wq"] = w((d, h * dh), s_in)
+        p[f"l{i}.wk"] = w((d, hkv * dh), s_in)
+        p[f"l{i}.wv"] = w((d, hkv * dh), s_in)
+        p[f"l{i}.wo"] = w((h * dh, d), s_in)
+        p[f"l{i}.g2"] = np.ones(d, np.float32)
+        p[f"l{i}.wg"] = w((d, f), s_in)
+        p[f"l{i}.wu"] = w((d, f), s_in)
+        p[f"l{i}.wd"] = w((f, d), s_ff)
+    return p
+
+
+def quantize_params(params: Dict[str, np.ndarray], cfg: ModelConfig):
+    """Quantize every projection weight to W4 (per-output-channel int4).
+
+    Returns {name: (q int8, s f32[N])} for matmul weights plus the float
+    tensors (embed, norms) passed through.
+    """
+    out = {}
+    for k, v in params.items():
+        if k.endswith((".wq", ".wk", ".wv", ".wo", ".wg", ".wu", ".wd")) or k == "lmhead":
+            out[k] = quant.quant_weight_np(v, cfg.w_bits)
+        else:
+            out[k] = v
+    return out
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """Rotary position embedding.
+
+    x: f32 [..., H, Dh]; positions: i32 broadcastable to x.shape[:-2].
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qmm(x, p, name):
+    """rmsnorm-less quantized matmul: dynamically quantize x, W4 matmul."""
+    xq, xs = quant.quant_dynamic(x, 8)
+    wq, ws = p[name]
+    return quant_matmul(xq, xs, wq, ws)
+
+
+def _norm_qmm(x, g, p, name):
+    """Fused rmsnorm+quant (Pallas) then W4 matmul (Pallas)."""
+    xq, xs = rmsnorm_quant(x, g)
+    wq, ws = p[name]
+    return quant_matmul(xq, xs, wq, ws)
+
+
+# --------------------------------------------------------------------------
+# Stage functions (quantized; lowered by aot.py)
+# --------------------------------------------------------------------------
+
+
+def embed_prefill_stage(qp, cfg: ModelConfig, tokens):
+    """tokens i32[1,T] -> h f32[1,T,D]."""
+    return jnp.take(qp["embed"], tokens, axis=0)
+
+
+def embed_decode_stage(qp, cfg: ModelConfig, tokens):
+    """tokens i32[B] -> h f32[B,D]."""
+    return jnp.take(qp["embed"], tokens, axis=0)
+
+
+def attn_prefill_stage(qp, cfg: ModelConfig, layer: int, h, k_cache, v_cache, slot, pos_off):
+    """One attention block, prefill chunk for a single sequence.
+
+    h: f32[1,T,D]; k_cache/v_cache: int8[B,Hkv,L,Dh]; slot, pos_off: i32[].
+    Writes the chunk's K/V into cache[slot, :, pos_off:pos_off+T) and
+    attends causally over everything written so far.
+    """
+    T, d = h.shape[1], cfg.d_model
+    hh, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    x = h.reshape(T, d)
+    pre = f"l{layer}."
+
+    xq, xs = rmsnorm_quant(x, qp[pre + "g1"])
+    q = quant_matmul(xq, xs, *qp[pre + "wq"]).reshape(T, hh, dh)
+    k = quant_matmul(xq, xs, *qp[pre + "wk"]).reshape(T, hkv, dh)
+    v = quant_matmul(xq, xs, *qp[pre + "wv"]).reshape(T, hkv, dh)
+
+    positions = pos_off + jnp.arange(T, dtype=jnp.int32)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    k8 = quant.quant_static(k, cfg.k_scale, cfg.c_bits)  # [T,Hkv,Dh]
+    v8 = quant.quant_static(v, cfg.v_scale, cfg.c_bits)
+    # Write chunk into this sequence's cache slot.
+    kc_slot = jax.lax.dynamic_slice(
+        k_cache, (slot, 0, 0, 0), (1, hkv, cfg.max_context, dh))
+    vc_slot = jax.lax.dynamic_slice(
+        v_cache, (slot, 0, 0, 0), (1, hkv, cfg.max_context, dh))
+    kc_slot = jax.lax.dynamic_update_slice(
+        kc_slot, k8.transpose(1, 0, 2)[None], (0, 0, pos_off, 0))
+    vc_slot = jax.lax.dynamic_update_slice(
+        vc_slot, v8.transpose(1, 0, 2)[None], (0, 0, pos_off, 0))
+    k_cache = jax.lax.dynamic_update_slice(k_cache, kc_slot, (slot, 0, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, vc_slot, (slot, 0, 0, 0))
+
+    attn = prefill_attention(
+        q[None], kc_slot, vc_slot,
+        jnp.full((1,), pos_off, jnp.int32), cfg.k_scale, cfg.v_scale,
+    )  # [1,T,H,Dh]
+    o = _qmm(attn.reshape(T, hh * dh), qp, pre + "wo")
+    return (x + o).reshape(1, T, d), k_cache, v_cache
+
+
+def attn_decode_stage(qp, cfg: ModelConfig, layer: int, h, k_cache, v_cache, positions):
+    """One attention block, one decode step for the whole mini-batch.
+
+    h: f32[B,D]; positions i32[B] = index where this token's K/V is written
+    (== number of tokens already in the cache for that slot).
+    """
+    B, d = h.shape
+    hh, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pre = f"l{layer}."
+
+    xq, xs = rmsnorm_quant(h, qp[pre + "g1"])
+    q = quant_matmul(xq, xs, *qp[pre + "wq"]).reshape(B, hh, dh)
+    k = quant_matmul(xq, xs, *qp[pre + "wk"]).reshape(B, hkv, dh)
+    v = quant_matmul(xq, xs, *qp[pre + "wv"]).reshape(B, hkv, dh)
+
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    k8 = quant.quant_static(k, cfg.k_scale, cfg.c_bits)  # [B,Hkv,Dh]
+    v8 = quant.quant_static(v, cfg.v_scale, cfg.c_bits)
+
+    def write(cache_b, kv_b, pos):
+        # cache_b [Hkv,L,Dh]; kv_b [Hkv,Dh]
+        return jax.lax.dynamic_update_slice(cache_b, kv_b[:, None, :], (0, pos, 0))
+
+    k_cache = jax.vmap(write)(k_cache, k8, positions)
+    v_cache = jax.vmap(write)(v_cache, v8, positions)
+
+    attn = decode_attention(
+        q, k_cache, v_cache, positions + 1, cfg.k_scale, cfg.v_scale)
+    o = _qmm(attn.reshape(B, hh * dh), qp, pre + "wo")
+    return h + o, k_cache, v_cache
+
+
+def mlp_stage(qp, cfg: ModelConfig, layer: int, h):
+    """One MLP (SwiGLU) block; works on f32[M,D] for any M."""
+    shape = h.shape
+    x = h.reshape(-1, cfg.d_model)
+    pre = f"l{layer}."
+    xq, xs = rmsnorm_quant(x, qp[pre + "g2"])
+    g = quant_matmul(xq, xs, *qp[pre + "wg"])
+    u = quant_matmul(xq, xs, *qp[pre + "wu"])
+    y = swiglu(g, u)
+    o = _qmm(y, qp, pre + "wd")
+    return (x + o).reshape(shape)
+
+
+def lmhead_stage(qp, cfg: ModelConfig, shard: int, h):
+    """Final norm + tensor-parallel vocabulary projection shard.
+
+    h: f32[M,D] -> logits f32[M, vocab/shards] for shard `shard`.
+    """
+    sv = cfg.shard_vocab
+    wq, ws = qp["lmhead"]
+    wq = wq[:, shard * sv:(shard + 1) * sv]
+    ws = ws[shard * sv:(shard + 1) * sv]
+    xq, xs = rmsnorm_quant(h, qp["final_g"])
+    return quant_matmul(xq, xs, wq, ws)
+
+
+# --------------------------------------------------------------------------
+# Whole-model reference paths (oracles for tests & the training teacher)
+# --------------------------------------------------------------------------
+
+
+def forward_ref(qp, cfg: ModelConfig, tokens):
+    """Quantized full forward over a prompt batch: tokens i32[B,T] -> logits
+    f32[B,T,V]. Pure-jnp oracle for the staged/PJRT path (same quantization
+    choices, no Pallas, no staging)."""
+    from .kernels import ref
+
+    B, T = tokens.shape
+    d, hh, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = jnp.take(qp["embed"], tokens, axis=0)  # [B,T,D]
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        x = h.reshape(B * T, d)
+        xq, xs = ref.rmsnorm_quant_ref(x, qp[pre + "g1"], cfg.eps)
+        q = ref.quant_matmul_ref(xq, xs, *qp[pre + "wq"]).reshape(B, T, hh, dh)
+        k = ref.quant_matmul_ref(xq, xs, *qp[pre + "wk"]).reshape(B, T, hkv, dh)
+        v = ref.quant_matmul_ref(xq, xs, *qp[pre + "wv"]).reshape(B, T, hkv, dh)
+        q = rope(q, positions[None, :], cfg.rope_theta)
+        k = rope(k, positions[None, :], cfg.rope_theta)
+        k8 = quant.quant_static(k, cfg.k_scale, cfg.c_bits).transpose(0, 2, 1, 3)
+        v8 = quant.quant_static(v, cfg.v_scale, cfg.c_bits).transpose(0, 2, 1, 3)
+        attn = ref.prefill_attention_ref(q, k8, v8, cfg.k_scale, cfg.v_scale, 0)
+        aq, as_ = quant.quant_dynamic(attn.reshape(B * T, hh * dh), 8)
+        o = ref.quant_matmul_ref(aq, as_, *qp[pre + "wo"])
+        h = h + o.reshape(B, T, d)
+
+        x = h.reshape(B * T, d)
+        xq, xs = ref.rmsnorm_quant_ref(x, qp[pre + "g2"], cfg.eps)
+        g = ref.quant_matmul_ref(xq, xs, *qp[pre + "wg"])
+        u = ref.quant_matmul_ref(xq, xs, *qp[pre + "wu"])
+        y = ref.swiglu_ref(g, u)
+        yq, ys = quant.quant_dynamic(y, 8)
+        o = ref.quant_matmul_ref(yq, ys, *qp[pre + "wd"])
+        h = h + o.reshape(B, T, d)
+
+    x = h.reshape(B * T, d)
+    xq, xs = ref.rmsnorm_quant_ref(x, qp["final_g"], cfg.eps)
+    logits = ref.quant_matmul_ref(xq, xs, *qp["lmhead"])
+    return logits.reshape(B, T, cfg.vocab)
+
+
+def forward_float(params, cfg: ModelConfig, tokens):
+    """Unquantized bf16-style forward (the 'teacher'): tokens i32[B,T] ->
+    logits f32[B,T,V]. Differentiable; used by silq.py for pretraining and
+    as the distillation teacher."""
+    from .kernels import ref
+
+    B, T = tokens.shape
+    d, hh, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    group = hh // hkv
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        x = ref.rmsnorm_ref(h.reshape(B * T, d), params[pre + "g1"], cfg.eps)
+        q = (x @ params[pre + "wq"]).reshape(B, T, hh, dh)
+        k = (x @ params[pre + "wk"]).reshape(B, T, hkv, dh)
+        v = (x @ params[pre + "wv"]).reshape(B, T, hkv, dh)
+        q = rope(q, positions[None, :], cfg.rope_theta)
+        k = rope(k, positions[None, :], cfg.rope_theta)
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(jnp.float32(dh))
+        mask = jnp.tril(jnp.ones((T, T), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhts,bshd->bthd", p, v).reshape(B * T, hh * dh)
+        h = h + (attn @ params[pre + "wo"]).reshape(B, T, d)
+
+        x = ref.rmsnorm_ref(h.reshape(B * T, d), params[pre + "g2"], cfg.eps)
+        g = x @ params[pre + "wg"]
+        u = x @ params[pre + "wu"]
+        y = ref.swiglu_ref(g, u)
+        h = h + (y @ params[pre + "wd"]).reshape(B, T, d)
+
+    x = ref.rmsnorm_ref(h.reshape(B * T, d), params["final_g"], cfg.eps)
+    return (x @ params["lmhead"]).reshape(B, T, cfg.vocab)

@@ -1,0 +1,99 @@
+"""Quantization helpers shared by the kernels, the model, and SiLQ.
+
+The paper's precision scheme (§III-B) labels each layer A{a}-C{c}-W{w}:
+activations at a bits, KV cache at c bits, weights at w bits. NorthPole
+supports 8/4/2-bit integers; this module provides the quantize/dequantize
+primitives for those precisions.
+
+Conventions
+-----------
+* Weights (W4): symmetric per-output-channel int4 stored as int8 values in
+  [-7, 7] plus a float32 scale per output channel. `pack_int4`/`unpack_int4`
+  store two nibbles per byte to honour the 4-bit memory footprint.
+* Activations (A8): symmetric dynamic per-row int8 — round(x/s) with
+  s = max|x|/127 per row. (The paper trains static scales with SiLQ; the
+  dynamic stand-in is numerically close and keeps the AOT artifacts
+  calibration-free. silq.py implements the trained-scale variant.)
+* KV cache (C8/C4): symmetric static per-layer scale, baked into the stage
+  artifact as a constant, mirroring the calibrated on-chip cache format.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Integer ranges for symmetric signed quantization at each precision.
+QRANGE = {8: 127, 4: 7, 2: 1}
+
+
+def quant_dynamic(x, bits: int = 8):
+    """Symmetric per-row dynamic quantization.
+
+    x: float array [..., D]. Returns (q int8[..., D], scale f32[..., 1])
+    with x ≈ q * scale.
+    """
+    qmax = QRANGE[bits]
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x / s), -qmax, qmax).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def quant_static(x, scale, bits: int = 8):
+    """Symmetric quantization with a fixed scale (KV-cache style)."""
+    qmax = QRANGE[bits]
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return q
+
+
+def dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quant_weight_np(w: np.ndarray, bits: int = 4):
+    """Per-output-channel symmetric weight quantization (numpy, offline).
+
+    w: float [K, N]. Returns (q int8 [K, N] in [-qmax, qmax], scale f32 [N]).
+    """
+    qmax = QRANGE[bits]
+    s = np.abs(w).max(axis=0) / qmax
+    s = np.maximum(s, 1e-8).astype(np.float32)
+    q = np.clip(np.round(w / s), -qmax, qmax).astype(np.int8)
+    return q, s
+
+
+def fake_quant_weight_np(w: np.ndarray, bits: int = 4) -> np.ndarray:
+    q, s = quant_weight_np(w, bits)
+    return (q.astype(np.float32) * s).astype(w.dtype)
+
+
+def pack_int4(q: np.ndarray) -> np.ndarray:
+    """Pack int4 values (int8 array in [-8, 7], even first axis) two per byte."""
+    assert q.shape[0] % 2 == 0, "pack_int4 needs an even leading dim"
+    lo = (q[0::2] & 0xF).astype(np.uint8)
+    hi = (q[1::2] & 0xF).astype(np.uint8)
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack_int4(p: np.ndarray) -> np.ndarray:
+    """Inverse of pack_int4: uint8 [K//2, ...] -> int8 [K, ...] in [-8, 7]."""
+    lo = (p & 0xF).astype(np.int8)
+    hi = ((p >> 4) & 0xF).astype(np.int8)
+    lo = np.where(lo >= 8, lo - 16, lo)
+    hi = np.where(hi >= 8, hi - 16, hi)
+    out = np.empty((p.shape[0] * 2,) + p.shape[1:], dtype=np.int8)
+    out[0::2] = lo
+    out[1::2] = hi
+    return out
+
+
+def unpack_int4_jnp(p):
+    """jnp version of unpack_int4 for use inside lowered stages."""
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k2 = p.shape[0]
+    out = jnp.stack([lo, hi], axis=1)  # [K//2, 2, ...]
+    return out.reshape((k2 * 2,) + p.shape[1:])

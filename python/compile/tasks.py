@@ -1,0 +1,161 @@
+"""Synthetic benchmark suite standing in for the paper's 19 evaluation tasks.
+
+Fig 5 of the paper evaluates Granite-3.3-8b on 19 benchmarks (common-sense
+reasoning + Open LLM Leaderboard v1/v2). Those need the real 8B model and
+the real datasets, neither of which fits this environment (DESIGN.md §4), so
+we substitute 19 *procedural* character-level tasks with exact-match
+answers. What the substitution preserves: a per-benchmark accuracy
+comparison between the bf16 teacher, naive post-training quantization (PTQ),
+and SiLQ QAT — the paper's claim being that the QAT model matches bf16 on
+average while plain quantization loses accuracy.
+
+Every task emits strings of the form ``<prompt>=<answer>;`` and is scored by
+teacher-forced exact match over the answer region.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAD = 0  # token 0 (NUL byte) doubles as padding; never appears in tasks
+
+
+def _s(r: np.random.Generator, alpha: str, n: int) -> str:
+    return "".join(alpha[i] for i in r.integers(0, len(alpha), n))
+
+LOWER = "abcdefgh"
+DIGITS = "0123456789"
+
+
+def t_copy2(r):    x = _s(r, LOWER, 2); return f"C{x}", x
+def t_copy3(r):    x = _s(r, LOWER, 3); return f"C{x}", x
+def t_copy4(r):    x = _s(r, LOWER, 4); return f"C{x}", x
+def t_rev2(r):     x = _s(r, LOWER, 2); return f"R{x}", x[::-1]
+def t_rev3(r):     x = _s(r, LOWER, 3); return f"R{x}", x[::-1]
+def t_add1(r):
+    a, b = int(r.integers(0, 5)), int(r.integers(0, 5))
+    return f"{a}+{b}", str(a + b)
+def t_add_carry(r):
+    a, b = int(r.integers(5, 10)), int(r.integers(5, 10))
+    return f"{a}+{b}", f"{a+b:02d}"
+def t_sub(r):
+    a = int(r.integers(1, 10)); b = int(r.integers(0, a + 1))
+    return f"{a}-{b}", str(a - b)
+def t_max(r):
+    a, b = r.integers(0, 10, 2)
+    return f"M{a}{b}", str(max(a, b))
+def t_min(r):
+    a, b = r.integers(0, 10, 2)
+    return f"m{a}{b}", str(min(a, b))
+def t_succ(r):
+    a = int(r.integers(0, 9)); return f"S{a}", str(a + 1)
+def t_pred(r):
+    a = int(r.integers(1, 10)); return f"P{a}", str(a - 1)
+def t_count(r):
+    c = LOWER[r.integers(0, len(LOWER))]
+    n = int(r.integers(1, 5))
+    return f"N{c * n}", str(n)
+def t_parity(r):
+    n = int(r.integers(1, 7))
+    bits = _s(r, "01", n)
+    return f"p{bits}", str(bits.count("1") % 2)
+def t_last(r):
+    x = _s(r, LOWER, int(r.integers(2, 5))); return f"L{x}", x[-1]
+def t_first(r):
+    x = _s(r, LOWER, int(r.integers(2, 5))); return f"F{x}", x[0]
+def t_dup(r):
+    x = _s(r, LOWER, 2); return f"D{x}", x + x
+def t_sort2(r):
+    a, b = r.integers(0, 10, 2)
+    lo, hi = sorted((int(a), int(b)))
+    return f"s{a}{b}", f"{lo}{hi}"
+def t_alt(r):
+    c = LOWER[r.integers(0, len(LOWER))]
+    d = LOWER[r.integers(0, len(LOWER))]
+    n = int(r.integers(2, 4))
+    return f"A{c}{d}{n}", (c + d) * n
+
+
+# The 19 benchmarks, named after the skill they probe.
+BENCHMARKS = {
+    "copy-2": t_copy2, "copy-3": t_copy3, "copy-4": t_copy4,
+    "reverse-2": t_rev2, "reverse-3": t_rev3,
+    "add": t_add1, "add-carry": t_add_carry, "sub": t_sub,
+    "max": t_max, "min": t_min, "succ": t_succ, "pred": t_pred,
+    "count": t_count, "parity": t_parity,
+    "last": t_last, "first": t_first,
+    "dup": t_dup, "sort-2": t_sort2, "alternate": t_alt,
+}
+assert len(BENCHMARKS) == 19
+
+
+def encode(s: str) -> np.ndarray:
+    return np.frombuffer(s.encode(), np.uint8).astype(np.int32)
+
+
+def make_example(r: np.random.Generator, task=None):
+    """Returns (tokens i32[seq], answer_mask bool[seq]) for one task item."""
+    if task is None:
+        task = list(BENCHMARKS.values())[r.integers(0, len(BENCHMARKS))]
+    prompt, answer = task(r)
+    s = f"{prompt}={answer};"
+    toks = encode(s)
+    mask = np.zeros(len(toks), bool)
+    a0 = len(prompt) + 1
+    mask[a0:a0 + len(answer)] = True
+    return toks, mask
+
+
+def make_batch(r: np.random.Generator, batch: int, seqlen: int, task=None):
+    """Pack task items into fixed-length rows. Returns
+    (tokens i32[B,S], loss_mask f32[B,S], answer_mask bool[B,S])."""
+    toks = np.full((batch, seqlen), PAD, np.int32)
+    amask = np.zeros((batch, seqlen), bool)
+    lmask = np.zeros((batch, seqlen), np.float32)
+    for b in range(batch):
+        pos = 0
+        while pos < seqlen - 4:
+            t, m = make_example(r, task)
+            n = min(len(t), seqlen - pos)
+            toks[b, pos:pos + n] = t[:n]
+            amask[b, pos:pos + n] = m[:n]
+            lmask[b, pos:pos + n] = 1.0
+            pos += n
+    return toks, lmask, amask
+
+
+def eval_accuracy(forward, tokens, amask) -> float:
+    """Teacher-forced exact match over answer positions.
+
+    forward: tokens i32[B,S] -> logits f32[B,S,V].
+    Position i is predicted from logits at i-1.
+    """
+    logits = np.asarray(forward(tokens))
+    pred = logits[:, :-1].argmax(-1)          # prediction for position i+1
+    tgt = tokens[:, 1:]
+    m = amask[:, 1:]
+    correct = (pred == tgt) | ~m
+    # an example row counts as correct only if all its answer tokens match
+    per_row = np.logical_and.reduce(correct, axis=1)
+    has_answer = m.any(axis=1)
+    if not has_answer.any():
+        return float("nan")
+    return float(per_row[has_answer].mean())
+
+
+def benchmark_suite(forward, seed: int = 1234, n_examples: int = 64,
+                    seqlen: int = 16):
+    """Score `forward` on all 19 benchmarks. One task item per row so the
+    exact-match criterion is per-example."""
+    scores = {}
+    for name, task in BENCHMARKS.items():
+        r = np.random.default_rng(seed + hash(name) % 2**16)
+        toks = np.full((n_examples, seqlen), PAD, np.int32)
+        amask = np.zeros((n_examples, seqlen), bool)
+        for b in range(n_examples):
+            t, m = make_example(r, task)
+            n = min(len(t), seqlen)
+            toks[b, :n] = t[:n]
+            amask[b, :n] = m[:n]
+        scores[name] = 100.0 * eval_accuracy(forward, toks, amask)
+    return scores

@@ -1,0 +1,263 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; every kernel must match its ref to tight
+tolerance. This is the CORE correctness signal for the compute layer.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.kernels import (
+    decode_attention,
+    prefill_attention,
+    quant_matmul,
+    rmsnorm_quant,
+    swiglu,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- quant_matmul
+
+@given(
+    m=st.sampled_from([1, 3, 8, 16, 130]),
+    k=st.sampled_from([8, 32, 64, 96]),
+    n=st.sampled_from([4, 16, 32, 33]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_quant_matmul_matches_ref(m, k, n, seed):
+    r = rng(seed)
+    xq = r.integers(-127, 128, (m, k), dtype=np.int8)
+    xs = (r.random((m, 1)) * 0.1 + 1e-3).astype(np.float32)
+    wq = r.integers(-7, 8, (k, n), dtype=np.int8)
+    ws = (r.random(n) * 0.1 + 1e-3).astype(np.float32)
+    got = np.asarray(quant_matmul(xq, xs, wq, ws))
+    want = np.asarray(ref.quant_matmul_ref(xq, xs, wq, ws))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([16, 128]),
+    bk=st.sampled_from([32, 256]),
+)
+@settings(max_examples=9, deadline=None)
+def test_quant_matmul_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the BlockSpec tiling."""
+    r = rng(7)
+    xq = r.integers(-127, 128, (64, 128), dtype=np.int8)
+    xs = (r.random((64, 1)) * 0.1).astype(np.float32)
+    wq = r.integers(-7, 8, (128, 64), dtype=np.int8)
+    ws = (r.random(64) * 0.1).astype(np.float32)
+    base = np.asarray(quant_matmul(xq, xs, wq, ws))
+    tiled = np.asarray(quant_matmul(xq, xs, wq, ws, bm=bm, bn=bn, bk=bk))
+    np.testing.assert_allclose(tiled, base, rtol=1e-6)
+
+
+def test_quant_matmul_identity():
+    """Identity weights at scale 1 reproduce the activations."""
+    k = 16
+    xq = np.arange(-8, 8, dtype=np.int8).reshape(1, k)
+    xs = np.ones((1, 1), np.float32)
+    wq = np.eye(k, dtype=np.int8)
+    ws = np.ones(k, np.float32)
+    got = np.asarray(quant_matmul(xq, xs, wq, ws))
+    np.testing.assert_allclose(got, xq.astype(np.float32))
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+@given(
+    m=st.sampled_from([1, 2, 8, 130]),
+    d=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_rmsnorm_quant_matches_ref(m, d, seed):
+    r = rng(seed)
+    x = r.standard_normal((m, d)).astype(np.float32) * 3.0
+    g = r.standard_normal(d).astype(np.float32)
+    q1, s1 = rmsnorm_quant(x, g)
+    q2, s2 = ref.rmsnorm_quant_ref(x, g)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_rmsnorm_quant_range():
+    r = rng(3)
+    x = r.standard_normal((16, 64)).astype(np.float32) * 100
+    g = np.ones(64, np.float32)
+    q, s = rmsnorm_quant(x, g)
+    q = np.asarray(q)
+    assert q.max() <= 127 and q.min() >= -127
+    # dequantized result approximates the norm within one quantization step
+    y = np.asarray(q) * np.asarray(s)
+    want = np.asarray(ref.rmsnorm_ref(x, g))
+    assert np.abs(y - want).max() <= np.asarray(s).max() * 0.51
+
+
+def test_rmsnorm_zero_row_is_finite():
+    x = np.zeros((2, 16), np.float32)
+    g = np.ones(16, np.float32)
+    q, s = rmsnorm_quant(x, g)
+    assert np.isfinite(np.asarray(s)).all()
+    assert (np.asarray(q) == 0).all()
+
+
+# ---------------------------------------------------------------- swiglu
+
+@given(
+    m=st.sampled_from([1, 8, 128]),
+    n=st.sampled_from([8, 512, 768]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_swiglu_matches_ref(m, n, seed):
+    r = rng(seed)
+    g = r.standard_normal((m, n)).astype(np.float32) * 4
+    u = r.standard_normal((m, n)).astype(np.float32) * 4
+    got = np.asarray(swiglu(g, u))
+    want = np.asarray(ref.swiglu_ref(g, u))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------- attention
+
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    l=st.sampled_from([4, 16, 64]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_decode_attention_matches_ref(b, hkv, group, l, dh, seed):
+    r = rng(seed)
+    h = hkv * group
+    q = r.standard_normal((b, h, dh)).astype(np.float32)
+    kq = r.integers(-127, 128, (b, hkv, l, dh), dtype=np.int8)
+    vq = r.integers(-127, 128, (b, hkv, l, dh), dtype=np.int8)
+    lens = r.integers(1, l + 1, b).astype(np.int32)
+    got = np.asarray(decode_attention(q, kq, vq, lens, 0.02, 0.03))
+    want = np.asarray(ref.decode_attention_ref(q, kq, vq, 0.02, 0.03, lens))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_decode_attention_respects_length_mask():
+    """Entries beyond `lengths` must not affect the output."""
+    r = rng(11)
+    b, hkv, g, l, dh = 2, 2, 2, 16, 8
+    q = r.standard_normal((b, hkv * g, dh)).astype(np.float32)
+    kq = r.integers(-127, 128, (b, hkv, l, dh), dtype=np.int8)
+    vq = r.integers(-127, 128, (b, hkv, l, dh), dtype=np.int8)
+    lens = np.array([5, 9], np.int32)
+    base = np.asarray(decode_attention(q, kq, vq, lens, 0.02, 0.03))
+    kq2, vq2 = kq.copy(), vq.copy()
+    kq2[0, :, 5:] = 99
+    vq2[0, :, 5:] = -99
+    kq2[1, :, 9:] = 99
+    vq2[1, :, 9:] = -99
+    pert = np.asarray(decode_attention(q, kq2, vq2, lens, 0.02, 0.03))
+    np.testing.assert_allclose(pert, base, rtol=1e-6)
+
+
+@given(
+    b=st.sampled_from([1, 2]),
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2]),
+    t=st.sampled_from([1, 4, 8]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_prefill_attention_matches_ref(b, hkv, group, t, dh, seed):
+    r = rng(seed)
+    l = 32
+    h = hkv * group
+    q = r.standard_normal((b, t, h, dh)).astype(np.float32)
+    kq = r.integers(-127, 128, (b, hkv, l, dh), dtype=np.int8)
+    vq = r.integers(-127, 128, (b, hkv, l, dh), dtype=np.int8)
+    offs = r.integers(0, l - t + 1, b).astype(np.int32)
+    got = np.asarray(prefill_attention(q, kq, vq, offs, 0.02, 0.03))
+    want = np.stack([
+        np.asarray(ref.prefill_attention_ref(
+            q[i:i + 1], kq[i:i + 1], vq[i:i + 1], 0.02, 0.03, offs[i]))[0]
+        for i in range(b)
+    ])
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_prefill_attention_is_causal():
+    """Future cache entries (j > off + i) must not affect query i."""
+    r = rng(13)
+    b, hkv, g, t, l, dh = 1, 1, 2, 4, 16, 8
+    q = r.standard_normal((b, t, hkv * g, dh)).astype(np.float32)
+    kq = r.integers(-127, 128, (b, hkv, l, dh), dtype=np.int8)
+    vq = r.integers(-127, 128, (b, hkv, l, dh), dtype=np.int8)
+    off = np.array([3], np.int32)
+    base = np.asarray(prefill_attention(q, kq, vq, off, 0.02, 0.03))
+    kq2, vq2 = kq.copy(), vq.copy()
+    kq2[:, :, 3 + t:] = 99   # strictly beyond the last query's horizon
+    vq2[:, :, 3 + t:] = -99
+    pert = np.asarray(prefill_attention(q, kq2, vq2, off, 0.02, 0.03))
+    np.testing.assert_allclose(pert, base, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- quant helpers
+
+@given(
+    shape=st.sampled_from([(4, 8), (16, 16), (128, 3)]),
+    bits=st.sampled_from([8, 4, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_quant_dynamic_roundtrip_error_bounded(shape, bits, seed):
+    r = rng(seed)
+    x = r.standard_normal(shape).astype(np.float32)
+    q, s = quant.quant_dynamic(x, bits)
+    y = np.asarray(q).astype(np.float32) * np.asarray(s)
+    # error is at most half a step per element
+    step = np.asarray(s)
+    assert (np.abs(y - x) <= 0.5 * step + 1e-7).all()
+
+
+@given(k=st.sampled_from([2, 8, 64]), n=st.sampled_from([1, 5, 16]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_pack_unpack_int4_roundtrip(k, n, seed):
+    r = rng(seed)
+    q = r.integers(-8, 8, (k, n), dtype=np.int8)
+    packed = quant.pack_int4(q)
+    assert packed.nbytes == q.nbytes // 2
+    np.testing.assert_array_equal(quant.unpack_int4(packed), q)
+
+
+@given(k=st.sampled_from([2, 8, 64]), n=st.sampled_from([1, 16]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_unpack_int4_jnp_matches_np(k, n, seed):
+    r = rng(seed)
+    q = r.integers(-8, 8, (k, n), dtype=np.int8)
+    packed = quant.pack_int4(q)
+    np.testing.assert_array_equal(
+        np.asarray(quant.unpack_int4_jnp(packed)), quant.unpack_int4(packed))
+
+
+def test_quant_weight_per_channel():
+    r = rng(5)
+    w = r.standard_normal((32, 8)).astype(np.float32)
+    w[:, 3] *= 100.0  # one hot channel must not wreck the others
+    q, s = quant.quant_weight_np(w, 4)
+    deq = q.astype(np.float32) * s
+    rel = np.abs(deq - w).max(axis=0) / np.abs(w).max(axis=0)
+    assert (rel < 0.15).all()

@@ -1,0 +1,92 @@
+"""SiLQ algorithm smoke tests: quantizer math, STE gradients, and a short
+train/fine-tune loop (full Fig 5 run happens via `make fig5`)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import silq, tasks
+
+# vocab must cover the byte-level task alphabet (ASCII up to 'z'); the
+# shapes are otherwise test-scale.
+CFG = M.ModelConfig(
+    name="silq-test", vocab=384, d_model=32, n_layers=2, n_heads=2,
+    n_kv_heads=1, d_ff=64, batch_slots=4, prefill_chunk=8, max_context=32,
+    lmhead_shards=4,
+)
+
+
+def test_lsq_weight_quantizes_to_grid():
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((16, 8)), jnp.float32)
+    s = jnp.asarray(silq.init_weight_scale(np.asarray(w), 4))
+    q = silq.lsq_weight(w, s, 4)
+    # every value sits on an integer multiple of its channel scale
+    ratios = np.asarray(q) / np.asarray(s)[None, :]
+    np.testing.assert_allclose(ratios, np.round(ratios), atol=1e-4)
+    assert np.abs(ratios).max() <= 7 + 1e-5  # W4 range
+
+
+def test_lsq_gradients_flow_to_scales():
+    w = jnp.asarray(np.random.default_rng(1).standard_normal((8, 4)), jnp.float32)
+    s = jnp.full((4,), 0.1, jnp.float32)
+
+    def loss(s):
+        return jnp.sum(jnp.square(silq.lsq_weight(w, s, 4) - w))
+
+    g = jax.grad(loss)(s)
+    assert np.isfinite(np.asarray(g)).all()
+    assert (np.asarray(g) != 0).any(), "scale gradient must be nonzero"
+
+
+def test_act_quant_ste_is_identity_gradient():
+    x = jnp.asarray([[0.3, -1.2, 2.0, 0.0]], jnp.float32)
+
+    def f(x):
+        return jnp.sum(silq.act_quant_ste(x, 8) * 2.0)
+
+    g = np.asarray(jax.grad(f)(x))
+    # interior elements get the straight-through gradient exactly; the
+    # row-max element sits on the clip boundary where jnp.minimum splits
+    # the subgradient (0.5x)
+    np.testing.assert_allclose(g[0, [0, 1, 3]], 2.0, rtol=1e-6)
+    assert g[0, 2] in (1.0, 2.0)
+
+
+def test_student_forward_matches_shapes_and_is_finite():
+    params = {k: jnp.asarray(v) for k, v in M.init_params(CFG, 0).items()}
+    ws = {k: jnp.asarray(silq.init_weight_scale(np.asarray(v), 4))
+          for k, v in params.items() if silq.is_quantized(k)}
+    toks = jnp.asarray(np.random.default_rng(2).integers(0, CFG.vocab, (2, 12), dtype=np.int32))
+    lg = silq.forward_student(params, ws, CFG, toks)
+    assert lg.shape == (2, 12, CFG.vocab)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+@pytest.mark.slow
+def test_short_training_reduces_loss_and_folds():
+    teacher = silq.pretrain_teacher(CFG, steps=40, batch=8, seqlen=24,
+                                    lr=3e-3, seed=0, log_every=100)
+    sp, ws = silq.silq_finetune(CFG, teacher, steps=10, batch=8, seqlen=24,
+                                lr=1e-3, seed=0, log_every=100)
+    folded = silq.fold_lsq_into_params(sp, ws, CFG)
+    # folded weights must round-trip through the inference quantizer with
+    # little extra error (they already sit near the LSQ grid)
+    qp = M.quantize_params(folded, CFG)
+    toks = jnp.asarray(np.random.default_rng(3).integers(0, CFG.vocab, (2, 12), dtype=np.int32))
+    lg = M.forward_ref(qp, CFG, toks)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_benchmark_suite_scores_all_19():
+    params = {k: jnp.asarray(v) for k, v in M.init_params(CFG, 0).items()}
+
+    @jax.jit
+    def fwd(toks):
+        return M.forward_float(params, CFG, toks)
+
+    scores = tasks.benchmark_suite(lambda t: fwd(jnp.asarray(t)), n_examples=8)
+    assert len(scores) == 19
+    for name, s in scores.items():
+        assert 0.0 <= s <= 100.0, (name, s)

@@ -1,0 +1,51 @@
+//! Fig 5: accuracy of the quantized (A8-C8-W4) model vs the original
+//! bfloat16 model across the 19-benchmark suite.
+//!
+//! The training/evaluation itself runs in python (`make fig5` →
+//! compile/silq.py, the SiLQ reproduction); this bench renders the
+//! resulting artifacts/silq/results.json next to the paper's claim and
+//! verifies the claim's *shape*: SiLQ ≈ bf16 ≥ PTQ.
+//!
+//!   cargo bench --bench fig5_accuracy
+
+use npserve::util::json::Value;
+
+fn main() {
+    let path = std::path::Path::new("artifacts/silq/results.json");
+    let Ok(text) = std::fs::read_to_string(path) else {
+        println!("no {path:?} — run `make fig5` first (trains the tiny model + SiLQ QAT)");
+        return;
+    };
+    let v = Value::parse(&text).expect("results.json");
+    let b = v.get("benchmarks").unwrap();
+    let bf16 = b.get("bf16").unwrap().as_obj().unwrap();
+    let ptq = b.get("ptq-w4a8").unwrap().as_obj().unwrap();
+    let silq = b.get("silq-w4a8").unwrap().as_obj().unwrap();
+
+    println!("Fig 5 — 19-benchmark accuracy (synthetic suite, DESIGN.md §4 substitution)");
+    println!("| benchmark   | bf16  | PTQ-W4A8 | SiLQ-W4A8 |");
+    println!("|-------------|-------|----------|-----------|");
+    for (name, score) in bf16 {
+        println!(
+            "| {:11} | {:>5.1} | {:>8.1} | {:>9.1} |",
+            name,
+            score.as_f64().unwrap(),
+            ptq[name].as_f64().unwrap(),
+            silq[name].as_f64().unwrap()
+        );
+    }
+    let avg = |m: &std::collections::BTreeMap<String, Value>| {
+        m.values().map(|v| v.as_f64().unwrap()).sum::<f64>() / m.len() as f64
+    };
+    let (a_bf, a_ptq, a_silq) = (avg(bf16), avg(ptq), avg(silq));
+    println!("| **average** | {a_bf:>5.1} | {a_ptq:>8.1} | {a_silq:>9.1} |");
+    println!(
+        "\npaper (Granite-3.3-8b, real benchmarks): quantized 56.8 vs bf16 56.4 — \
+         QAT matches bf16."
+    );
+    println!(
+        "shape check: SiLQ within 1 pt of bf16: {} | PTQ below SiLQ: {}",
+        if (a_silq - a_bf).abs() <= 1.0 { "PASS" } else { "FAIL" },
+        if a_ptq < a_silq { "PASS" } else { "FAIL" },
+    );
+}

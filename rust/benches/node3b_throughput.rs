@@ -1,0 +1,48 @@
+//! [6] / §II-C: a standalone 16-card NorthPole LLM server node running the
+//! 3B model delivers ~28,356 tok/s at sub-1 ms/token per-user latency and
+//! 672 W aggregate card power; a rack runs 18 such instances (intro).
+//!
+//!   cargo bench --bench node3b_throughput
+
+use npserve::config::hw::RackSpec;
+use npserve::config::models::find_model;
+use npserve::mapper::map_model;
+use npserve::metrics::BatchMetrics;
+use npserve::pipeline::sim::{simulate, SimConfig};
+use npserve::power::card_power_w;
+
+fn main() {
+    let rack = RackSpec::northpole_42u();
+    let m = find_model("granite-3.1-3b").unwrap();
+    let mapping = map_model(&m, 28, 2048, &rack).unwrap();
+    println!(
+        "granite-3.1-3b ({}): {} cards / {} node(s) / {} stages / micro-batch {}",
+        m.precision,
+        mapping.n_cards(),
+        mapping.n_nodes(&rack),
+        mapping.stages.len(),
+        mapping.micro_batch
+    );
+
+    let rep = simulate(&mapping, &rack, SimConfig {
+        users: 28, prompt_len: 512, gen_len: 512, requests: 56, chunk: 512,
+    });
+    let met = BatchMetrics::from_records(&rep.seqs);
+    println!("\n| metric            | measured | paper [6] |");
+    println!("|-------------------|----------|-----------|");
+    println!("| ITL per user      | {:>6.2}ms | <1 ms     |", met.itl.mean() * 1e3);
+    println!("| node throughput   | {:>7.0}  | 28,356    |", met.otps);
+    let per_card = card_power_w(&rack.node, rep.mean_card_busy().min(0.25));
+    println!("| card power x16    | {:>6.0} W | 672 W     |", per_card * 16.0);
+    println!(
+        "| rack instances    | {:>8} | 18        |",
+        mapping.instances_per_rack(&rack)
+    );
+    let rack_tps = met.otps * mapping.instances_per_rack(&rack) as f64;
+    println!("| rack throughput   | {:>7.0}  | ~510k     |", rack_tps);
+    println!(
+        "\nshape: ITL sub-1ms {}, node ~28k tok/s {}",
+        if met.itl.mean() < 1.2e-3 { "PASS" } else { "FAIL" },
+        if (20_000.0..40_000.0).contains(&met.otps) { "PASS" } else { "FAIL" },
+    );
+}

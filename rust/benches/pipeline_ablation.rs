@@ -1,0 +1,70 @@
+//! §III-C ablation: micro-batch count vs pipeline idle time.
+//!
+//! The paper's claim: GPipe-style training needed M ≈ 4·S micro-batches to
+//! amortize fill/drain bubbles, but NorthPole decode runs a *continuous
+//! ring*, so M = S suffices ("a number of micro-batches equal to the
+//! number of NorthPole pipeline stages sufficed to keep pipeline idle time
+//! negligible") — and the enabler is efficiency at micro-batch size 1.
+//!
+//!   cargo bench --bench pipeline_ablation
+
+use npserve::chip::timing::{pass_time, PassKind};
+use npserve::config::hw::RackSpec;
+use npserve::config::models::find_model;
+use npserve::mapper::map_model;
+use npserve::pipeline::schedule::{bubble_fraction, PipelineSchedule};
+use npserve::pipeline::sim::{simulate, SimConfig};
+
+fn main() {
+    let rack = RackSpec::northpole_42u();
+    let m = find_model("granite-3.3-8b").unwrap();
+    let mapping = map_model(&m, 28, 2048, &rack).unwrap();
+    let s = mapping.stages.len();
+    let t = mapping.decode_stage_time(&rack.node.card.chip, 1024);
+
+    println!("fill/drain schedule (GPipe regime) — S = {s} stages, t = {:.0} µs:", t * 1e6);
+    println!("| M (micro-batches) | bubble fraction | round time ms |");
+    for mult in [1usize, 4, 16, 81, 4 * 81] {
+        let sched = PipelineSchedule { stages: s, micro_batches: mult, stage_time_s: t };
+        println!(
+            "| {:>17} | {:>15.3} | {:>13.2} |",
+            mult,
+            bubble_fraction(s, mult),
+            sched.round_time() * 1e3
+        );
+    }
+
+    println!("\ncontinuous decode ring (the paper's regime) — busy fraction from sim:");
+    println!("| in-flight users | mean card busy | ITL ms |");
+    for users in [7u32, 14, 28, 56] {
+        // map at the paper's 28-user plan; the ring can be over-subscribed
+        // in the sim (56 in-flight halves nothing: the bottleneck stage
+        // saturates — the point of the ablation)
+        let rep = simulate(&mapping, &rack, SimConfig {
+            users, prompt_len: 64, gen_len: 64, requests: users, chunk: 64,
+        });
+        let itl: f64 = {
+            let gaps: Vec<f64> = rep.seqs.iter().flat_map(|r| r.itl_gaps.clone()).collect();
+            gaps.iter().sum::<f64>() / gaps.len() as f64
+        };
+        println!(
+            "| {users:>15} | {:>13.0}% | {:>6.2} |",
+            100.0 * rep.mean_card_busy(),
+            itl * 1e3
+        );
+    }
+
+    // micro-batch-1 efficiency: the decode pass is fixed-cost dominated,
+    // so batching decode passes barely helps — the architectural claim.
+    let chip = rack.node.card.chip;
+    let cost = mapping.cards[1].cost; // an MLP card
+    let t1 = pass_time(&chip, &cost, PassKind::Decode { micro_batch: 1, ctx: 1024 });
+    let t8 = pass_time(&chip, &cost, PassKind::Decode { micro_batch: 8, ctx: 1024 });
+    println!(
+        "\nmicro-batch 1 vs 8 on one card: {:.0} µs vs {:.0} µs ({:.2}x — \
+         near-flat: µb=1 is efficient, unlike GPU pipelines)",
+        t1 * 1e6,
+        t8 * 1e6,
+        t8 / t1
+    );
+}

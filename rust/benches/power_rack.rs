@@ -1,0 +1,65 @@
+//! §VI-C: rack & system power — budget build-up, measured-load model, and
+//! failover reserve.
+//!
+//!   cargo bench --bench power_rack
+
+use npserve::config::hw::RackSpec;
+use npserve::config::models::find_model;
+use npserve::mapper::map_model;
+use npserve::pipeline::sim::{simulate, SimConfig};
+use npserve::power::{card_power_w, deployment_power, failover_reserve_w};
+
+fn main() {
+    let rack = RackSpec::northpole_42u();
+    let node = rack.node;
+
+    println!("§VI-C power budget build-up (per server):");
+    println!("  idle server             : {:>7.0} W  (paper: 615 W)", node.idle_power_w);
+    println!("  16 cards x 50 W envelope: {:>7.0} W  (paper: 800 W)",
+             node.cards_per_node as f64 * node.card.power_envelope_w);
+    println!("  fan cooling             : {:>7.0} W  (paper: 350 W)", node.fan_power_w);
+    println!("  +20% margin             : {:>7.0} W  (paper: ~2.2 kW)", node.power_envelope_w());
+    println!("  provisioned             : {:>7.0} W", node.provisioned_power_w());
+    println!("  rack (18 nodes)         : {:>7.0} W  (paper: 39.6 kW)\n",
+             node.provisioned_power_w() * rack.nodes_per_rack as f64);
+
+    // measured: one 84-card 8B deployment — card activity from the sim
+    let m = find_model("granite-3.3-8b").unwrap();
+    let map = map_model(&m, 28, 2048, &rack).unwrap();
+    let rep = simulate(&map, &rack, SimConfig {
+        users: 28, prompt_len: 128, gen_len: 128, requests: 28, chunk: 128,
+    });
+    let activity = rep.mean_card_busy();
+    let one = deployment_power(&rack, map.n_nodes(&rack), map.n_cards(), 1.0);
+    println!("measured-load model (card activity from sim: {:.0}%):", activity * 100.0);
+    println!(
+        "  1 instance (6 nodes, 84 cards): {:>6.2} kW = {:>3.0}% of allocation  (paper: 10.0 kW, 76%)",
+        one.total_w / 1e3,
+        100.0 * one.budget_fraction()
+    );
+    let three = deployment_power(&rack, 18, 3 * map.n_cards(), 1.0);
+    println!(
+        "  3 instances (18 nodes, 252 cards): {:>5.2} kW                      (paper: ~30 kW)",
+        three.total_w / 1e3
+    );
+    let reserve = failover_reserve_w(&rack, 3, one.total_w);
+    println!(
+        "  failover reserve: {:.1} kW                                        (paper: 5-10 kW)",
+        reserve / 1e3
+    );
+
+    // [6] cross-check: 3B single node at its (lower) activity
+    println!("\n[6] cross-check (granite-3B, 16 cards, one node):");
+    let per_card = card_power_w(&node, 0.25);
+    println!(
+        "  card power {:.1} W -> 16-card aggregate {:.0} W  (paper [6]: 672 W)",
+        per_card,
+        per_card * 16.0
+    );
+
+    println!("\nheadlines: {} @int4 | {} @int8 | {:.2} PB/s | {} kg | {} m²",
+             npserve::util::stats::fmt_ops(rack.peak_ops(4)),
+             npserve::util::stats::fmt_ops(rack.peak_ops(8)),
+             rack.aggregate_bw() / 1e15,
+             rack.weight_kg, rack.footprint_m2);
+}

@@ -1,0 +1,92 @@
+//! Hot-path microbenchmarks: PJRT stage dispatch, card-chain round-trip,
+//! broker ops, tokenizer, tensor codec. Used by the §Perf pass
+//! (EXPERIMENTS.md) — the L3 coordinator must not be the bottleneck.
+//!
+//!   cargo bench --bench runtime_hotpath
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use npserve::broker::{Broker, Task};
+use npserve::runtime::{Engine, Tensor};
+use npserve::service::{GenRequest, LlmInstance, SharedEngine};
+use npserve::tokenizer::ByteTokenizer;
+use npserve::util::stats::fmt_time;
+
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {name:<44} {:>12}/iter", fmt_time(per));
+    per
+}
+
+fn main() {
+    println!("== L3 coordinator micro-benches ==");
+    let broker = Broker::new();
+    let mut id = 0u64;
+    bench("broker post+consume (priority queue)", 10_000, || {
+        id += 1;
+        broker.post("q", Task { id, priority: (id % 3) as u8, body: "x".into(), reply_to: id });
+        broker.try_consume("q", &[0, 1, 2]).unwrap();
+        broker.remove_response(id);
+    });
+
+    let tok = ByteTokenizer;
+    let text = "The quick brown fox jumps over the lazy dog. 12+34=46;";
+    bench("tokenize+detokenize 55-byte prompt", 100_000, || {
+        let t = tok.encode(text);
+        std::hint::black_box(tok.decode(&t));
+    });
+
+    let tensor = Tensor::f32(vec![8, 128], vec![0.5; 1024]);
+    bench("tensor wire encode+decode [8,128] f32", 100_000, || {
+        let w = tensor.to_wire();
+        std::hint::black_box(Tensor::from_wire(&w).unwrap());
+    });
+
+    // PJRT paths need artifacts
+    let dir = PathBuf::from("artifacts/granite-test");
+    if !dir.join("manifest.json").exists() {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+        return;
+    }
+    println!("\n== PJRT stage dispatch (granite-test artifacts) ==");
+    let engine = SharedEngine(Arc::new(Engine::load(&dir).unwrap()));
+    let m = engine.manifest.clone();
+    let b = m.batch_slots;
+
+    let toks = Tensor::i32(vec![b], vec![1; b]);
+    bench("embed_decode stage (host->device->host)", 2_000, || {
+        std::hint::black_box(engine.run("embed_decode", &[toks.clone()]).unwrap());
+    });
+
+    let h = Tensor::f32(vec![b, m.d_model], vec![0.1; b * m.d_model]);
+    bench(&format!("lmhead shard [{b},{}]", m.d_model), 2_000, || {
+        std::hint::black_box(engine.run("lmhead_0", &[h.clone()]).unwrap());
+    });
+
+    println!("\n== full service round-trips ==");
+    let inst = LlmInstance::start(engine);
+    let mut rid = 0;
+    let per = bench("decode round via card chain (B slots)", 50, || {
+        rid += 1;
+        inst.submit(GenRequest {
+            id: rid, prompt: "ab".into(), max_tokens: 2,
+            temperature: 0.0, top_k: 0, stop_byte: None,
+        });
+        inst.serve_until_drained();
+    });
+    println!(
+        "  -> effective decode ITL on CPU PJRT ≈ {} for {} layers",
+        fmt_time(per / 2.0),
+        m.n_layers
+    );
+}

@@ -1,0 +1,58 @@
+//! Table II: latency and throughput for Granite-3.3-8b-instruct within a
+//! single LLM instance, at 2k context (batch 28) and 4k context (batch 14).
+//!
+//! Methodology mirrors §VI-B: prompt-prefill and token-generation each fixed
+//! to half the context; a closed queue of requests; metrics per the paper's
+//! definitions (metrics::BatchMetrics). Paper rows for comparison:
+//!
+//!   ctx  batch  TTFT_s(ms)  ITL_s(ms)  ITPS_B  OTPS_B  EOTPS_B
+//!   2k   28     64.8        2.8        78996   10341   9552
+//!   4k   14     96.2        2.8        82810    5098    4855
+//!
+//! Run: cargo bench --bench table2_latency_throughput [-- --requests N]
+
+use npserve::config::models::find_model;
+use npserve::config::hw::RackSpec;
+use npserve::mapper::map_model;
+use npserve::metrics::BatchMetrics;
+use npserve::pipeline::sim::{simulate, SimConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: u32 = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(84);
+
+    let rack = RackSpec::northpole_42u();
+    let model = find_model("granite-3.3-8b").unwrap();
+
+    println!("Table II — granite-3.3-8b, single instance ({requests} requests/row; paper used 1400)");
+    println!("| ctx  | batch | TTFT_s ms | ITL_s ms | ITPS_B   | OTPS_B   | EOTPS_B  |");
+    println!("|------|-------|-----------|----------|----------|----------|----------|");
+
+    let paper = [
+        (2048u32, 28u32, 64.8, 2.8, 78996.0, 10341.0, 9552.0),
+        (4096, 14, 96.2, 2.8, 82810.0, 5098.0, 4855.0),
+    ];
+
+    for &(ctx, batch, p_ttft, p_itl, p_itps, p_otps, p_eotps) in &paper {
+        let mapping = map_model(&model, batch, ctx, &rack).expect("mapping");
+        let cfg = SimConfig::table2(ctx, batch, requests);
+        let t0 = std::time::Instant::now();
+        let rep = simulate(&mapping, &rack, cfg);
+        let wall = t0.elapsed().as_secs_f64();
+        let m = BatchMetrics::from_records(&rep.seqs);
+        println!("{}   <- measured (sim {:.1}s wall, {} stages, busy {:.0}%)",
+                 m.table2_row(ctx, batch), wall, rep.stages,
+                 100.0 * rep.mean_card_busy());
+        println!(
+            "| {:>4} | {:>5} | {:>9.1} | {:>8.2} | {:>8.0} | {:>8.0} | {:>8.0} |   <- paper",
+            format!("{}k", ctx / 1024), batch, p_ttft, p_itl, p_itps, p_otps, p_eotps
+        );
+    }
+    println!();
+    println!("shape checks: ITL flat across ctx; OTPS(2k) ~ 2x OTPS(4k); EOTPS < OTPS.");
+}

@@ -1,0 +1,59 @@
+//! §VI-B TTFT scaling: "sequences with 128 tokens (N_in=64) complete
+//! prefill within 5.4 ms on average and those with 4096 (N_in=2048)
+//! within 96 ms" — TTFT is linear in prompt length (and batch size).
+//!
+//!   cargo bench --bench ttft_sweep
+
+use npserve::config::hw::RackSpec;
+use npserve::config::models::find_model;
+use npserve::mapper::map_model;
+use npserve::metrics::BatchMetrics;
+use npserve::pipeline::sim::{simulate, SimConfig};
+
+fn main() {
+    let rack = RackSpec::northpole_42u();
+    let m = find_model("granite-3.3-8b").unwrap();
+    // the 4k-capable plan holds 14 users' KV on-chip (Table II row 2)
+    let mapping = map_model(&m, 14, 4096, &rack).unwrap();
+
+    println!("TTFT vs prompt length — granite-3.3-8b, lone sequence (no queueing)");
+    println!("| N_in  | TTFT ms | paper        |");
+    println!("|-------|---------|--------------|");
+    let paper: &[(u32, &str)] = &[
+        (64, "5.4 ms"), (256, "-"), (1024, "~64.8 ms"), (2048, "96 ms"),
+    ];
+    let mut pts = Vec::new();
+    for &(n_in, pp) in paper {
+        let rep = simulate(&mapping, &rack, SimConfig {
+            users: 1, prompt_len: n_in, gen_len: 2, requests: 1, chunk: n_in.min(1024),
+        });
+        let met = BatchMetrics::from_records(&rep.seqs);
+        let ttft = met.ttft.mean();
+        pts.push((n_in as f64, ttft));
+        println!("| {n_in:>5} | {:>7.1} | {pp:>12} |", ttft * 1e3);
+    }
+
+    // linearity check over prompts within one prefill chunk (<=1024);
+    // beyond it chunks pipeline and TTFT goes sub-linear (paper: 64.8 ->
+    // 96.2 ms for 2x tokens)
+    pts.truncate(3);
+    let n = pts.len() as f64;
+    let (sx, sy): (f64, f64) = pts.iter().fold((0.0, 0.0), |a, p| (a.0 + p.0, a.1 + p.1));
+    let (mx, my) = (sx / n, sy / n);
+    let cov: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let vx: f64 = pts.iter().map(|p| (p.0 - mx).powi(2)).sum();
+    let vy: f64 = pts.iter().map(|p| (p.1 - my).powi(2)).sum();
+    let r2 = cov * cov / (vx * vy);
+    println!("\nlinearity: r² = {r2:.4} (paper: TTFT scales linearly with prompt length)");
+
+    println!("\nTTFT vs simultaneous users (N_in = 1024, queueing included):");
+    println!("| users | mean TTFT ms |");
+    for users in [1u32, 7, 14, 28] {
+        let rep = simulate(&mapping, &rack, SimConfig {
+            users, prompt_len: 1024, gen_len: 16, requests: users, chunk: 1024,
+        });
+        let met = BatchMetrics::from_records(&rep.seqs);
+        println!("| {users:>5} | {:>12.1} |", met.ttft.mean() * 1e3);
+    }
+    println!("(paper: TTFT scales linearly with the number of simultaneous users)");
+}

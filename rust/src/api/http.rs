@@ -1,0 +1,264 @@
+//! Minimal HTTP/1.1 server substrate: request parsing, responses, SSE.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn parse(stream: &mut BufReader<TcpStream>) -> Result<HttpRequest> {
+        let mut line = String::new();
+        stream.read_line(&mut line)?;
+        let mut parts = line.split_whitespace();
+        let method = parts.next().ok_or_else(|| anyhow!("empty request"))?.to_string();
+        let path = parts.next().ok_or_else(|| anyhow!("no path"))?.to_string();
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut h = String::new();
+            stream.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let Some((k, v)) = h.split_once(':') else {
+                bail!("bad header line");
+            };
+            headers.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+        let len: usize = headers
+            .get("content-length")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        let mut body = vec![0u8; len];
+        if len > 0 {
+            stream.read_exact(&mut body)?;
+        }
+        Ok(HttpRequest { method, path, headers, body })
+    }
+}
+
+/// A response: either a complete body or a streaming (SSE) writer.
+pub enum HttpResponse {
+    Full { status: u16, content_type: &'static str, body: Vec<u8> },
+    /// SSE stream: the handler receives a writer callback for events.
+    Sse(Box<dyn FnOnce(&mut dyn Write) + Send>),
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: String) -> HttpResponse {
+        HttpResponse::Full { status, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: &str) -> HttpResponse {
+        HttpResponse::Full { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+    }
+}
+
+type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+/// Thread-per-connection HTTP server.
+pub struct HttpServer {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and serve on a background thread. `addr` like "127.0.0.1:0".
+    pub fn serve(addr: &str, handler: Handler) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            loop {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((sock, _)) => {
+                        let h = handler.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(sock, h);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(HttpServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(sock: TcpStream, handler: Handler) -> Result<()> {
+    sock.set_nodelay(true)?;
+    let mut reader = BufReader::new(sock.try_clone()?);
+    let req = HttpRequest::parse(&mut reader)?;
+    let mut out = sock;
+    match handler(&req) {
+        HttpResponse::Full { status, content_type, body } => {
+            let head = format!(
+                "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+                status_text(status),
+                body.len()
+            );
+            out.write_all(head.as_bytes())?;
+            out.write_all(&body)?;
+        }
+        HttpResponse::Sse(f) => {
+            out.write_all(
+                b"HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-cache\r\nconnection: close\r\n\r\n",
+            )?;
+            f(&mut out);
+        }
+    }
+    out.flush()?;
+    Ok(())
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Tiny blocking HTTP client for tests/examples.
+pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, Vec<u8>)> {
+    let mut sock = TcpStream::connect(addr)?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    sock.write_all(req.as_bytes())?;
+    let mut reader = BufReader::new(sock);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line"))?;
+    let mut len = None;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim().is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse::<usize>().ok();
+        }
+    }
+    let mut body = Vec::new();
+    match len {
+        Some(n) => {
+            body.resize(n, 0);
+            reader.read_exact(&mut body)?;
+        }
+        None => {
+            reader.read_to_end(&mut body)?; // SSE / close-delimited
+        }
+    }
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_full_responses() {
+        let mut srv = HttpServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|req: &HttpRequest| {
+                if req.path == "/health" {
+                    HttpResponse::text(200, "ok")
+                } else {
+                    HttpResponse::text(404, "nope")
+                }
+            }),
+        )
+        .unwrap();
+        let (st, body) = http_request(&srv.addr, "GET", "/health", "").unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(body, b"ok");
+        let (st, _) = http_request(&srv.addr, "GET", "/missing", "").unwrap();
+        assert_eq!(st, 404);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn echoes_post_bodies() {
+        let mut srv = HttpServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|req: &HttpRequest| {
+                HttpResponse::Full {
+                    status: 200,
+                    content_type: "application/octet-stream",
+                    body: req.body.clone(),
+                }
+            }),
+        )
+        .unwrap();
+        let (st, body) = http_request(&srv.addr, "POST", "/echo", "hello world").unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(body, b"hello world");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn streams_sse_events() {
+        let mut srv = HttpServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|_req: &HttpRequest| {
+                HttpResponse::Sse(Box::new(|w| {
+                    for i in 0..3 {
+                        let _ = write!(w, "data: ev{i}\n\n");
+                        let _ = w.flush();
+                    }
+                    let _ = write!(w, "data: [DONE]\n\n");
+                }))
+            }),
+        )
+        .unwrap();
+        let (st, body) = http_request(&srv.addr, "POST", "/stream", "").unwrap();
+        assert_eq!(st, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("data: ev0"));
+        assert!(text.contains("data: [DONE]"));
+        srv.shutdown();
+    }
+}

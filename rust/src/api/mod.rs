@@ -1,0 +1,12 @@
+//! §IV front-end: HTTP endpoints implementing OpenAI's streaming chat
+//! completions protocol, posting tasks to the AMQP-style broker exactly as
+//! the paper's API endpoint component does.
+//!
+//! Hand-rolled HTTP/1.1 over std::net (no hyper in this environment):
+//! thread per connection, SSE (`text/event-stream`) for streaming.
+
+pub mod http;
+mod openai;
+
+pub use http::{http_request, HttpRequest, HttpResponse, HttpServer};
+pub use openai::{chat_completion_chunk, parse_chat_request, ApiServer, ChatRequest};

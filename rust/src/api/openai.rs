@@ -1,0 +1,276 @@
+//! OpenAI streaming chat-completions protocol (§IV: "endpoints that
+//! implement OpenAI's streaming chat completions protocol").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::broker::{Broker, Task};
+use crate::util::json::Value;
+
+use super::http::{HttpRequest, HttpResponse, HttpServer};
+
+#[derive(Debug, Clone)]
+pub struct ChatRequest {
+    pub model: String,
+    pub prompt: String,
+    pub stream: bool,
+    pub max_tokens: usize,
+    pub priority: u8,
+}
+
+/// Parse a chat-completions body: {"model", "messages": [...], ...}.
+pub fn parse_chat_request(body: &str) -> Result<ChatRequest> {
+    let v = Value::parse(body).map_err(|e| anyhow!("bad json: {e}"))?;
+    let model = v
+        .req("model")?
+        .as_str()
+        .ok_or_else(|| anyhow!("model must be a string"))?
+        .to_string();
+    let messages = v
+        .req("messages")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("messages must be an array"))?;
+    // concatenate user/system message contents into the prompt
+    let mut prompt = String::new();
+    for m in messages {
+        if let Some(c) = m.get("content").and_then(|c| c.as_str()) {
+            prompt.push_str(c);
+        }
+    }
+    Ok(ChatRequest {
+        model,
+        prompt,
+        stream: v.get("stream").and_then(|s| s.as_bool()).unwrap_or(false),
+        max_tokens: v
+            .get("max_tokens")
+            .and_then(|s| s.as_usize())
+            .unwrap_or(16),
+        priority: v
+            .get("priority")
+            .and_then(|s| s.as_usize())
+            .unwrap_or(1) as u8,
+    })
+}
+
+/// One streaming chunk in OpenAI's chat.completion.chunk format.
+pub fn chat_completion_chunk(id: u64, model: &str, delta: &str, done: bool) -> String {
+    let choice = if done {
+        Value::obj(vec![
+            ("index", Value::num(0.0)),
+            ("delta", Value::obj(vec![])),
+            ("finish_reason", Value::str("stop")),
+        ])
+    } else {
+        Value::obj(vec![
+            ("index", Value::num(0.0)),
+            ("delta", Value::obj(vec![("content", Value::str(delta))])),
+            ("finish_reason", Value::Null),
+        ])
+    };
+    Value::obj(vec![
+        ("id", Value::str(format!("chatcmpl-{id}"))),
+        ("object", Value::str("chat.completion.chunk")),
+        ("model", Value::str(model)),
+        ("choices", Value::arr([choice])),
+    ])
+    .to_string()
+}
+
+/// The API endpoint component: HTTP server that posts tasks to the broker
+/// and streams responses back as SSE.
+pub struct ApiServer {
+    pub http: HttpServer,
+}
+
+impl ApiServer {
+    pub fn serve(addr: &str, broker: Arc<Broker>) -> Result<ApiServer> {
+        let next_id = Arc::new(AtomicU64::new(1));
+        let handler = {
+            let broker = broker.clone();
+            move |req: &HttpRequest| -> HttpResponse {
+                match (req.method.as_str(), req.path.as_str()) {
+                    ("GET", "/health") => HttpResponse::json(
+                        200,
+                        r#"{"status":"ok","system":"northpole-llm"}"#.into(),
+                    ),
+                    ("POST", "/v1/chat/completions") => {
+                        let body = String::from_utf8_lossy(&req.body).to_string();
+                        let chat = match parse_chat_request(&body) {
+                            Ok(c) => c,
+                            Err(e) => {
+                                return HttpResponse::json(
+                                    400,
+                                    Value::obj(vec![("error", Value::str(e.to_string()))])
+                                        .to_string(),
+                                )
+                            }
+                        };
+                        let id = next_id.fetch_add(1, Ordering::Relaxed);
+                        // §IV: post an inference task with model + priority
+                        let ch = broker.post(
+                            &chat.model,
+                            Task {
+                                id,
+                                priority: chat.priority,
+                                body: chat.prompt.clone(),
+                                reply_to: id,
+                            },
+                        );
+                        let model = chat.model.clone();
+                        if chat.stream {
+                            HttpResponse::Sse(Box::new(move |w| {
+                                while let Some(text) = ch.recv() {
+                                    let chunk = chat_completion_chunk(id, &model, &text, false);
+                                    if write!(w, "data: {chunk}\n\n").is_err() {
+                                        return;
+                                    }
+                                    let _ = w.flush();
+                                }
+                                let fin = chat_completion_chunk(id, &model, "", true);
+                                let _ = write!(w, "data: {fin}\n\ndata: [DONE]\n\n");
+                            }))
+                        } else {
+                            // aggregate the stream into one completion
+                            let mut full = String::new();
+                            while let Some(text) = ch.recv() {
+                                full.push_str(&text);
+                            }
+                            let resp = Value::obj(vec![
+                                ("id", Value::str(format!("chatcmpl-{id}"))),
+                                ("object", Value::str("chat.completion")),
+                                ("model", Value::str(model)),
+                                (
+                                    "choices",
+                                    Value::arr([Value::obj(vec![
+                                        ("index", Value::num(0.0)),
+                                        (
+                                            "message",
+                                            Value::obj(vec![
+                                                ("role", Value::str("assistant")),
+                                                ("content", Value::str(full)),
+                                            ]),
+                                        ),
+                                        ("finish_reason", Value::str("stop")),
+                                    ])]),
+                                ),
+                            ]);
+                            HttpResponse::json(200, resp.to_string())
+                        }
+                    }
+                    _ => HttpResponse::json(404, r#"{"error":"not found"}"#.into()),
+                }
+            }
+        };
+        let http = HttpServer::serve(addr, Arc::new(handler))?;
+        Ok(ApiServer { http })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.http.addr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::http::http_request;
+
+    #[test]
+    fn parses_chat_request() {
+        let c = parse_chat_request(
+            r#"{"model":"granite-test","stream":true,"max_tokens":8,
+                "messages":[{"role":"system","content":"You are "},
+                            {"role":"user","content":"helpful."}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.model, "granite-test");
+        assert_eq!(c.prompt, "You are helpful.");
+        assert!(c.stream);
+        assert_eq!(c.max_tokens, 8);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_chat_request("{}").is_err());
+        assert!(parse_chat_request("not json").is_err());
+        assert!(parse_chat_request(r#"{"model":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn chunk_format_is_openai_shaped() {
+        let c = chat_completion_chunk(7, "m", "hi", false);
+        let v = Value::parse(&c).unwrap();
+        assert_eq!(v.get("object").unwrap().as_str(), Some("chat.completion.chunk"));
+        let choices = v.get("choices").unwrap().as_arr().unwrap();
+        assert_eq!(
+            choices[0].get("delta").unwrap().get("content").unwrap().as_str(),
+            Some("hi")
+        );
+        let done = chat_completion_chunk(7, "m", "", true);
+        let v = Value::parse(&done).unwrap();
+        assert_eq!(
+            v.get("choices").unwrap().as_arr().unwrap()[0]
+                .get("finish_reason").unwrap().as_str(),
+            Some("stop")
+        );
+    }
+
+    #[test]
+    fn api_server_health_and_echo_flow() {
+        let broker = Broker::new();
+        let api = ApiServer::serve("127.0.0.1:0", broker.clone()).unwrap();
+        let (st, body) = http_request(api.addr(), "GET", "/health", "").unwrap();
+        assert_eq!(st, 200);
+        assert!(String::from_utf8_lossy(&body).contains("ok"));
+
+        // a fake "instance": consume the task and echo two tokens back
+        let b2 = broker.clone();
+        let worker = std::thread::spawn(move || {
+            let task = b2.consume("echo-model", &[0, 1, 2]).unwrap();
+            let ch = b2.response(task.reply_to).unwrap();
+            ch.send("he".into());
+            ch.send("llo".into());
+            ch.finish();
+        });
+        let (st, body) = http_request(
+            api.addr(),
+            "POST",
+            "/v1/chat/completions",
+            r#"{"model":"echo-model","messages":[{"role":"user","content":"hi"}]}"#,
+        )
+        .unwrap();
+        worker.join().unwrap();
+        assert_eq!(st, 200);
+        let v = Value::parse(&String::from_utf8_lossy(&body)).unwrap();
+        let content = v.get("choices").unwrap().as_arr().unwrap()[0]
+            .get("message").unwrap().get("content").unwrap().as_str().unwrap();
+        assert_eq!(content, "hello");
+    }
+
+    #[test]
+    fn streaming_sse_flow() {
+        let broker = Broker::new();
+        let api = ApiServer::serve("127.0.0.1:0", broker.clone()).unwrap();
+        let b2 = broker.clone();
+        let worker = std::thread::spawn(move || {
+            let task = b2.consume("m", &[0, 1, 2]).unwrap();
+            let ch = b2.response(task.reply_to).unwrap();
+            ch.send("x".into());
+            ch.finish();
+        });
+        let (st, body) = http_request(
+            api.addr(),
+            "POST",
+            "/v1/chat/completions",
+            r#"{"model":"m","stream":true,"messages":[{"role":"user","content":"q"}]}"#,
+        )
+        .unwrap();
+        worker.join().unwrap();
+        assert_eq!(st, 200);
+        let text = String::from_utf8_lossy(&body);
+        assert!(text.contains("chat.completion.chunk"), "{text}");
+        assert!(text.contains("data: [DONE]"));
+    }
+}

@@ -1,0 +1,254 @@
+//! §IV: AMQP-style message broker substrate (stands in for RabbitMQ).
+//!
+//! Named task queues with priority levels, consumer subscriptions that may
+//! cover a subset of priorities (the paper's mechanism for service-level
+//! entitlements and load balancing), and per-request response channels.
+//! In-process; the API mirrors the broker operations §IV describes.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A task posted by the API endpoint (§IV): model queue + priority + body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    pub id: u64,
+    pub priority: u8,
+    pub body: String,
+    /// Correlation id for the response channel.
+    pub reply_to: u64,
+}
+
+#[derive(Default)]
+struct QueueState {
+    /// One FIFO per priority level (higher value = higher priority).
+    by_priority: BTreeMap<u8, VecDeque<Task>>,
+    closed: bool,
+}
+
+/// One named task queue (e.g. "granite-3.3-8b").
+pub struct Queue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+/// The broker: named queues + response channels.
+#[derive(Default)]
+pub struct Broker {
+    queues: Mutex<BTreeMap<String, Arc<Queue>>>,
+    responses: Mutex<BTreeMap<u64, Arc<ResponseChannel>>>,
+}
+
+/// Streaming response channel: tokens flow back to the API endpoint.
+#[derive(Default)]
+pub struct ResponseChannel {
+    state: Mutex<(VecDeque<String>, bool)>, // (messages, finished)
+    ready: Condvar,
+}
+
+impl ResponseChannel {
+    pub fn send(&self, msg: String) {
+        let mut g = self.state.lock().unwrap();
+        g.0.push_back(msg);
+        self.ready.notify_all();
+    }
+
+    pub fn finish(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.1 = true;
+        self.ready.notify_all();
+    }
+
+    /// Receive the next message; None once finished and drained.
+    pub fn recv(&self) -> Option<String> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(m) = g.0.pop_front() {
+                return Some(m);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+}
+
+impl Broker {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Broker::default())
+    }
+
+    fn queue(&self, name: &str) -> Arc<Queue> {
+        let mut qs = self.queues.lock().unwrap();
+        qs.entry(name.to_string())
+            .or_insert_with(|| {
+                Arc::new(Queue { state: Mutex::new(QueueState::default()), ready: Condvar::new() })
+            })
+            .clone()
+    }
+
+    /// Post an inference task to a model's queue (§IV: "posts an inference
+    /// task specifying the requested LLM model and service priority").
+    /// Returns the response channel for the caller to stream from.
+    pub fn post(&self, queue: &str, task: Task) -> Arc<ResponseChannel> {
+        let ch = Arc::new(ResponseChannel::default());
+        self.responses.lock().unwrap().insert(task.reply_to, ch.clone());
+        let q = self.queue(queue);
+        let mut st = q.state.lock().unwrap();
+        st.by_priority.entry(task.priority).or_default().push_back(task);
+        q.ready.notify_one();
+        ch
+    }
+
+    /// Consume the next task at one of the subscribed priority levels,
+    /// highest priority first; blocks until available or the queue closes.
+    pub fn consume(&self, queue: &str, priorities: &[u8]) -> Option<Task> {
+        let q = self.queue(queue);
+        let mut st = q.state.lock().unwrap();
+        loop {
+            for p in priorities.iter().rev() {
+                // priorities sorted ascending: scan from highest
+                let _ = p;
+            }
+            let mut levels: Vec<u8> = priorities.to_vec();
+            levels.sort_unstable_by(|a, b| b.cmp(a));
+            for p in levels {
+                if let Some(fifo) = st.by_priority.get_mut(&p) {
+                    if let Some(t) = fifo.pop_front() {
+                        return Some(t);
+                    }
+                }
+            }
+            if st.closed {
+                return None;
+            }
+            st = q.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking variant.
+    pub fn try_consume(&self, queue: &str, priorities: &[u8]) -> Option<Task> {
+        let q = self.queue(queue);
+        let mut st = q.state.lock().unwrap();
+        let mut levels: Vec<u8> = priorities.to_vec();
+        levels.sort_unstable_by(|a, b| b.cmp(a));
+        for p in levels {
+            if let Some(fifo) = st.by_priority.get_mut(&p) {
+                if let Some(t) = fifo.pop_front() {
+                    return Some(t);
+                }
+            }
+        }
+        None
+    }
+
+    /// Close a queue: blocked consumers drain and then receive None.
+    pub fn close(&self, queue: &str) {
+        let q = self.queue(queue);
+        q.state.lock().unwrap().closed = true;
+        q.ready.notify_all();
+    }
+
+    /// The response channel for a task (used by the LLM instance side).
+    pub fn response(&self, reply_to: u64) -> Option<Arc<ResponseChannel>> {
+        self.responses.lock().unwrap().get(&reply_to).cloned()
+    }
+
+    /// Drop a completed response channel.
+    pub fn remove_response(&self, reply_to: u64) {
+        self.responses.lock().unwrap().remove(&reply_to);
+    }
+
+    pub fn depth(&self, queue: &str) -> usize {
+        let q = self.queue(queue);
+        let st = q.state.lock().unwrap();
+        st.by_priority.values().map(|f| f.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn task(id: u64, prio: u8) -> Task {
+        Task { id, priority: prio, body: format!("req{id}"), reply_to: id }
+    }
+
+    #[test]
+    fn fifo_within_priority() {
+        let b = Broker::new();
+        b.post("m", task(1, 0));
+        b.post("m", task(2, 0));
+        assert_eq!(b.consume("m", &[0]).unwrap().id, 1);
+        assert_eq!(b.consume("m", &[0]).unwrap().id, 2);
+    }
+
+    #[test]
+    fn higher_priority_served_first() {
+        let b = Broker::new();
+        b.post("m", task(1, 0));
+        b.post("m", task(2, 2));
+        b.post("m", task(3, 1));
+        assert_eq!(b.consume("m", &[0, 1, 2]).unwrap().id, 2);
+        assert_eq!(b.consume("m", &[0, 1, 2]).unwrap().id, 3);
+        assert_eq!(b.consume("m", &[0, 1, 2]).unwrap().id, 1);
+    }
+
+    #[test]
+    fn subscription_covers_subset_of_priorities() {
+        // §IV: "an LLM instance can subscribe to some or all priority
+        // levels for its model"
+        let b = Broker::new();
+        b.post("m", task(1, 0));
+        b.post("m", task(2, 2));
+        // a premium-only consumer must not see priority 0
+        assert_eq!(b.try_consume("m", &[2]).unwrap().id, 2);
+        assert!(b.try_consume("m", &[2]).is_none());
+        assert_eq!(b.depth("m"), 1);
+    }
+
+    #[test]
+    fn queues_are_isolated_per_model() {
+        let b = Broker::new();
+        b.post("granite-8b", task(1, 0));
+        b.post("granite-3b", task(2, 0));
+        assert_eq!(b.consume("granite-3b", &[0]).unwrap().id, 2);
+        assert_eq!(b.consume("granite-8b", &[0]).unwrap().id, 1);
+    }
+
+    #[test]
+    fn blocking_consume_wakes_on_post() {
+        let b = Broker::new();
+        let b2 = b.clone();
+        let t = thread::spawn(move || b2.consume("m", &[0]).unwrap().id);
+        thread::sleep(std::time::Duration::from_millis(20));
+        b.post("m", task(9, 0));
+        assert_eq!(t.join().unwrap(), 9);
+    }
+
+    #[test]
+    fn response_channel_streams_then_finishes() {
+        let b = Broker::new();
+        let ch = b.post("m", task(1, 0));
+        let srv = b.response(1).unwrap();
+        srv.send("tok1".into());
+        srv.send("tok2".into());
+        srv.finish();
+        assert_eq!(ch.recv(), Some("tok1".into()));
+        assert_eq!(ch.recv(), Some("tok2".into()));
+        assert_eq!(ch.recv(), None);
+        b.remove_response(1);
+        assert!(b.response(1).is_none());
+    }
+
+    #[test]
+    fn close_releases_blocked_consumers() {
+        let b = Broker::new();
+        let b2 = b.clone();
+        let t = thread::spawn(move || b2.consume("m", &[0]));
+        thread::sleep(std::time::Duration::from_millis(20));
+        b.close("m");
+        assert!(t.join().unwrap().is_none());
+    }
+}

@@ -1,0 +1,102 @@
+//! On-chip memory accounting for one card (§II-A, §III-B).
+//!
+//! Tracks the 192 MB core memory (weights + KV cache + reserved
+//! activations) and validates the §III-C constraint that the entire KV
+//! cache of the mini-batch fits on-chip — the constraint that trades
+//! context length against simultaneous users (2k ctx / 28 users vs
+//! 4k ctx / 14 users in Table II).
+
+use crate::config::hw::ChipSpec;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum MemoryError {
+    #[error("weights ({weights} B) + kv ({kv} B) exceed usable core memory ({usable} B)")]
+    Exceeded { weights: u64, kv: u64, usable: u64 },
+}
+
+/// Memory plan of a single card.
+#[derive(Debug, Clone, Default)]
+pub struct CardMemory {
+    pub weight_bytes: u64,
+    /// KV bytes per user at the planned context length.
+    pub kv_bytes_per_user: u64,
+    pub users: u32,
+}
+
+impl CardMemory {
+    pub fn kv_bytes(&self) -> u64 {
+        self.kv_bytes_per_user * self.users as u64
+    }
+
+    pub fn total(&self) -> u64 {
+        self.weight_bytes + self.kv_bytes()
+    }
+
+    pub fn check(&self, chip: &ChipSpec) -> Result<(), MemoryError> {
+        let usable = chip.usable_bytes();
+        if self.total() > usable {
+            return Err(MemoryError::Exceeded {
+                weights: self.weight_bytes,
+                kv: self.kv_bytes(),
+                usable,
+            });
+        }
+        Ok(())
+    }
+
+    /// Max simultaneous users whose KV fits alongside the weights.
+    pub fn max_users(&self, chip: &ChipSpec) -> u32 {
+        if self.kv_bytes_per_user == 0 {
+            return u32::MAX;
+        }
+        let usable = chip.usable_bytes().saturating_sub(self.weight_bytes);
+        (usable / self.kv_bytes_per_user) as u32
+    }
+
+    /// Fraction of usable memory occupied.
+    pub fn occupancy(&self, chip: &ChipSpec) -> f64 {
+        self.total() as f64 / chip.usable_bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hw::ChipSpec;
+
+    /// The paper's central tradeoff (§VI-B): on the 8B attention card,
+    /// 28 users fit at 2k context and 14 at 4k — and no more.
+    #[test]
+    fn users_vs_context_tradeoff_matches_table2() {
+        let chip = ChipSpec::northpole();
+        // granite-3.3-8b attention card: wq,wk,wv,wo at W4.
+        let d: u64 = 4096;
+        let kvd: u64 = 1024;
+        let weights = (d * d + 2 * d * kvd + d * d) / 2;
+        let kv_per_user_2k = 2048 * 2 * kvd; // C8: 1 byte/elem
+        let m2k = CardMemory { weight_bytes: weights, kv_bytes_per_user: kv_per_user_2k, users: 28 };
+        assert_eq!(m2k.check(&chip), Ok(()));
+        assert_eq!(m2k.max_users(&chip), 28, "2k context must cap at 28 users");
+
+        let kv_per_user_4k = 4096 * 2 * kvd;
+        let m4k = CardMemory { weight_bytes: weights, kv_bytes_per_user: kv_per_user_4k, users: 14 };
+        assert_eq!(m4k.check(&chip), Ok(()));
+        assert_eq!(m4k.max_users(&chip), 14, "4k context must cap at 14 users");
+
+        let over = CardMemory { users: 29, ..m2k };
+        assert!(over.check(&chip).is_err());
+    }
+
+    #[test]
+    fn occupancy_and_weight_only_cards() {
+        let chip = ChipSpec::northpole();
+        let mlp = CardMemory {
+            weight_bytes: 3 * 4096 * 12_800 / 2,
+            kv_bytes_per_user: 0,
+            users: 28,
+        };
+        assert_eq!(mlp.check(&chip), Ok(()));
+        assert_eq!(mlp.max_users(&chip), u32::MAX);
+        assert!(mlp.occupancy(&chip) > 0.4 && mlp.occupancy(&chip) < 0.7);
+    }
+}

@@ -1,0 +1,19 @@
+//! NorthPole chip model (§II-A): memory accounting + pass timing.
+//!
+//! The timing model is a roofline: a pass of `tokens` tokens through the
+//! blocks configured on a card takes
+//!
+//!   t = pass_fixed + max(ops / peak_ops(precision), bytes / onchip_bw)
+//!
+//! where `bytes` counts the weights (read once per pass — they are resident,
+//! never re-fetched off-chip: the whole point of the architecture) plus the
+//! KV-cache bytes the attention reads. `pass_fixed` is the calibrated
+//! framebuffer-in → core-array → framebuffer-out latency (30 µs); DESIGN.md
+//! §4 shows this single constant reproduces both the paper's 8B ITL and
+//! [6]'s 3B single-node numbers.
+
+pub mod timing;
+pub mod memory;
+
+pub use memory::{CardMemory, MemoryError};
+pub use timing::{BlockCost, PassKind, pass_time};

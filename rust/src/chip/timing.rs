@@ -1,0 +1,191 @@
+//! Roofline pass timing for a configured NorthPole card.
+
+use crate::config::hw::ChipSpec;
+
+/// Cost description of the network blocks resident on one card.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BlockCost {
+    /// Resident weight bytes (at weight precision).
+    pub weight_bytes: u64,
+    /// Matmul ops per token (projections + FFN), excluding attention
+    /// score/value ops which scale with context.
+    pub ops_per_token: u64,
+    /// Attention score+value ops per token per unit of context
+    /// (2*2*n_heads*d_head); multiplied by the live context length.
+    pub attn_ops_per_ctx_token: u64,
+    /// KV bytes *read* per token of attention per unit of context.
+    pub kv_bytes_per_ctx_token: u64,
+    /// Effective matmul precision (max of activation/weight bits).
+    pub compute_bits: u8,
+    /// Activation tensor width entering/leaving this card (elements).
+    pub io_elems: u64,
+    /// Activation precision (for framebuffer I/O sizing).
+    pub a_bits: u8,
+}
+
+impl BlockCost {
+    pub fn merge(&mut self, other: &BlockCost) {
+        self.weight_bytes += other.weight_bytes;
+        self.ops_per_token += other.ops_per_token;
+        self.attn_ops_per_ctx_token += other.attn_ops_per_ctx_token;
+        self.kv_bytes_per_ctx_token += other.kv_bytes_per_ctx_token;
+        self.compute_bits = self.compute_bits.max(other.compute_bits);
+        self.io_elems = self.io_elems.max(other.io_elems);
+        self.a_bits = self.a_bits.max(other.a_bits);
+    }
+
+    /// Bytes of activations crossing the framebuffer per token.
+    pub fn io_bytes_per_token(&self) -> u64 {
+        (self.io_elems * self.a_bits as u64).div_ceil(8)
+    }
+}
+
+/// What kind of pass the card is executing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PassKind {
+    /// Prefill chunk: `tokens` prompt tokens of one sequence whose
+    /// attention context is `ctx` (positions already cached + chunk).
+    Prefill { tokens: u32, ctx: u32 },
+    /// Decode micro-batch: one new token for each of `micro_batch`
+    /// sequences, each attending over `ctx` cached positions.
+    Decode { micro_batch: u32, ctx: u32 },
+}
+
+impl PassKind {
+    pub fn tokens(&self) -> u64 {
+        match self {
+            PassKind::Prefill { tokens, .. } => *tokens as u64,
+            PassKind::Decode { micro_batch, .. } => *micro_batch as u64,
+        }
+    }
+
+    pub fn ctx(&self) -> u64 {
+        match self {
+            PassKind::Prefill { ctx, .. } | PassKind::Decode { ctx, .. } => *ctx as u64,
+        }
+    }
+}
+
+/// Time for one pass of `kind` through the blocks on this card.
+pub fn pass_time(chip: &ChipSpec, cost: &BlockCost, kind: PassKind) -> f64 {
+    let tokens = kind.tokens();
+    let ctx = kind.ctx();
+    if tokens == 0 {
+        return 0.0;
+    }
+    // Attention context ops: prefill chunk attends ~ctx/2 on average for
+    // the causal part of the chunk itself; we charge the live context.
+    let ops = cost.ops_per_token * tokens + cost.attn_ops_per_ctx_token * ctx * tokens;
+    let t_comp = ops as f64 / chip.tops_at(cost.compute_bits);
+    let bytes = cost.weight_bytes
+        + cost.kv_bytes_per_ctx_token * ctx * tokens
+        + cost.io_bytes_per_token() * tokens * 2;
+    let t_mem = bytes as f64 / chip.onchip_bw;
+    chip.pass_fixed_s + t_comp.max(t_mem)
+}
+
+/// Utilization estimate of a pass: achieved ops over peak ops in the time.
+pub fn pass_utilization(chip: &ChipSpec, cost: &BlockCost, kind: PassKind) -> f64 {
+    let t = pass_time(chip, cost, kind);
+    let ops = cost.ops_per_token * kind.tokens()
+        + cost.attn_ops_per_ctx_token * kind.ctx() * kind.tokens();
+    (ops as f64 / t) / chip.tops_at(cost.compute_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hw::ChipSpec;
+
+    fn granite8b_mlp_card() -> BlockCost {
+        // Fig 2: one MLP block of granite-3.3-8b per card.
+        // 3 * 4096 * 12800 params at W4.
+        let params: u64 = 3 * 4096 * 12_800;
+        BlockCost {
+            weight_bytes: params / 2,
+            ops_per_token: 2 * params,
+            attn_ops_per_ctx_token: 0,
+            kv_bytes_per_ctx_token: 0,
+            compute_bits: 8,
+            io_elems: 4096,
+            a_bits: 8,
+        }
+    }
+
+    fn granite8b_attn_card() -> BlockCost {
+        let d: u64 = 4096;
+        let kvd: u64 = 1024; // 8 kv heads * 128
+        let params = d * d + 2 * d * kvd + d * d;
+        BlockCost {
+            weight_bytes: params / 2,
+            ops_per_token: 2 * params,
+            attn_ops_per_ctx_token: 2 * 2 * d, // heads*dh == d
+            kv_bytes_per_ctx_token: 2 * kvd,
+            compute_bits: 8,
+            io_elems: d,
+            a_bits: 8,
+        }
+    }
+
+    #[test]
+    fn decode_pass_is_fixed_cost_dominated() {
+        let chip = ChipSpec::northpole();
+        let t = pass_time(&chip, &granite8b_mlp_card(),
+                          PassKind::Decode { micro_batch: 1, ctx: 1024 });
+        // ~30 µs fixed + ~6 µs weight streaming
+        assert!(t > 30e-6 && t < 45e-6, "got {t}");
+    }
+
+    #[test]
+    fn itl_from_81_stage_pipeline_matches_paper() {
+        // §VI-B: ITL ≈ 2.8 ms for granite-3.3-8b.
+        // 80 pipeline cards alternate attn/mlp + 1 TP lmhead stage.
+        let chip = ChipSpec::northpole();
+        let t_attn = pass_time(&chip, &granite8b_attn_card(),
+                               PassKind::Decode { micro_batch: 1, ctx: 1024 });
+        let t_mlp = pass_time(&chip, &granite8b_mlp_card(),
+                              PassKind::Decode { micro_batch: 1, ctx: 1024 });
+        let itl = 40.0 * (t_attn + t_mlp);
+        assert!((2.0e-3..3.6e-3).contains(&itl), "got {itl}");
+    }
+
+    #[test]
+    fn prefill_scales_roughly_linearly_in_tokens() {
+        let chip = ChipSpec::northpole();
+        let cost = granite8b_mlp_card();
+        let t128 = pass_time(&chip, &cost, PassKind::Prefill { tokens: 128, ctx: 128 });
+        let t1024 = pass_time(&chip, &cost, PassKind::Prefill { tokens: 1024, ctx: 1024 });
+        let ratio = t1024 / t128;
+        assert!(ratio > 5.0 && ratio < 9.0, "got {ratio}");
+    }
+
+    #[test]
+    fn compute_bits_change_throughput() {
+        let chip = ChipSpec::northpole();
+        let mut c = granite8b_mlp_card();
+        let t8 = pass_time(&chip, &c, PassKind::Prefill { tokens: 2048, ctx: 2048 });
+        c.compute_bits = 4;
+        let t4 = pass_time(&chip, &c, PassKind::Prefill { tokens: 2048, ctx: 2048 });
+        assert!(t4 < t8, "int4 must be faster when compute-bound");
+    }
+
+    #[test]
+    fn utilization_high_for_big_prefill_low_for_decode() {
+        let chip = ChipSpec::northpole();
+        let cost = granite8b_mlp_card();
+        let up = pass_utilization(&chip, &cost, PassKind::Prefill { tokens: 2048, ctx: 2048 });
+        let ud = pass_utilization(&chip, &cost, PassKind::Decode { micro_batch: 1, ctx: 2048 });
+        assert!(up > 0.5, "prefill util {up}");
+        assert!(ud < 0.05, "decode util {ud}");
+    }
+
+    #[test]
+    fn zero_tokens_take_zero_time() {
+        let chip = ChipSpec::northpole();
+        assert_eq!(
+            pass_time(&chip, &granite8b_mlp_card(),
+                      PassKind::Prefill { tokens: 0, ctx: 0 }),
+            0.0
+        );
+    }
+}

@@ -1,0 +1,258 @@
+//! NorthPole hardware constants (§II).
+//!
+//! Rack-level figures published in the paper: 288 cards, 115 peta-ops at
+//! int4, 3.7 PB/s aggregate on-chip memory bandwidth, ≤40 kW, 730 kg,
+//! 0.67 m². Per-chip figures follow by division and match the NorthPole
+//! Science paper: ~400/200/800 TOPS at 4/8/2-bit, 13 TB/s on-chip, 224 MB
+//! SRAM (192 core + 32 framebuffer).
+
+pub const MB: u64 = 1 << 20;
+
+/// The NorthPole chip (§II-A).
+#[derive(Debug, Clone, Copy)]
+pub struct ChipSpec {
+    /// 16x16 array of compute cores.
+    pub core_rows: usize,
+    pub core_cols: usize,
+    /// Core-array memory for weights + intermediate tensors (bytes).
+    pub core_mem_bytes: u64,
+    /// Framebuffer staging memory for off-chip I/O (bytes).
+    pub framebuffer_bytes: u64,
+    /// Peak int8 tensor ops/sec. 4-bit doubles, 2-bit quadruples.
+    pub tops_int8: f64,
+    /// Aggregate on-chip memory bandwidth (bytes/sec).
+    pub onchip_bw: f64,
+    /// Fixed per-pass latency through the core array + framebuffer DMA:
+    /// the calibrated constant of the timing model (DESIGN.md §4/§6) —
+    /// 30 µs reproduces both the paper's 8B ITL (2.8 ms over 81 stages)
+    /// and [6]'s 3B node (0.99 ms over 16 stages, 28 users).
+    pub pass_fixed_s: f64,
+    /// Fraction of core memory usable for weights+KV after reserving
+    /// intermediate activations and routing state (calibrated so that the
+    /// 8B attention card supports exactly 28 users @2k / 14 @4k — §VI-B).
+    pub reserve_bytes: u64,
+}
+
+impl ChipSpec {
+    pub fn northpole() -> Self {
+        ChipSpec {
+            core_rows: 16,
+            core_cols: 16,
+            core_mem_bytes: 192 * MB,
+            framebuffer_bytes: 32 * MB,
+            tops_int8: 208e12, // 60 peta-ops(int8) / 288 cards
+            onchip_bw: 13e12,  // 3.7 PB/s / 288 cards
+            pass_fixed_s: 30e-6,
+            reserve_bytes: 57 * MB,
+        }
+    }
+
+    /// Peak ops/sec at the given operand precision.
+    pub fn tops_at(&self, bits: u8) -> f64 {
+        match bits {
+            2 => self.tops_int8 * 4.0,
+            4 => self.tops_int8 * 2.0,
+            8 => self.tops_int8,
+            16 => self.tops_int8 / 2.0, // fp16
+            _ => self.tops_int8,
+        }
+    }
+
+    /// Memory usable for weights + KV cache on one card.
+    pub fn usable_bytes(&self) -> u64 {
+        self.core_mem_bytes - self.reserve_bytes
+    }
+
+    pub fn total_mem_bytes(&self) -> u64 {
+        self.core_mem_bytes + self.framebuffer_bytes
+    }
+}
+
+/// The NorthPole PCIe card (§II-B): chip + FPGA (PCIe endpoint, DMA
+/// engines, C2C datapath).
+#[derive(Debug, Clone, Copy)]
+pub struct CardSpec {
+    pub chip: ChipSpec,
+    /// Card power envelope allocated by the rack design (§VI-C).
+    pub power_envelope_w: f64,
+    /// Static (idle) card power.
+    pub power_idle_w: f64,
+    /// Typical LLM load power, <55 W (§II-B); 50 W measured at full load.
+    pub power_load_w: f64,
+    /// Framebuffer slots available for staging tensors (credits protocol,
+    /// §V-C). Slot granularity = one activation tensor.
+    pub framebuffer_slots: u32,
+}
+
+impl CardSpec {
+    pub fn northpole() -> Self {
+        CardSpec {
+            chip: ChipSpec::northpole(),
+            power_envelope_w: 50.0,
+            power_idle_w: 12.0,
+            power_load_w: 50.0,
+            framebuffer_slots: 16,
+        }
+    }
+}
+
+/// Point-to-point interconnect cost model: t = latency + bytes / bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSpec {
+    pub latency_s: f64,
+    pub bandwidth: f64, // bytes/sec
+    pub name: &'static str,
+}
+
+impl LinkSpec {
+    /// PCIe Gen3 x8 card-to-card within a node (§III-A: "well within the
+    /// bandwidth of PCIe Gen3x8"). Effective ~6.6 GB/s of the 7.9 GB/s raw.
+    pub fn pcie_c2c() -> Self {
+        LinkSpec { latency_s: 1.2e-6, bandwidth: 6.6e9, name: "pcie-c2c" }
+    }
+
+    /// Host <-> card over the same PCIe fabric, plus driver/DMA overhead.
+    pub fn pcie_host() -> Self {
+        LinkSpec { latency_s: 2.5e-6, bandwidth: 6.0e9, name: "pcie-host" }
+    }
+
+    /// 200 GbE RoCE between server nodes (§II-C), incl. socket relay by the
+    /// application containers (§IV-3).
+    pub fn roce_200gbe() -> Self {
+        LinkSpec { latency_s: 6.0e-6, bandwidth: 22e9, name: "200gbe-roce" }
+    }
+
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth
+    }
+}
+
+/// A 2U NorthPole LLM server node (§II-C): Gigabyte G292-2G0, 16 cards.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeSpec {
+    pub card: CardSpec,
+    pub cards_per_node: usize,
+    /// Measured average idle power of the configured Gigabyte server.
+    pub idle_power_w: f64,
+    /// Power reserved for fan cooling at load.
+    pub fan_power_w: f64,
+    /// Host-side per-hop overhead for socket relay between containers.
+    pub host_relay_s: f64,
+    /// Host sampling/tokenization overhead per generated token (sequence
+    /// head container, §IV-1).
+    pub host_sample_s: f64,
+}
+
+impl NodeSpec {
+    pub fn g292_2g0() -> Self {
+        NodeSpec {
+            card: CardSpec::northpole(),
+            cards_per_node: 16,
+            idle_power_w: 615.0,
+            fan_power_w: 350.0,
+            host_relay_s: 8.0e-6,
+            host_sample_s: 60.0e-6,
+        }
+    }
+
+    /// §VI-C: per-server power envelope = (idle + 16 cards + fans) x 1.2
+    /// = 2118 W, which the paper provisions as 2.2 kW per server.
+    pub fn power_envelope_w(&self) -> f64 {
+        (self.idle_power_w
+            + self.cards_per_node as f64 * self.card.power_envelope_w
+            + self.fan_power_w)
+            * 1.2
+    }
+
+    /// The provisioned (rounded-up) per-server budget used for the rack
+    /// power plan: 2.2 kW -> 39.6 kW per 18-node rack.
+    pub fn provisioned_power_w(&self) -> f64 {
+        (self.power_envelope_w() / 100.0).ceil() * 100.0
+    }
+}
+
+/// A 42U NorthPole LLM inference rack (§II-D).
+#[derive(Debug, Clone, Copy)]
+pub struct RackSpec {
+    pub node: NodeSpec,
+    pub nodes_per_rack: usize,
+    pub weight_kg: f64,
+    pub footprint_m2: f64,
+    pub power_budget_w: f64,
+}
+
+impl RackSpec {
+    pub fn northpole_42u() -> Self {
+        RackSpec {
+            node: NodeSpec::g292_2g0(),
+            nodes_per_rack: 18,
+            weight_kg: 730.0,
+            footprint_m2: 0.67,
+            power_budget_w: 40_000.0,
+        }
+    }
+
+    pub fn cards(&self) -> usize {
+        self.nodes_per_rack * self.node.cards_per_node
+    }
+
+    /// Aggregate peak ops/sec at a precision (headline: 115 POPS @ int4).
+    pub fn peak_ops(&self, bits: u8) -> f64 {
+        self.cards() as f64 * self.node.card.chip.tops_at(bits)
+    }
+
+    /// Aggregate on-chip memory bandwidth (headline: 3.7 PB/s).
+    pub fn aggregate_bw(&self) -> f64 {
+        self.cards() as f64 * self.node.card.chip.onchip_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rack_headline_numbers_match_paper() {
+        let rack = RackSpec::northpole_42u();
+        assert_eq!(rack.cards(), 288);
+        // 115 peta-ops at 4-bit (paper abstract)
+        let pops4 = rack.peak_ops(4) / 1e15;
+        assert!((pops4 - 115.0).abs() / 115.0 < 0.05, "got {pops4} POPS");
+        // 60 / 230 peta-ops at 8 / 2 bit (§II-D)
+        assert!((rack.peak_ops(8) / 1e15 - 60.0).abs() < 3.0);
+        assert!((rack.peak_ops(2) / 1e15 - 230.0).abs() < 10.0);
+        // 3.7 PB/s aggregate memory bandwidth
+        let pbs = rack.aggregate_bw() / 1e15;
+        assert!((pbs - 3.74).abs() < 0.1, "got {pbs} PB/s");
+    }
+
+    #[test]
+    fn chip_memory_sums_to_224mb() {
+        let chip = ChipSpec::northpole();
+        assert_eq!(chip.total_mem_bytes(), 224 * MB);
+        assert_eq!(chip.core_rows * chip.core_cols, 256);
+        assert!(chip.usable_bytes() < chip.core_mem_bytes);
+    }
+
+    #[test]
+    fn server_envelope_is_2_2kw() {
+        let node = NodeSpec::g292_2g0();
+        let w = node.power_envelope_w();
+        // §VI-C: (615 + 800 + 350) x 1.2 = 2118 W, provisioned as 2.2 kW
+        assert!((w - 2118.0).abs() < 10.0, "got {w} W");
+        assert_eq!(node.provisioned_power_w(), 2200.0);
+        // rack: 39.6 kW for 18 nodes
+        let rack_w = node.provisioned_power_w() * 18.0;
+        assert!((rack_w - 39600.0).abs() < 1.0, "got {rack_w} W");
+    }
+
+    #[test]
+    fn link_costs_are_sane() {
+        let pcie = LinkSpec::pcie_c2c();
+        // a 4 KB embedding tensor moves card-to-card in ~2 µs
+        let t = pcie.transfer_time(4096);
+        assert!(t > 1e-6 && t < 5e-6, "got {t}");
+        let nic = LinkSpec::roce_200gbe();
+        assert!(nic.transfer_time(4096) > t);
+    }
+}

@@ -1,0 +1,11 @@
+//! System configuration: NorthPole hardware constants, the model zoo, and
+//! precision schemes — every number here is from the paper (§II, Table I)
+//! or its predecessor [6], with assumptions called out in DESIGN.md §4.
+
+pub mod hw;
+pub mod models;
+pub mod precision;
+
+pub use hw::{CardSpec, ChipSpec, NodeSpec, RackSpec, LinkSpec};
+pub use models::{LlmSpec, MoeSpec, model_zoo, find_model};
+pub use precision::Precision;

@@ -1,0 +1,242 @@
+//! The model zoo (Table I): architecture descriptions of the LLMs the
+//! paper maps onto NorthPole. Dimensions for the Granite-3.3-8b model are
+//! from its model card; the 3B and gpt-oss internals are assumptions
+//! documented in DESIGN.md §4 (the paper publishes only card counts).
+
+use super::precision::Precision;
+
+/// Mixture-of-experts block description (gpt-oss family, Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MoeSpec {
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// Hidden width of a single expert's FFN.
+    pub d_expert: usize,
+}
+
+/// An LLM architecture, as the mapper sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmSpec {
+    pub name: &'static str,
+    pub family: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    /// Dense FFN hidden width (ignored for MoE layers).
+    pub d_ff: usize,
+    pub moe: Option<MoeSpec>,
+    pub precision: Precision,
+    /// Output-layer tensor-parallel split (Fig 2: 4 for the 8B model;
+    /// Fig 3: 8 for gpt-oss). A paper design choice, validated for fit.
+    pub lmhead_shards: usize,
+    /// Whether the lm head reuses the embedding matrix (Granite ties them)
+    /// and is folded into pipeline cards with spare memory.
+    pub tied_colocated_lmhead: bool,
+    /// Default evaluation context length (§VI-B).
+    pub context: usize,
+}
+
+impl LlmSpec {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        2 * self.n_kv_heads * self.d_head()
+    }
+
+    /// KV-cache elements per token per layer (k + v).
+    pub fn kv_elems_per_token(&self) -> u64 {
+        self.kv_dim() as u64
+    }
+
+    // ---------------------------------------------------------- parameters
+
+    /// Attention block parameters of one layer (wq, wk, wv, wo).
+    pub fn attn_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let hd = (self.n_heads * self.d_head()) as u64;
+        let kvd = (self.n_kv_heads * self.d_head()) as u64;
+        d * hd + 2 * d * kvd + hd * d
+    }
+
+    /// FFN parameters of one layer: dense SwiGLU or all experts + router.
+    pub fn ffn_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        match self.moe {
+            None => 3 * d * self.d_ff as u64,
+            Some(m) => {
+                m.n_experts as u64 * 3 * d * m.d_expert as u64
+                    + d * m.n_experts as u64 // router
+            }
+        }
+    }
+
+    /// One expert's parameters (MoE only).
+    pub fn expert_params(&self) -> u64 {
+        let m = self.moe.expect("expert_params on dense model");
+        3 * self.d_model as u64 * m.d_expert as u64
+    }
+
+    pub fn layer_params(&self) -> u64 {
+        self.attn_params() + self.ffn_params()
+    }
+
+    pub fn embed_params(&self) -> u64 {
+        (self.vocab * self.d_model) as u64
+    }
+
+    pub fn lmhead_params(&self) -> u64 {
+        (self.vocab * self.d_model) as u64
+    }
+
+    pub fn total_params(&self) -> u64 {
+        let tied = if self.tied_colocated_lmhead { 1 } else { 2 };
+        self.n_layers as u64 * self.layer_params()
+            + tied * self.embed_params()
+            + 2 * self.d_model as u64 * self.n_layers as u64 // norms
+    }
+
+    /// Ops per token for one layer's FFN (active experts only for MoE).
+    pub fn ffn_ops_per_token(&self) -> u64 {
+        let d = self.d_model as u64;
+        match self.moe {
+            None => 2 * 3 * d * self.d_ff as u64,
+            Some(m) => 2 * 3 * d * m.d_expert as u64 * m.top_k as u64,
+        }
+    }
+
+    pub fn attn_proj_ops_per_token(&self) -> u64 {
+        2 * self.attn_params()
+    }
+
+    /// Score+value attention ops per token at context length `ctx`.
+    pub fn attn_ctx_ops_per_token(&self, ctx: usize) -> u64 {
+        2 * 2 * (ctx * self.n_heads * self.d_head()) as u64
+    }
+}
+
+/// The four Table I configurations.
+pub fn model_zoo() -> Vec<LlmSpec> {
+    vec![
+        // Granite-3.1 3B — A4-C4-W4, 16 cards / 1 node (Table I row 1).
+        // Internals assumed (DESIGN.md §4): 30 layers, d=2560, GQA 32/8,
+        // ff=6656, vocab 49k. 15 fused-layer cards (2 layers each) + 1
+        // output card = 16; embedding lookup is host-side (§IV-1: the
+        // sequence head performs non-neural operations).
+        LlmSpec {
+            name: "granite-3.1-3b",
+            family: "Granite-3.1",
+            vocab: 49_152,
+            d_model: 2560,
+            n_layers: 30,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 6656,
+            moe: None,
+            precision: Precision::A4C4W4,
+            lmhead_shards: 1,
+            tied_colocated_lmhead: true,
+            context: 2048,
+        },
+        // Granite-3.3 8B — A8-C8-W4, 84 cards / 6 nodes (Table I row 2,
+        // Fig 2): 40 layers, attention and MLP blocks on separate cards,
+        // output layer TP across 4 cards.
+        LlmSpec {
+            name: "granite-3.3-8b",
+            family: "Granite-3.3",
+            vocab: 49_152,
+            d_model: 4096,
+            n_layers: 40,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 12_800,
+            moe: None,
+            precision: Precision::A8C8W4,
+            lmhead_shards: 4,
+            tied_colocated_lmhead: false,
+            context: 2048,
+        },
+        // gpt-oss-20b — A8-C8-W4, 104 cards / 7 nodes (Table I row 3,
+        // Fig 3): 24 MoE layers (32 experts, top-4), attention and expert
+        // blocks on separate cards, output TP across 8 cards.
+        LlmSpec {
+            name: "gpt-oss-20b",
+            family: "gpt-oss",
+            vocab: 201_088,
+            d_model: 2880,
+            n_layers: 24,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 2880,
+            moe: Some(MoeSpec { n_experts: 32, top_k: 4, d_expert: 2880 }),
+            precision: Precision::A8C8W4,
+            lmhead_shards: 8,
+            tied_colocated_lmhead: false,
+            context: 2048,
+        },
+        // gpt-oss-120b — A8-C8-W4, 440 cards / 28 nodes / 2 racks
+        // (Table I row 4): 36 MoE layers, 128 experts top-4, 11 expert
+        // cards per layer (§Fig 3 caption).
+        LlmSpec {
+            name: "gpt-oss-120b",
+            family: "gpt-oss",
+            vocab: 201_088,
+            d_model: 2880,
+            n_layers: 36,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 2880,
+            moe: Some(MoeSpec { n_experts: 128, top_k: 4, d_expert: 2880 }),
+            precision: Precision::A8C8W4,
+            lmhead_shards: 8,
+            tied_colocated_lmhead: false,
+            context: 2048,
+        },
+    ]
+}
+
+pub fn find_model(name: &str) -> Option<LlmSpec> {
+    model_zoo().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_counts_land_in_class() {
+        let zoo = model_zoo();
+        let by_name = |n: &str| zoo.iter().find(|m| m.name == n).unwrap();
+        let b = 1e9;
+        let p3 = by_name("granite-3.1-3b").total_params() as f64 / b;
+        assert!((2.0..3.5).contains(&p3), "3b got {p3}");
+        let p8 = by_name("granite-3.3-8b").total_params() as f64 / b;
+        assert!((7.0..9.0).contains(&p8), "8b got {p8}");
+        let p20 = by_name("gpt-oss-20b").total_params() as f64 / b;
+        assert!((18.0..23.0).contains(&p20), "20b got {p20}");
+        let p120 = by_name("gpt-oss-120b").total_params() as f64 / b;
+        assert!((100.0..130.0).contains(&p120), "120b got {p120}");
+    }
+
+    #[test]
+    fn moe_active_params_are_sparse() {
+        let m = find_model("gpt-oss-20b").unwrap();
+        // active FFN ops per token are top_k/n_experts of total expert params
+        let active = m.ffn_ops_per_token();
+        let dense_all = 2 * m.ffn_params();
+        assert!(active < dense_all / 4);
+    }
+
+    #[test]
+    fn kv_dims() {
+        let m = find_model("granite-3.3-8b").unwrap();
+        assert_eq!(m.d_head(), 128);
+        assert_eq!(m.kv_dim(), 2048); // 2 * 8 heads * 128
+        for m in model_zoo() {
+            assert_eq!(m.d_head() % 2, 0, "{} rope needs even d_head", m.name);
+        }
+    }
+}

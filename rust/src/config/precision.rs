@@ -1,0 +1,92 @@
+//! Precision schemes (§III-B): every layer can choose integer precisions
+//! for its Activations, KV Cache, and Weights — written A{a}-C{c}-W{w}.
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Precision {
+    pub a_bits: u8,
+    pub c_bits: u8,
+    pub w_bits: u8,
+}
+
+impl Precision {
+    /// 8-bit activations & caches, 4-bit weights — Granite-3.3-8b and the
+    /// gpt-oss models (Table I).
+    pub const A8C8W4: Precision = Precision { a_bits: 8, c_bits: 8, w_bits: 4 };
+    /// Fully 4-bit — the Granite-3.1 3B configuration (Table I).
+    pub const A4C4W4: Precision = Precision { a_bits: 4, c_bits: 4, w_bits: 4 };
+    /// 8-bit everywhere (used by ablations).
+    pub const A8C8W8: Precision = Precision { a_bits: 8, c_bits: 8, w_bits: 8 };
+
+    pub fn weight_bytes(&self, params: u64) -> u64 {
+        (params * self.w_bits as u64).div_ceil(8)
+    }
+
+    pub fn cache_bytes(&self, elements: u64) -> u64 {
+        (elements * self.c_bits as u64).div_ceil(8)
+    }
+
+    pub fn act_bytes(&self, elements: u64) -> u64 {
+        (elements * self.a_bits as u64).div_ceil(8)
+    }
+
+    /// The precision at which matmul ops effectively run. The paper's
+    /// headline counts the A8-C8-W4 system at the 4-bit rate (115 POPS),
+    /// and §VI-B's prefill latencies are only consistent with W4 matmuls
+    /// running at the int4 rate (DESIGN.md §4): the weight operand feeds
+    /// the MAC array, so throughput follows the narrower width.
+    pub fn compute_bits(&self) -> u8 {
+        self.a_bits.min(self.w_bits)
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        // format: "A8-C8-W4" (case-insensitive)
+        let up = s.to_uppercase();
+        let mut a = None;
+        let mut c = None;
+        let mut w = None;
+        for part in up.split('-') {
+            let (k, v) = part.split_at(1);
+            let bits: u8 = v.parse().ok()?;
+            match k {
+                "A" => a = Some(bits),
+                "C" => c = Some(bits),
+                "W" => w = Some(bits),
+                _ => return None,
+            }
+        }
+        Some(Precision { a_bits: a?, c_bits: c?, w_bits: w? })
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "A{}-C{}-W{}", self.a_bits, self.c_bits, self.w_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [Precision::A8C8W4, Precision::A4C4W4, Precision::A8C8W8] {
+            assert_eq!(Precision::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(Precision::parse("a8-c8-w4"), Some(Precision::A8C8W4));
+        assert_eq!(Precision::parse("x8"), None);
+    }
+
+    #[test]
+    fn byte_math() {
+        let p = Precision::A8C8W4;
+        assert_eq!(p.weight_bytes(100), 50); // 4-bit packs 2/byte
+        assert_eq!(p.cache_bytes(100), 100);
+        assert_eq!(Precision::A4C4W4.cache_bytes(100), 50);
+        assert_eq!(p.compute_bits(), 4);
+        assert_eq!(Precision::A4C4W4.compute_bits(), 4);
+        assert_eq!(Precision::A8C8W8.compute_bits(), 8);
+    }
+}

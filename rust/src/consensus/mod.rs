@@ -1,0 +1,144 @@
+//! §IV-2: ring-based startup consensus.
+//!
+//! "The pipeline management container uses a ring-based consensus protocol
+//! to determine when all application containers have finished configuring
+//! their cards." Implemented as a token circulating the ring of
+//! participants: each member stamps the token once it reports ready; when
+//! the token returns to the origin with every stamp, consensus is reached.
+//! Two full rounds (collect + commit) make the result known to every
+//! member, tolerating stragglers by recirculation.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum RingState {
+    Collecting,
+    Committed,
+}
+
+struct Inner {
+    ready: Vec<bool>,
+    state: RingState,
+    /// Token position + stamps observed, for observability/testing.
+    token_pos: usize,
+    rounds: u32,
+}
+
+/// A ring of `n` members reaching agreement that all are configured.
+pub struct Ring {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    n: usize,
+}
+
+impl Ring {
+    pub fn new(n: usize) -> Arc<Self> {
+        assert!(n > 0);
+        Arc::new(Ring {
+            inner: Mutex::new(Inner {
+                ready: vec![false; n],
+                state: RingState::Collecting,
+                token_pos: 0,
+                rounds: 0,
+            }),
+            cv: Condvar::new(),
+            n,
+        })
+    }
+
+    /// Member `i` reports that its cards are configured.
+    pub fn report_ready(&self, i: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.ready[i] = true;
+        // pass the token around: if all stamps present, commit
+        g.token_pos = (g.token_pos + 1) % self.n;
+        if g.token_pos == 0 {
+            g.rounds += 1;
+        }
+        if g.ready.iter().all(|&r| r) {
+            g.state = RingState::Committed;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until consensus commits (all members configured).
+    pub fn wait_committed(&self) {
+        let mut g = self.inner.lock().unwrap();
+        while g.state != RingState::Committed {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn is_committed(&self) -> bool {
+        self.inner.lock().unwrap().state == RingState::Committed
+    }
+
+    pub fn ready_count(&self) -> usize {
+        self.inner.lock().unwrap().ready.iter().filter(|&&r| r).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn commits_only_after_all_ready() {
+        let ring = Ring::new(4);
+        for i in 0..3 {
+            ring.report_ready(i);
+            assert!(!ring.is_committed(), "committed early at {i}");
+        }
+        ring.report_ready(3);
+        assert!(ring.is_committed());
+    }
+
+    #[test]
+    fn wait_blocks_until_commit() {
+        let ring = Ring::new(3);
+        let r2 = ring.clone();
+        let t = thread::spawn(move || {
+            r2.wait_committed();
+            true
+        });
+        thread::sleep(Duration::from_millis(10));
+        assert!(!t.is_finished());
+        for i in 0..3 {
+            ring.report_ready(i);
+        }
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn duplicate_reports_are_idempotent() {
+        let ring = Ring::new(2);
+        ring.report_ready(0);
+        ring.report_ready(0);
+        assert!(!ring.is_committed());
+        assert_eq!(ring.ready_count(), 1);
+        ring.report_ready(1);
+        assert!(ring.is_committed());
+    }
+
+    #[test]
+    fn members_report_from_parallel_threads() {
+        // §IV-2: "all NorthPole application containers configure their
+        // cards in parallel"
+        let ring = Ring::new(8);
+        let mut hs = Vec::new();
+        for i in 0..8 {
+            let r = ring.clone();
+            hs.push(thread::spawn(move || {
+                thread::sleep(Duration::from_millis((8 - i as u64) * 3));
+                r.report_ready(i);
+            }));
+        }
+        ring.wait_committed();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(ring.ready_count(), 8);
+    }
+}

@@ -1,0 +1,157 @@
+//! Interconnect fabric model (§II-C/D): PCIe topology within a server
+//! node and the 200 GbE all-to-all between nodes.
+//!
+//! The pipeline simulator charges per-hop costs from `LinkSpec`; this
+//! module owns the *topology* — which pairs of cards are one PCIe hop
+//! apart, where node boundaries fall for a mapping, and how many
+//! node-crossings a pipeline makes (each crossing adds NIC latency and
+//! two host socket relays, §IV-3).
+
+use crate::config::hw::{LinkSpec, NodeSpec, RackSpec};
+use crate::mapper::Mapping;
+
+/// Where two cards sit relative to each other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HopKind {
+    /// Same card (no transfer).
+    Local,
+    /// Same server node: direct C2C over the PCIe fabric (§V-C).
+    PcieC2c,
+    /// Different nodes: card → host → 200 GbE → host → card (§IV-3).
+    InterNode,
+}
+
+/// The fabric of one deployment: card→node placement from a mapping.
+pub struct Fabric {
+    cards_per_node: usize,
+    pcie: LinkSpec,
+    host: LinkSpec,
+    nic: LinkSpec,
+    host_relay_s: f64,
+}
+
+impl Fabric {
+    pub fn new(node: &NodeSpec) -> Fabric {
+        Fabric {
+            cards_per_node: node.cards_per_node,
+            pcie: LinkSpec::pcie_c2c(),
+            host: LinkSpec::pcie_host(),
+            nic: LinkSpec::roce_200gbe(),
+            host_relay_s: node.host_relay_s,
+        }
+    }
+
+    pub fn node_of(&self, card: usize) -> usize {
+        card / self.cards_per_node
+    }
+
+    pub fn hop_kind(&self, from: usize, to: usize) -> HopKind {
+        if from == to {
+            HopKind::Local
+        } else if self.node_of(from) == self.node_of(to) {
+            HopKind::PcieC2c
+        } else {
+            HopKind::InterNode
+        }
+    }
+
+    /// Transfer time for `bytes` between two cards.
+    pub fn hop_time(&self, from: usize, to: usize, bytes: u64) -> f64 {
+        match self.hop_kind(from, to) {
+            HopKind::Local => 0.0,
+            HopKind::PcieC2c => self.pcie.transfer_time(bytes),
+            HopKind::InterNode => {
+                // C2H + socket relay + NIC + socket relay + H2C
+                self.host.transfer_time(bytes)
+                    + self.nic.transfer_time(bytes)
+                    + self.host.transfer_time(bytes)
+                    + 2.0 * self.host_relay_s
+            }
+        }
+    }
+
+    /// Host → card injection cost (sequence head to first card).
+    pub fn host_to_card(&self, bytes: u64) -> f64 {
+        self.host.transfer_time(bytes)
+    }
+
+    /// Count pipeline-order node crossings of a mapping — each is a 200 GbE
+    /// hop on the token path (the 8B's 84 cards over 6 nodes cross 5 times).
+    pub fn node_crossings(&self, mapping: &Mapping) -> usize {
+        let mut crossings = 0;
+        for w in mapping.stages.windows(2) {
+            let a = mapping.cards[w[0].cards[0]].id;
+            let b = mapping.cards[w[1].cards[0]].id;
+            if self.hop_kind(a, b) == HopKind::InterNode {
+                crossings += 1;
+            }
+        }
+        crossings
+    }
+
+    /// Total per-token communication time around the whole pipeline ring
+    /// for an activation tensor of `bytes` (decode steady state).
+    pub fn ring_comm_time(&self, mapping: &Mapping, bytes: u64) -> f64 {
+        let mut t = self.host_to_card(bytes);
+        for w in mapping.stages.windows(2) {
+            let a = mapping.cards[w[0].cards[0]].id;
+            let b = mapping.cards[w[1].cards[0]].id;
+            t += self.hop_time(a, b, bytes);
+        }
+        t + self.host_to_card(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::find_model;
+    use crate::mapper::map_model;
+
+    fn setup() -> (Fabric, Mapping, RackSpec) {
+        let rack = RackSpec::northpole_42u();
+        let m = find_model("granite-3.3-8b").unwrap();
+        let mapping = map_model(&m, 28, 2048, &rack).unwrap();
+        (Fabric::new(&rack.node), mapping, rack)
+    }
+
+    #[test]
+    fn hop_classification() {
+        let (f, _, _) = setup();
+        assert_eq!(f.hop_kind(3, 3), HopKind::Local);
+        assert_eq!(f.hop_kind(0, 15), HopKind::PcieC2c);
+        assert_eq!(f.hop_kind(15, 16), HopKind::InterNode);
+        assert_eq!(f.node_of(16), 1);
+    }
+
+    #[test]
+    fn inter_node_hops_cost_more_than_pcie() {
+        let (f, _, _) = setup();
+        let bytes = 4096; // one 8B embedding tensor at A8
+        let pcie = f.hop_time(0, 1, bytes);
+        let inter = f.hop_time(15, 16, bytes);
+        assert!(inter > 3.0 * pcie, "pcie {pcie} inter {inter}");
+        assert_eq!(f.hop_time(2, 2, bytes), 0.0);
+    }
+
+    #[test]
+    fn crossings_match_node_count() {
+        // 84 cards over 6 nodes in pipeline order → 5 crossings
+        let (f, mapping, _) = setup();
+        assert_eq!(f.node_crossings(&mapping), 5);
+    }
+
+    #[test]
+    fn ring_comm_is_small_fraction_of_itl() {
+        // §III-A: "only the small embedding tensor needs to be communicated
+        // between layers ... well within the bandwidth of PCIe Gen3x8" —
+        // the per-token communication around the whole 81-stage ring must
+        // be well under the 2.8 ms ITL.
+        let (f, mapping, rack) = setup();
+        let bytes = mapping.model.d_model as u64; // A8: 1 byte/elem
+        let comm = f.ring_comm_time(&mapping, bytes);
+        assert!(comm < 1.0e-3, "ring comm {comm}");
+        let itl = mapping.itl_estimate(&rack.node.card.chip, 1024);
+        assert!(comm < 0.3 * itl, "comm {comm} vs itl {itl}");
+    }
+}

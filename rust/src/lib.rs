@@ -1,0 +1,40 @@
+//! npserve — reproduction of "A Scalable NorthPole System with End-to-End
+//! Vertical Integration for Low-Latency and Energy-Efficient LLM Inference"
+//! (CS.DC 2025).
+//!
+//! Three-layer architecture (DESIGN.md):
+//! * Layer 1/2 (build-time python): Pallas kernels + staged JAX model,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * Layer 3 (this crate): the paper's system contribution — model mapper,
+//!   pipeline scheduler, cloud inference service, software runtime stack —
+//!   plus a NorthPole hardware simulator substrate, all running against
+//!   either the timing simulator (`SimBackend`) or real numerics via PJRT
+//!   (`PjrtBackend`).
+
+pub mod util {
+    pub mod check;
+    pub mod json;
+    pub mod prng;
+    pub mod stats;
+}
+
+pub mod api;
+pub mod broker;
+pub mod card;
+pub mod config;
+pub mod consensus;
+pub mod driver;
+pub mod fabric;
+pub mod npruntime;
+pub mod tokenizer;
+pub mod chip;
+pub mod mapper;
+pub mod pipeline;
+pub mod runtime;
+pub mod service;
+pub mod metrics;
+pub mod power;
+
+pub fn version() -> &'static str {
+    "0.1.0"
+}

@@ -1,0 +1,151 @@
+//! npserve CLI — leader entrypoint for the NorthPole LLM inference system
+//! reproduction.
+//!
+//!   npserve map <model> [--users N] [--ctx L]      mapping report (Fig 2/3)
+//!   npserve simulate <model> [--users N] [--ctx L] [--requests R]
+//!                                                  Table II-style sim run
+//!   npserve power [--instances K]                  §VI-C power report
+//!   npserve serve [--artifacts DIR] [--addr A]     OpenAI endpoint over PJRT
+//!   npserve selftest [--artifacts DIR]             load + run artifacts
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use npserve::api::ApiServer;
+use npserve::broker::Broker;
+use npserve::config::hw::RackSpec;
+use npserve::config::models::{find_model, model_zoo};
+use npserve::mapper::map_model;
+use npserve::metrics::BatchMetrics;
+use npserve::pipeline::sim::{simulate, SimConfig};
+use npserve::power::deployment_power;
+use npserve::runtime::Engine;
+use npserve::service::{LlmInstance, SharedEngine};
+use npserve::util::stats::{fmt_bytes, fmt_ops};
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn flag_u32(args: &[String], name: &str, default: u32) -> u32 {
+    flag(args, name).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rack = RackSpec::northpole_42u();
+
+    match cmd {
+        "map" => {
+            let model_name = args.get(1).cloned().unwrap_or("granite-3.3-8b".into());
+            let users = flag_u32(&args, "--users", 28);
+            let ctx = flag_u32(&args, "--ctx", 2048);
+            let Some(m) = find_model(&model_name) else {
+                eprintln!("unknown model `{model_name}`; available:");
+                for m in model_zoo() {
+                    eprintln!("  {}", m.name);
+                }
+                std::process::exit(1);
+            };
+            match map_model(&m, users, ctx, &rack) {
+                Ok(map) => {
+                    print!("{}", map.describe(&rack));
+                    let chip = rack.node.card.chip;
+                    println!(
+                        "max users: {} @ {}k ctx | est. decode ITL {:.2} ms",
+                        map.max_users(&chip, ctx),
+                        ctx / 1024,
+                        map.itl_estimate(&chip, ctx / 2) * 1e3
+                    );
+                }
+                Err(e) => {
+                    eprintln!("mapping failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "simulate" => {
+            let model_name = args.get(1).cloned().unwrap_or("granite-3.3-8b".into());
+            let users = flag_u32(&args, "--users", 28);
+            let ctx = flag_u32(&args, "--ctx", 2048);
+            let requests = flag_u32(&args, "--requests", 56);
+            let m = find_model(&model_name).expect("unknown model");
+            let mapping = map_model(&m, users, ctx, &rack).expect("mapping");
+            let rep = simulate(&mapping, &rack, SimConfig::table2(ctx, users, requests));
+            let met = BatchMetrics::from_records(&rep.seqs);
+            println!("| ctx  | batch | TTFT_s ms | ITL_s ms | ITPS_B   | OTPS_B   | EOTPS_B  |");
+            println!("{}", met.table2_row(ctx, users));
+            println!(
+                "stages {} | sim time {:.2} s | mean card busy {:.0}%",
+                rep.stages, rep.sim_time, 100.0 * rep.mean_card_busy()
+            );
+        }
+        "power" => {
+            let instances = flag_u32(&args, "--instances", 3) as usize;
+            let m = find_model("granite-3.3-8b").unwrap();
+            let map = map_model(&m, 28, 2048, &rack).unwrap();
+            let nodes = (instances * map.n_nodes(&rack)).min(rack.nodes_per_rack);
+            let cards = instances * map.n_cards();
+            let p = deployment_power(&rack, nodes, cards, 1.0);
+            println!(
+                "{instances} x granite-3.3-8b: {} nodes, {} cards -> {:.1} kW \
+                 ({:.0}% of {:.1} kW provisioned)",
+                p.nodes, p.cards, p.total_w / 1e3,
+                100.0 * p.budget_fraction(), p.budget_w / 1e3
+            );
+            println!(
+                "rack peak: {} @ int4, {} @ int8, {} memory bandwidth",
+                fmt_ops(rack.peak_ops(4)), fmt_ops(rack.peak_ops(8)),
+                fmt_bytes(rack.aggregate_bw())
+            );
+        }
+        "serve" => {
+            let dir = PathBuf::from(
+                flag(&args, "--artifacts").unwrap_or("artifacts/granite-tiny".into()),
+            );
+            let addr = flag(&args, "--addr").unwrap_or("127.0.0.1:8080".into());
+            let max_tokens = flag_u32(&args, "--max-tokens", 32) as usize;
+            println!("loading artifacts from {dir:?} ...");
+            let engine = SharedEngine(Arc::new(Engine::load(&dir).expect("engine")));
+            let model = engine.manifest.model.clone();
+            println!(
+                "model {model}: {} stages compiled on {}",
+                engine.stage_names().len(), engine.platform()
+            );
+            let inst = LlmInstance::start(engine);
+            let broker = Broker::new();
+            let _worker = inst.serve_broker(broker.clone(), &model, vec![0, 1, 2], max_tokens);
+            let api = ApiServer::serve(&addr, broker).expect("bind");
+            println!("OpenAI endpoint: http://{}/v1/chat/completions (model `{model}`)", api.addr());
+            println!("Ctrl-C to stop.");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "selftest" => {
+            let dir = PathBuf::from(
+                flag(&args, "--artifacts").unwrap_or("artifacts/granite-test".into()),
+            );
+            let engine = Engine::load(&dir).expect("engine load");
+            println!(
+                "loaded {} ({} stages, {:.2}M params) on {}",
+                engine.manifest.model,
+                engine.stage_names().len(),
+                engine.manifest.param_count as f64 / 1e6,
+                engine.platform()
+            );
+            let inst = LlmInstance::start(SharedEngine(Arc::new(engine)));
+            inst.submit(npserve::service::GenRequest {
+                id: 1, prompt: "3+4=".into(), max_tokens: 4,
+                temperature: 0.0, top_k: 0, stop_byte: None,
+            });
+            let recs = inst.serve_until_drained();
+            println!("generated {} tokens; selftest OK", recs[0].n_out);
+        }
+        _ => {
+            println!("npserve {} — NorthPole LLM inference system reproduction", npserve::version());
+            println!("commands: map | simulate | power | serve | selftest  (see --help in README)");
+        }
+    }
+}

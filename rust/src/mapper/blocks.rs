@@ -1,0 +1,191 @@
+//! Network blocks as the mapper sees them: each block knows its memory
+//! footprint and its roofline cost on a card.
+
+use crate::chip::timing::BlockCost;
+use crate::config::models::LlmSpec;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockKind {
+    /// Attention block of one layer (holds that layer's KV cache).
+    Attn { layer: usize },
+    /// Dense MLP block of one layer.
+    Mlp { layer: usize },
+    /// Attention + MLP of `count` consecutive layers fused on one card
+    /// (small models, §II-C / [6]).
+    FusedLayers { first: usize, count: usize },
+    /// A group of MoE experts of one layer (Fig 3).
+    ExpertGroup { layer: usize, first: usize, count: usize },
+    /// One tensor-parallel shard of the output layer (Fig 2).
+    LmHeadShard { shard: usize, of: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub kind: BlockKind,
+    /// Resident weight bytes at the model's weight precision.
+    pub weight_bytes: u64,
+    /// KV bytes per user at the planned context length (0 for weight-only).
+    pub kv_bytes_per_user: u64,
+    pub cost: BlockCost,
+}
+
+impl Block {
+    pub fn label(&self) -> String {
+        match &self.kind {
+            BlockKind::Attn { layer } => format!("attn[{layer}]"),
+            BlockKind::Mlp { layer } => format!("mlp[{layer}]"),
+            BlockKind::FusedLayers { first, count } => {
+                format!("layers[{first}..{}]", first + count)
+            }
+            BlockKind::ExpertGroup { layer, first, count } => {
+                format!("experts[{layer}][{first}..{}]", first + count)
+            }
+            BlockKind::LmHeadShard { shard, of } => format!("lmhead[{shard}/{of}]"),
+        }
+    }
+}
+
+/// Build the attention block of one layer.
+pub fn attn_block(m: &LlmSpec, layer: usize, ctx: usize) -> Block {
+    let p = m.precision;
+    let params = m.attn_params();
+    let kv_elems = m.kv_elems_per_token() * ctx as u64;
+    Block {
+        kind: BlockKind::Attn { layer },
+        weight_bytes: p.weight_bytes(params),
+        kv_bytes_per_user: p.cache_bytes(kv_elems),
+        cost: BlockCost {
+            weight_bytes: p.weight_bytes(params),
+            ops_per_token: 2 * params,
+            attn_ops_per_ctx_token: 2 * 2 * (m.n_heads * m.d_head()) as u64,
+            kv_bytes_per_ctx_token: p.cache_bytes(m.kv_elems_per_token()),
+            compute_bits: p.compute_bits(),
+            io_elems: m.d_model as u64,
+            a_bits: p.a_bits,
+        },
+    }
+}
+
+/// Build the dense MLP block of one layer.
+pub fn mlp_block(m: &LlmSpec, layer: usize) -> Block {
+    let p = m.precision;
+    let params = 3 * (m.d_model * m.d_ff) as u64;
+    Block {
+        kind: BlockKind::Mlp { layer },
+        weight_bytes: p.weight_bytes(params),
+        kv_bytes_per_user: 0,
+        cost: BlockCost {
+            weight_bytes: p.weight_bytes(params),
+            ops_per_token: 2 * params,
+            attn_ops_per_ctx_token: 0,
+            kv_bytes_per_ctx_token: 0,
+            compute_bits: p.compute_bits(),
+            io_elems: m.d_model as u64,
+            a_bits: p.a_bits,
+        },
+    }
+}
+
+/// Fuse `count` whole layers (attention + MLP) into one block.
+pub fn fused_block(m: &LlmSpec, first: usize, count: usize, ctx: usize) -> Block {
+    let mut w = 0u64;
+    let mut cost = BlockCost::default();
+    let mut kv = 0u64;
+    for l in first..first + count {
+        let a = attn_block(m, l, ctx);
+        let f = mlp_block(m, l);
+        w += a.weight_bytes + f.weight_bytes;
+        kv += a.kv_bytes_per_user;
+        cost.merge(&a.cost);
+        cost.merge(&f.cost);
+    }
+    Block {
+        kind: BlockKind::FusedLayers { first, count },
+        weight_bytes: w,
+        kv_bytes_per_user: kv,
+        cost,
+    }
+}
+
+/// Build a group of `count` experts of one MoE layer.
+///
+/// Cost note: with top-k routing over `n_experts`, the *expected* number of
+/// active experts on a card holding `count` of them is k*count/n_experts
+/// per token; ops are charged at that expectation.
+pub fn expert_group(m: &LlmSpec, layer: usize, first: usize, count: usize) -> Block {
+    let p = m.precision;
+    let moe = m.moe.expect("expert_group on dense model");
+    let params = m.expert_params() * count as u64;
+    let active = (moe.top_k as f64 * count as f64 / moe.n_experts as f64).min(count as f64);
+    Block {
+        kind: BlockKind::ExpertGroup { layer, first, count },
+        weight_bytes: p.weight_bytes(params),
+        kv_bytes_per_user: 0,
+        cost: BlockCost {
+            weight_bytes: p.weight_bytes(params),
+            ops_per_token: (2.0 * m.expert_params() as f64 * active) as u64,
+            attn_ops_per_ctx_token: 0,
+            kv_bytes_per_ctx_token: 0,
+            compute_bits: p.compute_bits(),
+            io_elems: m.d_model as u64,
+            a_bits: p.a_bits,
+        },
+    }
+}
+
+/// Build one tensor-parallel lm-head shard.
+pub fn lmhead_shard(m: &LlmSpec, shard: usize, of: usize) -> Block {
+    let p = m.precision;
+    let params = m.lmhead_params() / of as u64;
+    Block {
+        kind: BlockKind::LmHeadShard { shard, of },
+        weight_bytes: p.weight_bytes(params),
+        kv_bytes_per_user: 0,
+        cost: BlockCost {
+            weight_bytes: p.weight_bytes(params),
+            ops_per_token: 2 * params,
+            attn_ops_per_ctx_token: 0,
+            kv_bytes_per_ctx_token: 0,
+            compute_bits: p.compute_bits(),
+            io_elems: m.d_model as u64,
+            a_bits: p.a_bits,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::find_model;
+
+    #[test]
+    fn granite8b_block_footprints() {
+        let m = find_model("granite-3.3-8b").unwrap();
+        let a = attn_block(&m, 0, 2048);
+        let f = mlp_block(&m, 0);
+        // W4: attention ~21 MB, MLP ~75 MB
+        assert!((20e6..23e6).contains(&(a.weight_bytes as f64)));
+        assert!((73e6..80e6).contains(&(f.weight_bytes as f64)));
+        // KV at 2k/C8: 2048 tokens * 2048 B
+        assert_eq!(a.kv_bytes_per_user, 2048 * 2048);
+    }
+
+    #[test]
+    fn expert_group_charges_expected_active_ops() {
+        let m = find_model("gpt-oss-20b").unwrap();
+        let g = expert_group(&m, 0, 0, 11);
+        // 11 of 32 experts, top-4 → expected 1.375 active
+        let expect = (2.0 * m.expert_params() as f64 * 4.0 * 11.0 / 32.0) as u64;
+        assert_eq!(g.cost.ops_per_token, expect);
+        assert!(g.cost.ops_per_token < 2 * g.weight_bytes * 2);
+    }
+
+    #[test]
+    fn fused_block_sums_layers() {
+        let m = find_model("granite-3.1-3b").unwrap();
+        let f = fused_block(&m, 0, 2, 2048);
+        let single = fused_block(&m, 0, 1, 2048);
+        assert_eq!(f.weight_bytes, 2 * single.weight_bytes);
+        assert_eq!(f.kv_bytes_per_user, 2 * single.kv_bytes_per_user);
+    }
+}

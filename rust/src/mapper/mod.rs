@@ -1,0 +1,15 @@
+//! §III: mapping LLMs to NorthPole cards, nodes, and racks.
+//!
+//! Strategy (§III-A): pipeline parallelism between transformer blocks, all
+//! weights and KV cache resident on-chip, tensor parallelism for the output
+//! layer (and across MoE expert cards). The mapper is memory-driven: a
+//! block placement is legal only if weights + the mini-batch's whole KV
+//! cache fit in usable core memory (chip::CardMemory), which is exactly the
+//! constraint that yields Table I's card counts and Table II's
+//! users-vs-context tradeoff.
+
+mod blocks;
+mod plan;
+
+pub use blocks::{Block, BlockKind};
+pub use plan::{map_model, CardPlan, Mapping, MapError, Stage, StageRole};

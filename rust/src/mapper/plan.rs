@@ -1,0 +1,470 @@
+//! The mapping planner: LlmSpec + (users, context) → card/node/rack plan.
+
+use crate::chip::memory::CardMemory;
+use crate::chip::timing::{pass_time, BlockCost, PassKind};
+use crate::config::hw::{ChipSpec, RackSpec, MB};
+use crate::config::models::LlmSpec;
+
+use super::blocks::{attn_block, expert_group, fused_block, lmhead_shard, mlp_block, Block};
+
+#[derive(Debug, thiserror::Error)]
+pub enum MapError {
+    #[error("block `{block}` does not fit on any card: {need} B needed, {usable} B usable")]
+    BlockTooLarge { block: String, need: u64, usable: u64 },
+    #[error("model has no layers")]
+    EmptyModel,
+}
+
+/// One card's assignment.
+#[derive(Debug, Clone)]
+pub struct CardPlan {
+    /// Global card index within the deployment (node = id / cards_per_node).
+    pub id: usize,
+    pub blocks: Vec<Block>,
+    pub memory: CardMemory,
+    pub cost: BlockCost,
+}
+
+impl CardPlan {
+    pub fn label(&self) -> String {
+        self.blocks.iter().map(|b| b.label()).collect::<Vec<_>>().join("+")
+    }
+}
+
+/// Why a stage exists — used by the service to route tensors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StageRole {
+    Pipeline,
+    /// Attention stage of an MoE layer (next stage is its expert group).
+    MoeAttn,
+    /// Cards run in tensor/expert parallel; outputs are combined.
+    TensorParallel,
+}
+
+/// One pipeline stage: one card, or a tensor-parallel group of cards.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub cards: Vec<usize>,
+    pub role: StageRole,
+    pub label: String,
+}
+
+/// A complete model → hardware mapping.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    pub model: LlmSpec,
+    pub users: u32,
+    pub context: u32,
+    pub cards: Vec<CardPlan>,
+    pub stages: Vec<Stage>,
+    pub micro_batch: u32,
+}
+
+impl Mapping {
+    pub fn n_cards(&self) -> usize {
+        self.cards.len()
+    }
+
+    pub fn n_nodes(&self, rack: &RackSpec) -> usize {
+        self.n_cards().div_ceil(rack.node.cards_per_node)
+    }
+
+    pub fn n_racks(&self, rack: &RackSpec) -> usize {
+        self.n_nodes(rack).div_ceil(rack.nodes_per_rack)
+    }
+
+    /// Instances of this model that fit in one rack (§VI-B: 3 for the 8B).
+    pub fn instances_per_rack(&self, rack: &RackSpec) -> usize {
+        rack.nodes_per_rack / self.n_nodes(rack).max(1)
+    }
+
+    /// Bottleneck stage time for a decode pass at the planned context.
+    pub fn decode_stage_time(&self, chip: &ChipSpec, ctx: u32) -> f64 {
+        self.stage_times(chip, PassKind::Decode { micro_batch: self.micro_batch, ctx })
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-stage pass time (TP stages take the max over their cards).
+    pub fn stage_times(&self, chip: &ChipSpec, kind: PassKind) -> Vec<f64> {
+        self.stages
+            .iter()
+            .map(|s| {
+                s.cards
+                    .iter()
+                    .map(|&c| pass_time(chip, &self.cards[c].cost, kind))
+                    .fold(0.0, f64::max)
+            })
+            .collect()
+    }
+
+    /// Closed-ring decode ITL estimate: every token traverses all S stages;
+    /// N circulating micro-batches saturate the ring when N > S
+    /// (§III-C + DESIGN.md §4 calibration).
+    pub fn itl_estimate(&self, chip: &ChipSpec, ctx: u32) -> f64 {
+        let times = self.stage_times(
+            chip,
+            PassKind::Decode { micro_batch: self.micro_batch, ctx },
+        );
+        let sum: f64 = times.iter().sum();
+        let bottleneck = times.iter().cloned().fold(0.0, f64::max);
+        let n_micro = (self.users / self.micro_batch).max(1) as f64;
+        let s = times.len() as f64;
+        if n_micro > s {
+            // ring saturated: bottleneck stage processes every micro-batch
+            (n_micro * bottleneck).max(sum)
+        } else {
+            sum
+        }
+    }
+
+    /// Maximum simultaneous users at context `ctx` (the §VI-B tradeoff).
+    pub fn max_users(&self, chip: &ChipSpec, ctx: u32) -> u32 {
+        self.cards
+            .iter()
+            .map(|c| {
+                let kv_per_user: u64 = c
+                    .blocks
+                    .iter()
+                    .map(|b| b.kv_bytes_per_user * ctx as u64 / self.context as u64)
+                    .sum();
+                if kv_per_user == 0 {
+                    return u32::MAX;
+                }
+                let usable = chip.usable_bytes().saturating_sub(c.memory.weight_bytes);
+                (usable / kv_per_user) as u32
+            })
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Human-readable mapping description (Fig 2 / Fig 3 in text form).
+    pub fn describe(&self, rack: &RackSpec) -> String {
+        let chip = rack.node.card.chip;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} ({}): {} cards, {} nodes, {} racks, {} stages, micro-batch {}\n",
+            self.model.name,
+            self.model.precision,
+            self.n_cards(),
+            self.n_nodes(rack),
+            self.n_racks(rack),
+            self.stages.len(),
+            self.micro_batch,
+        ));
+        for s in &self.stages {
+            let cards: Vec<String> = s
+                .cards
+                .iter()
+                .map(|&c| {
+                    let cp = &self.cards[c];
+                    format!(
+                        "card{:03} node{:02} [{}] {:.0}MB ({:.0}%)",
+                        cp.id,
+                        cp.id / rack.node.cards_per_node,
+                        cp.label(),
+                        cp.memory.total() as f64 / MB as f64,
+                        100.0 * cp.memory.occupancy(&chip),
+                    )
+                })
+                .collect();
+            out.push_str(&format!("  {} <- {}\n", s.label, cards.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Reserve on cards that stage only activations (expert cards hold no KV;
+/// DESIGN.md §4): 40 MB instead of the default 48 MB.
+const EXPERT_RESERVE: u64 = 40 * MB;
+
+/// Map a model onto NorthPole cards for `users` simultaneous sequences at
+/// `context` tokens each.
+pub fn map_model(
+    model: &LlmSpec,
+    users: u32,
+    context: u32,
+    rack: &RackSpec,
+) -> Result<Mapping, MapError> {
+    let chip = rack.node.card.chip;
+    if model.n_layers == 0 {
+        return Err(MapError::EmptyModel);
+    }
+    let mut cards: Vec<CardPlan> = Vec::new();
+    let mut stages: Vec<Stage> = Vec::new();
+
+    let place = |blocks: Vec<Block>, cards: &mut Vec<CardPlan>| -> Result<usize, MapError> {
+        let mut cost = BlockCost::default();
+        let mut weights = 0u64;
+        let mut kv_per_user = 0u64;
+        for b in &blocks {
+            cost.merge(&b.cost);
+            weights += b.weight_bytes;
+            kv_per_user += b.kv_bytes_per_user;
+        }
+        let mem = CardMemory { weight_bytes: weights, kv_bytes_per_user: kv_per_user, users };
+        let usable = if kv_per_user == 0 {
+            chip.core_mem_bytes - EXPERT_RESERVE
+        } else {
+            chip.usable_bytes()
+        };
+        if mem.total() > usable {
+            return Err(MapError::BlockTooLarge {
+                block: blocks.iter().map(|b| b.label()).collect::<Vec<_>>().join("+"),
+                need: mem.total(),
+                usable,
+            });
+        }
+        let id = cards.len();
+        cards.push(CardPlan { id, blocks, memory: mem, cost });
+        Ok(id)
+    };
+
+    if let Some(moe) = model.moe {
+        // ---------------- MoE policy (Fig 3): attn card + expert cards ---
+        let expert_bytes = model.precision.weight_bytes(model.expert_params());
+        let per_card = ((chip.core_mem_bytes - EXPERT_RESERVE) / expert_bytes) as usize;
+        let expert_cards = moe.n_experts.div_ceil(per_card.max(1));
+        for l in 0..model.n_layers {
+            let id = place(vec![attn_block(model, l, context as usize)], &mut cards)?;
+            stages.push(Stage {
+                cards: vec![id],
+                role: StageRole::MoeAttn,
+                label: format!("attn[{l}]"),
+            });
+            let mut group = Vec::new();
+            let mut first = 0;
+            for c in 0..expert_cards {
+                let count = per_card.min(moe.n_experts - first);
+                let id = place(vec![expert_group(model, l, first, count)], &mut cards)?;
+                group.push(id);
+                first += count;
+                let _ = c;
+            }
+            stages.push(Stage {
+                cards: group,
+                role: StageRole::TensorParallel,
+                label: format!("experts[{l}]"),
+            });
+        }
+    } else {
+        // ---------------- dense policy: fuse layers if they fit ----------
+        // Try the largest k such that k fused layers (+ KV for all users)
+        // fit one card; if even k=1 fails, split attention and MLP onto
+        // separate cards (the 8B regime, Fig 2).
+        let fits = |k: usize| -> bool {
+            let b = fused_block(model, 0, k, context as usize);
+            b.weight_bytes + b.kv_bytes_per_user * users as u64 <= chip.usable_bytes()
+        };
+        let mut k = 0usize;
+        for try_k in (1..=model.n_layers).rev() {
+            if fits(try_k) {
+                k = try_k;
+                break;
+            }
+        }
+        if k >= 1 {
+            let mut l = 0;
+            while l < model.n_layers {
+                let count = k.min(model.n_layers - l);
+                let id = place(vec![fused_block(model, l, count, context as usize)], &mut cards)?;
+                stages.push(Stage {
+                    cards: vec![id],
+                    role: StageRole::Pipeline,
+                    label: format!("layers[{l}..{}]", l + count),
+                });
+                l += count;
+            }
+        } else {
+            for l in 0..model.n_layers {
+                let a = place(vec![attn_block(model, l, context as usize)], &mut cards)?;
+                stages.push(Stage {
+                    cards: vec![a],
+                    role: StageRole::Pipeline,
+                    label: format!("attn[{l}]"),
+                });
+                let m = place(vec![mlp_block(model, l)], &mut cards)?;
+                stages.push(Stage {
+                    cards: vec![m],
+                    role: StageRole::Pipeline,
+                    label: format!("mlp[{l}]"),
+                });
+            }
+        }
+    }
+
+    // ---------------- output layer: TP shards (Fig 2/3) ------------------
+    let shards = model.lmhead_shards.max(1);
+    let mut group = Vec::new();
+    for s in 0..shards {
+        let id = place(vec![lmhead_shard(model, s, shards)], &mut cards)?;
+        group.push(id);
+    }
+    stages.push(Stage {
+        cards: group,
+        role: StageRole::TensorParallel,
+        label: format!("lmhead[TPx{shards}]"),
+    });
+
+    // §III-C: micro-batch 1 when the pipeline has >= 16 stages, larger for
+    // shallower pipelines.
+    let micro_batch = if stages.len() >= 16 {
+        1
+    } else {
+        (users / stages.len() as u32).max(1)
+    };
+
+    Ok(Mapping {
+        model: model.clone(),
+        users,
+        context,
+        cards,
+        stages,
+        micro_batch,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models::{find_model, model_zoo};
+
+    fn rack() -> RackSpec {
+        RackSpec::northpole_42u()
+    }
+
+    /// Table I, all four rows.
+    #[test]
+    fn table1_card_node_rack_counts() {
+        let cases = [
+            ("granite-3.1-3b", 28, 16, 1, 1),
+            ("granite-3.3-8b", 28, 84, 6, 1),
+            ("gpt-oss-20b", 28, 104, 7, 1),
+            ("gpt-oss-120b", 28, 440, 28, 2),
+        ];
+        for (name, users, cards, nodes, racks) in cases {
+            let m = find_model(name).unwrap();
+            let map = map_model(&m, users, 2048, &rack()).unwrap();
+            assert_eq!(map.n_cards(), cards, "{name} cards");
+            assert_eq!(map.n_nodes(&rack()), nodes, "{name} nodes");
+            assert_eq!(map.n_racks(&rack()), racks, "{name} racks");
+        }
+    }
+
+    /// Fig 2: 8B = 40 layers x (attn + mlp) cards + 4-card TP lm head.
+    #[test]
+    fn fig2_structure_for_8b() {
+        let m = find_model("granite-3.3-8b").unwrap();
+        let map = map_model(&m, 28, 2048, &rack()).unwrap();
+        assert_eq!(map.stages.len(), 81); // 80 pipeline + 1 TP stage
+        assert_eq!(map.stages[0].label, "attn[0]");
+        assert_eq!(map.stages[1].label, "mlp[0]");
+        let last = map.stages.last().unwrap();
+        assert_eq!(last.cards.len(), 4);
+        assert_eq!(last.role, StageRole::TensorParallel);
+        assert_eq!(map.micro_batch, 1);
+    }
+
+    /// Fig 3: 20B = 24 x (attn + 3 expert cards) + 8 TP lm-head cards;
+    /// 120B = 36 x (attn + 11 expert cards) + 8.
+    #[test]
+    fn fig3_moe_structure()  {
+        let m = find_model("gpt-oss-20b").unwrap();
+        let map = map_model(&m, 28, 2048, &rack()).unwrap();
+        let expert_stages: Vec<_> = map
+            .stages
+            .iter()
+            .filter(|s| s.label.starts_with("experts"))
+            .collect();
+        assert_eq!(expert_stages.len(), 24);
+        assert!(expert_stages.iter().all(|s| s.cards.len() == 3));
+
+        let m = find_model("gpt-oss-120b").unwrap();
+        let map = map_model(&m, 28, 2048, &rack()).unwrap();
+        let expert_stages: Vec<_> = map
+            .stages
+            .iter()
+            .filter(|s| s.label.starts_with("experts"))
+            .collect();
+        assert_eq!(expert_stages.len(), 36);
+        assert!(expert_stages.iter().all(|s| s.cards.len() == 11),
+                "got {:?}", expert_stages[0].cards.len());
+    }
+
+    /// §VI-B: the context/users tradeoff — 28 @ 2k, 14 @ 4k.
+    #[test]
+    fn users_context_tradeoff() {
+        let m = find_model("granite-3.3-8b").unwrap();
+        let chip = rack().node.card.chip;
+        let map = map_model(&m, 28, 2048, &rack()).unwrap();
+        assert_eq!(map.max_users(&chip, 2048), 28);
+        assert_eq!(map.max_users(&chip, 4096), 14);
+        // 4k mapping with 14 users must also be legal
+        let map4k = map_model(&m, 14, 4096, &rack()).unwrap();
+        assert_eq!(map4k.n_cards(), 84);
+    }
+
+    /// §VI-B: 3 instances of the 8B per rack; intro: 18 instances of 3B.
+    #[test]
+    fn instances_per_rack() {
+        let m8 = find_model("granite-3.3-8b").unwrap();
+        let map8 = map_model(&m8, 28, 2048, &rack()).unwrap();
+        assert_eq!(map8.instances_per_rack(&rack()), 3);
+        let m3 = find_model("granite-3.1-3b").unwrap();
+        let map3 = map_model(&m3, 28, 2048, &rack()).unwrap();
+        assert_eq!(map3.instances_per_rack(&rack()), 18);
+    }
+
+    /// ITL estimates from the calibrated model: 8B ≈ 2.8 ms (Table II),
+    /// 3B ≈ 1 ms sub-millisecond ([6]).
+    #[test]
+    fn itl_estimates_match_paper() {
+        let chip = rack().node.card.chip;
+        let m8 = find_model("granite-3.3-8b").unwrap();
+        let map8 = map_model(&m8, 28, 2048, &rack()).unwrap();
+        let itl8 = map8.itl_estimate(&chip, 1024);
+        assert!((2.2e-3..3.4e-3).contains(&itl8), "8b itl {itl8}");
+
+        let m3 = find_model("granite-3.1-3b").unwrap();
+        let map3 = map_model(&m3, 28, 2048, &rack()).unwrap();
+        let itl3 = map3.itl_estimate(&chip, 1024);
+        assert!(itl3 < 1.2e-3, "3b itl {itl3}");
+        assert!(itl3 > 0.5e-3, "3b itl {itl3}");
+    }
+
+    #[test]
+    fn every_card_respects_memory() {
+        let chip = rack().node.card.chip;
+        for m in model_zoo() {
+            let users = if m.name.contains("8b") { 28 } else { 28 };
+            let map = map_model(&m, users, 2048, &rack()).unwrap();
+            for c in &map.cards {
+                assert!(
+                    c.memory.total() <= chip.core_mem_bytes,
+                    "{} card {} over memory", m.name, c.id
+                );
+            }
+            // every layer appears exactly once across all cards
+            let mut attn_layers = 0;
+            for c in &map.cards {
+                for b in &c.blocks {
+                    match b.kind {
+                        super::super::blocks::BlockKind::Attn { .. } => attn_layers += 1,
+                        super::super::blocks::BlockKind::FusedLayers { count, .. } => {
+                            attn_layers += count
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            assert_eq!(attn_layers, m.n_layers, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn oversized_context_fails_cleanly() {
+        let m = find_model("granite-3.3-8b").unwrap();
+        // 28 users at 32k context cannot fit on-chip
+        assert!(map_model(&m, 28, 32_768, &rack()).is_err());
+    }
+}

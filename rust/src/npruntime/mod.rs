@@ -1,0 +1,237 @@
+//! §V-B: the runtime library — the high-level API a host application uses
+//! to drive the NorthPole cards in its server node.
+//!
+//! * `load_circuit` configures each card's on-chip contents (a
+//!   `StageExecutor`: PJRT-backed for real numerics, or a timing stub) and
+//!   stores the virtual-circuit DMA descriptor chains on the FPGAs,
+//! * `send_input` submits input tensors asynchronously, blocking only on
+//!   the first card's framebuffer credits (§V-B: "input tensors are only
+//!   transferred to a card when enough space is available"),
+//! * outputs return through a registered callback (§V: "receive output
+//!   tensors through a callback mechanism"),
+//! * model loading, input submission, and output handling run on separate
+//!   threads while preserving per-circuit FIFO ordering.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::card::{CardFpga, CircuitHop, CreditCounter, Packet};
+use crate::driver::Driver;
+
+/// What a configured card computes: input tensor bytes → output tensor
+/// bytes. Implemented by runtime::PjrtStage (real numerics) and by test
+/// stubs.
+pub trait StageExecutor: Send + Sync {
+    fn execute(&self, circuit: u32, tag: u64, input: &[u8]) -> Vec<u8>;
+    fn name(&self) -> String {
+        "stage".into()
+    }
+}
+
+type OutputCallback = Arc<dyn Fn(u32, u64, Vec<u8>) + Send + Sync>;
+
+/// A chain of cards within one server node, executing one virtual circuit.
+pub struct NpRuntime {
+    pub driver: Arc<Driver>,
+    cards: Vec<Arc<CardFpga>>,
+    entry_credits: Vec<Arc<CreditCounter>>,
+    workers: Vec<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    callback: Arc<Mutex<Option<OutputCallback>>>,
+}
+
+impl NpRuntime {
+    /// Configure a pipeline of `executors` as circuit `circuit` over
+    /// `slots`-deep framebuffers. Cards exchange tensors via direct C2C
+    /// (credit-tracked framebuffers); only the last card's output returns
+    /// to the host.
+    pub fn load_circuit(
+        driver: Arc<Driver>,
+        circuit: u32,
+        executors: Vec<Arc<dyn StageExecutor>>,
+        slots: u32,
+    ) -> NpRuntime {
+        let n = executors.len();
+        let cards: Vec<Arc<CardFpga>> =
+            (0..n).map(|i| CardFpga::new(i as u32, slots)).collect();
+        let mut credit_counters = Vec::new();
+
+        // Configure circuit hops: card i -> card i+1, last -> host.
+        for i in 0..n {
+            let (dest, credits) = if i + 1 < n {
+                let c = CreditCounter::new(slots);
+                credit_counters.push(c.clone());
+                (Some(cards[i + 1].framebuffer.clone()), Some(c))
+            } else {
+                (None, None)
+            };
+            cards[i].configure_circuit(CircuitHop { circuit, dest, credits });
+        }
+        // Entry credits guard card 0's framebuffer from the host side.
+        let entry = CreditCounter::new(slots);
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let callback: Arc<Mutex<Option<OutputCallback>>> = Arc::new(Mutex::new(None));
+
+        // One worker thread per card: consume → execute → emit.
+        let mut workers = Vec::new();
+        for (i, exec) in executors.into_iter().enumerate() {
+            let fb = cards[i].framebuffer.clone();
+            let fpga = cards[i].clone();
+            let stop_w = stop.clone();
+            let cb = callback.clone();
+            let entry_w = if i == 0 { Some(entry.clone()) } else { None };
+            // the card that feeds me returns credits when I consume
+            let upstream: Option<Arc<CreditCounter>> = if i > 0 {
+                Some(credit_counters[i - 1].clone())
+            } else {
+                None
+            };
+            workers.push(std::thread::spawn(move || {
+                loop {
+                    // blocking consume with a stop-check timeout (condvar
+                    // wait, not a poll — see EXPERIMENTS.md §Perf)
+                    let p = loop {
+                        if stop_w.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        if let Some(p) =
+                            fb.consume_timeout(std::time::Duration::from_millis(5))
+                        {
+                            break p;
+                        }
+                    };
+                    // consuming frees a framebuffer slot: return the credit
+                    if let Some(u) = &upstream {
+                        u.put();
+                    }
+                    if let Some(e) = &entry_w {
+                        e.put();
+                    }
+                    let out = exec.execute(p.circuit, p.tag, &p.data);
+                    let packet = Packet { circuit: p.circuit, tag: p.tag, data: out };
+                    match fpga.emit(packet) {
+                        Ok(None) => {}
+                        Ok(Some(host_bound)) => {
+                            if let Some(cb) = cb.lock().unwrap().as_ref() {
+                                cb(host_bound.circuit, host_bound.tag, host_bound.data);
+                            }
+                        }
+                        Err(e) => panic!("card {i} emit failed: {e}"),
+                    }
+                }
+            }));
+        }
+
+        NpRuntime {
+            driver,
+            cards,
+            entry_credits: vec![entry],
+            workers,
+            stop,
+            callback,
+        }
+    }
+
+    /// Register the asynchronous output callback (§V-B).
+    pub fn on_output<F: Fn(u32, u64, Vec<u8>) + Send + Sync + 'static>(&self, f: F) {
+        *self.callback.lock().unwrap() = Some(Arc::new(f));
+    }
+
+    /// Submit an input tensor. Blocks only while the first card's
+    /// framebuffer is out of credits.
+    pub fn send_input(&self, circuit: u32, tag: u64, data: Vec<u8>) {
+        self.entry_credits[0].take();
+        self.cards[0]
+            .framebuffer
+            .place(Packet { circuit, tag, data })
+            .expect("entry credits must prevent overflow");
+    }
+
+    pub fn n_cards(&self) -> usize {
+        self.cards.len()
+    }
+}
+
+impl Drop for NpRuntime {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    /// A stage that appends its id byte — composition order is observable.
+    struct Tagger(u8);
+    impl StageExecutor for Tagger {
+        fn execute(&self, _c: u32, _t: u64, input: &[u8]) -> Vec<u8> {
+            let mut v = input.to_vec();
+            v.push(self.0);
+            v
+        }
+    }
+
+    fn chain(n: u8, slots: u32) -> (NpRuntime, mpsc::Receiver<(u64, Vec<u8>)>) {
+        let execs: Vec<Arc<dyn StageExecutor>> =
+            (0..n).map(|i| Arc::new(Tagger(i)) as Arc<dyn StageExecutor>).collect();
+        let rt = NpRuntime::load_circuit(Driver::new(), 0, execs, slots);
+        let (tx, rx) = mpsc::channel();
+        rt.on_output(move |_c, tag, data| {
+            tx.send((tag, data)).unwrap();
+        });
+        (rt, rx)
+    }
+
+    #[test]
+    fn pipeline_applies_stages_in_order() {
+        let (rt, rx) = chain(4, 4);
+        rt.send_input(0, 7, vec![0xAA]);
+        let (tag, data) = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(tag, 7);
+        assert_eq!(data, vec![0xAA, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn outputs_preserve_fifo_order() {
+        let (rt, rx) = chain(3, 2);
+        for i in 0..16u64 {
+            rt.send_input(0, i, vec![i as u8]);
+        }
+        for i in 0..16u64 {
+            let (tag, _) = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            assert_eq!(tag, i, "FIFO order violated");
+        }
+    }
+
+    #[test]
+    fn backpressure_bounds_in_flight_tensors() {
+        // with 1-slot framebuffers, send_input blocks; all inputs still
+        // complete once the pipeline drains.
+        let (rt, rx) = chain(2, 1);
+        let n = 8u64;
+        for i in 0..n {
+            rt.send_input(0, i, vec![1]);
+        }
+        let mut got = 0;
+        while got < n {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            got += 1;
+        }
+        assert_eq!(got, n);
+    }
+
+    #[test]
+    fn single_card_circuit_returns_to_host() {
+        let (rt, rx) = chain(1, 4);
+        rt.send_input(0, 1, vec![5]);
+        let (_, data) = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(data, vec![5, 0]);
+    }
+}

@@ -1,0 +1,9 @@
+//! §III-C: pipeline utilization — micro-batch scheduling math and the
+//! discrete-event simulator that produces the paper's latency/throughput
+//! metrics (Table II) from a `mapper::Mapping`.
+
+pub mod schedule;
+pub mod sim;
+
+pub use schedule::{bubble_fraction, gpipe_round_time, PipelineSchedule};
+pub use sim::{SeqRecord, SimConfig, SimReport, simulate};

@@ -1,0 +1,90 @@
+//! GPipe-style micro-batch schedule analysis (§III-C).
+//!
+//! The paper's claim: on NorthPole a number of micro-batches M equal to the
+//! number of pipeline stages S keeps idle time negligible, whereas GPipe on
+//! GPUs needed M ≈ 4·S. The bubble algebra: one round of M micro-batches
+//! through S stages of service time t takes (S + M - 1)·t, of which S·M·t
+//! is useful stage-time out of S·(S + M - 1)·t stage-slots.
+
+/// Static schedule description for one pipeline round.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineSchedule {
+    pub stages: usize,
+    pub micro_batches: usize,
+    /// Per-stage service time (bottleneck-normalized).
+    pub stage_time_s: f64,
+}
+
+impl PipelineSchedule {
+    /// Wall time to run one round of M micro-batches (fill + drain).
+    pub fn round_time(&self) -> f64 {
+        (self.stages + self.micro_batches - 1) as f64 * self.stage_time_s
+    }
+
+    /// Fraction of stage-slots idle during a fill-drain round.
+    pub fn bubble_fraction(&self) -> f64 {
+        bubble_fraction(self.stages, self.micro_batches)
+    }
+
+    /// Steady-state throughput (micro-batches/sec) of a *continuous* ring
+    /// (decode): the pipeline never drains, so the bottleneck stage decides.
+    pub fn ring_throughput(&self) -> f64 {
+        let in_flight = self.micro_batches.min(self.stages) as f64;
+        in_flight / (self.stages as f64 * self.stage_time_s)
+    }
+}
+
+/// Idle fraction of a fill-drain round: (S-1) / (S + M - 1).
+pub fn bubble_fraction(stages: usize, micro_batches: usize) -> f64 {
+    if stages == 0 || micro_batches == 0 {
+        return 1.0;
+    }
+    (stages - 1) as f64 / (stages + micro_batches - 1) as f64
+}
+
+/// Round wall-time for M micro-batches of total batch `n` over S stages.
+pub fn gpipe_round_time(stages: usize, micro_batches: usize, stage_time_s: f64) -> f64 {
+    PipelineSchedule { stages, micro_batches, stage_time_s }.round_time()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn m_equals_s_halves_bubbles_vs_m1() {
+        // With M = S the bubble fraction is (S-1)/(2S-1) ≈ 1/2;
+        // with M = 4S it is ≈ 1/5 (GPipe's regime); with M = 1 it is ≈ 1.
+        let s = 80;
+        assert!(bubble_fraction(s, 1) > 0.95);
+        let at_s = bubble_fraction(s, s);
+        assert!((at_s - 0.5).abs() < 0.01, "{at_s}");
+        let at_4s = bubble_fraction(s, 4 * s);
+        assert!((at_4s - 0.2).abs() < 0.01, "{at_4s}");
+    }
+
+    #[test]
+    fn ring_throughput_saturates_at_s_microbatches() {
+        let t = 35e-6;
+        let s = 81;
+        let half = PipelineSchedule { stages: s, micro_batches: 40, stage_time_s: t };
+        let full = PipelineSchedule { stages: s, micro_batches: 81, stage_time_s: t };
+        let over = PipelineSchedule { stages: s, micro_batches: 160, stage_time_s: t };
+        assert!(half.ring_throughput() < full.ring_throughput());
+        // beyond S in-flight, throughput cannot grow
+        assert!((over.ring_throughput() - full.ring_throughput()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_time_formula() {
+        assert_eq!(gpipe_round_time(4, 4, 1.0), 7.0);
+        assert_eq!(gpipe_round_time(1, 10, 2.0), 20.0);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert_eq!(bubble_fraction(0, 5), 1.0);
+        assert_eq!(bubble_fraction(5, 0), 1.0);
+        assert_eq!(bubble_fraction(1, 1), 0.0);
+    }
+}

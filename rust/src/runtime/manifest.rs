@@ -1,0 +1,160 @@
+//! manifest.json loader — the contract between aot.py and the runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+
+use super::tensor::DType;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub batch_slots: usize,
+    pub prefill_chunk: usize,
+    pub max_context: usize,
+    pub lmhead_shards: usize,
+    pub shard_vocab: usize,
+    pub param_count: u64,
+    pub k_scale: f64,
+    pub v_scale: f64,
+    pub stages: BTreeMap<String, StageSig>,
+}
+
+fn sig_list(v: &Value) -> Result<Vec<TensorSig>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of signatures"))?
+        .iter()
+        .map(|s| {
+            let shape = s
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape not array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = DType::parse(
+                s.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype not str"))?,
+            )?;
+            Ok(TensorSig { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Value::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let cfg = v.req("config")?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.req(k)?.as_usize().ok_or_else(|| anyhow!("bad `{k}`"))
+        };
+        let mut stages = BTreeMap::new();
+        for (name, s) in v
+            .req("stages")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("stages not object"))?
+        {
+            stages.insert(
+                name.clone(),
+                StageSig {
+                    file: s
+                        .req("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("file not str"))?
+                        .to_string(),
+                    inputs: sig_list(s.req("inputs")?)?,
+                    outputs: sig_list(s.req("outputs")?)?,
+                },
+            );
+        }
+        Ok(Manifest {
+            model: v
+                .req("model")?
+                .as_str()
+                .ok_or_else(|| anyhow!("model not str"))?
+                .to_string(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            d_head: get("d_head")?,
+            batch_slots: get("batch_slots")?,
+            prefill_chunk: get("prefill_chunk")?,
+            max_context: get("max_context")?,
+            lmhead_shards: get("lmhead_shards")?,
+            shard_vocab: get("shard_vocab")?,
+            param_count: get("param_count")? as u64,
+            k_scale: cfg.req("k_scale")?.as_f64().ok_or_else(|| anyhow!("k_scale"))?,
+            v_scale: cfg.req("v_scale")?.as_f64().ok_or_else(|| anyhow!("v_scale"))?,
+            stages,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "granite-test",
+      "format": "hlo-text/return-tuple",
+      "config": {"vocab": 64, "d_model": 32, "n_layers": 2, "n_heads": 2,
+                 "n_kv_heads": 1, "d_head": 16, "d_ff": 64, "batch_slots": 4,
+                 "prefill_chunk": 8, "max_context": 32, "lmhead_shards": 4,
+                 "shard_vocab": 16, "a_bits": 8, "c_bits": 8, "w_bits": 4,
+                 "k_scale": 0.05, "v_scale": 0.05, "rope_theta": 10000.0,
+                 "eps": 1e-6, "param_count": 17000},
+      "stages": {
+        "embed_decode": {
+          "file": "embed_decode.hlo.txt",
+          "inputs": [{"shape": [4], "dtype": "int32"}],
+          "outputs": [{"shape": [4, 32], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "granite-test");
+        assert_eq!(m.batch_slots, 4);
+        assert_eq!(m.k_scale, 0.05);
+        let s = &m.stages["embed_decode"];
+        assert_eq!(s.inputs[0].shape, vec![4]);
+        assert_eq!(s.outputs[0].dtype, DType::F32);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("{\"model\": \"x\"}").is_err());
+    }
+}

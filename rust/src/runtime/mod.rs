@@ -1,0 +1,139 @@
+//! PJRT runtime bridge: load the AOT artifacts (HLO text) produced by
+//! `python/compile/aot.py`, compile them once on the PJRT CPU client, and
+//! execute them on the request path. Python never runs here.
+//!
+//! The stage I/O contract is documented in python/compile/model.py; the
+//! manifest (manifest.json) pins shapes/dtypes and is validated at load.
+
+mod manifest;
+mod tensor;
+
+pub use manifest::{Manifest, StageSig, TensorSig};
+pub use tensor::{DType, Tensor};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A compiled model: every stage executable plus the manifest.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    stages: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load and compile every stage in `dir` (e.g. artifacts/granite-test).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut stages = BTreeMap::new();
+        for (name, sig) in &manifest.stages {
+            let path = dir.join(&sig.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .with_context(|| format!("parsing HLO text for stage {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling stage {name}"))?;
+            stages.insert(name.clone(), exe);
+        }
+        Ok(Engine { manifest, client, stages, dir: dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stage_names(&self) -> Vec<&str> {
+        self.stages.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute one stage. Inputs are validated against the manifest;
+    /// outputs are the decomposed return tuple.
+    pub fn run(&self, stage: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let sig = self
+            .manifest
+            .stages
+            .get(stage)
+            .ok_or_else(|| anyhow!("unknown stage `{stage}`"))?;
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "stage `{stage}` expects {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype != s.dtype {
+                bail!(
+                    "stage `{stage}` input {i}: expected {:?} {}, got {:?} {}",
+                    s.shape, s.dtype, t.shape, t.dtype
+                );
+            }
+        }
+        let exe = &self.stages[stage];
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose.
+        let parts = out.to_tuple()?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (p, osig) in parts.into_iter().zip(&sig.outputs) {
+            tensors.push(Tensor::from_literal(&p, &osig.shape, &osig.dtype)?);
+        }
+        Ok(tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/granite-test");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_and_runs_every_stage_shape() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let eng = Engine::load(&dir).unwrap();
+        let m = &eng.manifest;
+        assert!(eng.stage_names().len() >= 10);
+
+        // embed_decode: tokens [B] -> h [B, D]
+        let b = m.batch_slots;
+        let toks = Tensor::i32(vec![b], vec![1i32; b]);
+        let out = eng.run("embed_decode", &[toks]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![b, m.d_model]);
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let eng = Engine::load(&dir).unwrap();
+        let bad = Tensor::i32(vec![3], vec![0, 0, 0]);
+        assert!(eng.run("embed_decode", &[bad]).is_err());
+        assert!(eng.run("nonexistent", &[]).is_err());
+    }
+}

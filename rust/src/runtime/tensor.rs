@@ -1,0 +1,217 @@
+//! Host tensor type + (de)serialization to xla Literals and wire bytes.
+
+use anyhow::{bail, Result};
+
+/// Supported element types on the stage boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "int8" => DType::I8,
+            other => bail!("unsupported dtype `{other}`"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DType::F32 => write!(f, "float32"),
+            DType::I32 => write!(f, "int32"),
+            DType::I8 => write!(f, "int8"),
+        }
+    }
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn f32(shape: Vec<usize>, v: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        let data = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        Tensor { shape, dtype: DType::F32, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, v: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        let data = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        Tensor { shape, dtype: DType::I32, data }
+    }
+
+    pub fn i8(shape: Vec<usize>, v: Vec<i8>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        Tensor { shape, dtype: DType::I8, data: v.iter().map(|&x| x as u8).collect() }
+    }
+
+    pub fn zeros(shape: Vec<usize>, dtype: DType) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape, dtype, data: vec![0u8; n * dtype.size()] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor { shape: vec![], dtype: DType::I32, data: v.to_le_bytes().to_vec() }
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    // ---------------------------------------------------------- xla bridge
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // Single path for all dtypes: the host buffer is already laid out
+        // row-major little-endian, exactly what XLA expects.
+        let ty = match self.dtype {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::I8 => xla::ElementType::S8,
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty, &self.shape, &self.data,
+        )?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: &DType) -> Result<Tensor> {
+        let t = match dtype {
+            DType::F32 => Tensor::f32(shape.to_vec(), lit.to_vec::<f32>()?),
+            DType::I32 => Tensor::i32(shape.to_vec(), lit.to_vec::<i32>()?),
+            DType::I8 => Tensor::i8(shape.to_vec(), lit.to_vec::<i8>()?),
+        };
+        Ok(t)
+    }
+
+    // ---------------------------------------------------------- wire codec
+
+    /// Serialize for card-to-card packets: [ndim u32][dims u32...][dtype u8][data].
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() + 16);
+        out.extend((self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            out.extend((d as u32).to_le_bytes());
+        }
+        out.push(match self.dtype {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::I8 => 2,
+        });
+        out.extend_from_slice(&self.data);
+        out
+    }
+
+    pub fn from_wire(bytes: &[u8]) -> Result<(Tensor, usize)> {
+        if bytes.len() < 4 {
+            bail!("truncated tensor header");
+        }
+        let ndim = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+        let mut off = 4;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(bytes[off..off + 4].try_into()?) as usize);
+            off += 4;
+        }
+        let dtype = match bytes[off] {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::I8,
+            d => bail!("bad wire dtype {d}"),
+        };
+        off += 1;
+        let n: usize = shape.iter().product::<usize>() * dtype.size();
+        if bytes.len() < off + n {
+            bail!("truncated tensor data");
+        }
+        let data = bytes[off..off + n].to_vec();
+        Ok((Tensor { shape, dtype, data }, off + n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let w = t.to_wire();
+        let (back, consumed) = Tensor::from_wire(&w).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(consumed, w.len());
+    }
+
+    #[test]
+    fn wire_roundtrip_multiple_concatenated() {
+        let a = Tensor::i32(vec![3], vec![7, 8, 9]);
+        let b = Tensor::i8(vec![2, 2], vec![-1, 2, -3, 4]);
+        let mut w = a.to_wire();
+        w.extend(b.to_wire());
+        let (ra, n) = Tensor::from_wire(&w).unwrap();
+        let (rb, _) = Tensor::from_wire(&w[n..]).unwrap();
+        assert_eq!(ra, a);
+        assert_eq!(rb, b);
+    }
+
+    #[test]
+    fn accessors_and_zeros() {
+        let t = Tensor::zeros(vec![4], DType::F32);
+        assert_eq!(t.as_f32(), vec![0.0; 4]);
+        let s = Tensor::scalar_i32(-5);
+        assert_eq!(s.as_i32(), vec![-5]);
+        assert_eq!(s.elems(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage_wire() {
+        assert!(Tensor::from_wire(&[1, 2]).is_err());
+        let mut w = Tensor::i8(vec![8], vec![0; 8]).to_wire();
+        w.truncate(w.len() - 2);
+        assert!(Tensor::from_wire(&w).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, &[2, 2], &DType::F32).unwrap();
+        assert_eq!(back, t);
+        let ti = Tensor::i8(vec![3], vec![-7, 0, 7]);
+        let lit = ti.to_literal().unwrap();
+        assert_eq!(Tensor::from_literal(&lit, &[3], &DType::I8).unwrap(), ti);
+    }
+}

@@ -1,0 +1,122 @@
+//! Wire format of tensors moving card-to-card (§V-C packet conversion).
+//!
+//! header: [kind u8][slot i32][pos_off i32][last_idx i32][flags u8]
+//! payload: one or more runtime::Tensor in wire encoding.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketKind {
+    /// Batched decode step: payload = h [B,D] f32, positions [B] i32.
+    Decode = 0,
+    /// Prefill chunk for one slot: payload = h [1,T,D] f32.
+    Prefill = 1,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PacketHeader {
+    pub kind: PacketKind,
+    /// Cache slot (prefill only).
+    pub slot: i32,
+    /// Absolute position of the chunk start (prefill only).
+    pub pos_off: i32,
+    /// Index of the last valid token within the chunk (prefill only);
+    /// the head executor reads the hidden state at this row.
+    pub last_idx: i32,
+    /// Bit 0: final prefill chunk (head must emit logits).
+    pub flags: u8,
+}
+
+pub const FLAG_FINAL_CHUNK: u8 = 1;
+
+impl PacketHeader {
+    pub const LEN: usize = 1 + 4 + 4 + 4 + 1;
+
+    pub fn decode_step() -> Self {
+        PacketHeader { kind: PacketKind::Decode, slot: 0, pos_off: 0, last_idx: 0, flags: 0 }
+    }
+
+    pub fn prefill(slot: i32, pos_off: i32, last_idx: i32, is_final: bool) -> Self {
+        PacketHeader {
+            kind: PacketKind::Prefill,
+            slot,
+            pos_off,
+            last_idx,
+            flags: if is_final { FLAG_FINAL_CHUNK } else { 0 },
+        }
+    }
+
+    pub fn is_final_chunk(&self) -> bool {
+        self.flags & FLAG_FINAL_CHUNK != 0
+    }
+
+    pub fn encode(&self, tensors: &[&Tensor]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.push(self.kind as u8);
+        out.extend(self.slot.to_le_bytes());
+        out.extend(self.pos_off.to_le_bytes());
+        out.extend(self.last_idx.to_le_bytes());
+        out.push(self.flags);
+        for t in tensors {
+            out.extend(t.to_wire());
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<(PacketHeader, Vec<Tensor>)> {
+        if bytes.len() < Self::LEN {
+            bail!("packet too short");
+        }
+        let kind = match bytes[0] {
+            0 => PacketKind::Decode,
+            1 => PacketKind::Prefill,
+            k => bail!("bad packet kind {k}"),
+        };
+        let slot = i32::from_le_bytes(bytes[1..5].try_into()?);
+        let pos_off = i32::from_le_bytes(bytes[5..9].try_into()?);
+        let last_idx = i32::from_le_bytes(bytes[9..13].try_into()?);
+        let flags = bytes[13];
+        let mut tensors = Vec::new();
+        let mut off = Self::LEN;
+        while off < bytes.len() {
+            let (t, n) = Tensor::from_wire(&bytes[off..])?;
+            tensors.push(t);
+            off += n;
+        }
+        Ok((PacketHeader { kind, slot, pos_off, last_idx, flags }, tensors))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip_with_tensors() {
+        let h = PacketHeader::prefill(3, 64, 7, true);
+        let a = Tensor::f32(vec![1, 2, 4], vec![0.5; 8]);
+        let b = Tensor::i32(vec![2], vec![9, 10]);
+        let bytes = h.encode(&[&a, &b]);
+        let (h2, ts) = PacketHeader::decode(&bytes).unwrap();
+        assert_eq!(h2, h);
+        assert!(h2.is_final_chunk());
+        assert_eq!(ts, vec![a, b]);
+    }
+
+    #[test]
+    fn decode_step_header() {
+        let h = PacketHeader::decode_step();
+        let (h2, ts) = PacketHeader::decode(&h.encode(&[])).unwrap();
+        assert_eq!(h2.kind, PacketKind::Decode);
+        assert!(!h2.is_final_chunk());
+        assert!(ts.is_empty());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        assert!(PacketHeader::decode(&[0, 1]).is_err());
+        assert!(PacketHeader::decode(&[9; 14]).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! §IV-3: the per-card stage executors run inside NorthPole application
+//! containers. Each LayerExecutor is "one configured card": it holds its
+//! layer's KV cache resident (the on-chip memory model) and computes the
+//! layer's attention+MLP via the PJRT-compiled stages. The HeadExecutor is
+//! the tensor-parallel output-layer card group.
+
+use std::sync::{Arc, Mutex};
+
+use crate::npruntime::StageExecutor;
+use crate::runtime::{DType, Engine, Tensor};
+
+use super::codec::{PacketHeader, PacketKind};
+
+/// PJRT clients/executables are thread-safe at the XLA level but the
+/// wrapper types carry raw pointers without Send/Sync markers; this wrapper
+/// asserts what the PJRT C API guarantees (concurrent Execute is legal).
+#[derive(Clone)]
+pub struct SharedEngine(pub Arc<Engine>);
+unsafe impl Send for SharedEngine {}
+unsafe impl Sync for SharedEngine {}
+
+impl std::ops::Deref for SharedEngine {
+    type Target = Engine;
+    fn deref(&self) -> &Engine {
+        &self.0
+    }
+}
+
+/// One transformer layer on one "card": resident KV cache + PJRT stages.
+pub struct LayerExecutor {
+    engine: SharedEngine,
+    layer: usize,
+    /// The card's on-chip KV cache: int8 [B, Hkv, L, Dh] x2 (C8, §III-B).
+    cache: Mutex<(Tensor, Tensor)>,
+}
+
+impl LayerExecutor {
+    pub fn new(engine: SharedEngine, layer: usize) -> Arc<Self> {
+        let m = &engine.manifest;
+        let shape = vec![m.batch_slots, m.n_kv_heads, m.max_context, m.d_head];
+        let kc = Tensor::zeros(shape.clone(), DType::I8);
+        let vc = Tensor::zeros(shape, DType::I8);
+        Arc::new(LayerExecutor { engine, layer, cache: Mutex::new((kc, vc)) })
+    }
+
+    /// KV bytes resident on this card (both caches).
+    pub fn kv_bytes(&self) -> usize {
+        let c = self.cache.lock().unwrap();
+        c.0.data.len() + c.1.data.len()
+    }
+}
+
+impl StageExecutor for LayerExecutor {
+    fn execute(&self, _circuit: u32, _tag: u64, input: &[u8]) -> Vec<u8> {
+        let (hdr, mut tensors) = PacketHeader::decode(input).expect("bad packet");
+        let l = self.layer;
+        let mut cache = self.cache.lock().unwrap();
+        match hdr.kind {
+            PacketKind::Decode => {
+                // payload: h [B,D], positions [B]
+                let positions = tensors.pop().expect("positions");
+                let h = tensors.pop().expect("h");
+                let (kc, vc) = std::mem::replace(
+                    &mut *cache,
+                    (Tensor::zeros(vec![0], h.dtype), Tensor::zeros(vec![0], h.dtype)),
+                );
+                let out = self
+                    .engine
+                    .run(&format!("attn_decode_{l}"), &[h, kc, vc, positions.clone()])
+                    .expect("attn_decode");
+                let mut it = out.into_iter();
+                let h = it.next().unwrap();
+                let kc = it.next().unwrap();
+                let vc = it.next().unwrap();
+                *cache = (kc, vc);
+                let h = self
+                    .engine
+                    .run(&format!("mlp_decode_{l}"), &[h])
+                    .expect("mlp_decode")
+                    .remove(0);
+                hdr.encode(&[&h, &positions])
+            }
+            PacketKind::Prefill => {
+                // payload: h [1,T,D]
+                let h = tensors.pop().expect("h");
+                let (kc, vc) = std::mem::replace(
+                    &mut *cache,
+                    (Tensor::zeros(vec![0], h.dtype), Tensor::zeros(vec![0], h.dtype)),
+                );
+                let out = self
+                    .engine
+                    .run(
+                        &format!("attn_prefill_{l}"),
+                        &[h, kc, vc, Tensor::scalar_i32(hdr.slot), Tensor::scalar_i32(hdr.pos_off)],
+                    )
+                    .expect("attn_prefill");
+                let mut it = out.into_iter();
+                let h = it.next().unwrap();
+                let kc = it.next().unwrap();
+                let vc = it.next().unwrap();
+                *cache = (kc, vc);
+                let h = self
+                    .engine
+                    .run(&format!("mlp_prefill_{l}"), &[h])
+                    .expect("mlp_prefill")
+                    .remove(0);
+                hdr.encode(&[&h])
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("layer[{}]", self.layer)
+    }
+}
+
+/// The output-layer card group: final norm + TP vocabulary projection
+/// (Fig 2: "output layer is split across 4 NorthPole cards using tensor
+/// parallelism"). Shards run sequentially here (one host, 4 virtual
+/// cards); their concatenation is the full-vocab logits.
+pub struct HeadExecutor {
+    engine: SharedEngine,
+}
+
+impl HeadExecutor {
+    pub fn new(engine: SharedEngine) -> Arc<Self> {
+        Arc::new(HeadExecutor { engine })
+    }
+
+    fn logits(&self, stage_prefix: &str, h: &Tensor) -> Tensor {
+        let m = &self.engine.manifest;
+        let rows = h.shape[0];
+        let mut all = vec![0f32; rows * m.vocab];
+        for j in 0..m.lmhead_shards {
+            let part = self
+                .engine
+                .run(&format!("{stage_prefix}_{j}"), &[h.clone()])
+                .expect("lmhead")
+                .remove(0);
+            let pv = part.as_f32();
+            let sv = m.shard_vocab;
+            for r in 0..rows {
+                all[r * m.vocab + j * sv..r * m.vocab + (j + 1) * sv]
+                    .copy_from_slice(&pv[r * sv..(r + 1) * sv]);
+            }
+        }
+        Tensor::f32(vec![rows, m.vocab], all)
+    }
+}
+
+impl StageExecutor for HeadExecutor {
+    fn execute(&self, _circuit: u32, _tag: u64, input: &[u8]) -> Vec<u8> {
+        let (hdr, mut tensors) = PacketHeader::decode(input).expect("bad packet");
+        let m = &self.engine.manifest;
+        match hdr.kind {
+            PacketKind::Decode => {
+                let _positions = tensors.pop().expect("positions");
+                let h = tensors.pop().expect("h");
+                let logits = self.logits("lmhead", &h); // [B, V]
+                hdr.encode(&[&logits])
+            }
+            PacketKind::Prefill => {
+                if !hdr.is_final_chunk() {
+                    // intermediate chunk: nothing for the host but an ack
+                    return hdr.encode(&[&Tensor::i32(vec![1], vec![hdr.pos_off])]);
+                }
+                // extract hidden of the last valid prompt token
+                let h = tensors.pop().expect("h"); // [1, T, D]
+                let d = m.d_model;
+                let row = hdr.last_idx as usize;
+                let hv = h.as_f32();
+                let h1 = Tensor::f32(vec![1, d], hv[row * d..(row + 1) * d].to_vec());
+                let logits = self.logits("lmhead1", &h1); // [1, V]
+                hdr.encode(&[&logits])
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        "lmhead[TP]".into()
+    }
+}

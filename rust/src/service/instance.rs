@@ -1,0 +1,401 @@
+//! One LLM instance: sequence head + pipeline management + application
+//! chain (§IV), serving real tokens through the PJRT-backed card circuit.
+//!
+//! The scheduler implements the paper's dynamic batching: sequences join
+//! and leave the decode mini-batch asynchronously; free slots are refilled
+//! from the broker queue between decode rounds; prefill packets interleave
+//! with decode packets through the same card chain (two virtual circuits).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::broker::{Broker, Task};
+use crate::consensus::Ring;
+use crate::driver::Driver;
+use crate::npruntime::{NpRuntime, StageExecutor};
+use crate::pipeline::sim::SeqRecord;
+use crate::runtime::Tensor;
+use crate::tokenizer::ByteTokenizer;
+
+use super::codec::{PacketHeader, PacketKind};
+use super::executors::{HeadExecutor, LayerExecutor, SharedEngine};
+use super::sampler::Sampler;
+
+/// A generation request submitted to the instance.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    /// Stop generation at this byte (e.g. b';'), if any.
+    pub stop_byte: Option<u8>,
+}
+
+/// Streaming updates for a request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GenUpdate {
+    Token { id: u64, token: u32, text: String },
+    Done { id: u64, n_in: usize, n_out: usize, ttft_s: f64, itl_s: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Max decode rounds with an empty batch before the scheduler parks.
+    pub idle_spin: u32,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { idle_spin: 4 }
+    }
+}
+
+struct SlotState {
+    req: GenRequest,
+    position: usize, // next cache write position
+    n_in: usize,
+    tokens_out: usize,
+    last_token: u32,
+    t_submit: Instant,
+    t_first: Option<Instant>,
+    t_prev: Option<Instant>,
+    gaps: Vec<f64>,
+    sampler: Sampler,
+    generated: Vec<u32>,
+}
+
+/// The running instance.
+pub struct LlmInstance {
+    engine: SharedEngine,
+    chain: Arc<NpRuntime>,
+    tokenizer: ByteTokenizer,
+    out_rx: Mutex<mpsc::Receiver<(u64, Vec<u8>)>>,
+    queue: Mutex<VecDeque<GenRequest>>,
+    updates_tx: mpsc::Sender<GenUpdate>,
+    pub updates: Mutex<mpsc::Receiver<GenUpdate>>,
+    pub records: Mutex<Vec<SeqRecord>>,
+    stop: AtomicBool,
+    tag: AtomicU64,
+    t0: Instant,
+}
+
+impl LlmInstance {
+    /// Build the card chain (one LayerExecutor per layer + head) and run
+    /// the §IV-2 startup consensus across the "application containers".
+    pub fn start(engine: SharedEngine) -> Arc<LlmInstance> {
+        let n_layers = engine.manifest.n_layers;
+        // pipeline management: ring consensus over app containers
+        let ring = Ring::new(n_layers + 1);
+        let mut execs: Vec<Arc<dyn StageExecutor>> = Vec::new();
+        for l in 0..n_layers {
+            execs.push(LayerExecutor::new(engine.clone(), l));
+            ring.report_ready(l); // container configured its card
+        }
+        execs.push(HeadExecutor::new(engine.clone()));
+        ring.report_ready(n_layers);
+        ring.wait_committed();
+
+        let chain = Arc::new(NpRuntime::load_circuit(Driver::new(), 0, execs, 8));
+        let (tx, rx) = mpsc::channel::<(u64, Vec<u8>)>();
+        chain.on_output(move |_c, tag, data| {
+            let _ = tx.send((tag, data));
+        });
+        let (utx, urx) = mpsc::channel();
+        Arc::new(LlmInstance {
+            engine,
+            chain,
+            tokenizer: ByteTokenizer,
+            out_rx: Mutex::new(rx),
+            queue: Mutex::new(VecDeque::new()),
+            updates_tx: utx,
+            updates: Mutex::new(urx),
+            records: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            tag: AtomicU64::new(1),
+            t0: Instant::now(),
+        })
+    }
+
+    pub fn submit(&self, req: GenRequest) {
+        self.queue.lock().unwrap().push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    fn roundtrip(&self, payload: Vec<u8>) -> Vec<u8> {
+        let tag = self.tag.fetch_add(1, Ordering::Relaxed);
+        self.chain.send_input(0, tag, payload);
+        let rx = self.out_rx.lock().unwrap();
+        loop {
+            let (t, data) = rx.recv().expect("chain output");
+            if t == tag {
+                return data;
+            }
+            // out-of-order tags cannot happen on a FIFO chain, but be safe
+        }
+    }
+
+    /// Prefill a prompt into cache slot `slot`; returns (logits row, n_in).
+    fn prefill(&self, slot: usize, tokens: &[i32]) -> (Vec<f32>, usize) {
+        let m = &self.engine.manifest;
+        let t_chunk = m.prefill_chunk;
+        let n = tokens.len().max(1);
+        let n_chunks = n.div_ceil(t_chunk);
+        let mut logits = Vec::new();
+        for c in 0..n_chunks {
+            let lo = c * t_chunk;
+            let hi = (lo + t_chunk).min(n);
+            let mut chunk: Vec<i32> = tokens[lo..hi].to_vec();
+            let valid = chunk.len();
+            chunk.resize(t_chunk, 0);
+            let h = self
+                .engine
+                .run("embed_prefill", &[Tensor::i32(vec![1, t_chunk], chunk)])
+                .expect("embed_prefill")
+                .remove(0);
+            let is_final = c + 1 == n_chunks;
+            let hdr = PacketHeader::prefill(
+                slot as i32,
+                lo as i32,
+                valid.saturating_sub(1) as i32,
+                is_final,
+            );
+            let out = self.roundtrip(hdr.encode(&[&h]));
+            if is_final {
+                let (_, mut ts) = PacketHeader::decode(&out).expect("prefill out");
+                logits = ts.pop().expect("logits").as_f32();
+            }
+        }
+        (logits, n)
+    }
+
+    /// One batched decode round. `tokens`/`positions` are full B-slot rows.
+    fn decode_round(&self, tokens: &[i32], positions: &[i32]) -> Vec<f32> {
+        let b = self.engine.manifest.batch_slots;
+        assert_eq!(tokens.len(), b);
+        let h = self
+            .engine
+            .run("embed_decode", &[Tensor::i32(vec![b], tokens.to_vec())])
+            .expect("embed_decode")
+            .remove(0);
+        let pos = Tensor::i32(vec![b], positions.to_vec());
+        let hdr = PacketHeader { kind: PacketKind::Decode, slot: 0, pos_off: 0, last_idx: 0, flags: 0 };
+        let out = self.roundtrip(hdr.encode(&[&h, &pos]));
+        let (_, mut ts) = PacketHeader::decode(&out).expect("decode out");
+        ts.pop().expect("logits").as_f32() // [B, V] flattened
+    }
+
+    /// Run the serving loop until the queue drains and all slots finish.
+    /// Returns per-sequence records (real wall-clock metrics).
+    pub fn serve_until_drained(&self) -> Vec<SeqRecord> {
+        let m = &self.engine.manifest;
+        let b = m.batch_slots;
+        let vocab = m.vocab;
+        let max_ctx = m.max_context;
+        let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
+
+        loop {
+            // ---- dynamic batching: fill free slots from the queue -------
+            for s in 0..b {
+                if slots[s].is_some() {
+                    continue;
+                }
+                let Some(req) = self.queue.lock().unwrap().pop_front() else {
+                    break;
+                };
+                let t_submit = Instant::now();
+                let toks: Vec<i32> = self
+                    .tokenizer
+                    .encode(&req.prompt)
+                    .iter()
+                    .map(|&t| (t as i32).min(vocab as i32 - 1))
+                    .collect();
+                let toks = if toks.is_empty() { vec![1] } else { toks };
+                let n_in = toks.len().min(max_ctx - req.max_tokens - 1);
+                let (logits, _) = self.prefill(s, &toks[..n_in]);
+                let mut sampler = if req.temperature > 0.0 {
+                    Sampler::new(req.temperature, req.top_k, req.id)
+                } else {
+                    Sampler::greedy()
+                };
+                let first = sampler.sample(&logits);
+                let t_first = Instant::now();
+                let text = self.tokenizer.decode(&[first]);
+                let _ = self.updates_tx.send(GenUpdate::Token {
+                    id: req.id,
+                    token: first,
+                    text,
+                });
+                slots[s] = Some(SlotState {
+                    position: n_in,
+                    n_in,
+                    tokens_out: 1,
+                    last_token: first,
+                    t_submit,
+                    t_first: Some(t_first),
+                    t_prev: Some(t_first),
+                    gaps: Vec::new(),
+                    sampler,
+                    generated: vec![first],
+                    req,
+                });
+            }
+
+            let active = slots.iter().filter(|s| s.is_some()).count();
+            if active == 0 {
+                if self.queue.lock().unwrap().is_empty() {
+                    break;
+                }
+                continue;
+            }
+
+            // ---- one decode round over the mini-batch -------------------
+            let mut tokens = vec![0i32; b];
+            let mut positions = vec![0i32; b];
+            for (s, slot) in slots.iter().enumerate() {
+                if let Some(st) = slot {
+                    tokens[s] = st.last_token as i32;
+                    positions[s] = st.position as i32;
+                }
+            }
+            let logits = self.decode_round(&tokens, &positions);
+
+            // ---- sample per active slot, stream, retire finished --------
+            for s in 0..b {
+                let Some(st) = slots[s].as_mut() else { continue };
+                let row = &logits[s * vocab..(s + 1) * vocab];
+                let tok = st.sampler.sample(row);
+                let now = Instant::now();
+                if let Some(prev) = st.t_prev {
+                    st.gaps.push(now.duration_since(prev).as_secs_f64());
+                }
+                st.t_prev = Some(now);
+                st.position += 1;
+                st.tokens_out += 1;
+                st.last_token = tok;
+                st.generated.push(tok);
+                let _ = self.updates_tx.send(GenUpdate::Token {
+                    id: st.req.id,
+                    token: tok,
+                    text: self.tokenizer.decode(&[tok]),
+                });
+
+                let hit_stop = st.req.stop_byte.map(|sb| tok == sb as u32).unwrap_or(false);
+                let full = st.tokens_out >= st.req.max_tokens
+                    || st.position + 1 >= max_ctx
+                    || hit_stop;
+                if full {
+                    let st = slots[s].take().unwrap();
+                    let ttft = st
+                        .t_first
+                        .map(|t| t.duration_since(st.t_submit).as_secs_f64())
+                        .unwrap_or(0.0);
+                    let itl = if st.gaps.is_empty() {
+                        0.0
+                    } else {
+                        st.gaps.iter().sum::<f64>() / st.gaps.len() as f64
+                    };
+                    let _ = self.updates_tx.send(GenUpdate::Done {
+                        id: st.req.id,
+                        n_in: st.n_in,
+                        n_out: st.tokens_out,
+                        ttft_s: ttft,
+                        itl_s: itl,
+                    });
+                    let base = self.t0;
+                    self.records.lock().unwrap().push(SeqRecord {
+                        id: st.req.id as u32,
+                        n_in: st.n_in as u32,
+                        n_out: st.tokens_out as u32,
+                        t_start: st.t_submit.duration_since(base).as_secs_f64(),
+                        t_first: st
+                            .t_first
+                            .map(|t| t.duration_since(base).as_secs_f64())
+                            .unwrap_or(0.0),
+                        t_end: st
+                            .t_prev
+                            .map(|t| t.duration_since(base).as_secs_f64())
+                            .unwrap_or(0.0),
+                        itl_gaps: st.gaps.clone(),
+                    });
+                }
+            }
+        }
+        self.records.lock().unwrap().clone()
+    }
+
+    /// §IV: subscribe to a broker queue and serve tasks until it closes.
+    /// Each consumed task is streamed back on its response channel as raw
+    /// token text messages followed by an empty finish.
+    pub fn serve_broker(
+        self: &Arc<Self>,
+        broker: Arc<Broker>,
+        queue: &str,
+        priorities: Vec<u8>,
+        max_tokens: usize,
+    ) -> JoinHandle<usize> {
+        let inst = self.clone();
+        let queue = queue.to_string();
+        std::thread::spawn(move || {
+            let mut served = 0usize;
+            loop {
+                // batch up available tasks, then drain the batch
+                let Some(task) = broker.consume(&queue, &priorities) else {
+                    break;
+                };
+                let mut batch: Vec<Task> = vec![task];
+                while let Some(t) = broker.try_consume(&queue, &priorities) {
+                    batch.push(t);
+                    if batch.len() >= inst.engine.manifest.batch_slots {
+                        break;
+                    }
+                }
+                for t in &batch {
+                    inst.submit(GenRequest {
+                        id: t.reply_to,
+                        prompt: t.body.clone(),
+                        max_tokens,
+                        temperature: 0.0,
+                        top_k: 0,
+                        stop_byte: Some(b';'),
+                    });
+                }
+                inst.serve_until_drained();
+                // stream responses back
+                let updates = inst.updates.lock().unwrap();
+                while let Ok(u) = updates.try_recv() {
+                    match u {
+                        GenUpdate::Token { id, text, .. } => {
+                            if let Some(ch) = broker.response(id) {
+                                ch.send(text);
+                            }
+                        }
+                        GenUpdate::Done { id, .. } => {
+                            if let Some(ch) = broker.response(id) {
+                                ch.finish();
+                            }
+                            broker.remove_response(id);
+                            served += 1;
+                        }
+                    }
+                }
+            }
+            served
+        })
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.engine.manifest
+    }
+}

@@ -1,0 +1,23 @@
+//! §IV: the containerized inference pipeline.
+//!
+//! One LLM instance = the paper's three container types, composed here as
+//! threads over the npruntime substrate:
+//!
+//! * **Sequence head** (§IV-1): pulls tasks from the broker, tokenizes on a
+//!   preprocessing path, schedules prompts onto sequence-worker slots,
+//!   samples tokens, streams responses back, postprocesses.
+//! * **Pipeline management** (§IV-2): ring consensus across application
+//!   containers at startup, then passthrough of tensors into the chain.
+//! * **NorthPole application** (§IV-3): each chain member configures its
+//!   "cards" (PJRT stage executors with resident KV caches) and relays
+//!   tensors via direct card-to-card framebuffer transfers (credits).
+
+mod codec;
+mod executors;
+mod instance;
+mod sampler;
+
+pub use codec::{PacketHeader, PacketKind};
+pub use executors::{HeadExecutor, LayerExecutor, SharedEngine};
+pub use instance::{GenRequest, GenUpdate, LlmInstance, ServeOptions};
+pub use sampler::Sampler;

@@ -1,0 +1,170 @@
+//! §IV-1: tokenization substrate (the sequence head's "non-neural"
+//! preprocessing).
+//!
+//! Byte-level tokenizer matching the python training side (tasks.py trains
+//! on raw bytes): token = byte value, plus BOS/EOS specials. The vocabulary
+//! is padded to the model's lm-head shard multiple. A greedy-BPE extension
+//! is provided for larger vocabularies and exercised by tests.
+
+use std::collections::BTreeMap;
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+
+/// Byte-level tokenizer: bytes 0..=255 + BOS/EOS.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, s: &str) -> Vec<u32> {
+        s.bytes().map(|b| b as u32).collect()
+    }
+
+    pub fn decode(&self, toks: &[u32]) -> String {
+        let bytes: Vec<u8> = toks
+            .iter()
+            .filter(|&&t| t < 256)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab(&self) -> usize {
+        258
+    }
+}
+
+/// Greedy byte-pair tokenizer: learned merges over a corpus, applied
+/// greedily (highest-rank merge first), exactly invertible back to bytes.
+#[derive(Debug, Clone, Default)]
+pub struct BpeTokenizer {
+    /// (left, right) -> merged token id; ids start at 258.
+    merges: BTreeMap<(u32, u32), u32>,
+    /// merged id -> (left, right)
+    parts: BTreeMap<u32, (u32, u32)>,
+}
+
+impl BpeTokenizer {
+    /// Learn `n_merges` merges from a corpus by pair frequency.
+    pub fn train(corpus: &str, n_merges: usize) -> Self {
+        let mut tok = BpeTokenizer::default();
+        let mut seq: Vec<u32> = corpus.bytes().map(|b| b as u32).collect();
+        let mut next_id = 258u32;
+        for _ in 0..n_merges {
+            let mut counts: BTreeMap<(u32, u32), usize> = BTreeMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &n)) = counts.iter().max_by_key(|(p, n)| (**n, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if n < 2 {
+                break;
+            }
+            tok.merges.insert(pair, next_id);
+            tok.parts.insert(next_id, pair);
+            seq = Self::apply_merge(&seq, pair, next_id);
+            next_id += 1;
+        }
+        tok
+    }
+
+    fn apply_merge(seq: &[u32], pair: (u32, u32), id: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(seq.len());
+        let mut i = 0;
+        while i < seq.len() {
+            if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                out.push(id);
+                i += 2;
+            } else {
+                out.push(seq[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn encode(&self, s: &str) -> Vec<u32> {
+        let mut seq: Vec<u32> = s.bytes().map(|b| b as u32).collect();
+        // apply merges in rank (id) order — classic BPE
+        let mut ranked: Vec<(&(u32, u32), &u32)> = self.merges.iter().collect();
+        ranked.sort_by_key(|(_, id)| **id);
+        for (pair, id) in ranked {
+            seq = Self::apply_merge(&seq, *pair, *id);
+        }
+        seq
+    }
+
+    pub fn decode(&self, toks: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        let mut stack: Vec<u32> = toks.iter().rev().copied().collect();
+        while let Some(t) = stack.pop() {
+            if t < 256 {
+                bytes.push(t as u8);
+            } else if let Some(&(l, r)) = self.parts.get(&t) {
+                stack.push(r);
+                stack.push(l);
+            }
+            // BOS/EOS and unknown ids decode to nothing
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab(&self) -> usize {
+        258 + self.merges.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "Hello, NorthPole! 42+7=49;";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.encode("ab"), vec![97, 98]);
+    }
+
+    #[test]
+    fn byte_decode_skips_specials() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[BOS, 104, 105, EOS]), "hi");
+    }
+
+    #[test]
+    fn bpe_learns_frequent_pairs() {
+        let t = BpeTokenizer::train("ababababab cdcdcdcd", 4);
+        assert!(t.vocab() > 258);
+        let enc = t.encode("abab");
+        assert!(enc.len() < 4, "merges must compress: {enc:?}");
+    }
+
+    #[test]
+    fn bpe_roundtrips_exactly() {
+        let corpus = "the quick brown fox jumps over the lazy dog; the end.";
+        let t = BpeTokenizer::train(corpus, 16);
+        for s in [corpus, "the fox", "unseen text €", ""] {
+            assert_eq!(t.decode(&t.encode(s)), s, "case {s:?}");
+        }
+    }
+
+    #[test]
+    fn bpe_roundtrip_property() {
+        let corpus: String = (0..400)
+            .map(|i| if i % 7 == 0 { ' ' } else { (b'a' + (i % 5) as u8) as char })
+            .collect();
+        let t = BpeTokenizer::train(&corpus, 24);
+        let mut r = Rng::seed(9);
+        for _ in 0..50 {
+            let n = r.usize(0, 40);
+            let s: String = (0..n)
+                .map(|_| (b'a' + r.usize(0, 6) as u8) as char)
+                .collect();
+            assert_eq!(t.decode(&t.encode(&s)), s);
+        }
+    }
+}

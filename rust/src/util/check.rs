@@ -1,0 +1,46 @@
+//! Hand-rolled property-test harness (no `proptest` in this environment).
+//!
+//! `prop_check` runs a closure over `n` seeded PRNGs and reports the first
+//! failing seed so a failure is reproducible with `Rng::seed(seed)`.
+
+use super::prng::Rng;
+
+/// Run `f` with `n` independent seeded rngs; panic with the failing seed.
+pub fn prop_check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, n: u64, f: F) {
+    for seed in 0..n {
+        let mut rng = Rng::seed(0x5EED_0000 + seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for use inside prop_check closures.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        prop_check("add-commutes", 64, |r| {
+            let (a, b) = (r.range(0, 1000), r.range(0, 1000));
+            prop_assert!(a + b == b + a, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn reports_failing_seed() {
+        prop_check("always-fails", 4, |_| Err("nope".into()));
+    }
+}

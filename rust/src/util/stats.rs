@@ -1,0 +1,161 @@
+//! Statistics helpers for metrics and the bench harness.
+
+/// Online accumulator plus retained samples for percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.samples.extend_from_slice(xs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format a byte count with an adaptive unit.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const U: [(&str, f64); 5] = [
+        ("PB", 1e15),
+        ("TB", 1e12),
+        ("GB", 1e9),
+        ("MB", 1e6),
+        ("kB", 1e3),
+    ];
+    for (name, scale) in U {
+        if bytes >= scale {
+            return format!("{:.2} {name}", bytes / scale);
+        }
+    }
+    format!("{bytes:.0} B")
+}
+
+/// Format an ops/second figure.
+pub fn fmt_ops(ops: f64) -> String {
+    const U: [(&str, f64); 4] = [
+        ("POPS", 1e15),
+        ("TOPS", 1e12),
+        ("GOPS", 1e9),
+        ("MOPS", 1e6),
+    ];
+    for (name, scale) in U {
+        if ops >= scale {
+            return format!("{:.1} {name}", ops / scale);
+        }
+    }
+    format!("{ops:.0} OPS")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        s.extend(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.median(), 2.5);
+        assert!((s.std() - 1.2909944487).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Summary::new();
+        s.extend(&[0.0, 10.0]);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_time(0.0028), "2.800 ms");
+        assert_eq!(fmt_bytes(3.7e15), "3.70 PB");
+        assert_eq!(fmt_ops(115e15), "115.0 POPS");
+    }
+}

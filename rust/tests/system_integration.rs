@@ -1,0 +1,120 @@
+//! Cross-module integration: mapper × sim × metrics × power, plus
+//! property-based checks over the whole planning/simulation path.
+
+use npserve::chip::timing::PassKind;
+use npserve::config::hw::RackSpec;
+use npserve::config::models::{find_model, model_zoo};
+use npserve::mapper::map_model;
+use npserve::metrics::BatchMetrics;
+use npserve::pipeline::schedule::bubble_fraction;
+use npserve::pipeline::sim::{simulate, SimConfig};
+use npserve::power::deployment_power;
+use npserve::util::check::prop_check;
+use npserve::prop_assert;
+
+#[test]
+fn whole_rack_story_8b() {
+    // The paper's headline claim, end to end: 3 instances x 28 users at
+    // 2k ctx on one rack, ~2.8 ms ITL, ~30 kW.
+    let rack = RackSpec::northpole_42u();
+    let m = find_model("granite-3.3-8b").unwrap();
+    let mapping = map_model(&m, 28, 2048, &rack).unwrap();
+    assert_eq!(mapping.instances_per_rack(&rack), 3);
+
+    let rep = simulate(&mapping, &rack, SimConfig {
+        users: 28, prompt_len: 64, gen_len: 64, requests: 28, chunk: 64,
+    });
+    let met = BatchMetrics::from_records(&rep.seqs);
+    assert!((1.8e-3..4.0e-3).contains(&met.itl.mean()), "itl {}", met.itl.mean());
+
+    // one instance = 6 nodes, 84 cards; the rack runs 3
+    let p = deployment_power(&rack, 18, 3 * mapping.n_cards(), 1.0);
+    assert!(p.total_w < rack.power_budget_w);
+    assert!((p.total_w - 30_000.0).abs() < 1500.0, "power {}", p.total_w);
+
+    // per-user throughput: ~10k tok/s aggregate over 3 instances at 28
+    // users each -> 30k tok/s rack (abstract: "up to 30,000 tokens/second")
+    let rack_otps = 3.0 * met.otps;
+    assert!(rack_otps > 20_000.0, "rack otps {rack_otps}");
+}
+
+#[test]
+fn sim_conserves_tokens_property() {
+    let rack = RackSpec::northpole_42u();
+    let m = find_model("granite-3.1-3b").unwrap();
+    let mapping = map_model(&m, 28, 2048, &rack).unwrap();
+    prop_check("sim-conserves-tokens", 8, |r| {
+        let users = r.usize(1, 9) as u32;
+        let gen = r.usize(2, 18) as u32;
+        let reqs = r.usize(1, 12) as u32;
+        let rep = simulate(&mapping, &rack, SimConfig {
+            users, prompt_len: 32, gen_len: gen, requests: reqs, chunk: 32,
+        });
+        prop_assert!(rep.seqs.len() == reqs as usize,
+                     "served {} of {}", rep.seqs.len(), reqs);
+        for s in &rep.seqs {
+            prop_assert!(s.n_out == gen, "seq {} produced {}", s.id, s.n_out);
+            prop_assert!(s.t_first >= s.t_start, "causality");
+            prop_assert!(s.t_end + 1e-12 >= s.t_first, "ordering");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mapping_invariants_property() {
+    let rack = RackSpec::northpole_42u();
+    let chip = rack.node.card.chip;
+    prop_check("mapping-invariants", 24, |r| {
+        let zoo = model_zoo();
+        let m = &zoo[r.usize(0, zoo.len())];
+        let users = r.usize(1, 30) as u32;
+        let ctx = [512u32, 1024, 2048, 4096][r.usize(0, 4)];
+        let Ok(map) = map_model(m, users, ctx, &rack) else {
+            return Ok(()); // over-capacity contexts may legally fail
+        };
+        // every card within memory; stage times positive; max_users >= users
+        for c in &map.cards {
+            prop_assert!(c.memory.total() <= chip.core_mem_bytes,
+                         "{} card {} over mem", m.name, c.id);
+        }
+        prop_assert!(map.max_users(&chip, ctx) >= users,
+                     "{} claims {} users but max is {}",
+                     m.name, users, map.max_users(&chip, ctx));
+        for t in map.stage_times(&chip, PassKind::Decode { micro_batch: 1, ctx }) {
+            prop_assert!(t > 0.0 && t < 1.0, "stage time {t}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gpipe_bubble_claim_shape() {
+    // §III-C: M = S suffices on NorthPole (ring decode has no fill/drain in
+    // steady state), whereas GPipe needed M ≈ 4S for <20% bubbles.
+    for s in [16usize, 81, 104] {
+        assert!(bubble_fraction(s, 4 * s) < 0.21);
+        assert!(bubble_fraction(s, s) < 0.51);
+        assert!(bubble_fraction(s, 1) > 0.9);
+    }
+}
+
+#[test]
+fn context_scaling_crossover() {
+    // Table II shape: halving users while doubling context keeps ITL flat
+    // and roughly halves OTPS.
+    let rack = RackSpec::northpole_42u();
+    let m = find_model("granite-3.3-8b").unwrap();
+    let m2k = map_model(&m, 28, 2048, &rack).unwrap();
+    let m4k = map_model(&m, 14, 4096, &rack).unwrap();
+    let r2k = simulate(&m2k, &rack, SimConfig {
+        users: 28, prompt_len: 64, gen_len: 48, requests: 28, chunk: 64 });
+    let r4k = simulate(&m4k, &rack, SimConfig {
+        users: 14, prompt_len: 64, gen_len: 48, requests: 14, chunk: 64 });
+    let b2k = BatchMetrics::from_records(&r2k.seqs);
+    let b4k = BatchMetrics::from_records(&r4k.seqs);
+    let itl_ratio = b4k.itl.mean() / b2k.itl.mean();
+    assert!((0.7..1.3).contains(&itl_ratio), "ITL not flat: {itl_ratio}");
+    let otps_ratio = b2k.otps / b4k.otps;
+    assert!((1.5..2.6).contains(&otps_ratio), "OTPS ratio {otps_ratio}");
+}
