@@ -1,0 +1,164 @@
+//! Pipeline-fill benchmark (EXPERIMENTS.md §Pipeline-fill): how much decode
+//! throughput the in-flight packet scheduler recovers versus the old
+//! lock-step serving loop, on a stub card chain where every stage has a
+//! fixed per-packet service time (the NorthPole regime: one token per card
+//! at a time, mini-batch = packets in flight across stages).
+//!
+//! * **lock-step**: one packet in flight — submit a token, wait for it to
+//!   exit the last stage, sample, submit the next (the old
+//!   `LlmInstance::roundtrip` pattern). Per-token cost ≈ S × t_stage.
+//! * **pipelined**: a closed decode ring over N sequences — each
+//!   sequence's next token is injected the moment its previous one is
+//!   routed back, so up to min(N, credits) packets are in flight and each
+//!   stage stays busy. Steady-state per-token cost ≈ t_stage.
+//!
+//! Expected speedup ≈ min(S, N) (8 here). The acceptance bar is ≥ 4×.
+//! Also reports the simulator's memoized-service-time speedup at
+//! `small_sim(8, 2048, 24)` scale. Results are appended to BENCH_PR1.json.
+//!
+//!   cargo bench --bench pipeline_fill            # full run
+//!   PIPELINE_FILL_SMOKE=1 cargo bench --bench pipeline_fill   # CI smoke
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use npserve::config::hw::RackSpec;
+use npserve::config::models::find_model;
+use npserve::driver::Driver;
+use npserve::mapper::map_model;
+use npserve::npruntime::{NpRuntime, StageExecutor};
+use npserve::pipeline::sim::{simulate_opts, SimConfig, SimOpts};
+use npserve::service::PacketScheduler;
+use npserve::util::json::{merge_into_file, Value};
+use npserve::util::stats::fmt_time;
+
+const STAGES: usize = 8;
+const SEQS: usize = 8;
+const SLOTS: u32 = 8;
+const WAIT: Duration = Duration::from_secs(30);
+
+/// Cargo runs bench binaries with cwd = the package root (rust/); the
+/// report lives one level up, at the repo root (EXPERIMENTS.md).
+fn report_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR1.json")
+}
+
+/// A "card" with a fixed service time per packet.
+struct StubStage(Duration);
+
+impl StageExecutor for StubStage {
+    fn execute(&self, _c: u32, _t: u64, input: &[u8]) -> Vec<u8> {
+        std::thread::sleep(self.0);
+        input.to_vec()
+    }
+}
+
+fn stub_chain(service: Duration) -> Arc<NpRuntime> {
+    let execs: Vec<Arc<dyn StageExecutor>> = (0..STAGES)
+        .map(|_| Arc::new(StubStage(service)) as Arc<dyn StageExecutor>)
+        .collect();
+    Arc::new(NpRuntime::load_circuit(Driver::new(), 0, execs, SLOTS))
+}
+
+/// Old serving discipline: one packet in flight, ever.
+fn run_lockstep(service: Duration, tokens_per_seq: usize) -> f64 {
+    let mut sched: PacketScheduler<(usize, usize)> = PacketScheduler::new(stub_chain(service));
+    let t0 = Instant::now();
+    for k in 0..tokens_per_seq {
+        for s in 0..SEQS {
+            sched.submit(0, vec![s as u8, k as u8], (s, k)).expect("submit");
+            let (_, _, op) = sched.next_completion(WAIT).expect("completion");
+            assert_eq!(op, (s, k));
+        }
+    }
+    (SEQS * tokens_per_seq) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Pipelined closed ring: every sequence keeps one packet in flight.
+fn run_pipelined(service: Duration, tokens_per_seq: usize) -> f64 {
+    let mut sched: PacketScheduler<(usize, usize)> = PacketScheduler::new(stub_chain(service));
+    let t0 = Instant::now();
+    for s in 0..SEQS {
+        sched.submit(0, vec![s as u8, 0], (s, 0)).expect("submit");
+    }
+    let total = SEQS * tokens_per_seq;
+    let mut done = 0usize;
+    while done < total {
+        let (_, _, (s, k)) = sched.next_completion(WAIT).expect("completion");
+        done += 1;
+        if k + 1 < tokens_per_seq {
+            sched.submit(0, vec![s as u8, (k + 1) as u8], (s, k + 1)).expect("submit");
+        }
+    }
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Simulator wall time at `small_sim(8, 2048, 24)` scale, with and without
+/// the memoized service-time cache.
+fn run_sim(memoize: bool) -> f64 {
+    let rack = RackSpec::northpole_42u();
+    let m = find_model("granite-3.3-8b").unwrap();
+    let mapping = map_model(&m, 28, 2048, &rack).unwrap();
+    let cfg = SimConfig { users: 8, prompt_len: 256, gen_len: 32, requests: 24, chunk: 128 };
+    let t0 = Instant::now();
+    let rep = simulate_opts(&mapping, &rack, cfg, SimOpts { memoize_service_times: memoize });
+    assert_eq!(rep.seqs.len(), 24);
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let smoke = std::env::var("PIPELINE_FILL_SMOKE").is_ok();
+    let (service, tokens_per_seq) = if smoke {
+        (Duration::from_micros(500), 8)
+    } else {
+        (Duration::from_millis(1), 32)
+    };
+
+    println!("== pipeline fill: {STAGES}-stage stub chain, {SEQS} seqs, {tokens_per_seq} tok/seq, {} per stage ==",
+             fmt_time(service.as_secs_f64()));
+    let lock_tps = run_lockstep(service, tokens_per_seq);
+    println!("  lock-step (1 packet in flight)      {lock_tps:>10.1} tok/s");
+    let pipe_tps = run_pipelined(service, tokens_per_seq);
+    println!("  pipelined (closed ring, {SEQS} in flight) {pipe_tps:>10.1} tok/s");
+    let speedup = pipe_tps / lock_tps;
+    println!("  -> speedup {speedup:.2}x (ideal ≈ {STAGES}x, acceptance bar ≥ 4x)");
+
+    println!("\n== simulator service-time memoization (small_sim(8, 2048, 24) scale) ==");
+    let (t_raw, t_memo) = if smoke {
+        (run_sim(false), run_sim(true))
+    } else {
+        // best-of-3 to de-noise
+        let raw = (0..3).map(|_| run_sim(false)).fold(f64::MAX, f64::min);
+        let memo = (0..3).map(|_| run_sim(true)).fold(f64::MAX, f64::min);
+        (raw, memo)
+    };
+    let sim_speedup = t_raw / t_memo;
+    println!("  per-event roofline fold   {}", fmt_time(t_raw));
+    println!("  memoized service times    {}", fmt_time(t_memo));
+    println!("  -> speedup {sim_speedup:.2}x");
+
+    let section = Value::obj(vec![
+        ("stages", Value::num(STAGES as f64)),
+        ("seqs", Value::num(SEQS as f64)),
+        ("tokens_per_seq", Value::num(tokens_per_seq as f64)),
+        ("stage_service_s", Value::num(service.as_secs_f64())),
+        ("lockstep_tok_per_s", Value::num(lock_tps)),
+        ("pipelined_tok_per_s", Value::num(pipe_tps)),
+        ("speedup", Value::num(speedup)),
+        ("sim_raw_s", Value::num(t_raw)),
+        ("sim_memoized_s", Value::num(t_memo)),
+        ("sim_speedup", Value::num(sim_speedup)),
+        ("smoke", Value::Bool(smoke)),
+    ]);
+    match merge_into_file(&report_path(), "pipeline_fill", section) {
+        Ok(()) => println!("\nwrote BENCH_PR1.json §pipeline_fill"),
+        Err(e) => eprintln!("\ncould not write BENCH_PR1.json: {e}"),
+    }
+
+    if !smoke && speedup < 4.0 {
+        eprintln!("FAIL: pipelined speedup {speedup:.2}x below the 4x acceptance bar");
+        std::process::exit(1);
+    }
+    println!("pipeline_fill OK");
+}

@@ -1,18 +1,24 @@
 //! Hot-path microbenchmarks: PJRT stage dispatch, card-chain round-trip,
 //! broker ops, tokenizer, tensor codec. Used by the §Perf pass
 //! (EXPERIMENTS.md) — the L3 coordinator must not be the bottleneck.
+//! Results are appended to BENCH_PR1.json (§hotpath) for CI trending.
 //!
 //!   cargo bench --bench runtime_hotpath
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use npserve::broker::{Broker, Task};
 use npserve::runtime::{Engine, Tensor};
 use npserve::service::{GenRequest, LlmInstance, SharedEngine};
 use npserve::tokenizer::ByteTokenizer;
+use npserve::util::json::{merge_into_file, Value};
 use npserve::util::stats::fmt_time;
+
+/// (name, seconds/iter) rows accumulated for BENCH_PR1.json.
+static RESULTS: Mutex<Vec<(String, f64)>> = Mutex::new(Vec::new());
 
 fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
     // warmup
@@ -25,7 +31,24 @@ fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
     }
     let per = t0.elapsed().as_secs_f64() / iters as f64;
     println!("  {name:<44} {:>12}/iter", fmt_time(per));
+    RESULTS.lock().unwrap().push((name.to_string(), per));
     per
+}
+
+fn write_report() {
+    let rows = RESULTS.lock().unwrap();
+    let section = Value::obj(
+        rows.iter()
+            .map(|(name, per)| (name.as_str(), Value::num(*per)))
+            .collect(),
+    );
+    // cargo runs bench binaries with cwd = the package root (rust/); the
+    // report lives one level up, at the repo root (EXPERIMENTS.md)
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR1.json");
+    match merge_into_file(&path, "hotpath", section) {
+        Ok(()) => println!("\nwrote BENCH_PR1.json §hotpath ({} rows)", rows.len()),
+        Err(e) => eprintln!("\ncould not write BENCH_PR1.json: {e}"),
+    }
 }
 
 fn main() {
@@ -56,6 +79,7 @@ fn main() {
     let dir = PathBuf::from("artifacts/granite-test");
     if !dir.join("manifest.json").exists() {
         println!("(skipping PJRT benches: run `make artifacts`)");
+        write_report();
         return;
     }
     println!("\n== PJRT stage dispatch (granite-test artifacts) ==");
@@ -89,4 +113,5 @@ fn main() {
         fmt_time(per / 2.0),
         m.n_layers
     );
+    write_report();
 }

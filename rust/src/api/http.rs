@@ -7,7 +7,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::err::Result;
+use crate::{anyhow, bail};
 
 #[derive(Debug, Clone)]
 pub struct HttpRequest {

@@ -4,7 +4,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::err::Result;
 
 use crate::broker::{Broker, Task};
 use crate::util::json::Value;

@@ -24,15 +24,24 @@ pub struct Packet {
     pub data: Vec<u8>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CardError {
-    #[error("framebuffer full ({0} slots)")]
     FramebufferFull(u32),
-    #[error("no credits for destination card {0}")]
     NoCredits(u32),
-    #[error("unknown circuit {0}")]
     UnknownCircuit(u32),
 }
+
+impl std::fmt::Display for CardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CardError::FramebufferFull(s) => write!(f, "framebuffer full ({s} slots)"),
+            CardError::NoCredits(c) => write!(f, "no credits for destination card {c}"),
+            CardError::UnknownCircuit(c) => write!(f, "unknown circuit {c}"),
+        }
+    }
+}
+
+impl std::error::Error for CardError {}
 
 /// Input side of a card: a bounded framebuffer of packet slots.
 #[derive(Debug)]
@@ -126,6 +135,28 @@ impl CreditCounter {
         true
     }
 
+    /// Take one credit, waiting at most `dur`. Returns false on expiry.
+    /// The runtime's card workers use this instead of `take` so a stop
+    /// request can interrupt a card blocked on downstream backpressure
+    /// (otherwise shutdown would deadlock with packets in flight).
+    /// Re-waits after spurious/competed wakeups until the deadline.
+    pub fn take_timeout(&self, dur: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + dur;
+        let mut c = self.state.lock().unwrap();
+        loop {
+            if *c > 0 {
+                *c -= 1;
+                return true;
+            }
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (g, _) = self.returned.wait_timeout(c, left).unwrap();
+            c = g;
+        }
+    }
+
     /// Return one credit (destination consumed a tensor).
     pub fn put(&self) {
         let mut c = self.state.lock().unwrap();
@@ -172,28 +203,46 @@ impl CardFpga {
         h.push(hop);
     }
 
+    fn hop(&self, circuit: u32) -> Result<CircuitHop, CardError> {
+        let h = self.hops.lock().unwrap();
+        h.iter()
+            .find(|x| x.circuit == circuit)
+            .cloned()
+            .ok_or(CardError::UnknownCircuit(circuit))
+    }
+
+    /// Route a packet along a resolved hop (shared by `emit`/`emit_prepaid`).
+    fn dispatch(hop: CircuitHop, p: Packet) -> Result<Option<Packet>, CardError> {
+        match hop.dest {
+            None => Ok(Some(p)), // host-bound output
+            Some(fb) => {
+                fb.place(p).expect("credit protocol must prevent overflow");
+                Ok(None)
+            }
+        }
+    }
+
     /// Emit an output packet: converts it to an input packet for the
     /// destination card (§V-C-1) after acquiring a framebuffer credit
     /// (§V-C-2), entirely without host involvement. Returns the packet
     /// instead if the circuit terminates at the host.
     pub fn emit(&self, p: Packet) -> Result<Option<Packet>, CardError> {
-        let hop = {
-            let h = self.hops.lock().unwrap();
-            h.iter()
-                .find(|x| x.circuit == p.circuit)
-                .cloned()
-                .ok_or(CardError::UnknownCircuit(p.circuit))?
-        };
-        match hop.dest {
-            None => Ok(Some(p)), // host-bound output
-            Some(fb) => {
-                if let Some(c) = &hop.credits {
-                    c.take();
-                }
-                fb.place(p).expect("credit protocol must prevent overflow");
-                Ok(None)
+        let hop = self.hop(p.circuit)?;
+        if hop.dest.is_some() {
+            if let Some(c) = &hop.credits {
+                c.take();
             }
         }
+        Self::dispatch(hop, p)
+    }
+
+    /// Like [`emit`](Self::emit), but the caller has already taken the
+    /// destination credit (e.g. via `CreditCounter::take_timeout`, which a
+    /// stop-aware worker interleaves with shutdown checks). Host-bound
+    /// circuits need no credit; the packet is returned as with `emit`.
+    pub fn emit_prepaid(&self, p: Packet) -> Result<Option<Packet>, CardError> {
+        let hop = self.hop(p.circuit)?;
+        Self::dispatch(hop, p)
     }
 }
 
@@ -289,6 +338,34 @@ mod tests {
         a.emit(pkt(1, 11)).unwrap();
         assert_eq!(b.framebuffer.consume().tag, 10);
         assert_eq!(c.framebuffer.consume().tag, 11);
+    }
+
+    #[test]
+    fn take_timeout_expires_then_succeeds_after_put() {
+        let c = CreditCounter::new(1);
+        assert!(c.take_timeout(Duration::from_millis(1)));
+        let t0 = std::time::Instant::now();
+        assert!(!c.take_timeout(Duration::from_millis(20)), "no credit left");
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        c.put();
+        assert!(c.take_timeout(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn emit_prepaid_skips_credit_take() {
+        let a = CardFpga::new(0, 2);
+        let b = CardFpga::new(1, 2);
+        let credits = CreditCounter::new(2);
+        a.configure_circuit(CircuitHop {
+            circuit: 0,
+            dest: Some(b.framebuffer.clone()),
+            credits: Some(credits.clone()),
+        });
+        // caller pays the credit up front, emit_prepaid must not take again
+        assert!(credits.take_timeout(Duration::from_millis(1)));
+        assert_eq!(a.emit_prepaid(pkt(0, 1)).unwrap(), None);
+        assert_eq!(credits.available(), 1);
+        assert_eq!(b.framebuffer.consume().tag, 1);
     }
 
     #[test]

@@ -8,11 +8,22 @@
 
 use crate::config::hw::ChipSpec;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum MemoryError {
-    #[error("weights ({weights} B) + kv ({kv} B) exceed usable core memory ({usable} B)")]
     Exceeded { weights: u64, kv: u64, usable: u64 },
 }
+
+impl std::fmt::Display for MemoryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let MemoryError::Exceeded { weights, kv, usable } = self;
+        write!(
+            f,
+            "weights ({weights} B) + kv ({kv} B) exceed usable core memory ({usable} B)"
+        )
+    }
+}
+
+impl std::error::Error for MemoryError {}
 
 /// Memory plan of a single card.
 #[derive(Debug, Clone, Default)]

@@ -27,15 +27,27 @@ pub struct DmaDescriptor {
     pub dst_off: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DriverError {
-    #[error("unmapped iova {0:#x}")]
     UnmappedIova(u64),
-    #[error("dma range out of bounds (iova {iova:#x}, off {off}, len {len}, size {size})")]
     OutOfBounds { iova: u64, off: usize, len: usize, size: usize },
-    #[error("mmio register {0:#x} not implemented")]
     BadRegister(u64),
 }
+
+impl std::fmt::Display for DriverError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DriverError::UnmappedIova(i) => write!(f, "unmapped iova {i:#x}"),
+            DriverError::OutOfBounds { iova, off, len, size } => write!(
+                f,
+                "dma range out of bounds (iova {iova:#x}, off {off}, len {len}, size {size})"
+            ),
+            DriverError::BadRegister(r) => write!(f, "mmio register {r:#x} not implemented"),
+        }
+    }
+}
+
+impl std::error::Error for DriverError {}
 
 /// MMIO register offsets (a tiny plausible register file).
 pub mod regs {

@@ -13,10 +13,15 @@
 
 pub mod util {
     pub mod check;
+    pub mod err;
     pub mod json;
     pub mod prng;
     pub mod stats;
 }
+
+/// Compile-only PJRT stand-in (see src/xla/mod.rs); swap for the real
+/// bindings when the build environment provides them.
+pub mod xla;
 
 pub mod api;
 pub mod broker;

@@ -7,13 +7,25 @@ use crate::config::models::LlmSpec;
 
 use super::blocks::{attn_block, expert_group, fused_block, lmhead_shard, mlp_block, Block};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MapError {
-    #[error("block `{block}` does not fit on any card: {need} B needed, {usable} B usable")]
     BlockTooLarge { block: String, need: u64, usable: u64 },
-    #[error("model has no layers")]
     EmptyModel,
 }
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::BlockTooLarge { block, need, usable } => write!(
+                f,
+                "block `{block}` does not fit on any card: {need} B needed, {usable} B usable"
+            ),
+            MapError::EmptyModel => write!(f, "model has no layers"),
+        }
+    }
+}
+
+impl std::error::Error for MapError {}
 
 /// One card's assignment.
 #[derive(Debug, Clone)]

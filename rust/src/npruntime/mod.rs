@@ -6,9 +6,14 @@
 //!   stores the virtual-circuit DMA descriptor chains on the FPGAs,
 //! * `send_input` submits input tensors asynchronously, blocking only on
 //!   the first card's framebuffer credits (§V-B: "input tensors are only
-//!   transferred to a card when enough space is available"),
+//!   transferred to a card when enough space is available"); the
+//!   non-blocking `try_send_input` + `credits_available` pair lets a
+//!   scheduler interleave work instead of parking (service/scheduler.rs),
 //! * outputs return through a registered callback (§V: "receive output
 //!   tensors through a callback mechanism"),
+//! * `request_stop` propagates end-to-end: card workers, hosts blocked in
+//!   `send_input`, and cards stalled on downstream backpressure all exit
+//!   within one stop-check interval — mid-stream shutdown cannot deadlock,
 //! * model loading, input submission, and output handling run on separate
 //!   threads while preserving per-circuit FIFO ordering.
 
@@ -88,6 +93,14 @@ impl NpRuntime {
             } else {
                 None
             };
+            // the credit counter guarding my downstream framebuffer: taken
+            // stop-aware here (not inside CardFpga::emit) so shutdown can
+            // interrupt a card stalled on backpressure mid-stream.
+            let downstream: Option<Arc<CreditCounter>> = if i + 1 < n {
+                Some(credit_counters[i].clone())
+            } else {
+                None
+            };
             workers.push(std::thread::spawn(move || {
                 loop {
                     // blocking consume with a stop-check timeout (condvar
@@ -111,7 +124,17 @@ impl NpRuntime {
                     }
                     let out = exec.execute(p.circuit, p.tag, &p.data);
                     let packet = Packet { circuit: p.circuit, tag: p.tag, data: out };
-                    match fpga.emit(packet) {
+                    if let Some(dc) = &downstream {
+                        loop {
+                            if stop_w.load(Ordering::Relaxed) {
+                                return; // drop the in-flight packet on stop
+                            }
+                            if dc.take_timeout(std::time::Duration::from_millis(5)) {
+                                break;
+                            }
+                        }
+                    }
+                    match fpga.emit_prepaid(packet) {
                         Ok(None) => {}
                         Ok(Some(host_bound)) => {
                             if let Some(cb) = cb.lock().unwrap().as_ref() {
@@ -140,13 +163,58 @@ impl NpRuntime {
     }
 
     /// Submit an input tensor. Blocks only while the first card's
-    /// framebuffer is out of credits.
-    pub fn send_input(&self, circuit: u32, tag: u64, data: Vec<u8>) {
-        self.entry_credits[0].take();
+    /// framebuffer is out of credits; the wait is interrupted by
+    /// [`request_stop`](Self::request_stop). Returns false (dropping the
+    /// packet) if the runtime stopped before a credit became available.
+    pub fn send_input(&self, circuit: u32, tag: u64, data: Vec<u8>) -> bool {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            if self.entry_credits[0].take_timeout(std::time::Duration::from_millis(5)) {
+                self.cards[0]
+                    .framebuffer
+                    .place(Packet { circuit, tag, data })
+                    .expect("entry credits must prevent overflow");
+                return true;
+            }
+        }
+    }
+
+    /// Non-blocking submit: succeeds only if an entry credit is available
+    /// right now (§V-B: "input tensors are only transferred to a card when
+    /// enough space is available"). On backpressure — or after a stop
+    /// request — the payload is handed back so the caller can interleave
+    /// other work and retry.
+    pub fn try_send_input(&self, circuit: u32, tag: u64, data: Vec<u8>) -> Result<(), Vec<u8>> {
+        if self.stop.load(Ordering::Relaxed) {
+            return Err(data);
+        }
+        if !self.entry_credits[0].try_take() {
+            return Err(data);
+        }
         self.cards[0]
             .framebuffer
             .place(Packet { circuit, tag, data })
             .expect("entry credits must prevent overflow");
+        Ok(())
+    }
+
+    /// Entry credits currently available (free slots in card 0's
+    /// framebuffer not yet promised to an in-flight submission).
+    pub fn credits_available(&self) -> u32 {
+        self.entry_credits[0].available()
+    }
+
+    /// Ask every card worker — and any host thread blocked in
+    /// `send_input` — to exit at its next stop check (≤ ~5 ms). In-flight
+    /// packets are dropped; the chain cannot be restarted.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
     }
 
     pub fn n_cards(&self) -> usize {
@@ -233,5 +301,84 @@ mod tests {
         rt.send_input(0, 1, vec![5]);
         let (_, data) = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
         assert_eq!(data, vec![5, 0]);
+    }
+
+    /// A stage that holds each packet for a fixed service time.
+    struct Slow(u64);
+    impl StageExecutor for Slow {
+        fn execute(&self, _c: u32, _t: u64, input: &[u8]) -> Vec<u8> {
+            std::thread::sleep(std::time::Duration::from_millis(self.0));
+            input.to_vec()
+        }
+    }
+
+    fn slow_chain(
+        stages: usize,
+        ms: u64,
+        slots: u32,
+    ) -> (NpRuntime, mpsc::Receiver<(u64, Vec<u8>)>) {
+        let execs: Vec<Arc<dyn StageExecutor>> =
+            (0..stages).map(|_| Arc::new(Slow(ms)) as Arc<dyn StageExecutor>).collect();
+        let rt = NpRuntime::load_circuit(Driver::new(), 0, execs, slots);
+        let (tx, rx) = mpsc::channel();
+        rt.on_output(move |_c, tag, data| {
+            let _ = tx.send((tag, data));
+        });
+        (rt, rx)
+    }
+
+    #[test]
+    fn try_send_input_refuses_on_exhausted_credits_then_recovers() {
+        let (rt, rx) = slow_chain(1, 100, 1);
+        assert_eq!(rt.credits_available(), 1);
+        assert!(rt.try_send_input(0, 1, vec![1]).is_ok());
+        // card 0 is busy for ~100 ms; once it consumes packet 1 the credit
+        // returns, a second submit fills the framebuffer again, and a third
+        // must be refused without blocking.
+        let t0 = std::time::Instant::now();
+        let mut refused = false;
+        let mut sent = 1u64;
+        while t0.elapsed() < std::time::Duration::from_millis(80) {
+            match rt.try_send_input(0, sent + 1, vec![1]) {
+                Ok(()) => sent += 1,
+                Err(payload) => {
+                    assert_eq!(payload, vec![1], "payload handed back intact");
+                    refused = true;
+                    break;
+                }
+            }
+        }
+        assert!(refused, "credit exhaustion never refused a submit");
+        // everything already accepted still completes
+        for _ in 0..sent {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+    }
+
+    #[test]
+    fn stop_interrupts_backpressured_chain_mid_stream() {
+        // 1-slot framebuffers + slow stages: most of the submitted window
+        // is still in flight when stop is requested. Shutdown must complete
+        // promptly (workers blocked on downstream credits or empty
+        // framebuffers all observe the flag), dropping in-flight packets.
+        let (rt, rx) = slow_chain(3, 30, 1);
+        for i in 0..4u64 {
+            rt.send_input(0, i, vec![i as u8]);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        rt.request_stop();
+        assert!(rt.stopped());
+        // a post-stop submit is refused both ways
+        assert!(rt.try_send_input(0, 99, vec![9]).is_err());
+        assert!(!rt.send_input(0, 100, vec![9]));
+        let t0 = std::time::Instant::now();
+        drop(rt); // joins the workers
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "shutdown hung on in-flight packets"
+        );
+        // fewer packets completed than were submitted (mid-stream stop)
+        let done = rx.try_iter().count();
+        assert!(done < 4, "stop had no effect, {done} completions");
     }
 }

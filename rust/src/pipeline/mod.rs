@@ -6,4 +6,4 @@ pub mod schedule;
 pub mod sim;
 
 pub use schedule::{bubble_fraction, gpipe_round_time, PipelineSchedule};
-pub use sim::{SeqRecord, SimConfig, SimReport, simulate};
+pub use sim::{simulate, simulate_opts, SeqRecord, SimConfig, SimOpts, SimReport};

@@ -18,6 +18,7 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::collections::HashMap;
 use std::collections::VecDeque;
 
 use crate::chip::timing::{pass_time, PassKind};
@@ -158,8 +159,35 @@ struct SeqState {
     itl_gaps: Vec<f64>,
 }
 
-/// Run the simulation.
+/// Simulation tuning knobs (separate from the workload in `SimConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct SimOpts {
+    /// Memoize stage service times per (stage, pass shape). The roofline
+    /// fold over a stage's cards is recomputed for every event otherwise;
+    /// at Table-II scale (81 stages, 1400 requests, ctx 2048) the shapes
+    /// repeat millions of times. Off exists only for A/B benchmarking
+    /// (benches/pipeline_fill.rs).
+    pub memoize_service_times: bool,
+}
+
+impl Default for SimOpts {
+    fn default() -> Self {
+        SimOpts { memoize_service_times: true }
+    }
+}
+
+/// Run the simulation with default options.
 pub fn simulate(mapping: &Mapping, rack: &RackSpec, cfg: SimConfig) -> SimReport {
+    simulate_opts(mapping, rack, cfg, SimOpts::default())
+}
+
+/// Run the simulation.
+pub fn simulate_opts(
+    mapping: &Mapping,
+    rack: &RackSpec,
+    cfg: SimConfig,
+    opts: SimOpts,
+) -> SimReport {
     let chip = rack.node.card.chip;
     let n_stages = mapping.stages.len();
     let cards_per_node = rack.node.cards_per_node;
@@ -190,7 +218,7 @@ pub fn simulate(mapping: &Mapping, rack: &RackSpec, cfg: SimConfig) -> SimReport
         }
     };
 
-    let service = |stage: usize, kind: JobKind| -> f64 {
+    let service_raw = |stage: usize, kind: JobKind| -> f64 {
         let pass = match kind {
             JobKind::Prefill { tokens, ctx_after, .. } => {
                 PassKind::Prefill { tokens, ctx: ctx_after }
@@ -202,6 +230,22 @@ pub fn simulate(mapping: &Mapping, rack: &RackSpec, cfg: SimConfig) -> SimReport
             .iter()
             .map(|&c| pass_time(&chip, &mapping.cards[c].cost, pass))
             .fold(0.0, f64::max)
+    };
+    // service() is pure in (stage, pass shape): memoize it. The chunk index
+    // of a prefill job does not change its pass time, so the key is only
+    // (stage, tokens-or-ctx, ctx, is_prefill).
+    let mut service_cache: HashMap<(usize, u32, u32, bool), f64> = HashMap::new();
+    let mut service = |stage: usize, kind: JobKind| -> f64 {
+        if !opts.memoize_service_times {
+            return service_raw(stage, kind);
+        }
+        let key = match kind {
+            JobKind::Prefill { tokens, ctx_after, .. } => (stage, tokens, ctx_after, true),
+            JobKind::Decode { ctx } => (stage, ctx, 0, false),
+        };
+        *service_cache
+            .entry(key)
+            .or_insert_with(|| service_raw(stage, kind))
     };
 
     // ---------------------------------------------------------------- state
@@ -345,8 +389,10 @@ pub fn simulate(mapping: &Mapping, rack: &RackSpec, cfg: SimConfig) -> SimReport
                     let d = hop_delay(None, 0, 1);
                     push(&mut heap, now + d, Ev::Arrive { stage: 0, job: j }, &mut evseq);
                 } else {
-                    // record + free the slot for the next request
-                    let st = &seqs[sid];
+                    // record + free the slot for the next request; the
+                    // sequence is retired, so move its gaps instead of
+                    // cloning a per-token vec on the hot path
+                    let st = &mut seqs[sid];
                     records.push(SeqRecord {
                         id: jb.seq,
                         n_in: st.n_in,
@@ -354,7 +400,7 @@ pub fn simulate(mapping: &Mapping, rack: &RackSpec, cfg: SimConfig) -> SimReport
                         t_start: st.t_start,
                         t_first: st.t_first,
                         t_end: now,
-                        itl_gaps: st.itl_gaps.clone(),
+                        itl_gaps: std::mem::take(&mut st.itl_gaps),
                     });
                     if pending_requests > 0 {
                         pending_requests -= 1;
@@ -445,6 +491,26 @@ mod tests {
         let r16 = small_sim(16, 2048, 16);
         // wall time to finish the same 16 requests must shrink with slots
         assert!(r16.sim_time < r8.sim_time);
+    }
+
+    #[test]
+    fn memoized_service_times_change_nothing() {
+        // the cache is a pure-function memo: reports must match the
+        // uncached path event for event
+        let rack = RackSpec::northpole_42u();
+        let m = find_model("granite-3.3-8b").unwrap();
+        let mapping = map_model(&m, 28, 2048, &rack).unwrap();
+        let cfg = SimConfig { users: 6, prompt_len: 256, gen_len: 16, requests: 12, chunk: 128 };
+        let memo = simulate_opts(&mapping, &rack, cfg, SimOpts { memoize_service_times: true });
+        let raw = simulate_opts(&mapping, &rack, cfg, SimOpts { memoize_service_times: false });
+        assert_eq!(memo.seqs.len(), raw.seqs.len());
+        assert!((memo.sim_time - raw.sim_time).abs() < 1e-12, "{} vs {}", memo.sim_time, raw.sim_time);
+        for (a, b) in memo.seqs.iter().zip(&raw.seqs) {
+            assert_eq!(a.id, b.id);
+            assert!((a.t_first - b.t_first).abs() < 1e-12);
+            assert!((a.t_end - b.t_end).abs() < 1e-12);
+            assert_eq!(a.itl_gaps, b.itl_gaps);
+        }
     }
 
     #[test]

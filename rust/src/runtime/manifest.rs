@@ -3,7 +3,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::err::{Context, Result};
 
 use crate::util::json::Value;
 

@@ -14,7 +14,9 @@ pub use tensor::{DType, Tensor};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::err::{Context, Result};
+use crate::xla;
+use crate::{anyhow, bail};
 
 /// A compiled model: every stage executable plus the manifest.
 pub struct Engine {

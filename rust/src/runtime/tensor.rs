@@ -1,6 +1,8 @@
 //! Host tensor type + (de)serialization to xla Literals and wire bytes.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::err::Result;
+use crate::xla;
 
 /// Supported element types on the stage boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

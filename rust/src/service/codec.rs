@@ -3,7 +3,8 @@
 //! header: [kind u8][slot i32][pos_off i32][last_idx i32][flags u8]
 //! payload: one or more runtime::Tensor in wire encoding.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::err::Result;
 
 use crate::runtime::Tensor;
 

@@ -1,16 +1,23 @@
 //! One LLM instance: sequence head + pipeline management + application
 //! chain (§IV), serving real tokens through the PJRT-backed card circuit.
 //!
-//! The scheduler implements the paper's dynamic batching: sequences join
-//! and leave the decode mini-batch asynchronously; free slots are refilled
-//! from the broker queue between decode rounds; prefill packets interleave
-//! with decode packets through the same card chain (two virtual circuits).
+//! The scheduler implements the paper's dynamic batching over a fully
+//! pipelined chain: sequences join and leave the decode mini-batch
+//! asynchronously; free slots are refilled from the queue *while* the rest
+//! of the batch keeps decoding; prefill chunks stream into the chain
+//! back-to-back (chunk c+1 enters stage 0 while chunk c is still mid-chain)
+//! and interleave with in-flight decode packets — the paper's
+//! two-virtual-circuit interleave — instead of head-of-line blocking the
+//! batch on a full synchronous prefill. All submissions are credit-gated
+//! and tag-tracked (service/scheduler.rs); a prompt's first token is
+//! sampled when its final chunk's completion is routed back, not when the
+//! whole chain drains.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::broker::{Broker, Task};
 use crate::consensus::Ring;
@@ -20,9 +27,10 @@ use crate::pipeline::sim::SeqRecord;
 use crate::runtime::Tensor;
 use crate::tokenizer::ByteTokenizer;
 
-use super::codec::{PacketHeader, PacketKind};
+use super::codec::PacketHeader;
 use super::executors::{HeadExecutor, LayerExecutor, SharedEngine};
 use super::sampler::Sampler;
+use super::scheduler::PacketScheduler;
 
 /// A generation request submitted to the instance.
 #[derive(Debug, Clone)]
@@ -45,18 +53,32 @@ pub enum GenUpdate {
 
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
-    /// Max decode rounds with an empty batch before the scheduler parks.
-    pub idle_spin: u32,
+    /// Upper bound on one completion wait before the serving loop
+    /// re-checks the shutdown flag.
+    pub poll: Duration,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { idle_spin: 4 }
+        ServeOptions { poll: Duration::from_millis(5) }
     }
+}
+
+/// Prompt tokens not yet injected into the chain.
+struct FillState {
+    toks: Vec<i32>,
+    next_chunk: usize,
+    n_chunks: usize,
 }
 
 struct SlotState {
     req: GenRequest,
+    /// Remaining prefill injection work (None once every chunk entered the
+    /// chain; the final chunk may still be in flight).
+    fill: Option<FillState>,
+    /// True once the first token was sampled — only then does the slot
+    /// participate in decode rounds.
+    decoding: bool,
     position: usize, // next cache write position
     n_in: usize,
     tokens_out: usize,
@@ -69,18 +91,29 @@ struct SlotState {
     generated: Vec<u32>,
 }
 
+/// In-flight operations routed by completion tag.
+enum PendingOp {
+    /// One prefill chunk of `slot`; the final chunk carries the logits row.
+    Prefill { slot: usize, is_final: bool },
+    /// One batched decode round covering the listed (decoding) slots.
+    Decode { covered: Vec<usize> },
+}
+
 /// The running instance.
 pub struct LlmInstance {
     engine: SharedEngine,
     chain: Arc<NpRuntime>,
     tokenizer: ByteTokenizer,
-    out_rx: Mutex<mpsc::Receiver<(u64, Vec<u8>)>>,
+    sched: Mutex<PacketScheduler<PendingOp>>,
     queue: Mutex<VecDeque<GenRequest>>,
     updates_tx: mpsc::Sender<GenUpdate>,
     pub updates: Mutex<mpsc::Receiver<GenUpdate>>,
     pub records: Mutex<Vec<SeqRecord>>,
+    /// Broker queues this instance serves, so `shutdown` can close them
+    /// and release a `serve_broker` thread parked in `consume`.
+    subscriptions: Mutex<Vec<(Arc<Broker>, String)>>,
+    opts: ServeOptions,
     stop: AtomicBool,
-    tag: AtomicU64,
     t0: Instant,
 }
 
@@ -88,6 +121,10 @@ impl LlmInstance {
     /// Build the card chain (one LayerExecutor per layer + head) and run
     /// the §IV-2 startup consensus across the "application containers".
     pub fn start(engine: SharedEngine) -> Arc<LlmInstance> {
+        Self::start_with(engine, ServeOptions::default())
+    }
+
+    pub fn start_with(engine: SharedEngine, opts: ServeOptions) -> Arc<LlmInstance> {
         let n_layers = engine.manifest.n_layers;
         // pipeline management: ring consensus over app containers
         let ring = Ring::new(n_layers + 1);
@@ -101,22 +138,20 @@ impl LlmInstance {
         ring.wait_committed();
 
         let chain = Arc::new(NpRuntime::load_circuit(Driver::new(), 0, execs, 8));
-        let (tx, rx) = mpsc::channel::<(u64, Vec<u8>)>();
-        chain.on_output(move |_c, tag, data| {
-            let _ = tx.send((tag, data));
-        });
+        let sched = PacketScheduler::new(chain.clone());
         let (utx, urx) = mpsc::channel();
         Arc::new(LlmInstance {
             engine,
             chain,
             tokenizer: ByteTokenizer,
-            out_rx: Mutex::new(rx),
+            sched: Mutex::new(sched),
             queue: Mutex::new(VecDeque::new()),
             updates_tx: utx,
             updates: Mutex::new(urx),
             records: Mutex::new(Vec::new()),
+            subscriptions: Mutex::new(Vec::new()),
+            opts,
             stop: AtomicBool::new(false),
-            tag: AtomicU64::new(1),
             t0: Instant::now(),
         })
     }
@@ -129,80 +164,173 @@ impl LlmInstance {
         self.queue.lock().unwrap().len()
     }
 
-    fn roundtrip(&self, payload: Vec<u8>) -> Vec<u8> {
-        let tag = self.tag.fetch_add(1, Ordering::Relaxed);
-        self.chain.send_input(0, tag, payload);
-        let rx = self.out_rx.lock().unwrap();
-        loop {
-            let (t, data) = rx.recv().expect("chain output");
-            if t == tag {
-                return data;
-            }
-            // out-of-order tags cannot happen on a FIFO chain, but be safe
-        }
-    }
-
-    /// Prefill a prompt into cache slot `slot`; returns (logits row, n_in).
-    fn prefill(&self, slot: usize, tokens: &[i32]) -> (Vec<f32>, usize) {
+    /// Tokenize a request and stage it in a slot; injection happens later,
+    /// interleaved with in-flight decode packets.
+    fn admit(&self, req: GenRequest) -> SlotState {
         let m = &self.engine.manifest;
-        let t_chunk = m.prefill_chunk;
-        let n = tokens.len().max(1);
-        let n_chunks = n.div_ceil(t_chunk);
-        let mut logits = Vec::new();
-        for c in 0..n_chunks {
-            let lo = c * t_chunk;
-            let hi = (lo + t_chunk).min(n);
-            let mut chunk: Vec<i32> = tokens[lo..hi].to_vec();
-            let valid = chunk.len();
-            chunk.resize(t_chunk, 0);
-            let h = self
-                .engine
-                .run("embed_prefill", &[Tensor::i32(vec![1, t_chunk], chunk)])
-                .expect("embed_prefill")
-                .remove(0);
-            let is_final = c + 1 == n_chunks;
-            let hdr = PacketHeader::prefill(
-                slot as i32,
-                lo as i32,
-                valid.saturating_sub(1) as i32,
-                is_final,
-            );
-            let out = self.roundtrip(hdr.encode(&[&h]));
-            if is_final {
-                let (_, mut ts) = PacketHeader::decode(&out).expect("prefill out");
-                logits = ts.pop().expect("logits").as_f32();
-            }
+        let t_submit = Instant::now();
+        let toks: Vec<i32> = self
+            .tokenizer
+            .encode(&req.prompt)
+            .iter()
+            .map(|&t| (t as i32).min(m.vocab as i32 - 1))
+            .collect();
+        let mut toks = if toks.is_empty() { vec![1] } else { toks };
+        let n_in = toks
+            .len()
+            .min(m.max_context.saturating_sub(req.max_tokens + 1))
+            .max(1);
+        toks.truncate(n_in);
+        let n_chunks = n_in.div_ceil(m.prefill_chunk).max(1);
+        let sampler = if req.temperature > 0.0 {
+            Sampler::new(req.temperature, req.top_k, req.id)
+        } else {
+            Sampler::greedy()
+        };
+        SlotState {
+            fill: Some(FillState { toks, next_chunk: 0, n_chunks }),
+            decoding: false,
+            position: 0,
+            n_in,
+            tokens_out: 0,
+            last_token: 0,
+            t_submit,
+            t_first: None,
+            t_prev: None,
+            gaps: Vec::new(),
+            sampler,
+            generated: Vec::new(),
+            req,
         }
-        (logits, n)
     }
 
-    /// One batched decode round. `tokens`/`positions` are full B-slot rows.
-    fn decode_round(&self, tokens: &[i32], positions: &[i32]) -> Vec<f32> {
+    /// Host-side embed of one prefill chunk → chain packet bytes.
+    fn encode_prefill_chunk(&self, slot: usize, fill: &FillState) -> (Vec<u8>, bool) {
+        let t_chunk = self.engine.manifest.prefill_chunk;
+        let idx = fill.next_chunk;
+        let lo = idx * t_chunk;
+        let hi = (lo + t_chunk).min(fill.toks.len());
+        let mut chunk: Vec<i32> = fill.toks[lo..hi].to_vec();
+        let valid = chunk.len();
+        chunk.resize(t_chunk, 0);
+        let h = self
+            .engine
+            .run("embed_prefill", &[Tensor::i32(vec![1, t_chunk], chunk)])
+            .expect("embed_prefill")
+            .remove(0);
+        let is_final = idx + 1 == fill.n_chunks;
+        let hdr = PacketHeader::prefill(
+            slot as i32,
+            lo as i32,
+            valid.saturating_sub(1) as i32,
+            is_final,
+        );
+        (hdr.encode(&[&h]), is_final)
+    }
+
+    /// Host-side embed of one batched decode round → chain packet bytes.
+    fn encode_decode_round(&self, tokens: &[i32], positions: &[i32]) -> Vec<u8> {
         let b = self.engine.manifest.batch_slots;
-        assert_eq!(tokens.len(), b);
+        debug_assert_eq!(tokens.len(), b);
         let h = self
             .engine
             .run("embed_decode", &[Tensor::i32(vec![b], tokens.to_vec())])
             .expect("embed_decode")
             .remove(0);
         let pos = Tensor::i32(vec![b], positions.to_vec());
-        let hdr = PacketHeader { kind: PacketKind::Decode, slot: 0, pos_off: 0, last_idx: 0, flags: 0 };
-        let out = self.roundtrip(hdr.encode(&[&h, &pos]));
-        let (_, mut ts) = PacketHeader::decode(&out).expect("decode out");
-        ts.pop().expect("logits").as_f32() // [B, V] flattened
+        PacketHeader::decode_step().encode(&[&h, &pos])
     }
 
-    /// Run the serving loop until the queue drains and all slots finish.
-    /// Returns per-sequence records (real wall-clock metrics).
+    /// Stream one sampled token and decide whether the slot is finished.
+    fn push_token(&self, st: &mut SlotState, tok: u32) -> bool {
+        let now = Instant::now();
+        if st.t_first.is_none() {
+            st.t_first = Some(now);
+        } else if let Some(prev) = st.t_prev {
+            st.gaps.push(now.duration_since(prev).as_secs_f64());
+        }
+        st.t_prev = Some(now);
+        st.tokens_out += 1;
+        st.last_token = tok;
+        st.generated.push(tok);
+        let _ = self.updates_tx.send(GenUpdate::Token {
+            id: st.req.id,
+            token: tok,
+            text: self.tokenizer.decode(&[tok]),
+        });
+        let hit_stop = st.req.stop_byte.map(|sb| tok == sb as u32).unwrap_or(false);
+        st.tokens_out >= st.req.max_tokens
+            || st.position + 1 >= self.engine.manifest.max_context
+            || hit_stop
+    }
+
+    /// Emit the Done update + wall-clock record for a retired slot.
+    fn finish_slot(&self, mut st: SlotState) {
+        let ttft = st
+            .t_first
+            .map(|t| t.duration_since(st.t_submit).as_secs_f64())
+            .unwrap_or(0.0);
+        let itl = if st.gaps.is_empty() {
+            0.0
+        } else {
+            st.gaps.iter().sum::<f64>() / st.gaps.len() as f64
+        };
+        let _ = self.updates_tx.send(GenUpdate::Done {
+            id: st.req.id,
+            n_in: st.n_in,
+            n_out: st.tokens_out,
+            ttft_s: ttft,
+            itl_s: itl,
+        });
+        let base = self.t0;
+        self.records.lock().unwrap().push(SeqRecord {
+            id: st.req.id as u32,
+            n_in: st.n_in as u32,
+            n_out: st.tokens_out as u32,
+            t_start: st.t_submit.duration_since(base).as_secs_f64(),
+            t_first: st
+                .t_first
+                .map(|t| t.duration_since(base).as_secs_f64())
+                .unwrap_or(0.0),
+            t_end: st
+                .t_prev
+                .map(|t| t.duration_since(base).as_secs_f64())
+                .unwrap_or(0.0),
+            // the slot is retired: move the gaps, don't clone them
+            itl_gaps: std::mem::take(&mut st.gaps),
+        });
+    }
+
+    /// Run the serving loop until the queue drains and all slots finish
+    /// (or `shutdown` is called). Returns per-sequence records (real
+    /// wall-clock metrics).
+    ///
+    /// The loop keeps the card chain full: at most one decode round is in
+    /// flight (round k+1 needs round k's sampled tokens), and every spare
+    /// entry credit carries a prefill chunk of a filling slot, so new
+    /// prompts stream through the chain *between* decode packets instead
+    /// of stalling the mini-batch.
     pub fn serve_until_drained(&self) -> Vec<SeqRecord> {
-        let m = &self.engine.manifest;
-        let b = m.batch_slots;
-        let vocab = m.vocab;
-        let max_ctx = m.max_context;
+        let b = self.engine.manifest.batch_slots;
+        let vocab = self.engine.manifest.vocab;
+        let max_ctx = self.engine.manifest.max_context;
+        let mut sched = self.sched.lock().unwrap();
         let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
+        // row buffers reused across rounds — no per-round allocation on
+        // the hot path (the embed tensor copy is unavoidable: the packet
+        // owns its bytes)
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut decode_in_flight = false;
+        let mut rr = 0usize; // round-robin cursor over filling slots
 
         loop {
-            // ---- dynamic batching: fill free slots from the queue -------
+            if self.stop.load(Ordering::Relaxed) {
+                sched.drain();
+                break;
+            }
+
+            // ---- continuous batching: refill free slots from the queue --
             for s in 0..b {
                 if slots[s].is_some() {
                     continue;
@@ -210,130 +338,114 @@ impl LlmInstance {
                 let Some(req) = self.queue.lock().unwrap().pop_front() else {
                     break;
                 };
-                let t_submit = Instant::now();
-                let toks: Vec<i32> = self
-                    .tokenizer
-                    .encode(&req.prompt)
-                    .iter()
-                    .map(|&t| (t as i32).min(vocab as i32 - 1))
-                    .collect();
-                let toks = if toks.is_empty() { vec![1] } else { toks };
-                let n_in = toks.len().min(max_ctx - req.max_tokens - 1);
-                let (logits, _) = self.prefill(s, &toks[..n_in]);
-                let mut sampler = if req.temperature > 0.0 {
-                    Sampler::new(req.temperature, req.top_k, req.id)
-                } else {
-                    Sampler::greedy()
-                };
-                let first = sampler.sample(&logits);
-                let t_first = Instant::now();
-                let text = self.tokenizer.decode(&[first]);
-                let _ = self.updates_tx.send(GenUpdate::Token {
-                    id: req.id,
-                    token: first,
-                    text,
-                });
-                slots[s] = Some(SlotState {
-                    position: n_in,
-                    n_in,
-                    tokens_out: 1,
-                    last_token: first,
-                    t_submit,
-                    t_first: Some(t_first),
-                    t_prev: Some(t_first),
-                    gaps: Vec::new(),
-                    sampler,
-                    generated: vec![first],
-                    req,
-                });
+                slots[s] = Some(self.admit(req));
             }
 
-            let active = slots.iter().filter(|s| s.is_some()).count();
-            if active == 0 {
+            // ---- inject a decode round over the decoding slots ----------
+            if !decode_in_flight && sched.has_capacity() {
+                let covered: Vec<usize> = (0..b)
+                    .filter(|&s| slots[s].as_ref().is_some_and(|st| st.decoding))
+                    .collect();
+                if !covered.is_empty() {
+                    // rows of filling/empty slots write their (masked, never
+                    // attended) KV at the last cache line, not position 0 —
+                    // position 0 may belong to a prefill chunk mid-chain.
+                    tokens.fill(0);
+                    positions.fill(max_ctx as i32 - 1);
+                    for &s in &covered {
+                        let st = slots[s].as_ref().unwrap();
+                        tokens[s] = st.last_token as i32;
+                        positions[s] = st.position as i32;
+                    }
+                    let payload = self.encode_decode_round(&tokens, &positions);
+                    if sched.try_submit(0, payload, PendingOp::Decode { covered }).is_ok() {
+                        decode_in_flight = true;
+                    }
+                }
+            }
+
+            // ---- interleave prefill chunks into the spare credits -------
+            while sched.has_capacity() {
+                let mut injected = false;
+                for off in 0..b {
+                    let s = (rr + off) % b;
+                    let Some(st) = slots[s].as_mut() else { continue };
+                    let Some(fill) = st.fill.as_ref() else { continue };
+                    let (payload, is_final) = self.encode_prefill_chunk(s, fill);
+                    if sched
+                        .try_submit(0, payload, PendingOp::Prefill { slot: s, is_final })
+                        .is_ok()
+                    {
+                        let fill = st.fill.as_mut().unwrap();
+                        fill.next_chunk += 1;
+                        if fill.next_chunk == fill.n_chunks {
+                            st.fill = None;
+                        }
+                        rr = (s + 1) % b;
+                        injected = true;
+                    }
+                    break; // one attempt per pass; re-check credits
+                }
+                if !injected {
+                    break;
+                }
+            }
+
+            // ---- drained? ----------------------------------------------
+            if sched.in_flight() == 0 && slots.iter().all(|s| s.is_none()) {
                 if self.queue.lock().unwrap().is_empty() {
                     break;
                 }
+                continue; // new work arrived: admit on the next pass
+            }
+
+            // ---- route one completion (bounded wait: stop stays live) ---
+            let Some((_tag, data, op)) = sched.next_completion(self.opts.poll) else {
                 continue;
-            }
-
-            // ---- one decode round over the mini-batch -------------------
-            let mut tokens = vec![0i32; b];
-            let mut positions = vec![0i32; b];
-            for (s, slot) in slots.iter().enumerate() {
-                if let Some(st) = slot {
-                    tokens[s] = st.last_token as i32;
-                    positions[s] = st.position as i32;
-                }
-            }
-            let logits = self.decode_round(&tokens, &positions);
-
-            // ---- sample per active slot, stream, retire finished --------
-            for s in 0..b {
-                let Some(st) = slots[s].as_mut() else { continue };
-                let row = &logits[s * vocab..(s + 1) * vocab];
-                let tok = st.sampler.sample(row);
-                let now = Instant::now();
-                if let Some(prev) = st.t_prev {
-                    st.gaps.push(now.duration_since(prev).as_secs_f64());
-                }
-                st.t_prev = Some(now);
-                st.position += 1;
-                st.tokens_out += 1;
-                st.last_token = tok;
-                st.generated.push(tok);
-                let _ = self.updates_tx.send(GenUpdate::Token {
-                    id: st.req.id,
-                    token: tok,
-                    text: self.tokenizer.decode(&[tok]),
-                });
-
-                let hit_stop = st.req.stop_byte.map(|sb| tok == sb as u32).unwrap_or(false);
-                let full = st.tokens_out >= st.req.max_tokens
-                    || st.position + 1 >= max_ctx
-                    || hit_stop;
-                if full {
-                    let st = slots[s].take().unwrap();
-                    let ttft = st
-                        .t_first
-                        .map(|t| t.duration_since(st.t_submit).as_secs_f64())
-                        .unwrap_or(0.0);
-                    let itl = if st.gaps.is_empty() {
-                        0.0
+            };
+            match op {
+                PendingOp::Prefill { slot, is_final } => {
+                    if !is_final {
+                        continue; // intermediate chunk ack
+                    }
+                    let (_, mut ts) = PacketHeader::decode(&data).expect("prefill out");
+                    let logits = ts.pop().expect("logits").as_f32();
+                    let st = slots[slot].as_mut().expect("prefill for empty slot");
+                    st.position = st.n_in;
+                    let first = st.sampler.sample(&logits);
+                    let full = self.push_token(st, first);
+                    if full {
+                        let st = slots[slot].take().unwrap();
+                        self.finish_slot(st);
                     } else {
-                        st.gaps.iter().sum::<f64>() / st.gaps.len() as f64
-                    };
-                    let _ = self.updates_tx.send(GenUpdate::Done {
-                        id: st.req.id,
-                        n_in: st.n_in,
-                        n_out: st.tokens_out,
-                        ttft_s: ttft,
-                        itl_s: itl,
-                    });
-                    let base = self.t0;
-                    self.records.lock().unwrap().push(SeqRecord {
-                        id: st.req.id as u32,
-                        n_in: st.n_in as u32,
-                        n_out: st.tokens_out as u32,
-                        t_start: st.t_submit.duration_since(base).as_secs_f64(),
-                        t_first: st
-                            .t_first
-                            .map(|t| t.duration_since(base).as_secs_f64())
-                            .unwrap_or(0.0),
-                        t_end: st
-                            .t_prev
-                            .map(|t| t.duration_since(base).as_secs_f64())
-                            .unwrap_or(0.0),
-                        itl_gaps: st.gaps.clone(),
-                    });
+                        st.decoding = true;
+                    }
+                }
+                PendingOp::Decode { covered } => {
+                    decode_in_flight = false;
+                    let (_, mut ts) = PacketHeader::decode(&data).expect("decode out");
+                    let logits = ts.pop().expect("logits").as_f32(); // [B, V]
+                    for &s in &covered {
+                        let st = slots[s].as_mut().expect("decode for empty slot");
+                        let row = &logits[s * vocab..(s + 1) * vocab];
+                        let tok = st.sampler.sample(row);
+                        st.position += 1;
+                        let full = self.push_token(st, tok);
+                        if full {
+                            let st = slots[s].take().unwrap();
+                            self.finish_slot(st);
+                        }
+                    }
                 }
             }
         }
         self.records.lock().unwrap().clone()
     }
 
-    /// §IV: subscribe to a broker queue and serve tasks until it closes.
-    /// Each consumed task is streamed back on its response channel as raw
-    /// token text messages followed by an empty finish.
+    /// §IV: subscribe to a broker queue and serve tasks until it closes
+    /// (or `shutdown` is called). Each consumed task is streamed back on
+    /// its response channel as raw token text messages followed by an
+    /// empty finish.
     pub fn serve_broker(
         self: &Arc<Self>,
         broker: Arc<Broker>,
@@ -343,13 +455,31 @@ impl LlmInstance {
     ) -> JoinHandle<usize> {
         let inst = self.clone();
         let queue = queue.to_string();
+        self.subscriptions
+            .lock()
+            .unwrap()
+            .push((broker.clone(), queue.clone()));
         std::thread::spawn(move || {
             let mut served = 0usize;
+            // release a waiting client whose task will not be served
+            let abandon = |broker: &Broker, reply_to: u64| {
+                if let Some(ch) = broker.response(reply_to) {
+                    ch.finish();
+                }
+                broker.remove_response(reply_to);
+            };
             loop {
+                if inst.stop.load(Ordering::Relaxed) {
+                    break;
+                }
                 // batch up available tasks, then drain the batch
                 let Some(task) = broker.consume(&queue, &priorities) else {
                     break;
                 };
+                if inst.stop.load(Ordering::Relaxed) {
+                    abandon(&broker, task.reply_to);
+                    break;
+                }
                 let mut batch: Vec<Task> = vec![task];
                 while let Some(t) = broker.try_consume(&queue, &priorities) {
                     batch.push(t);
@@ -369,30 +499,60 @@ impl LlmInstance {
                 }
                 inst.serve_until_drained();
                 // stream responses back
-                let updates = inst.updates.lock().unwrap();
-                while let Ok(u) = updates.try_recv() {
-                    match u {
-                        GenUpdate::Token { id, text, .. } => {
-                            if let Some(ch) = broker.response(id) {
-                                ch.send(text);
+                {
+                    let updates = inst.updates.lock().unwrap();
+                    while let Ok(u) = updates.try_recv() {
+                        match u {
+                            GenUpdate::Token { id, text, .. } => {
+                                if let Some(ch) = broker.response(id) {
+                                    ch.send(text);
+                                }
                             }
-                        }
-                        GenUpdate::Done { id, .. } => {
-                            if let Some(ch) = broker.response(id) {
-                                ch.finish();
+                            GenUpdate::Done { id, .. } => {
+                                if let Some(ch) = broker.response(id) {
+                                    ch.finish();
+                                }
+                                broker.remove_response(id);
+                                served += 1;
                             }
-                            broker.remove_response(id);
-                            served += 1;
                         }
                     }
+                }
+                if inst.stop.load(Ordering::Relaxed) {
+                    // a stop mid-drain abandons the rest of the batch:
+                    // finish their channels so clients don't hang (tasks
+                    // already Done above had their channels removed, so
+                    // abandon() is a no-op for them)
+                    for t in &batch {
+                        abandon(&broker, t.reply_to);
+                    }
+                    break;
+                }
+            }
+            if inst.stop.load(Ordering::Relaxed) {
+                // tasks still queued behind the one being served when the
+                // stop landed will never be consumed: release their
+                // clients too (shutdown() closed the queue, so no new
+                // consumers will pick them up)
+                while let Some(t) = broker.try_consume(&queue, &priorities) {
+                    abandon(&broker, t.reply_to);
                 }
             }
             served
         })
     }
 
+    /// Stop serving: the flag is observed by `serve_until_drained` (which
+    /// abandons its in-flight window) and `serve_broker`; it propagates
+    /// into the card chain so workers stalled on backpressure exit too,
+    /// and every broker queue this instance subscribed to is closed so a
+    /// `serve_broker` thread parked in `consume` wakes up.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
+        self.chain.request_stop();
+        for (broker, queue) in self.subscriptions.lock().unwrap().iter() {
+            broker.close(queue);
+        }
     }
 
     pub fn manifest(&self) -> &crate::runtime::Manifest {

@@ -7,7 +7,9 @@
 //!   preprocessing path, schedules prompts onto sequence-worker slots,
 //!   samples tokens, streams responses back, postprocesses.
 //! * **Pipeline management** (§IV-2): ring consensus across application
-//!   containers at startup, then passthrough of tensors into the chain.
+//!   containers at startup, then credit-gated, tag-tracked injection of
+//!   tensors into the chain (scheduler.rs) — prefill chunks and decode
+//!   rounds stay in flight across the stages simultaneously.
 //! * **NorthPole application** (§IV-3): each chain member configures its
 //!   "cards" (PJRT stage executors with resident KV caches) and relays
 //!   tensors via direct card-to-card framebuffer transfers (credits).
@@ -16,8 +18,10 @@ mod codec;
 mod executors;
 mod instance;
 mod sampler;
+mod scheduler;
 
 pub use codec::{PacketHeader, PacketKind};
 pub use executors::{HeadExecutor, LayerExecutor, SharedEngine};
 pub use instance::{GenRequest, GenUpdate, LlmInstance, ServeOptions};
 pub use sampler::Sampler;
+pub use scheduler::{CompletionRouter, PacketScheduler};

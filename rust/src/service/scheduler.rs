@@ -1,0 +1,341 @@
+//! Pipelined in-flight packet scheduling over an `NpRuntime` card chain.
+//!
+//! The paper's serving numbers (§IV/§V-B) depend on keeping every card of
+//! the chain busy: inputs are submitted asynchronously against framebuffer
+//! credits and completions return through a callback, so many packets are
+//! in flight across the stages at once. The old `roundtrip()` serving loop
+//! defeated that — one packet in flight means an N-stage chain runs at
+//! ~1/N utilization.
+//!
+//! [`PacketScheduler`] is the replacement substrate:
+//!
+//! * every submission is tagged and registered in a [`CompletionRouter`]
+//!   (tag → pending operation) before it enters the chain,
+//! * submissions are credit-gated and non-blocking (`try_submit`), so the
+//!   caller can interleave other work — e.g. inject prefill chunks between
+//!   in-flight decode packets (the paper's two-virtual-circuit interleave),
+//! * completions are routed back to their pending operation regardless of
+//!   arrival order, so multiple operation kinds (decode rounds, prefill
+//!   chunks, different circuits) can share the chain simultaneously,
+//! * waiting is stop-aware: `next_completion` returns within its timeout
+//!   so the owner can observe a shutdown request mid-stream.
+//!
+//! The scheduler is single-owner (no internal locking beyond the output
+//! channel): one serving thread drives submissions and completions.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::npruntime::NpRuntime;
+
+/// Tag → pending-operation table. Completions may be claimed in any order,
+/// which is what lets prefill chunks and decode rounds share one chain.
+#[derive(Debug)]
+pub struct CompletionRouter<T> {
+    pending: HashMap<u64, T>,
+}
+
+impl<T> Default for CompletionRouter<T> {
+    fn default() -> Self {
+        CompletionRouter { pending: HashMap::new() }
+    }
+}
+
+impl<T> CompletionRouter<T> {
+    pub fn new() -> CompletionRouter<T> {
+        Self::default()
+    }
+
+    /// Register an in-flight operation under its tag.
+    pub fn register(&mut self, tag: u64, op: T) {
+        let prev = self.pending.insert(tag, op);
+        debug_assert!(prev.is_none(), "tag {tag} reused while in flight");
+    }
+
+    /// Claim the operation for a completed tag (None if unknown —
+    /// e.g. a completion that raced a drain).
+    pub fn route(&mut self, tag: u64) -> Option<T> {
+        self.pending.remove(&tag)
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Forget every in-flight operation, returning them.
+    pub fn drain(&mut self) -> Vec<T> {
+        self.pending.drain().map(|(_, op)| op).collect()
+    }
+}
+
+/// Credit-gated, tag-tracked submission + completion routing over one
+/// card chain.
+pub struct PacketScheduler<T> {
+    chain: Arc<NpRuntime>,
+    rx: mpsc::Receiver<(u64, Vec<u8>)>,
+    router: CompletionRouter<T>,
+    next_tag: u64,
+}
+
+impl<T> PacketScheduler<T> {
+    /// Take ownership of the chain's output callback. Tags are allocated
+    /// by the scheduler; callers identify work by the `op` value they
+    /// attach at submission.
+    pub fn new(chain: Arc<NpRuntime>) -> PacketScheduler<T> {
+        let (tx, rx) = mpsc::channel();
+        chain.on_output(move |_c, tag, data| {
+            let _ = tx.send((tag, data));
+        });
+        PacketScheduler { chain, rx, router: CompletionRouter::new(), next_tag: 1 }
+    }
+
+    pub fn chain(&self) -> &Arc<NpRuntime> {
+        &self.chain
+    }
+
+    /// Operations submitted but not yet completed.
+    pub fn in_flight(&self) -> usize {
+        self.router.len()
+    }
+
+    /// True if a `try_submit` would find an entry credit right now.
+    pub fn has_capacity(&self) -> bool {
+        self.chain.credits_available() > 0
+    }
+
+    /// Non-blocking submit. On backpressure (or after a stop request) the
+    /// payload and operation are handed back for a later retry.
+    pub fn try_submit(
+        &mut self,
+        circuit: u32,
+        data: Vec<u8>,
+        op: T,
+    ) -> Result<u64, (Vec<u8>, T)> {
+        let tag = self.next_tag;
+        match self.chain.try_send_input(circuit, tag, data) {
+            Ok(()) => {
+                self.next_tag += 1;
+                self.router.register(tag, op);
+                Ok(tag)
+            }
+            Err(data) => Err((data, op)),
+        }
+    }
+
+    /// Blocking submit: parks on entry credits (stop-aware). Returns None
+    /// if the chain stopped before the packet could enter.
+    pub fn submit(&mut self, circuit: u32, data: Vec<u8>, op: T) -> Option<u64> {
+        let tag = self.next_tag;
+        if self.chain.send_input(circuit, tag, data) {
+            self.next_tag += 1;
+            self.router.register(tag, op);
+            Some(tag)
+        } else {
+            None
+        }
+    }
+
+    /// Wait up to `timeout` for the next completion and route it to its
+    /// pending operation. Returns None on timeout or after the chain shut
+    /// down — callers use the bounded wait to re-check stop flags.
+    pub fn next_completion(&mut self, timeout: Duration) -> Option<(u64, Vec<u8>, T)> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            match self.rx.recv_timeout(left) {
+                Ok((tag, data)) => {
+                    if let Some(op) = self.router.route(tag) {
+                        return Some((tag, data, op));
+                    }
+                    // completion for an op forgotten by drain(): skip it
+                }
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Forget all in-flight operations (their completions will be
+    /// dropped). Used on shutdown.
+    pub fn drain(&mut self) -> Vec<T> {
+        self.router.drain()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::Driver;
+    use crate::npruntime::StageExecutor;
+    use std::time::Instant;
+
+    const WAIT: Duration = Duration::from_secs(5);
+
+    /// Passthrough stage with a fixed service time per packet.
+    struct Stage(Duration);
+    impl StageExecutor for Stage {
+        fn execute(&self, _c: u32, _t: u64, input: &[u8]) -> Vec<u8> {
+            if !self.0.is_zero() {
+                std::thread::sleep(self.0);
+            }
+            input.to_vec()
+        }
+    }
+
+    fn chain(stages: usize, service: Duration, slots: u32) -> Arc<NpRuntime> {
+        let execs: Vec<Arc<dyn StageExecutor>> = (0..stages)
+            .map(|_| Arc::new(Stage(service)) as Arc<dyn StageExecutor>)
+            .collect();
+        Arc::new(NpRuntime::load_circuit(Driver::new(), 0, execs, slots))
+    }
+
+    #[test]
+    fn router_claims_completions_out_of_order() {
+        let mut r: CompletionRouter<&'static str> = CompletionRouter::new();
+        r.register(1, "first");
+        r.register(2, "second");
+        r.register(3, "third");
+        assert_eq!(r.len(), 3);
+        // completions arrive in an order unrelated to registration
+        assert_eq!(r.route(2), Some("second"));
+        assert_eq!(r.route(3), Some("third"));
+        assert_eq!(r.route(2), None, "double completion must not re-route");
+        assert_eq!(r.route(99), None, "unknown tag");
+        assert_eq!(r.route(1), Some("first"));
+        assert!(r.is_empty());
+    }
+
+    /// Two closed-ring "decode" streams plus a stream of "prefill chunks"
+    /// share the chain; each stream's completions must arrive in its own
+    /// submission order even though the streams interleave globally.
+    #[test]
+    fn interleave_preserves_per_stream_order() {
+        #[derive(Clone, Copy, PartialEq, Debug)]
+        struct Op {
+            stream: usize,
+            k: usize,
+        }
+        let mut sched: PacketScheduler<Op> =
+            PacketScheduler::new(chain(3, Duration::from_millis(1), 4));
+        const DECODE_STREAMS: usize = 2;
+        const TOKENS: usize = 8;
+        const CHUNKS: usize = 8; // stream 2 = chunked prefill
+        // prime one packet per decode stream (closed ring: next token of a
+        // stream is injected only after its previous one completes)
+        for s in 0..DECODE_STREAMS {
+            sched.submit(0, vec![s as u8, 0], Op { stream: s, k: 0 }).unwrap();
+        }
+        // prefill chunks are independent: stream them in as credits allow
+        let mut next_chunk = 0usize;
+        let mut expected = [0usize; 3];
+        let mut done = 0usize;
+        let total = DECODE_STREAMS * TOKENS + CHUNKS;
+        while done < total {
+            while next_chunk < CHUNKS {
+                match sched.try_submit(0, vec![2, next_chunk as u8], Op { stream: 2, k: next_chunk })
+                {
+                    Ok(_) => next_chunk += 1,
+                    Err(_) => break, // backpressure: decode packets keep priority
+                }
+            }
+            let (_tag, data, op) = sched.next_completion(WAIT).expect("completion");
+            assert_eq!(data, vec![op.stream as u8, op.k as u8], "payload routed to wrong op");
+            assert_eq!(
+                op.k, expected[op.stream],
+                "stream {} completed out of order",
+                op.stream
+            );
+            expected[op.stream] += 1;
+            done += 1;
+            if op.stream < DECODE_STREAMS && op.k + 1 < TOKENS {
+                sched
+                    .submit(0, vec![op.stream as u8, (op.k + 1) as u8], Op {
+                        stream: op.stream,
+                        k: op.k + 1,
+                    })
+                    .unwrap();
+            }
+        }
+        assert_eq!(expected, [TOKENS, TOKENS, CHUNKS]);
+        assert_eq!(sched.in_flight(), 0);
+    }
+
+    #[test]
+    fn backpressure_with_one_slot_framebuffers_under_full_window() {
+        // 1-slot framebuffers: the credit window is tiny, so most of the
+        // submission burst must be refused and retried — and nothing may
+        // deadlock or be lost.
+        let mut sched: PacketScheduler<u64> =
+            PacketScheduler::new(chain(3, Duration::from_millis(2), 1));
+        const N: u64 = 12;
+        let mut next = 0u64;
+        let mut refusals = 0usize;
+        let mut got = Vec::new();
+        while got.len() < N as usize {
+            while next < N {
+                match sched.try_submit(0, vec![next as u8], next) {
+                    Ok(_) => next += 1,
+                    Err((payload, op)) => {
+                        assert_eq!(payload, vec![op as u8], "refused payload intact");
+                        refusals += 1;
+                        break;
+                    }
+                }
+            }
+            if let Some((_t, _d, op)) = sched.next_completion(WAIT) {
+                got.push(op);
+            } else {
+                panic!("timed out with {} of {N} complete", got.len());
+            }
+        }
+        assert!(refusals > 0, "1-slot window never exerted backpressure");
+        got.sort_unstable();
+        assert_eq!(got, (0..N).collect::<Vec<_>>(), "every packet completes exactly once");
+    }
+
+    #[test]
+    fn clean_shutdown_mid_stream() {
+        let mut sched: PacketScheduler<u64> =
+            PacketScheduler::new(chain(4, Duration::from_millis(10), 4));
+        const N: u64 = 40; // ~40 * 10 ms of work per stage if run to the end
+        let mut submitted = 0u64;
+        for i in 0..N {
+            match sched.try_submit(0, vec![i as u8], i) {
+                Ok(_) => submitted += 1,
+                Err(_) => break,
+            }
+        }
+        assert!(submitted > 0);
+        let stopper = {
+            let chain = sched.chain().clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(25));
+                chain.request_stop();
+            })
+        };
+        let t0 = Instant::now();
+        let mut completed = 0u64;
+        while let Some(_c) = sched.next_completion(Duration::from_millis(50)) {
+            completed += 1;
+        }
+        stopper.join().unwrap();
+        assert!(sched.chain().stopped());
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "shutdown did not interrupt the stream promptly"
+        );
+        assert!(
+            completed < submitted,
+            "stop arrived mid-stream yet all {submitted} packets completed"
+        );
+        // post-stop submissions are refused; in-flight ops can be drained
+        assert!(sched.try_submit(0, vec![0], 999).is_err());
+        let abandoned = sched.drain();
+        assert_eq!(abandoned.len() as u64, submitted - completed);
+        assert_eq!(sched.in_flight(), 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal error substrate (the build environment has no crates.io access,
+//! so the crate carries its own stand-in for `anyhow`/`thiserror`).
+//!
+//! * [`Error`] is an opaque, context-chained message error,
+//! * [`Result`] defaults its error type to [`Error`],
+//! * [`Context`] adds context to any displayable error,
+//! * `anyhow!` / `bail!` (crate-root macros) build and return errors.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that keeps the blanket `From<E: std::error::Error>`
+//! impl coherent, so `?` converts any concrete error into it.
+
+use std::fmt;
+
+/// An opaque error: a message plus outer-to-inner context frames.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Prepend a context frame (outermost first, like anyhow's chain).
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `.unwrap()` prints Debug: keep it as readable as Display.
+        write!(f, "{self}")
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment for fallible expressions, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+/// Build an [`Error`](crate::util::err::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::err::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::util::err::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        crate::bail!("inner {}", 7)
+    }
+
+    #[test]
+    fn message_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 7");
+        assert_eq!(e.root(), "outer");
+        assert_eq!(format!("{e:?}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        let e = read().with_context(|| format!("reading {}", "cfg")).unwrap_err();
+        assert!(e.to_string().starts_with("reading cfg: "), "{e}");
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = crate::anyhow!("bad value `{}`", 3);
+        assert_eq!(e.to_string(), "bad value `3`");
+    }
+}

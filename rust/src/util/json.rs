@@ -18,12 +18,19 @@ pub enum Value {
     Obj(BTreeMap<String, Value>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Value {
     pub fn parse(s: &str) -> Result<Value, ParseError> {
@@ -47,9 +54,9 @@ impl Value {
     }
 
     /// Object field lookup that errors with the path name (for manifests).
-    pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
+    pub fn req(&self, key: &str) -> crate::util::err::Result<&Value> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing json field `{key}`"))
+            .ok_or_else(|| crate::anyhow!("missing json field `{key}`"))
     }
 
     pub fn as_f64(&self) -> Option<f64> {
@@ -166,6 +173,43 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
         }
     }
     write!(f, "\"")
+}
+
+/// Merge `value` under `key` into the JSON object stored at `path`
+/// (creating the file if absent). Benches use this to accumulate their
+/// sections into one machine-readable report (BENCH_PR1.json — see
+/// EXPERIMENTS.md). An existing file that fails to parse (or whose root is
+/// not an object) is saved to `<path>.bak` rather than silently discarded.
+pub fn merge_into_file(
+    path: &std::path::Path,
+    key: &str,
+    value: Value,
+) -> std::io::Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(text) => match Value::parse(&text) {
+            Ok(v @ Value::Obj(_)) => v,
+            _ => {
+                let mut bak = path.as_os_str().to_os_string();
+                bak.push(".bak");
+                let bak = std::path::PathBuf::from(bak);
+                match std::fs::write(&bak, &text) {
+                    Ok(()) => eprintln!(
+                        "warning: {path:?} is not a JSON object; previous content saved to {bak:?}"
+                    ),
+                    // refuse to overwrite content we could not back up
+                    Err(e) => return Err(e),
+                }
+                Value::Obj(BTreeMap::new())
+            }
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Value::Obj(BTreeMap::new()),
+        // any other read failure must not wipe accumulated sections
+        Err(e) => return Err(e),
+    };
+    if let Value::Obj(m) = &mut root {
+        m.insert(key.to_string(), value);
+    }
+    std::fs::write(path, root.to_string())
 }
 
 struct Parser<'a> {
@@ -389,6 +433,22 @@ mod tests {
     fn unicode_escape() {
         let v = Value::parse(r#""é""#).unwrap();
         assert_eq!(v.as_str(), Some("é"));
+    }
+
+    #[test]
+    fn merge_into_file_accumulates_sections() {
+        let dir = std::env::temp_dir().join(format!("npserve-json-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        let _ = std::fs::remove_file(&path);
+        merge_into_file(&path, "a", Value::obj(vec![("x", Value::num(1.0))])).unwrap();
+        merge_into_file(&path, "b", Value::num(2.0)).unwrap();
+        // overwriting a section keeps the others
+        merge_into_file(&path, "a", Value::num(3.0)).unwrap();
+        let v = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.0));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
