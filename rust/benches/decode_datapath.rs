@@ -1,0 +1,170 @@
+//! Decode-datapath benchmark (EXPERIMENTS.md §Decode-datapath): bytes
+//! copied and buffers allocated per generated token, copy-path vs
+//! zero-copy, over the full broker-to-head serving stack on the
+//! stub-backend toy model (`runtime::testmodel` — no PJRT artifacts
+//! needed, so this runs in every CI pass).
+//!
+//! * **copy path** (`ServeOptions { resident_kv: false }`): each layer's
+//!   KV cache round-trips through host literals on every decode step of
+//!   every layer — the PR-1 discipline (PR-1 additionally paid owned
+//!   packet decodes and fresh per-hop frames, so this baseline is
+//!   conservative);
+//! * **zero-copy** (default): resident device KV donated per step and
+//!   aliased in place, borrowed wire views, pooled packet frames.
+//!
+//! Acceptance bars (ISSUE 2):
+//! * ≥ 2x reduction in bytes copied per decode round,
+//! * resident per-token traffic must NOT scale with the KV-cache size
+//!   (measured by re-running with 8x the context window).
+//!
+//! Byte counts come from `util::traffic` (relaxed global counters at the
+//! wire/device boundaries); the bench runs one workload at a time and
+//! diffs snapshots around it. Results land in BENCH_PR2.json
+//! §decode_datapath.
+//!
+//!   cargo bench --bench decode_datapath
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use npserve::runtime::testmodel::ToyConfig;
+use npserve::service::{GenRequest, LlmInstance, ServeOptions, SharedEngine};
+use npserve::util::json::{merge_into_file, Value};
+use npserve::util::traffic;
+
+/// Cargo runs bench binaries with cwd = the package root (rust/); the
+/// report lives one level up, at the repo root (EXPERIMENTS.md).
+fn report_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR2.json")
+}
+
+struct Measured {
+    bytes_per_tok: f64,
+    allocs_per_tok: f64,
+    tokens: usize,
+    wall_s: f64,
+}
+
+/// Serve one prompt to completion and meter the datapath. A single
+/// sequence keeps the decode-round count exact (one full-batch round per
+/// token after the prefill chunk), so byte counts are deterministic and
+/// the scaling assertion cannot flake on scheduler timing.
+fn run(cfg: &ToyConfig, resident: bool, max_tokens: usize) -> Measured {
+    let engine = SharedEngine(Arc::new(cfg.engine()));
+    let inst = LlmInstance::start_with(
+        engine,
+        ServeOptions { resident_kv: resident, ..Default::default() },
+    );
+    let req = |id: u64, max_tokens: usize| GenRequest {
+        id,
+        prompt: "ab".into(),
+        max_tokens,
+        temperature: 0.0,
+        top_k: 0,
+        stop_byte: None,
+    };
+    // warmup: primes the frame pool and the serving loop's row buffers
+    inst.submit(req(1000, 2));
+    inst.serve_until_drained();
+
+    let before = traffic::snapshot();
+    let t0 = Instant::now();
+    inst.submit(req(0, max_tokens));
+    let recs = inst.serve_until_drained();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let d = traffic::snapshot().since(&before);
+    inst.shutdown();
+
+    let tokens: usize = recs
+        .iter()
+        .filter(|r| r.id == 0)
+        .map(|r| r.n_out as usize)
+        .sum();
+    assert_eq!(tokens, max_tokens, "the request must complete fully");
+    Measured {
+        bytes_per_tok: d.bytes_copied as f64 / tokens as f64,
+        allocs_per_tok: d.allocations as f64 / tokens as f64,
+        tokens,
+        wall_s,
+    }
+}
+
+fn fmt_kib(b: f64) -> String {
+    format!("{:.1} KiB", b / 1024.0)
+}
+
+fn main() {
+    let cfg = ToyConfig::small();
+    let mut big = cfg;
+    big.max_context = cfg.max_context * 8; // 8x KV cache, same workload
+    // fits the small config's max_context=32 (2 prompt + 25 generated + 1)
+    let max_tokens = 25; // 1-chunk prefill + exactly 24 decode rounds
+    let b = cfg.batch_slots;
+
+    println!(
+        "== decode datapath: toy model, {} layers, B={b}, D={}, KV {}B/layer ==",
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.kv_bytes_per_layer()
+    );
+    let copy = run(&cfg, false, max_tokens);
+    println!(
+        "  copy path (host KV round-trip)   {:>12}/tok  {:>7.1} allocs/tok  ({} toks in {:.2}s)",
+        fmt_kib(copy.bytes_per_tok), copy.allocs_per_tok, copy.tokens, copy.wall_s
+    );
+    let zero = run(&cfg, true, max_tokens);
+    println!(
+        "  zero-copy (resident KV donated)  {:>12}/tok  {:>7.1} allocs/tok  ({} toks in {:.2}s)",
+        fmt_kib(zero.bytes_per_tok), zero.allocs_per_tok, zero.tokens, zero.wall_s
+    );
+    let reduction = copy.bytes_per_tok / zero.bytes_per_tok;
+    let alloc_reduction = copy.allocs_per_tok / zero.allocs_per_tok.max(1e-9);
+    println!("  -> bytes-copied reduction {reduction:.2}x (bar: ≥ 2x), allocs {alloc_reduction:.2}x");
+
+    // Residency: per-token traffic must be independent of KV-cache size.
+    println!("\n== KV-size scaling (max_context {} -> {}) ==", cfg.max_context, big.max_context);
+    let copy_big = run(&big, false, max_tokens);
+    let zero_big = run(&big, true, max_tokens);
+    let copy_scale = copy_big.bytes_per_tok / copy.bytes_per_tok;
+    let zero_scale = zero_big.bytes_per_tok / zero.bytes_per_tok;
+    println!("  copy path scales      {copy_scale:.2}x (KV round-trip grows with context)");
+    println!("  zero-copy scales      {zero_scale:.2}x (bar: ≤ 1.1x — resident KV never moves)");
+
+    let section = Value::obj(vec![
+        ("layers", Value::num(cfg.n_layers as f64)),
+        ("batch_slots", Value::num(b as f64)),
+        ("kv_bytes_per_layer", Value::num(cfg.kv_bytes_per_layer() as f64)),
+        ("tokens", Value::num(zero.tokens as f64)),
+        ("copy_bytes_per_tok", Value::num(copy.bytes_per_tok)),
+        ("zerocopy_bytes_per_tok", Value::num(zero.bytes_per_tok)),
+        ("bytes_reduction", Value::num(reduction)),
+        ("copy_allocs_per_tok", Value::num(copy.allocs_per_tok)),
+        ("zerocopy_allocs_per_tok", Value::num(zero.allocs_per_tok)),
+        ("allocs_reduction", Value::num(alloc_reduction)),
+        ("kv_scale_factor", Value::num((big.max_context / cfg.max_context) as f64)),
+        ("copy_bytes_scaling", Value::num(copy_scale)),
+        ("zerocopy_bytes_scaling", Value::num(zero_scale)),
+    ]);
+    match merge_into_file(&report_path(), "decode_datapath", section) {
+        Ok(()) => println!("\nwrote BENCH_PR2.json §decode_datapath"),
+        Err(e) => eprintln!("\ncould not write BENCH_PR2.json: {e}"),
+    }
+
+    let mut failed = false;
+    if reduction < 2.0 {
+        eprintln!("FAIL: bytes-copied reduction {reduction:.2}x below the 2x acceptance bar");
+        failed = true;
+    }
+    if zero_scale > 1.1 {
+        eprintln!(
+            "FAIL: resident per-token traffic scaled {zero_scale:.2}x with an 8x KV cache \
+             (must stay flat)"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("decode_datapath OK");
+}

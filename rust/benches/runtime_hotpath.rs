@@ -11,7 +11,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use npserve::broker::{Broker, Task};
-use npserve::runtime::{Engine, Tensor};
+use npserve::runtime::{Engine, Tensor, TensorView};
 use npserve::service::{GenRequest, LlmInstance, SharedEngine};
 use npserve::tokenizer::ByteTokenizer;
 use npserve::util::json::{merge_into_file, Value};
@@ -73,6 +73,15 @@ fn main() {
     bench("tensor wire encode+decode [8,128] f32", 100_000, || {
         let w = tensor.to_wire();
         std::hint::black_box(Tensor::from_wire(&w).unwrap());
+    });
+
+    let wire = tensor.to_wire();
+    let mut frame = Vec::with_capacity(wire.len());
+    bench("tensor wire view decode + pooled encode", 100_000, || {
+        let (v, _) = TensorView::parse(&wire).unwrap();
+        frame.clear();
+        npserve::runtime::WireEncode::encode_wire_into(&v, &mut frame);
+        std::hint::black_box(&frame);
     });
 
     // PJRT paths need artifacts

@@ -17,6 +17,7 @@ pub mod util {
     pub mod json;
     pub mod prng;
     pub mod stats;
+    pub mod traffic;
 }
 
 /// Compile-only PJRT stand-in (see src/xla/mod.rs); swap for the real

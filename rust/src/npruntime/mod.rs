@@ -21,14 +21,16 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::card::{CardFpga, CircuitHop, CreditCounter, Packet};
+use crate::card::{BufPool, CardFpga, CircuitHop, CreditCounter, Packet};
 use crate::driver::Driver;
 
 /// What a configured card computes: input tensor bytes → output tensor
-/// bytes. Implemented by runtime::PjrtStage (real numerics) and by test
-/// stubs.
+/// bytes, appended into `out` — a cleared frame drawn from the chain's
+/// [`BufPool`], so steady-state hops reuse a fixed working set of buffers
+/// instead of allocating per packet. Implemented by the service stage
+/// executors (real numerics) and by test stubs.
 pub trait StageExecutor: Send + Sync {
-    fn execute(&self, circuit: u32, tag: u64, input: &[u8]) -> Vec<u8>;
+    fn execute(&self, circuit: u32, tag: u64, input: &[u8], out: &mut Vec<u8>);
     fn name(&self) -> String {
         "stage".into()
     }
@@ -44,6 +46,9 @@ pub struct NpRuntime {
     workers: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
     callback: Arc<Mutex<Option<OutputCallback>>>,
+    /// Recycled packet frames shared by every hop of the chain (and by the
+    /// host-side encoders via [`pool`](Self::pool)).
+    pool: Arc<BufPool>,
 }
 
 impl NpRuntime {
@@ -78,6 +83,7 @@ impl NpRuntime {
 
         let stop = Arc::new(AtomicBool::new(false));
         let callback: Arc<Mutex<Option<OutputCallback>>> = Arc::new(Mutex::new(None));
+        let pool = BufPool::new();
 
         // One worker thread per card: consume → execute → emit.
         let mut workers = Vec::new();
@@ -86,6 +92,7 @@ impl NpRuntime {
             let fpga = cards[i].clone();
             let stop_w = stop.clone();
             let cb = callback.clone();
+            let pool_w = pool.clone();
             let entry_w = if i == 0 { Some(entry.clone()) } else { None };
             // the card that feeds me returns credits when I consume
             let upstream: Option<Arc<CreditCounter>> = if i > 0 {
@@ -122,8 +129,13 @@ impl NpRuntime {
                     if let Some(e) = &entry_w {
                         e.put();
                     }
-                    let out = exec.execute(p.circuit, p.tag, &p.data);
-                    let packet = Packet { circuit: p.circuit, tag: p.tag, data: out };
+                    // execute into a pooled output frame; the consumed
+                    // input frame goes straight back to the pool
+                    let Packet { circuit, tag, data } = p;
+                    let mut out = pool_w.get();
+                    exec.execute(circuit, tag, &data, &mut out);
+                    pool_w.put(data);
+                    let packet = Packet { circuit, tag, data: out };
                     if let Some(dc) = &downstream {
                         loop {
                             if stop_w.load(Ordering::Relaxed) {
@@ -154,7 +166,16 @@ impl NpRuntime {
             workers,
             stop,
             callback,
+            pool,
         }
+    }
+
+    /// The chain's recycled packet-frame pool. Host-side encoders draw
+    /// submission frames here and return completion frames after decoding
+    /// them (`service::PacketScheduler::{frame, recycle}`), closing the
+    /// reuse loop end-to-end.
+    pub fn pool(&self) -> &Arc<BufPool> {
+        &self.pool
     }
 
     /// Register the asynchronous output callback (§V-B).
@@ -239,10 +260,9 @@ mod tests {
     /// A stage that appends its id byte — composition order is observable.
     struct Tagger(u8);
     impl StageExecutor for Tagger {
-        fn execute(&self, _c: u32, _t: u64, input: &[u8]) -> Vec<u8> {
-            let mut v = input.to_vec();
-            v.push(self.0);
-            v
+        fn execute(&self, _c: u32, _t: u64, input: &[u8], out: &mut Vec<u8>) {
+            out.extend_from_slice(input);
+            out.push(self.0);
         }
     }
 
@@ -303,12 +323,36 @@ mod tests {
         assert_eq!(data, vec![5, 0]);
     }
 
+    #[test]
+    fn workers_recycle_packet_frames_through_the_pool() {
+        let (rt, rx) = chain(3, 4);
+        // recycle host-side too: submission frames come from the chain
+        // pool, completion frames go back — the full loop of the paper's
+        // fixed framebuffer working set
+        for i in 0..32u64 {
+            let mut frame = rt.pool().get();
+            frame.push(i as u8);
+            rt.send_input(0, i, frame);
+            let (_, data) = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            assert_eq!(data[0], i as u8);
+            rt.pool().put(data);
+        }
+        let (hits, misses) = rt.pool().stats();
+        // per packet: host frame + one output frame per card = 4 gets;
+        // after warmup every get must be a recycle hit
+        assert_eq!(hits + misses, 32 * 4);
+        assert!(
+            hits >= 32 * 4 - 16,
+            "steady-state hops must reuse frames: {hits} hits / {misses} misses"
+        );
+    }
+
     /// A stage that holds each packet for a fixed service time.
     struct Slow(u64);
     impl StageExecutor for Slow {
-        fn execute(&self, _c: u32, _t: u64, input: &[u8]) -> Vec<u8> {
+        fn execute(&self, _c: u32, _t: u64, input: &[u8], out: &mut Vec<u8>) {
             std::thread::sleep(std::time::Duration::from_millis(self.0));
-            input.to_vec()
+            out.extend_from_slice(input);
         }
     }
 

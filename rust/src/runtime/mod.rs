@@ -4,19 +4,73 @@
 //!
 //! The stage I/O contract is documented in python/compile/model.py; the
 //! manifest (manifest.json) pins shapes/dtypes and is validated at load.
+//!
+//! Two execution paths (§V-C):
+//!
+//! * [`Engine::run`] — every input uploaded, every output materialized
+//!   host-side (the copy path; fine for cold stages),
+//! * [`Engine::run_args`] with [`StageArg::Donate`] — large per-stage state
+//!   (the KV cache) stays **resident on the device** as a
+//!   [`DeviceTensor`]; PJRT input-output aliasing rewrites the donated
+//!   buffer in place, so per-step host traffic is O(activations), not
+//!   O(KV-cache). [`StageArg::View`] feeds borrowed packet bytes straight
+//!   into literal creation without materializing an owned tensor first.
 
 mod manifest;
 mod tensor;
+pub mod testmodel;
 
 pub use manifest::{Manifest, StageSig, TensorSig};
-pub use tensor::{DType, Tensor};
+pub use tensor::{DType, F32Slice, Tensor, TensorView, WireEncode};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::util::err::{Context, Result};
+use crate::util::traffic;
 use crate::xla;
 use crate::{anyhow, bail};
+
+/// A tensor resident on the PJRT device across steps. Created by
+/// [`Engine::upload`]; rewritten in place when donated to a stage via
+/// [`StageArg::Donate`]; read back (cold path) with [`DeviceTensor::fetch`].
+pub struct DeviceTensor {
+    buf: xla::PjRtBuffer,
+    shape: Vec<usize>,
+    dtype: DType,
+}
+
+impl DeviceTensor {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Bytes resident on the device.
+    pub fn nbytes(&self) -> usize {
+        self.shape.iter().product::<usize>() * self.dtype.size()
+    }
+
+    /// Device-to-host readback (cold path — e.g. checkpointing a cache).
+    pub fn fetch(&self) -> Result<Tensor> {
+        let lit = self.buf.to_literal_sync()?;
+        Tensor::from_literal(&lit, &self.shape, &self.dtype)
+    }
+}
+
+/// One argument of an [`Engine::run_args`] dispatch.
+pub enum StageArg<'a> {
+    /// Borrowed host bytes (e.g. straight out of a packet frame), uploaded
+    /// for this dispatch only.
+    View(TensorView<'a>),
+    /// Resident device tensor donated to the stage; the matching output
+    /// aliases it in place (see the aliasing convention on
+    /// [`Engine::run_args`]).
+    Donate(&'a mut DeviceTensor),
+}
 
 /// A compiled model: every stage executable plus the manifest.
 pub struct Engine {
@@ -48,6 +102,17 @@ impl Engine {
         Ok(Engine { manifest, client, stages, dir: dir.to_path_buf() })
     }
 
+    /// Build an engine from pre-constructed executables (the host-evaluated
+    /// stub backend — see `xla::PjRtLoadedExecutable::from_host_fn` and
+    /// [`testmodel`]). Lets tests and benches drive the full execution
+    /// path, including donation, without PJRT artifacts.
+    pub fn with_stages(
+        manifest: Manifest,
+        stages: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    ) -> Result<Engine> {
+        Ok(Engine { manifest, client: xla::PjRtClient::cpu()?, stages, dir: PathBuf::new() })
+    }
+
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -60,41 +125,140 @@ impl Engine {
         &self.dir
     }
 
-    /// Execute one stage. Inputs are validated against the manifest;
-    /// outputs are the decomposed return tuple.
+    /// Upload a host tensor to the device, where it stays resident. The
+    /// one-time O(state) copy that replaces a per-step round-trip.
+    pub fn upload(&self, t: &Tensor) -> Result<DeviceTensor> {
+        let lit = t.to_literal()?;
+        let buf = self.client.buffer_from_host_literal(&lit)?;
+        Ok(DeviceTensor { buf, shape: t.shape.clone(), dtype: t.dtype })
+    }
+
+    /// Execute one stage over owned host tensors (copy path). Inputs are
+    /// validated against the manifest; outputs are the decomposed return
+    /// tuple.
     pub fn run(&self, stage: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut args: Vec<StageArg> =
+            inputs.iter().map(|t| StageArg::View(t.view())).collect();
+        self.run_args(stage, &mut args)
+    }
+
+    /// Execute one stage over borrowed views and/or resident device
+    /// tensors.
+    ///
+    /// **Aliasing convention** (matches python/compile/aot.py's
+    /// donation-friendly output ordering): with `n` donated arguments, the
+    /// *last* `n` outputs of the stage alias the donated arguments in
+    /// argument order and never materialize host-side — the donated
+    /// [`DeviceTensor`]s are rewritten in place. Only the remaining leading
+    /// outputs are returned as host tensors.
+    pub fn run_args(&self, stage: &str, args: &mut [StageArg]) -> Result<Vec<Tensor>> {
         let sig = self
             .manifest
             .stages
             .get(stage)
             .ok_or_else(|| anyhow!("unknown stage `{stage}`"))?;
-        if inputs.len() != sig.inputs.len() {
+        if args.len() != sig.inputs.len() {
             bail!(
                 "stage `{stage}` expects {} inputs, got {}",
                 sig.inputs.len(),
-                inputs.len()
+                args.len()
             );
         }
-        for (i, (t, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
-            if t.shape != s.shape || t.dtype != s.dtype {
+        for (i, (a, s)) in args.iter().zip(&sig.inputs).enumerate() {
+            let (shape, dtype) = match a {
+                StageArg::View(v) => (&v.shape[..], v.dtype),
+                StageArg::Donate(d) => (d.shape(), d.dtype()),
+            };
+            if shape != s.shape || dtype != s.dtype {
                 bail!(
-                    "stage `{stage}` input {i}: expected {:?} {}, got {:?} {}",
-                    s.shape, s.dtype, t.shape, t.dtype
+                    "stage `{stage}` input {i}: expected {:?} {}, got {shape:?} {dtype}",
+                    s.shape, s.dtype
                 );
             }
         }
-        let exe = &self.stages[stage];
-        let lits: Vec<xla::Literal> = inputs
+        let n_donated = args
             .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&lits)?;
-        let out = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: decompose.
-        let parts = out.to_tuple()?;
-        let mut tensors = Vec::with_capacity(parts.len());
-        for (p, osig) in parts.into_iter().zip(&sig.outputs) {
-            tensors.push(Tensor::from_literal(&p, &osig.shape, &osig.dtype)?);
+            .filter(|a| matches!(a, StageArg::Donate(_)))
+            .count();
+        if sig.outputs.len() < n_donated {
+            bail!(
+                "stage `{stage}` has {} outputs but {n_donated} donated inputs",
+                sig.outputs.len()
+            );
+        }
+        let n_host_out = sig.outputs.len() - n_donated;
+        // donated arg i must be alias-compatible with output n_host_out + i
+        {
+            let mut di = 0;
+            for (i, a) in args.iter().enumerate() {
+                if let StageArg::Donate(d) = a {
+                    let osig = &sig.outputs[n_host_out + di];
+                    if osig.shape != d.shape() || osig.dtype != d.dtype() {
+                        bail!(
+                            "stage `{stage}` input {i} ({:?} {}) cannot alias output {} \
+                             ({:?} {})",
+                            d.shape(), d.dtype(), n_host_out + di, osig.shape, osig.dtype
+                        );
+                    }
+                    di += 1;
+                }
+            }
+        }
+        let exe = &self.stages[stage];
+
+        // Upload the view arguments (the only host->device copies; each
+        // literal creation heap-copies the payload, so it counts as both
+        // a copy and an allocation — same accounting as `to_literal`).
+        let mut view_lits: Vec<xla::Literal> = Vec::with_capacity(args.len() - n_donated);
+        for a in args.iter() {
+            if let StageArg::View(v) = a {
+                traffic::copied(v.data.len());
+                traffic::allocated(v.data.len());
+                view_lits.push(xla::Literal::create_from_shape_and_untyped_data(
+                    v.dtype.element_type(),
+                    &v.shape,
+                    v.data,
+                )?);
+            }
+        }
+
+        if n_donated == 0 {
+            let mut result = exe.execute::<xla::Literal>(&view_lits)?;
+            // consume the output buffer — a `to_literal_sync` here would
+            // deep-clone the whole tuple just to drop the original
+            let out = result.remove(0).remove(0).into_literal()?;
+            // aot.py lowers with return_tuple=True: decompose.
+            let parts = out.to_tuple()?;
+            let mut tensors = Vec::with_capacity(parts.len());
+            for (p, osig) in parts.into_iter().zip(&sig.outputs) {
+                tensors.push(Tensor::from_literal(&p, &osig.shape, &osig.dtype)?);
+            }
+            return Ok(tensors);
+        }
+
+        // Donated dispatch: assemble the argument list in order, handing
+        // each donated buffer to the executable for in-place aliasing.
+        let host_lits = {
+            let mut vi = 0;
+            let mut exec_args: Vec<xla::ExecArg> = Vec::with_capacity(args.len());
+            for a in args.iter_mut() {
+                match a {
+                    StageArg::View(_) => {
+                        exec_args.push(xla::ExecArg::Ref(&view_lits[vi]));
+                        vi += 1;
+                    }
+                    StageArg::Donate(d) => {
+                        exec_args.push(xla::ExecArg::Donate(&mut d.buf));
+                    }
+                }
+            }
+            exe.execute_donated(&mut exec_args)?
+        };
+        // The aliased outputs kept the donated shapes (validated above);
+        // only the leading outputs come back to the host.
+        let mut tensors = Vec::with_capacity(n_host_out);
+        for (p, osig) in host_lits.iter().zip(&sig.outputs) {
+            tensors.push(Tensor::from_literal(p, &osig.shape, &osig.dtype)?);
         }
         Ok(tensors)
     }
@@ -137,5 +301,83 @@ mod tests {
         let bad = Tensor::i32(vec![3], vec![0, 0, 0]);
         assert!(eng.run("embed_decode", &[bad]).is_err());
         assert!(eng.run("nonexistent", &[]).is_err());
+    }
+
+    // ------------------------------------------------ stub-backend engine
+    // (the functional toy model lives in runtime::testmodel — one place
+    // defines the stages and their manifest; these tests pin the Engine
+    // dispatch semantics on top of it. Deep donated-vs-copy equivalence
+    // over many steps lives in testmodel::tests and xla::tests.)
+
+    use super::testmodel::ToyConfig;
+
+    #[test]
+    fn owned_and_view_dispatch_are_identical() {
+        let cfg = ToyConfig::small();
+        let eng = cfg.engine();
+        let b = cfg.batch_slots;
+        let toks = Tensor::i32(vec![b], vec![3; b]);
+        let owned = eng.run("embed_decode", &[toks.clone()]).unwrap();
+        let mut args = [StageArg::View(toks.view())];
+        let viewed = eng.run_args("embed_decode", &mut args).unwrap();
+        assert_eq!(owned, viewed);
+        assert_eq!(owned[0].shape, vec![b, cfg.d_model]);
+    }
+
+    #[test]
+    fn donated_dispatch_returns_only_host_outputs() {
+        let cfg = ToyConfig::small();
+        let eng = cfg.engine();
+        let b = cfg.batch_slots;
+        let zeros = Tensor::zeros(cfg.kv_shape(), DType::I8);
+        let mut kc_dev = eng.upload(&zeros).unwrap();
+        let mut vc_dev = eng.upload(&zeros).unwrap();
+        assert_eq!(kc_dev.nbytes() + vc_dev.nbytes(), cfg.kv_bytes_per_layer());
+        let h = Tensor::f32(vec![b, cfg.d_model], vec![0.25; b * cfg.d_model]);
+        let pos = Tensor::i32(vec![b], vec![0; b]);
+        let outs = eng
+            .run_args(
+                "attn_decode_0",
+                &mut [
+                    StageArg::View(h.view()),
+                    StageArg::Donate(&mut kc_dev),
+                    StageArg::Donate(&mut vc_dev),
+                    StageArg::View(pos.view()),
+                ],
+            )
+            .unwrap();
+        // per-step host traffic is O(B·D): only the hidden state returns,
+        // regardless of how large the donated KV cache is
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape, vec![b, cfg.d_model]);
+        // the donated cache really was rewritten on the device
+        assert_ne!(kc_dev.fetch().unwrap().data, zeros.data);
+    }
+
+    #[test]
+    fn run_args_validates_shapes_and_alias_compat() {
+        let cfg = ToyConfig::small();
+        let eng = cfg.engine();
+        let b = cfg.batch_slots;
+        let bad = Tensor::i32(vec![b + 1], vec![0; b + 1]);
+        assert!(eng.run("embed_decode", &[bad]).is_err());
+        assert!(eng.run("embed_decode", &[]).is_err());
+        assert!(eng.run("nonexistent", &[]).is_err());
+        // donating at a position whose matching output has a different
+        // signature must be rejected (h cannot alias the vc output)
+        let h = Tensor::f32(vec![b, cfg.d_model], vec![0.0; b * cfg.d_model]);
+        let mut h_dev = eng.upload(&h).unwrap();
+        let kc = Tensor::zeros(cfg.kv_shape(), DType::I8);
+        let pos = Tensor::i32(vec![b], vec![0; b]);
+        let err = eng.run_args(
+            "attn_decode_0",
+            &mut [
+                StageArg::Donate(&mut h_dev),
+                StageArg::View(kc.view()),
+                StageArg::View(kc.view()),
+                StageArg::View(pos.view()),
+            ],
+        );
+        assert!(err.is_err(), "alias-incompatible donation must error");
     }
 }

@@ -1,7 +1,17 @@
 //! Host tensor type + (de)serialization to xla Literals and wire bytes.
+//!
+//! Two representations share the wire codec:
+//!
+//! * [`Tensor`] owns its bytes — the cold-path type (uploads, readbacks,
+//!   test fixtures),
+//! * [`TensorView`] borrows shape + data straight out of an incoming
+//!   packet frame — the decode hot path reads tensors with **zero copies**
+//!   (`service::PacketHeader::decode_views`); materializing an owned
+//!   `Tensor` from a view is an explicit, counted step.
 
 use crate::bail;
 use crate::util::err::Result;
+use crate::util::traffic;
 use crate::xla;
 
 /// Supported element types on the stage boundary.
@@ -28,6 +38,14 @@ impl DType {
             DType::I8 => 1,
         }
     }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::I8 => xla::ElementType::S8,
+        }
+    }
 }
 
 impl std::fmt::Display for DType {
@@ -40,12 +58,63 @@ impl std::fmt::Display for DType {
     }
 }
 
-/// A dense host tensor (row-major).
+/// Anything encodable into the card-to-card wire format ([`Tensor`],
+/// [`TensorView`], [`F32Slice`]); lets packet encoders take mixed
+/// owned/borrowed payloads without materializing owned copies.
+pub trait WireEncode {
+    /// Encoded size: [ndim u32][dims u32...][dtype u8][data].
+    fn wire_nbytes(&self) -> usize;
+
+    /// Append the wire encoding to `out` (no fresh allocation when `out`
+    /// has capacity — the pooled-frame hot path).
+    fn encode_wire_into(&self, out: &mut Vec<u8>);
+}
+
+fn wire_nbytes_for(shape: &[usize], payload: usize) -> usize {
+    4 + 4 * shape.len() + 1 + payload
+}
+
+fn wire_header_into(shape: &[usize], dtype: DType, out: &mut Vec<u8>) {
+    out.extend((shape.len() as u32).to_le_bytes());
+    for &d in shape {
+        out.extend((d as u32).to_le_bytes());
+    }
+    out.push(match dtype {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::I8 => 2,
+    });
+}
+
+/// Meter one wire encode: the payload copy always, plus an allocation
+/// event only if the destination frame actually grew (a recycled frame
+/// with enough capacity costs nothing).
+fn wire_encoded(nbytes: usize, cap_before: usize, out: &Vec<u8>) {
+    traffic::copied(nbytes);
+    if out.capacity() > cap_before {
+        traffic::allocated(out.capacity() - cap_before);
+    }
+}
+
+/// A dense host tensor (row-major), owning its bytes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub dtype: DType,
     pub data: Vec<u8>,
+}
+
+impl WireEncode for Tensor {
+    fn wire_nbytes(&self) -> usize {
+        wire_nbytes_for(&self.shape, self.data.len())
+    }
+    fn encode_wire_into(&self, out: &mut Vec<u8>) {
+        let cap0 = out.capacity();
+        out.reserve(self.wire_nbytes());
+        wire_header_into(&self.shape, self.dtype, out);
+        out.extend_from_slice(&self.data);
+        wire_encoded(self.wire_nbytes(), cap0, out);
+    }
 }
 
 impl Tensor {
@@ -55,13 +124,21 @@ impl Tensor {
 
     pub fn f32(shape: Vec<usize>, v: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), v.len());
-        let data = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        // preallocated extend — a per-element flat_map collect reallocates
+        // repeatedly (arrays give no useful size_hint)
+        let mut data = Vec::with_capacity(v.len() * 4);
+        for x in &v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
         Tensor { shape, dtype: DType::F32, data }
     }
 
     pub fn i32(shape: Vec<usize>, v: Vec<i32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), v.len());
-        let data = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let mut data = Vec::with_capacity(v.len() * 4);
+        for x in &v {
+            data.extend_from_slice(&x.to_le_bytes());
+        }
         Tensor { shape, dtype: DType::I32, data }
     }
 
@@ -95,18 +172,22 @@ impl Tensor {
             .collect()
     }
 
+    /// Borrow this tensor as a view (zero-copy).
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView { shape: self.shape.clone(), dtype: self.dtype, data: &self.data }
+    }
+
     // ---------------------------------------------------------- xla bridge
 
     pub fn to_literal(&self) -> Result<xla::Literal> {
         // Single path for all dtypes: the host buffer is already laid out
         // row-major little-endian, exactly what XLA expects.
-        let ty = match self.dtype {
-            DType::F32 => xla::ElementType::F32,
-            DType::I32 => xla::ElementType::S32,
-            DType::I8 => xla::ElementType::S8,
-        };
+        traffic::copied(self.data.len());
+        traffic::allocated(self.data.len());
         Ok(xla::Literal::create_from_shape_and_untyped_data(
-            ty, &self.shape, &self.data,
+            self.dtype.element_type(),
+            &self.shape,
+            &self.data,
         )?)
     }
 
@@ -116,6 +197,8 @@ impl Tensor {
             DType::I32 => Tensor::i32(shape.to_vec(), lit.to_vec::<i32>()?),
             DType::I8 => Tensor::i8(shape.to_vec(), lit.to_vec::<i8>()?),
         };
+        traffic::copied(t.data.len());
+        traffic::allocated(t.data.len());
         Ok(t)
     }
 
@@ -123,26 +206,80 @@ impl Tensor {
 
     /// Serialize for card-to-card packets: [ndim u32][dims u32...][dtype u8][data].
     pub fn to_wire(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.data.len() + 16);
-        out.extend((self.shape.len() as u32).to_le_bytes());
-        for &d in &self.shape {
-            out.extend((d as u32).to_le_bytes());
-        }
-        out.push(match self.dtype {
-            DType::F32 => 0,
-            DType::I32 => 1,
-            DType::I8 => 2,
-        });
-        out.extend_from_slice(&self.data);
+        let mut out = Vec::with_capacity(self.wire_nbytes());
+        traffic::allocated(out.capacity());
+        self.encode_wire_into(&mut out);
         out
     }
 
+    /// Owned decode — a thin wrapper over [`TensorView::parse`] that copies
+    /// the payload out of the frame. Hot paths use `parse` directly.
     pub fn from_wire(bytes: &[u8]) -> Result<(Tensor, usize)> {
+        let (v, n) = TensorView::parse(bytes)?;
+        Ok((v.to_tensor(), n))
+    }
+}
+
+/// A dense tensor whose payload is borrowed from a packet frame
+/// (shape + dtype decoded, data left in place). The zero-copy read side of
+/// the wire codec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorView<'a> {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub data: &'a [u8],
+}
+
+impl WireEncode for TensorView<'_> {
+    fn wire_nbytes(&self) -> usize {
+        wire_nbytes_for(&self.shape, self.data.len())
+    }
+    fn encode_wire_into(&self, out: &mut Vec<u8>) {
+        let cap0 = out.capacity();
+        out.reserve(self.wire_nbytes());
+        wire_header_into(&self.shape, self.dtype, out);
+        out.extend_from_slice(self.data);
+        wire_encoded(self.wire_nbytes(), cap0, out);
+    }
+}
+
+/// Borrowed f32 values encodable straight to the wire — no intermediate
+/// byte tensor. The head executor assembles its TP logits in an f32
+/// buffer and streams them into the pooled frame through this, saving a
+/// full O(B·V) copy plus an allocation per decode round.
+pub struct F32Slice<'a> {
+    pub shape: Vec<usize>,
+    pub data: &'a [f32],
+}
+
+impl WireEncode for F32Slice<'_> {
+    fn wire_nbytes(&self) -> usize {
+        wire_nbytes_for(&self.shape, self.data.len() * 4)
+    }
+    fn encode_wire_into(&self, out: &mut Vec<u8>) {
+        debug_assert_eq!(self.shape.iter().product::<usize>(), self.data.len());
+        let cap0 = out.capacity();
+        out.reserve(self.wire_nbytes());
+        wire_header_into(&self.shape, DType::F32, out);
+        for x in self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        wire_encoded(self.wire_nbytes(), cap0, out);
+    }
+}
+
+impl<'a> TensorView<'a> {
+    /// Decode one tensor's header out of `bytes`, borrowing the payload in
+    /// place. Returns the view and the total encoded length consumed.
+    pub fn parse(bytes: &'a [u8]) -> Result<(TensorView<'a>, usize)> {
         if bytes.len() < 4 {
             bail!("truncated tensor header");
         }
         let ndim = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
         let mut off = 4;
+        if bytes.len() < off + 4 * ndim + 1 {
+            bail!("truncated tensor shape ({ndim} dims)");
+        }
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             shape.push(u32::from_le_bytes(bytes[off..off + 4].try_into()?) as usize);
@@ -155,12 +292,53 @@ impl Tensor {
             d => bail!("bad wire dtype {d}"),
         };
         off += 1;
-        let n: usize = shape.iter().product::<usize>() * dtype.size();
-        if bytes.len() < off + n {
+        // checked: a lying header must error, never wrap the product in
+        // release mode and pass the length check with a bogus slice
+        let n = shape
+            .iter()
+            .try_fold(dtype.size(), |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| crate::anyhow!("tensor shape {shape:?} overflows"))?;
+        if bytes.len().saturating_sub(off) < n {
             bail!("truncated tensor data");
         }
-        let data = bytes[off..off + n].to_vec();
-        Ok((Tensor { shape, dtype, data }, off + n))
+        Ok((TensorView { shape, dtype, data: &bytes[off..off + n] }, off + n))
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Materialize an owned tensor (explicit copy off the frame).
+    pub fn to_tensor(&self) -> Tensor {
+        traffic::copied(self.data.len());
+        traffic::allocated(self.data.len());
+        Tensor { shape: self.shape.clone(), dtype: self.dtype, data: self.data.to_vec() }
+    }
+
+    /// Decode the payload as f32 values (one copy: frame bytes → values;
+    /// the owned-decode path used to cost two).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        traffic::copied(self.data.len());
+        traffic::allocated(self.data.len());
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn to_i32_vec(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        traffic::copied(self.data.len());
+        traffic::allocated(self.data.len());
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
     }
 }
 
@@ -204,6 +382,85 @@ mod tests {
         let mut w = Tensor::i8(vec![8], vec![0; 8]).to_wire();
         w.truncate(w.len() - 2);
         assert!(Tensor::from_wire(&w).is_err());
+    }
+
+    #[test]
+    fn view_parses_zero_copy_and_matches_owned_decode() {
+        let t = Tensor::f32(vec![2, 4], vec![0.5; 8]);
+        let w = t.to_wire();
+        let (v, n) = TensorView::parse(&w).unwrap();
+        assert_eq!(n, w.len());
+        assert_eq!(v.shape, t.shape);
+        assert_eq!(v.dtype, t.dtype);
+        // zero copy: the view's payload points into the frame itself
+        let frame = w.as_ptr() as usize;
+        let payload = v.data.as_ptr() as usize;
+        assert!(payload >= frame && payload + v.data.len() <= frame + w.len());
+        // parity with the owned path
+        let (owned, n2) = Tensor::from_wire(&w).unwrap();
+        assert_eq!(n2, n);
+        assert_eq!(v.to_tensor(), owned);
+        assert_eq!(v.to_f32_vec(), owned.as_f32());
+    }
+
+    #[test]
+    fn view_rejects_same_garbage_as_owned_decode() {
+        // truncated header
+        for bad in [&[][..], &[1u8, 2][..]] {
+            assert!(TensorView::parse(bad).is_err());
+            assert!(Tensor::from_wire(bad).is_err());
+        }
+        // header claiming more dims than the frame holds must error, not panic
+        let lying = [5u8, 0, 0, 0, 1, 0];
+        assert!(TensorView::parse(&lying).is_err());
+        assert!(Tensor::from_wire(&lying).is_err());
+        // astronomically large dims must error, not wrap the size product
+        let mut huge = Vec::new();
+        huge.extend(3u32.to_le_bytes());
+        for _ in 0..3 {
+            huge.extend(u32::MAX.to_le_bytes());
+        }
+        huge.push(0); // dtype f32
+        assert!(TensorView::parse(&huge).is_err());
+        assert!(Tensor::from_wire(&huge).is_err());
+        // truncated payload
+        let mut w = Tensor::i8(vec![8], vec![0; 8]).to_wire();
+        w.truncate(w.len() - 2);
+        assert!(TensorView::parse(&w).is_err());
+        // bad dtype byte
+        let mut w = Tensor::i32(vec![1], vec![7]).to_wire();
+        let dtype_off = 4 + 4; // ndim + one dim
+        w[dtype_off] = 9;
+        assert!(TensorView::parse(&w).is_err());
+        assert!(Tensor::from_wire(&w).is_err());
+    }
+
+    #[test]
+    fn view_of_concatenated_frames() {
+        let a = Tensor::i32(vec![3], vec![7, 8, 9]);
+        let b = Tensor::i8(vec![2, 2], vec![-1, 2, -3, 4]);
+        let mut w = a.to_wire();
+        w.extend(b.to_wire());
+        let (va, n) = TensorView::parse(&w).unwrap();
+        let (vb, _) = TensorView::parse(&w[n..]).unwrap();
+        assert_eq!(va.to_tensor(), a);
+        assert_eq!(vb.to_tensor(), b);
+        assert_eq!(va.to_i32_vec(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn encode_into_reuses_the_buffer() {
+        let t = Tensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut frame = Vec::with_capacity(256);
+        let ptr = frame.as_ptr();
+        t.encode_wire_into(&mut frame);
+        assert_eq!(frame, t.to_wire());
+        assert_eq!(ptr, frame.as_ptr(), "encode must not reallocate a sized frame");
+        // a view encodes identically
+        frame.clear();
+        t.view().encode_wire_into(&mut frame);
+        assert_eq!(frame, t.to_wire());
+        assert_eq!(ptr, frame.as_ptr());
     }
 
     #[test]

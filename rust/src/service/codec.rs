@@ -2,11 +2,18 @@
 //!
 //! header: [kind u8][slot i32][pos_off i32][last_idx i32][flags u8]
 //! payload: one or more runtime::Tensor in wire encoding.
+//!
+//! The hot path is zero-copy on both sides: encoders append into a pooled
+//! frame ([`PacketHeader::encode_into`], taking any mix of owned tensors
+//! and borrowed [`TensorView`]s), and decoders read shape + payload
+//! straight out of the incoming frame ([`PacketHeader::decode_views`]).
+//! The owned [`decode`](PacketHeader::decode) path is kept as a thin
+//! wrapper for cold paths and tests.
 
 use crate::bail;
 use crate::util::err::Result;
 
-use crate::runtime::Tensor;
+use crate::runtime::{Tensor, TensorView, WireEncode};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PacketKind {
@@ -53,20 +60,31 @@ impl PacketHeader {
         self.flags & FLAG_FINAL_CHUNK != 0
     }
 
-    pub fn encode(&self, tensors: &[&Tensor]) -> Vec<u8> {
-        let mut out = Vec::new();
+    /// Append header + payload into `out` (a cleared pooled frame on the
+    /// hot path — no allocation when the frame's capacity suffices).
+    pub fn encode_into(&self, tensors: &[&dyn WireEncode], out: &mut Vec<u8>) {
         out.push(self.kind as u8);
         out.extend(self.slot.to_le_bytes());
         out.extend(self.pos_off.to_le_bytes());
         out.extend(self.last_idx.to_le_bytes());
         out.push(self.flags);
         for t in tensors {
-            out.extend(t.to_wire());
+            t.encode_wire_into(out);
         }
+    }
+
+    /// Allocating encode (cold paths and tests).
+    pub fn encode(&self, tensors: &[&Tensor]) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(Self::LEN + tensors.iter().map(|t| t.wire_nbytes()).sum::<usize>());
+        self.encode_into(
+            &tensors.iter().map(|t| *t as &dyn WireEncode).collect::<Vec<_>>(),
+            &mut out,
+        );
         out
     }
 
-    pub fn decode(bytes: &[u8]) -> Result<(PacketHeader, Vec<Tensor>)> {
+    fn decode_header(bytes: &[u8]) -> Result<PacketHeader> {
         if bytes.len() < Self::LEN {
             bail!("packet too short");
         }
@@ -79,14 +97,28 @@ impl PacketHeader {
         let pos_off = i32::from_le_bytes(bytes[5..9].try_into()?);
         let last_idx = i32::from_le_bytes(bytes[9..13].try_into()?);
         let flags = bytes[13];
-        let mut tensors = Vec::new();
+        Ok(PacketHeader { kind, slot, pos_off, last_idx, flags })
+    }
+
+    /// Zero-copy decode: the returned views borrow their payloads from
+    /// `bytes` — nothing is copied off the frame.
+    pub fn decode_views(bytes: &[u8]) -> Result<(PacketHeader, Vec<TensorView<'_>>)> {
+        let hdr = Self::decode_header(bytes)?;
+        let mut views = Vec::new();
         let mut off = Self::LEN;
         while off < bytes.len() {
-            let (t, n) = Tensor::from_wire(&bytes[off..])?;
-            tensors.push(t);
+            let (v, n) = TensorView::parse(&bytes[off..])?;
+            views.push(v);
             off += n;
         }
-        Ok((PacketHeader { kind, slot, pos_off, last_idx, flags }, tensors))
+        Ok((hdr, views))
+    }
+
+    /// Owned decode — thin wrapper over [`decode_views`](Self::decode_views)
+    /// that copies every payload off the frame.
+    pub fn decode(bytes: &[u8]) -> Result<(PacketHeader, Vec<Tensor>)> {
+        let (hdr, views) = Self::decode_views(bytes)?;
+        Ok((hdr, views.iter().map(|v| v.to_tensor()).collect()))
     }
 }
 
@@ -119,5 +151,53 @@ mod tests {
     fn rejects_truncated() {
         assert!(PacketHeader::decode(&[0, 1]).is_err());
         assert!(PacketHeader::decode(&[9; 14]).is_err());
+        assert!(PacketHeader::decode_views(&[0, 1]).is_err());
+        assert!(PacketHeader::decode_views(&[9; 14]).is_err());
+    }
+
+    #[test]
+    fn view_decode_matches_owned_decode() {
+        let h = PacketHeader::prefill(1, 8, 3, false);
+        let a = Tensor::f32(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]);
+        let b = Tensor::i8(vec![3], vec![-1, 0, 1]);
+        let bytes = h.encode(&[&a, &b]);
+        let (hv, views) = PacketHeader::decode_views(&bytes).unwrap();
+        let (ho, owned) = PacketHeader::decode(&bytes).unwrap();
+        assert_eq!(hv, ho);
+        assert_eq!(views.len(), owned.len());
+        for (v, t) in views.iter().zip(&owned) {
+            assert_eq!(&v.to_tensor(), t);
+            // the view's payload lives inside the packet frame
+            let frame = bytes.as_ptr() as usize;
+            let p = v.data.as_ptr() as usize;
+            assert!(p >= frame && p + v.data.len() <= frame + bytes.len());
+        }
+    }
+
+    #[test]
+    fn view_decode_rejects_truncated_payload() {
+        let h = PacketHeader::decode_step();
+        let a = Tensor::f32(vec![4], vec![0.0; 4]);
+        let mut bytes = h.encode(&[&a]);
+        bytes.truncate(bytes.len() - 3);
+        assert!(PacketHeader::decode_views(&bytes).is_err());
+        assert!(PacketHeader::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn encode_into_pooled_frame_matches_encode() {
+        let h = PacketHeader::prefill(2, 0, 1, true);
+        let a = Tensor::i32(vec![2], vec![5, 6]);
+        let owned = h.encode(&[&a]);
+        let mut frame = Vec::with_capacity(256);
+        let ptr = frame.as_ptr();
+        h.encode_into(&[&a], &mut frame);
+        assert_eq!(frame, owned);
+        assert_eq!(ptr, frame.as_ptr(), "sized frame must not reallocate");
+        // mixed owned/borrowed payloads encode identically
+        frame.clear();
+        let view = a.view();
+        h.encode_into(&[&view], &mut frame);
+        assert_eq!(frame, owned);
     }
 }

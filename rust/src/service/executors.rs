@@ -3,11 +3,22 @@
 //! layer's KV cache resident (the on-chip memory model) and computes the
 //! layer's attention+MLP via the PJRT-compiled stages. The HeadExecutor is
 //! the tensor-parallel output-layer card group.
+//!
+//! The decode hot path is allocation- and copy-free (§V-C): packet
+//! payloads are read as borrowed [`TensorView`]s straight off the frame,
+//! the KV cache stays **resident on the device** and is donated to the
+//! attention stage (PJRT rewrites it in place — per-token per-layer
+//! traffic is O(B·D), independent of KV-cache size), and outputs are
+//! encoded into the pooled frame handed in by the card worker. The
+//! host-round-trip KV path is kept as an explicit baseline
+//! ([`LayerExecutor::new_host_kv`]) for the `decode_datapath` bench.
 
 use std::sync::{Arc, Mutex};
 
 use crate::npruntime::StageExecutor;
-use crate::runtime::{DType, Engine, Tensor};
+use crate::runtime::{
+    DType, DeviceTensor, Engine, F32Slice, StageArg, Tensor, TensorView, WireEncode,
+};
 
 use super::codec::{PacketHeader, PacketKind};
 
@@ -26,85 +37,176 @@ impl std::ops::Deref for SharedEngine {
     }
 }
 
+/// The card's on-chip KV cache: int8 [B, Hkv, L, Dh] x2 (C8, §III-B).
+enum KvCache {
+    /// Device-resident buffer pair, donated to the attention stage each
+    /// step and aliased in place — the paper's regime.
+    Resident(DeviceTensor, DeviceTensor),
+    /// Host tensor pair round-tripped through literals every step — the
+    /// copy-path baseline.
+    Host(Tensor, Tensor),
+}
+
 /// One transformer layer on one "card": resident KV cache + PJRT stages.
 pub struct LayerExecutor {
     engine: SharedEngine,
     layer: usize,
-    /// The card's on-chip KV cache: int8 [B, Hkv, L, Dh] x2 (C8, §III-B).
-    cache: Mutex<(Tensor, Tensor)>,
+    cache: Mutex<KvCache>,
+    /// Stage names precomputed at configuration time — the per-packet
+    /// path allocates no strings.
+    attn_decode: String,
+    mlp_decode: String,
+    attn_prefill: String,
+    mlp_prefill: String,
 }
 
 impl LayerExecutor {
+    /// Resident-KV executor (falls back to host KV if the device upload
+    /// fails, so a backend without buffer support still serves — the
+    /// fallback is loud, because it silently costs O(KV-cache) host
+    /// traffic per step otherwise indistinguishable from a perf bug;
+    /// `is_resident` reports which path is live).
     pub fn new(engine: SharedEngine, layer: usize) -> Arc<Self> {
+        let (kc, vc) = Self::zero_kv(&engine);
+        let cache = match (engine.upload(&kc), engine.upload(&vc)) {
+            (Ok(k), Ok(v)) => KvCache::Resident(k, v),
+            (k_res, v_res) => {
+                let err = k_res
+                    .err()
+                    .or(v_res.err())
+                    .map(|e| e.to_string())
+                    .unwrap_or_default();
+                eprintln!(
+                    "layer[{layer}]: resident KV upload failed ({err}); \
+                     falling back to host round-trip KV"
+                );
+                KvCache::Host(kc, vc)
+            }
+        };
+        Self::build(engine, layer, cache)
+    }
+
+    /// Copy-path executor: the KV cache round-trips through host memory
+    /// every step. Kept for A/B measurement (`decode_datapath` bench).
+    pub fn new_host_kv(engine: SharedEngine, layer: usize) -> Arc<Self> {
+        let (kc, vc) = Self::zero_kv(&engine);
+        Self::build(engine, layer, KvCache::Host(kc, vc))
+    }
+
+    fn build(engine: SharedEngine, layer: usize, cache: KvCache) -> Arc<Self> {
+        Arc::new(LayerExecutor {
+            engine,
+            layer,
+            cache: Mutex::new(cache),
+            attn_decode: format!("attn_decode_{layer}"),
+            mlp_decode: format!("mlp_decode_{layer}"),
+            attn_prefill: format!("attn_prefill_{layer}"),
+            mlp_prefill: format!("mlp_prefill_{layer}"),
+        })
+    }
+
+    fn zero_kv(engine: &SharedEngine) -> (Tensor, Tensor) {
         let m = &engine.manifest;
         let shape = vec![m.batch_slots, m.n_kv_heads, m.max_context, m.d_head];
-        let kc = Tensor::zeros(shape.clone(), DType::I8);
-        let vc = Tensor::zeros(shape, DType::I8);
-        Arc::new(LayerExecutor { engine, layer, cache: Mutex::new((kc, vc)) })
+        (Tensor::zeros(shape.clone(), DType::I8), Tensor::zeros(shape, DType::I8))
+    }
+
+    /// True when the KV cache lives on the device.
+    pub fn is_resident(&self) -> bool {
+        matches!(&*self.cache.lock().unwrap(), KvCache::Resident(..))
     }
 
     /// KV bytes resident on this card (both caches).
     pub fn kv_bytes(&self) -> usize {
-        let c = self.cache.lock().unwrap();
-        c.0.data.len() + c.1.data.len()
+        match &*self.cache.lock().unwrap() {
+            KvCache::Resident(k, v) => k.nbytes() + v.nbytes(),
+            KvCache::Host(k, v) => k.data.len() + v.data.len(),
+        }
+    }
+
+    /// Run the attention stage over a borrowed hidden-state view plus this
+    /// card's KV cache, returning the new hidden state. Resident caches
+    /// are donated (aliased in place, nothing crosses the host boundary);
+    /// host caches round-trip.
+    fn attn(
+        &self,
+        stage: &str,
+        cache: &mut KvCache,
+        h: TensorView<'_>,
+        rest: &[TensorView<'_>],
+    ) -> Tensor {
+        match cache {
+            KvCache::Resident(kc, vc) => {
+                let mut args = Vec::with_capacity(3 + rest.len());
+                args.push(StageArg::View(h));
+                args.push(StageArg::Donate(kc));
+                args.push(StageArg::Donate(vc));
+                for r in rest {
+                    args.push(StageArg::View(r.clone()));
+                }
+                self.engine.run_args(stage, &mut args).expect(stage).remove(0)
+            }
+            KvCache::Host(kc, vc) => {
+                let mut args = Vec::with_capacity(3 + rest.len());
+                args.push(StageArg::View(h));
+                args.push(StageArg::View(kc.view()));
+                args.push(StageArg::View(vc.view()));
+                for r in rest {
+                    args.push(StageArg::View(r.clone()));
+                }
+                let mut out = self.engine.run_args(stage, &mut args).expect(stage);
+                drop(args);
+                *vc = out.pop().expect("vc");
+                *kc = out.pop().expect("kc");
+                out.pop().expect("h")
+            }
+        }
     }
 }
 
 impl StageExecutor for LayerExecutor {
-    fn execute(&self, _circuit: u32, _tag: u64, input: &[u8]) -> Vec<u8> {
-        let (hdr, mut tensors) = PacketHeader::decode(input).expect("bad packet");
-        let l = self.layer;
+    fn execute(&self, _circuit: u32, _tag: u64, input: &[u8], out: &mut Vec<u8>) {
+        let (hdr, views) = PacketHeader::decode_views(input).expect("bad packet");
         let mut cache = self.cache.lock().unwrap();
         match hdr.kind {
             PacketKind::Decode => {
-                // payload: h [B,D], positions [B]
-                let positions = tensors.pop().expect("positions");
-                let h = tensors.pop().expect("h");
-                let (kc, vc) = std::mem::replace(
-                    &mut *cache,
-                    (Tensor::zeros(vec![0], h.dtype), Tensor::zeros(vec![0], h.dtype)),
+                // payload: h [B,D], positions [B] — both read in place
+                let mut it = views.into_iter();
+                let h = it.next().expect("h");
+                let positions = it.next().expect("positions");
+                let h = self.attn(
+                    &self.attn_decode,
+                    &mut cache,
+                    h,
+                    std::slice::from_ref(&positions),
                 );
-                let out = self
-                    .engine
-                    .run(&format!("attn_decode_{l}"), &[h, kc, vc, positions.clone()])
-                    .expect("attn_decode");
-                let mut it = out.into_iter();
-                let h = it.next().unwrap();
-                let kc = it.next().unwrap();
-                let vc = it.next().unwrap();
-                *cache = (kc, vc);
                 let h = self
                     .engine
-                    .run(&format!("mlp_decode_{l}"), &[h])
+                    .run(&self.mlp_decode, &[h])
                     .expect("mlp_decode")
                     .remove(0);
-                hdr.encode(&[&h, &positions])
+                // positions forwarded from the borrowed input — no owned
+                // clone of the tensor, just a re-encode off the frame
+                hdr.encode_into(&[&h as &dyn WireEncode, &positions], out)
             }
             PacketKind::Prefill => {
                 // payload: h [1,T,D]
-                let h = tensors.pop().expect("h");
-                let (kc, vc) = std::mem::replace(
-                    &mut *cache,
-                    (Tensor::zeros(vec![0], h.dtype), Tensor::zeros(vec![0], h.dtype)),
+                let mut it = views.into_iter();
+                let h = it.next().expect("h");
+                let slot = Tensor::scalar_i32(hdr.slot);
+                let off = Tensor::scalar_i32(hdr.pos_off);
+                let h = self.attn(
+                    &self.attn_prefill,
+                    &mut cache,
+                    h,
+                    &[slot.view(), off.view()],
                 );
-                let out = self
-                    .engine
-                    .run(
-                        &format!("attn_prefill_{l}"),
-                        &[h, kc, vc, Tensor::scalar_i32(hdr.slot), Tensor::scalar_i32(hdr.pos_off)],
-                    )
-                    .expect("attn_prefill");
-                let mut it = out.into_iter();
-                let h = it.next().unwrap();
-                let kc = it.next().unwrap();
-                let vc = it.next().unwrap();
-                *cache = (kc, vc);
                 let h = self
                     .engine
-                    .run(&format!("mlp_prefill_{l}"), &[h])
+                    .run(&self.mlp_prefill, &[h])
                     .expect("mlp_prefill")
                     .remove(0);
-                hdr.encode(&[&h])
+                hdr.encode_into(&[&h as &dyn WireEncode], out)
             }
         }
     }
@@ -120,21 +222,35 @@ impl StageExecutor for LayerExecutor {
 /// cards); their concatenation is the full-vocab logits.
 pub struct HeadExecutor {
     engine: SharedEngine,
+    /// Shard stage names precomputed at configuration time (decode /
+    /// final-prefill variants) — no per-packet string allocation.
+    lmhead: Vec<String>,
+    lmhead1: Vec<String>,
 }
 
 impl HeadExecutor {
     pub fn new(engine: SharedEngine) -> Arc<Self> {
-        Arc::new(HeadExecutor { engine })
+        let shards = engine.manifest.lmhead_shards;
+        let lmhead = (0..shards).map(|j| format!("lmhead_{j}")).collect();
+        let lmhead1 = (0..shards).map(|j| format!("lmhead1_{j}")).collect();
+        Arc::new(HeadExecutor { engine, lmhead, lmhead1 })
     }
 
-    fn logits(&self, stage_prefix: &str, h: &Tensor) -> Tensor {
+    /// TP logits over a borrowed hidden state: each shard dispatch reads
+    /// the same view (cloning a view copies the shape header, never the
+    /// payload — the old path cloned the full tensor per shard). Returns
+    /// the assembled [rows * vocab] values; the caller streams them into
+    /// the pooled frame via [`F32Slice`] without materializing a byte
+    /// tensor.
+    fn logits(&self, stages: &[String], h: TensorView<'_>) -> Vec<f32> {
         let m = &self.engine.manifest;
         let rows = h.shape[0];
         let mut all = vec![0f32; rows * m.vocab];
-        for j in 0..m.lmhead_shards {
+        for (j, stage) in stages.iter().enumerate() {
+            let mut args = [StageArg::View(h.clone())];
             let part = self
                 .engine
-                .run(&format!("{stage_prefix}_{j}"), &[h.clone()])
+                .run_args(stage, &mut args)
                 .expect("lmhead")
                 .remove(0);
             let pv = part.as_f32();
@@ -144,39 +260,198 @@ impl HeadExecutor {
                     .copy_from_slice(&pv[r * sv..(r + 1) * sv]);
             }
         }
-        Tensor::f32(vec![rows, m.vocab], all)
+        all
     }
 }
 
 impl StageExecutor for HeadExecutor {
-    fn execute(&self, _circuit: u32, _tag: u64, input: &[u8]) -> Vec<u8> {
-        let (hdr, mut tensors) = PacketHeader::decode(input).expect("bad packet");
+    fn execute(&self, _circuit: u32, _tag: u64, input: &[u8], out: &mut Vec<u8>) {
+        let (hdr, views) = PacketHeader::decode_views(input).expect("bad packet");
         let m = &self.engine.manifest;
         match hdr.kind {
             PacketKind::Decode => {
-                let _positions = tensors.pop().expect("positions");
-                let h = tensors.pop().expect("h");
-                let logits = self.logits("lmhead", &h); // [B, V]
-                hdr.encode(&[&logits])
+                // payload: h [B,D], positions [B] (positions die here)
+                let h = views.into_iter().next().expect("h");
+                let rows = h.shape[0];
+                let all = self.logits(&self.lmhead, h); // [B, V]
+                let logits = F32Slice { shape: vec![rows, m.vocab], data: &all };
+                hdr.encode_into(&[&logits as &dyn WireEncode], out)
             }
             PacketKind::Prefill => {
                 if !hdr.is_final_chunk() {
                     // intermediate chunk: nothing for the host but an ack
-                    return hdr.encode(&[&Tensor::i32(vec![1], vec![hdr.pos_off])]);
+                    let ack = Tensor::i32(vec![1], vec![hdr.pos_off]);
+                    return hdr.encode_into(&[&ack as &dyn WireEncode], out);
                 }
-                // extract hidden of the last valid prompt token
-                let h = tensors.pop().expect("h"); // [1, T, D]
+                // borrow the hidden row of the last valid prompt token
+                // straight out of the frame — no [1,T,D] materialization.
+                // last_idx is header data off the wire: validate it like
+                // the codec validates shapes — loud on a lying header
+                // (matching the `bad packet` convention), never an opaque
+                // out-of-bounds slice panic, never a silent clamp.
+                let h = views.into_iter().next().expect("h"); // [1, T, D]
                 let d = m.d_model;
-                let row = hdr.last_idx as usize;
-                let hv = h.as_f32();
-                let h1 = Tensor::f32(vec![1, d], hv[row * d..(row + 1) * d].to_vec());
-                let logits = self.logits("lmhead1", &h1); // [1, V]
-                hdr.encode(&[&logits])
+                let es = h.dtype.size();
+                let t = *h.shape.get(1).unwrap_or(&1);
+                let row = usize::try_from(hdr.last_idx)
+                    .ok()
+                    .filter(|&r| r < t.max(1))
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "bad packet: final-chunk last_idx {} outside [0, {t})",
+                            hdr.last_idx
+                        )
+                    });
+                let h1 = TensorView {
+                    shape: vec![1, d],
+                    dtype: h.dtype,
+                    data: &h.data[row * d * es..(row + 1) * d * es],
+                };
+                let all = self.logits(&self.lmhead1, h1); // [1, V]
+                let logits = F32Slice { shape: vec![1, m.vocab], data: &all };
+                hdr.encode_into(&[&logits as &dyn WireEncode], out)
             }
         }
     }
 
     fn name(&self) -> String {
         "lmhead[TP]".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::testmodel::ToyConfig;
+
+    fn shared(cfg: &ToyConfig) -> SharedEngine {
+        SharedEngine(Arc::new(cfg.engine()))
+    }
+
+    /// Drive one executor with a raw packet and return its output frame.
+    fn step(ex: &dyn StageExecutor, packet: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        ex.execute(0, 0, packet, &mut out);
+        out
+    }
+
+    #[test]
+    fn layer_is_resident_by_default_and_host_on_request() {
+        let cfg = ToyConfig::small();
+        let e = shared(&cfg);
+        let res = LayerExecutor::new(e.clone(), 0);
+        assert!(res.is_resident());
+        let host = LayerExecutor::new_host_kv(e, 0);
+        assert!(!host.is_resident());
+        assert_eq!(res.kv_bytes(), host.kv_bytes());
+        assert_eq!(res.kv_bytes(), cfg.kv_bytes_per_layer());
+    }
+
+    /// The tentpole equivalence: resident-KV decode must be byte-identical
+    /// to the host round-trip path across many steps (the cache history
+    /// feeds back into every output, so any aliasing bug diverges).
+    #[test]
+    fn resident_decode_matches_host_kv_byte_identical() {
+        let cfg = ToyConfig::small();
+        let e = shared(&cfg);
+        let res = LayerExecutor::new(e.clone(), 1);
+        let host = LayerExecutor::new_host_kv(e.clone(), 1);
+        assert!(res.is_resident());
+        let b = cfg.batch_slots;
+        for stepi in 0..10 {
+            let toks = Tensor::i32(vec![b], (0..b as i32).map(|s| s + stepi).collect());
+            let h = e.run("embed_decode", &[toks]).unwrap().remove(0);
+            let pos = Tensor::i32(vec![b], vec![stepi; b]);
+            let packet = PacketHeader::decode_step().encode(&[&h, &pos]);
+            let out_res = step(res.as_ref(), &packet);
+            let out_host = step(host.as_ref(), &packet);
+            assert_eq!(out_res, out_host, "divergence at step {stepi}");
+        }
+    }
+
+    #[test]
+    fn resident_prefill_matches_host_kv_and_feeds_decode() {
+        let cfg = ToyConfig::small();
+        let e = shared(&cfg);
+        let res = LayerExecutor::new(e.clone(), 0);
+        let host = LayerExecutor::new_host_kv(e.clone(), 0);
+        // two prefill chunks into slot 2, then a decode step
+        for chunk in 0..2 {
+            let toks = Tensor::i32(
+                vec![1, cfg.prefill_chunk],
+                (0..cfg.prefill_chunk as i32).map(|t| t + chunk * 4).collect(),
+            );
+            let h = e.run("embed_prefill", &[toks]).unwrap().remove(0);
+            let hdr = PacketHeader::prefill(
+                2,
+                chunk * cfg.prefill_chunk as i32,
+                cfg.prefill_chunk as i32 - 1,
+                chunk == 1,
+            );
+            let packet = hdr.encode(&[&h]);
+            assert_eq!(step(res.as_ref(), &packet), step(host.as_ref(), &packet));
+        }
+        let b = cfg.batch_slots;
+        let toks = Tensor::i32(vec![b], vec![5; b]);
+        let h = e.run("embed_decode", &[toks]).unwrap().remove(0);
+        let pos = Tensor::i32(vec![b], vec![2 * cfg.prefill_chunk as i32; b]);
+        let packet = PacketHeader::decode_step().encode(&[&h, &pos]);
+        assert_eq!(step(res.as_ref(), &packet), step(host.as_ref(), &packet));
+    }
+
+    #[test]
+    fn head_assembles_tp_shards_and_extracts_last_row() {
+        let cfg = ToyConfig::small();
+        let e = shared(&cfg);
+        let head = HeadExecutor::new(e.clone());
+        let b = cfg.batch_slots;
+        // decode: full-vocab logits, one row per slot
+        let toks = Tensor::i32(vec![b], vec![7; b]);
+        let h = e.run("embed_decode", &[toks]).unwrap().remove(0);
+        let pos = Tensor::i32(vec![b], vec![0; b]);
+        let packet = PacketHeader::decode_step().encode(&[&h, &pos]);
+        let out = step(head.as_ref(), &packet);
+        let (_, ts) = PacketHeader::decode(&out).unwrap();
+        assert_eq!(ts[0].shape, vec![b, cfg.vocab()]);
+        // shard order: shard j owns columns [j*SV, (j+1)*SV)
+        let mut args = [StageArg::View(h.view())];
+        let shard0 = e.run_args("lmhead_0", &mut args).unwrap().remove(0);
+        let full = ts[0].as_f32();
+        let s0 = shard0.as_f32();
+        assert_eq!(&full[..cfg.shard_vocab], &s0[..cfg.shard_vocab]);
+
+        // final prefill chunk: logits must come from the last_idx row
+        let toks = Tensor::i32(
+            vec![1, cfg.prefill_chunk],
+            (0..cfg.prefill_chunk as i32).collect(),
+        );
+        let hp = e.run("embed_prefill", &[toks]).unwrap().remove(0);
+        let last = 1usize; // second row is the last valid token
+        let hdr = PacketHeader::prefill(0, 0, last as i32, true);
+        let out = step(head.as_ref(), &hdr.encode(&[&hp]));
+        let (oh, ts) = PacketHeader::decode(&out).unwrap();
+        assert!(oh.is_final_chunk());
+        assert_eq!(ts[0].shape, vec![1, cfg.vocab()]);
+        // cross-check against running lmhead1 on the manually-sliced row
+        let hv = hp.as_f32();
+        let d = cfg.d_model;
+        let row = Tensor::f32(vec![1, d], hv[last * d..(last + 1) * d].to_vec());
+        let mut args = [StageArg::View(row.view())];
+        let expect0 = e.run_args("lmhead1_0", &mut args).unwrap().remove(0);
+        assert_eq!(&ts[0].as_f32()[..cfg.shard_vocab], &expect0.as_f32()[..]);
+    }
+
+    #[test]
+    fn intermediate_prefill_chunk_returns_ack() {
+        let cfg = ToyConfig::small();
+        let e = shared(&cfg);
+        let head = HeadExecutor::new(e.clone());
+        let toks = Tensor::i32(vec![1, cfg.prefill_chunk], vec![1; cfg.prefill_chunk]);
+        let h = e.run("embed_prefill", &[toks]).unwrap().remove(0);
+        let hdr = PacketHeader::prefill(0, 4, 3, false);
+        let out = step(head.as_ref(), &hdr.encode(&[&h]));
+        let (oh, ts) = PacketHeader::decode(&out).unwrap();
+        assert!(!oh.is_final_chunk());
+        assert_eq!(ts[0].as_i32(), vec![4]);
     }
 }

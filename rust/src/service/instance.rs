@@ -24,7 +24,7 @@ use crate::consensus::Ring;
 use crate::driver::Driver;
 use crate::npruntime::{NpRuntime, StageExecutor};
 use crate::pipeline::sim::SeqRecord;
-use crate::runtime::Tensor;
+use crate::runtime::{Tensor, WireEncode};
 use crate::tokenizer::ByteTokenizer;
 
 use super::codec::PacketHeader;
@@ -56,11 +56,16 @@ pub struct ServeOptions {
     /// Upper bound on one completion wait before the serving loop
     /// re-checks the shutdown flag.
     pub poll: Duration,
+    /// Keep each layer's KV cache resident on the device (donated to the
+    /// attention stage and aliased in place — §V-C). `false` selects the
+    /// host round-trip baseline, kept for A/B measurement
+    /// (`decode_datapath` bench).
+    pub resident_kv: bool,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { poll: Duration::from_millis(5) }
+        ServeOptions { poll: Duration::from_millis(5), resident_kv: true }
     }
 }
 
@@ -130,7 +135,11 @@ impl LlmInstance {
         let ring = Ring::new(n_layers + 1);
         let mut execs: Vec<Arc<dyn StageExecutor>> = Vec::new();
         for l in 0..n_layers {
-            execs.push(LayerExecutor::new(engine.clone(), l));
+            execs.push(if opts.resident_kv {
+                LayerExecutor::new(engine.clone(), l)
+            } else {
+                LayerExecutor::new_host_kv(engine.clone(), l)
+            });
             ring.report_ready(l); // container configured its card
         }
         execs.push(HeadExecutor::new(engine.clone()));
@@ -204,8 +213,9 @@ impl LlmInstance {
         }
     }
 
-    /// Host-side embed of one prefill chunk → chain packet bytes.
-    fn encode_prefill_chunk(&self, slot: usize, fill: &FillState) -> (Vec<u8>, bool) {
+    /// Host-side embed of one prefill chunk, encoded into a pooled
+    /// `frame`. Returns whether this is the prompt's final chunk.
+    fn encode_prefill_chunk(&self, slot: usize, fill: &FillState, frame: &mut Vec<u8>) -> bool {
         let t_chunk = self.engine.manifest.prefill_chunk;
         let idx = fill.next_chunk;
         let lo = idx * t_chunk;
@@ -225,11 +235,13 @@ impl LlmInstance {
             valid.saturating_sub(1) as i32,
             is_final,
         );
-        (hdr.encode(&[&h]), is_final)
+        hdr.encode_into(&[&h as &dyn WireEncode], frame);
+        is_final
     }
 
-    /// Host-side embed of one batched decode round → chain packet bytes.
-    fn encode_decode_round(&self, tokens: &[i32], positions: &[i32]) -> Vec<u8> {
+    /// Host-side embed of one batched decode round, encoded into a pooled
+    /// `frame`.
+    fn encode_decode_round(&self, tokens: &[i32], positions: &[i32], frame: &mut Vec<u8>) {
         let b = self.engine.manifest.batch_slots;
         debug_assert_eq!(tokens.len(), b);
         let h = self
@@ -238,7 +250,7 @@ impl LlmInstance {
             .expect("embed_decode")
             .remove(0);
         let pos = Tensor::i32(vec![b], positions.to_vec());
-        PacketHeader::decode_step().encode(&[&h, &pos])
+        PacketHeader::decode_step().encode_into(&[&h as &dyn WireEncode, &pos], frame);
     }
 
     /// Stream one sampled token and decide whether the slot is finished.
@@ -357,9 +369,11 @@ impl LlmInstance {
                         tokens[s] = st.last_token as i32;
                         positions[s] = st.position as i32;
                     }
-                    let payload = self.encode_decode_round(&tokens, &positions);
-                    if sched.try_submit(0, payload, PendingOp::Decode { covered }).is_ok() {
-                        decode_in_flight = true;
+                    let mut frame = sched.frame();
+                    self.encode_decode_round(&tokens, &positions, &mut frame);
+                    match sched.try_submit(0, frame, PendingOp::Decode { covered }) {
+                        Ok(_) => decode_in_flight = true,
+                        Err((frame, _)) => sched.recycle(frame),
                     }
                 }
             }
@@ -371,18 +385,21 @@ impl LlmInstance {
                     let s = (rr + off) % b;
                     let Some(st) = slots[s].as_mut() else { continue };
                     let Some(fill) = st.fill.as_ref() else { continue };
-                    let (payload, is_final) = self.encode_prefill_chunk(s, fill);
-                    if sched
+                    let mut payload = sched.frame();
+                    let is_final = self.encode_prefill_chunk(s, fill, &mut payload);
+                    match sched
                         .try_submit(0, payload, PendingOp::Prefill { slot: s, is_final })
-                        .is_ok()
                     {
-                        let fill = st.fill.as_mut().unwrap();
-                        fill.next_chunk += 1;
-                        if fill.next_chunk == fill.n_chunks {
-                            st.fill = None;
+                        Err((payload, _)) => sched.recycle(payload),
+                        Ok(_) => {
+                            let fill = st.fill.as_mut().unwrap();
+                            fill.next_chunk += 1;
+                            if fill.next_chunk == fill.n_chunks {
+                                st.fill = None;
+                            }
+                            rr = (s + 1) % b;
+                            injected = true;
                         }
-                        rr = (s + 1) % b;
-                        injected = true;
                     }
                     break; // one attempt per pass; re-check credits
                 }
@@ -406,10 +423,17 @@ impl LlmInstance {
             match op {
                 PendingOp::Prefill { slot, is_final } => {
                     if !is_final {
+                        sched.recycle(data);
                         continue; // intermediate chunk ack
                     }
-                    let (_, mut ts) = PacketHeader::decode(&data).expect("prefill out");
-                    let logits = ts.pop().expect("logits").as_f32();
+                    // read the logits straight off the frame (one copy:
+                    // bytes → f32 values), then recycle it
+                    let logits = {
+                        let (_, mut ts) =
+                            PacketHeader::decode_views(&data).expect("prefill out");
+                        ts.pop().expect("logits").to_f32_vec()
+                    };
+                    sched.recycle(data);
                     let st = slots[slot].as_mut().expect("prefill for empty slot");
                     st.position = st.n_in;
                     let first = st.sampler.sample(&logits);
@@ -423,8 +447,12 @@ impl LlmInstance {
                 }
                 PendingOp::Decode { covered } => {
                     decode_in_flight = false;
-                    let (_, mut ts) = PacketHeader::decode(&data).expect("decode out");
-                    let logits = ts.pop().expect("logits").as_f32(); // [B, V]
+                    let logits = {
+                        let (_, mut ts) =
+                            PacketHeader::decode_views(&data).expect("decode out");
+                        ts.pop().expect("logits").to_f32_vec() // [B, V]
+                    };
+                    sched.recycle(data);
                     for &s in &covered {
                         let st = slots[s].as_mut().expect("decode for empty slot");
                         let row = &logits[s * vocab..(s + 1) * vocab];

@@ -98,6 +98,18 @@ impl<T> PacketScheduler<T> {
         &self.chain
     }
 
+    /// Take a cleared packet frame from the chain's recycled-buffer pool;
+    /// encode into it (`encode_into`) and pass it to `try_submit`.
+    pub fn frame(&self) -> Vec<u8> {
+        self.chain.pool().get()
+    }
+
+    /// Return a routed completion's frame (or a refused submission's
+    /// payload) to the pool once its contents have been consumed.
+    pub fn recycle(&self, data: Vec<u8>) {
+        self.chain.pool().put(data);
+    }
+
     /// Operations submitted but not yet completed.
     pub fn in_flight(&self) -> usize {
         self.router.len()
@@ -178,11 +190,11 @@ mod tests {
     /// Passthrough stage with a fixed service time per packet.
     struct Stage(Duration);
     impl StageExecutor for Stage {
-        fn execute(&self, _c: u32, _t: u64, input: &[u8]) -> Vec<u8> {
+        fn execute(&self, _c: u32, _t: u64, input: &[u8], out: &mut Vec<u8>) {
             if !self.0.is_zero() {
                 std::thread::sleep(self.0);
             }
-            input.to_vec()
+            out.extend_from_slice(input);
         }
     }
 

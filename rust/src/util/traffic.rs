@@ -1,0 +1,75 @@
+//! Datapath copy/allocation accounting for the decode hot path.
+//!
+//! Process-wide relaxed atomic counters incremented at the data-movement
+//! boundaries of the stack (wire codec, host<->device literal transfers,
+//! packet frame allocation). Reading them is **bench-grade** accounting:
+//! `benches/decode_datapath.rs` runs one workload per process and takes
+//! snapshot deltas around it (see EXPERIMENTS.md §Decode-datapath).
+//! Unit tests must not assert on these globals — parallel test threads
+//! share them; tests pin zero-copy behaviour structurally instead
+//! (pointer identity, pool hit counters, API shape).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static BYTES_COPIED: AtomicU64 = AtomicU64::new(0);
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Record `n` bytes copied across a datapath boundary.
+#[inline]
+pub fn copied(n: usize) {
+    BYTES_COPIED.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// Record one buffer allocation of `n` bytes on the datapath.
+#[inline]
+pub fn allocated(n: usize) {
+    ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+    ALLOC_BYTES.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// A point-in-time reading of the counters (monotonic; diff two snapshots
+/// to meter a workload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Snapshot {
+    pub bytes_copied: u64,
+    pub allocations: u64,
+    pub alloc_bytes: u64,
+}
+
+impl Snapshot {
+    /// Counter increments between `earlier` and `self`.
+    pub fn since(&self, earlier: &Snapshot) -> Snapshot {
+        Snapshot {
+            bytes_copied: self.bytes_copied.saturating_sub(earlier.bytes_copied),
+            allocations: self.allocations.saturating_sub(earlier.allocations),
+            alloc_bytes: self.alloc_bytes.saturating_sub(earlier.alloc_bytes),
+        }
+    }
+}
+
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        bytes_copied: BYTES_COPIED.load(Ordering::Relaxed),
+        allocations: ALLOCATIONS.load(Ordering::Relaxed),
+        alloc_bytes: ALLOC_BYTES.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshots_diff_monotonically() {
+        let a = snapshot();
+        copied(100);
+        allocated(64);
+        let b = snapshot();
+        let d = b.since(&a);
+        // other test threads may add on top; never less than what we did
+        assert!(d.bytes_copied >= 100);
+        assert!(d.allocations >= 1);
+        assert!(d.alloc_bytes >= 64);
+    }
+}

@@ -1,19 +1,37 @@
-//! Compile-only stand-in for the PJRT/XLA bindings (`xla` crate).
+//! Stand-in for the PJRT/XLA bindings (`xla` crate) with a functional
+//! host-evaluated backend.
 //!
 //! The build environment has no crates.io access and no PJRT plugin, so the
 //! runtime bridge (`runtime::Engine`) links against this module instead of
 //! the real bindings. The API surface mirrors exactly what `runtime/`
 //! uses:
 //!
-//! * [`Literal`] is fully functional (it is just a typed host buffer), so
-//!   the tensor <-> literal codec and its tests work without a backend,
+//! * [`Literal`] is fully functional (a typed host buffer, including tuple
+//!   literals), so the tensor <-> literal codec and its tests work without
+//!   a backend,
 //! * [`PjRtClient::compile`] fails with a clear "stub" error, which keeps
 //!   every artifact-gated path (tests, benches, examples) on its existing
 //!   "skip when artifacts are absent" behaviour,
+//! * [`PjRtLoadedExecutable::from_host_fn`] builds an executable backed by
+//!   a host closure over literals. The real bindings never construct one
+//!   (`compile` is the only source of executables there); here it lets the
+//!   whole execution path — including buffer donation — run functionally,
+//!   so `runtime::Engine`, the stage executors, and the serving loop are
+//!   testable and benchmarkable without PJRT artifacts
+//!   (see `runtime::testmodel`),
+//! * [`PjRtLoadedExecutable::execute_donated`] is the owned-buffer
+//!   execution API (§V-C resident KV): arguments passed as
+//!   [`ExecArg::Donate`] hand their device buffer to the computation, and
+//!   the matching outputs alias those buffers **in place** — the same
+//!   storage is rewritten, no new allocation — exactly PJRT's
+//!   input-output aliasing contract. With the real bindings this maps to
+//!   `ExecuteOptions` donation + compile-time alias config,
 //! * swapping in the real bindings is a one-line change in `lib.rs`
-//!   (replace `pub mod xla;` with `pub use xla_real as xla;`).
+//!   (replace `pub mod xla;` with `pub use xla_real as xla;`) plus a thin
+//!   shim for `buffer_from_host_literal`/`execute_donated`.
 
 use std::fmt;
+use std::sync::Arc;
 
 /// Error type matching the real bindings' `xla::Error` role.
 #[derive(Debug)]
@@ -32,7 +50,7 @@ pub type Result<T> = std::result::Result<T, Error>;
 fn stub<T>(what: &str) -> Result<T> {
     Err(Error(format!(
         "{what} requires the real PJRT bindings (this build links the \
-         compile-only stub; see src/xla/mod.rs)"
+         host-evaluated stand-in; see src/xla/mod.rs)"
     )))
 }
 
@@ -81,12 +99,17 @@ impl NativeType for i8 {
 }
 
 /// A typed host buffer, row-major little-endian — functionally equivalent
-/// to the real crate's host literal for the runtime's purposes.
+/// to the real crate's host literal. Tuple literals hold the decomposed
+/// return values of a `return_tuple=True` lowering.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Literal {
-    ty: ElementType,
-    shape: Vec<usize>,
-    data: Vec<u8>,
+    repr: Repr,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Repr {
+    Dense { ty: ElementType, shape: Vec<usize>, data: Vec<u8> },
+    Tuple(Vec<Literal>),
 }
 
 impl Literal {
@@ -101,32 +124,82 @@ impl Literal {
                 "literal data is {} bytes, shape {shape:?} of {ty:?} needs {want}"
             )));
         }
-        Ok(Literal { ty, shape: shape.to_vec(), data: data.to_vec() })
+        Ok(Literal {
+            repr: Repr::Dense { ty, shape: shape.to_vec(), data: data.to_vec() },
+        })
+    }
+
+    /// Compose a tuple literal (what a `return_tuple=True` execution
+    /// produces).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { repr: Repr::Tuple(parts) }
+    }
+
+    pub fn element_type(&self) -> Result<ElementType> {
+        match &self.repr {
+            Repr::Dense { ty, .. } => Ok(*ty),
+            Repr::Tuple(_) => Err(Error("tuple literal has no element type".into())),
+        }
+    }
+
+    pub fn shape(&self) -> Result<&[usize]> {
+        match &self.repr {
+            Repr::Dense { shape, .. } => Ok(shape),
+            Repr::Tuple(_) => Err(Error("tuple literal has no dense shape".into())),
+        }
+    }
+
+    /// Raw little-endian bytes of a dense literal.
+    pub fn untyped_data(&self) -> Result<&[u8]> {
+        match &self.repr {
+            Repr::Dense { data, .. } => Ok(data),
+            Repr::Tuple(_) => Err(Error("tuple literal has no dense data".into())),
+        }
     }
 
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
-        if self.ty != T::TY {
-            return Err(Error(format!(
-                "literal holds {:?}, requested {:?}",
-                self.ty,
-                T::TY
-            )));
+        let (ty, data) = match &self.repr {
+            Repr::Dense { ty, data, .. } => (*ty, data),
+            Repr::Tuple(_) => {
+                return Err(Error("cannot read typed data out of a tuple literal".into()))
+            }
+        };
+        if ty != T::TY {
+            return Err(Error(format!("literal holds {ty:?}, requested {:?}", T::TY)));
         }
-        Ok(self
-            .data
-            .chunks_exact(self.ty.size())
-            .map(T::read_le)
-            .collect())
+        Ok(data.chunks_exact(ty.size()).map(T::read_le).collect())
     }
 
-    /// Decompose a tuple literal. The stub never produces tuples (only the
-    /// real executable path does), so this always errors.
+    /// Decompose a tuple literal into its parts.
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
-        stub("Literal::to_tuple")
+        match self.repr {
+            Repr::Tuple(parts) => Ok(parts),
+            Repr::Dense { .. } => {
+                Err(Error("to_tuple called on a non-tuple literal".into()))
+            }
+        }
+    }
+
+    /// Overwrite this dense literal **in place** from another of the same
+    /// byte length: the existing allocation is reused (this is what makes
+    /// donation aliasing observable in the stand-in). Falls back to a
+    /// wholesale replace when the sizes differ.
+    fn alias_write(&mut self, out: Literal) {
+        match (&mut self.repr, out.repr) {
+            (
+                Repr::Dense { ty, shape, data },
+                Repr::Dense { ty: oty, shape: oshape, data: odata },
+            ) if data.len() == odata.len() => {
+                *ty = oty;
+                *shape = oshape;
+                data.copy_from_slice(&odata);
+            }
+            (repr, orepr) => *repr = orepr,
+        }
     }
 }
 
-/// Parsed HLO module text. The stub only checks the file is readable.
+/// Parsed HLO module text. The stand-in only checks the file is readable.
 pub struct HloModuleProto;
 
 impl HloModuleProto {
@@ -145,29 +218,127 @@ impl XlaComputation {
     }
 }
 
-/// Device buffer handle returned by an execution.
-pub struct PjRtBuffer;
+/// Device buffer handle. In the stand-in it owns its literal, so
+/// host-uploaded buffers are fully functional; `compile`d executables
+/// (which never run here) would produce empty handles.
+pub struct PjRtBuffer {
+    lit: Option<Literal>,
+}
 
 impl PjRtBuffer {
+    /// Device-to-host copy.
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        stub("PjRtBuffer::to_literal_sync")
+        match &self.lit {
+            Some(l) => Ok(l.clone()),
+            None => stub("PjRtBuffer::to_literal_sync"),
+        }
+    }
+
+    /// Consume the buffer, handing its literal to the host without a
+    /// copy — used for one-shot execution outputs the buffer would
+    /// otherwise clone and immediately drop. (A real-bindings shim
+    /// implements this as `to_literal_sync`.)
+    pub fn into_literal(mut self) -> Result<Literal> {
+        match self.lit.take() {
+            Some(l) => Ok(l),
+            None => stub("PjRtBuffer::into_literal"),
+        }
     }
 }
 
+/// One argument of an [`execute_donated`] call.
+///
+/// [`execute_donated`]: PjRtLoadedExecutable::execute_donated
+pub enum ExecArg<'a> {
+    /// Borrowed literal, uploaded for this execution only.
+    Ref(&'a Literal),
+    /// Device buffer donated to the computation: its storage is rewritten
+    /// in place by the matching output (PJRT input-output aliasing).
+    Donate(&'a mut PjRtBuffer),
+}
+
+type HostFn = Arc<dyn Fn(&[&Literal]) -> Result<Vec<Literal>> + Send + Sync>;
+
 /// Compiled executable handle.
-pub struct PjRtLoadedExecutable;
+pub struct PjRtLoadedExecutable {
+    host_fn: Option<HostFn>,
+}
 
 impl PjRtLoadedExecutable {
+    /// Build an executable from a host closure over literals (stand-in
+    /// backend only — the real bindings obtain executables exclusively via
+    /// [`PjRtClient::compile`]). Used by `runtime::Engine::with_stages`
+    /// so tests and benches can exercise the full execution path,
+    /// including donation, without PJRT artifacts.
+    pub fn from_host_fn<F>(f: F) -> PjRtLoadedExecutable
+    where
+        F: Fn(&[&Literal]) -> Result<Vec<Literal>> + Send + Sync + 'static,
+    {
+        PjRtLoadedExecutable { host_fn: Some(Arc::new(f)) }
+    }
+
     pub fn execute<T: std::borrow::Borrow<Literal>>(
         &self,
-        _args: &[T],
+        args: &[T],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
-        stub("PjRtLoadedExecutable::execute")
+        let Some(f) = &self.host_fn else {
+            return stub("PjRtLoadedExecutable::execute");
+        };
+        let refs: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
+        let outs = f(&refs)?;
+        Ok(vec![vec![PjRtBuffer { lit: Some(Literal::tuple(outs)) }]])
+    }
+
+    /// Execute with owned-buffer donation (§V-C resident KV): the last
+    /// `n_donated` outputs of the computation alias the [`ExecArg::Donate`]
+    /// arguments **in argument order**, rewriting their device storage in
+    /// place; only the remaining (non-aliased) outputs are materialized
+    /// host-side and returned. Per-step traffic for a stage whose large
+    /// state is donated therefore drops from O(state) to O(host I/O).
+    pub fn execute_donated(&self, args: &mut [ExecArg]) -> Result<Vec<Literal>> {
+        let Some(f) = self.host_fn.clone() else {
+            return stub("PjRtLoadedExecutable::execute_donated");
+        };
+        let n_donated = args
+            .iter()
+            .filter(|a| matches!(a, ExecArg::Donate(_)))
+            .count();
+        let mut outs = {
+            let refs: Vec<&Literal> = args
+                .iter()
+                .map(|a| match a {
+                    ExecArg::Ref(l) => Ok(*l),
+                    ExecArg::Donate(b) => b.lit.as_ref().ok_or_else(|| {
+                        Error("donated buffer holds no literal".into())
+                    }),
+                })
+                .collect::<Result<_>>()?;
+            f(&refs)?
+        };
+        if outs.len() < n_donated {
+            return Err(Error(format!(
+                "computation returned {} outputs but {n_donated} were donated",
+                outs.len()
+            )));
+        }
+        // Split: trailing outputs alias the donated buffers in order.
+        let aliased = outs.split_off(outs.len() - n_donated);
+        let mut aliased = aliased.into_iter();
+        for a in args.iter_mut() {
+            if let ExecArg::Donate(b) = a {
+                let out = aliased.next().expect("counted above");
+                match &mut b.lit {
+                    Some(l) => l.alias_write(out),
+                    None => b.lit = Some(out),
+                }
+            }
+        }
+        Ok(outs)
     }
 }
 
 /// The PJRT client. Construction succeeds (so platform probing works);
-/// compilation is where the stub reports itself.
+/// compilation is where the stand-in reports itself.
 pub struct PjRtClient;
 
 impl PjRtClient {
@@ -182,18 +353,29 @@ impl PjRtClient {
     pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         stub("PjRtClient::compile")
     }
+
+    /// Host-to-device upload: the returned buffer stays resident until
+    /// dropped (or donated and rewritten by [`execute_donated`]).
+    ///
+    /// [`execute_donated`]: PjRtLoadedExecutable::execute_donated
+    pub fn buffer_from_host_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: Some(lit.clone()) })
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn f32_lit(shape: &[usize], v: &[f32]) -> Literal {
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, &bytes).unwrap()
+    }
+
     #[test]
     fn literal_roundtrips_typed_data() {
         let v = [1.5f32, -2.0, 0.25];
-        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
-        let lit =
-            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        let lit = f32_lit(&[3], &v);
         assert_eq!(lit.to_vec::<f32>().unwrap(), v);
         assert!(lit.to_vec::<i32>().is_err(), "type confusion must error");
     }
@@ -207,9 +389,124 @@ mod tests {
     }
 
     #[test]
+    fn tuple_literal_decomposes() {
+        let a = f32_lit(&[2], &[1.0, 2.0]);
+        let b = f32_lit(&[1], &[3.0]);
+        let t = Literal::tuple(vec![a.clone(), b.clone()]);
+        assert!(t.to_vec::<f32>().is_err(), "tuple has no typed data");
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts, vec![a.clone(), b]);
+        assert!(a.to_tuple().is_err(), "dense literal is not a tuple");
+    }
+
+    #[test]
     fn compile_reports_stub() {
         let c = PjRtClient::cpu().unwrap();
         let err = c.compile(&XlaComputation).unwrap_err();
         assert!(err.to_string().contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn host_fn_execute_returns_tuple_of_outputs() {
+        // doubles its input and also returns the element count
+        let exe = PjRtLoadedExecutable::from_host_fn(|args| {
+            let v = args[0].to_vec::<f32>()?;
+            let doubled: Vec<f32> = v.iter().map(|x| x * 2.0).collect();
+            let n = v.len();
+            Ok(vec![
+                f32_lit(&[n], &doubled),
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::S32,
+                    &[],
+                    &(n as i32).to_le_bytes(),
+                )
+                .unwrap(),
+            ])
+        });
+        let input = f32_lit(&[3], &[1.0, 2.0, 3.0]);
+        let out = exe.execute(&[input]).unwrap();
+        let parts = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![2.0, 4.0, 6.0]);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![3]);
+    }
+
+    /// Accumulator stage: (x, state) -> (x + state, state + x). The state
+    /// output aliases the donated state buffer.
+    fn accumulator() -> PjRtLoadedExecutable {
+        PjRtLoadedExecutable::from_host_fn(|args| {
+            let x = args[0].to_vec::<f32>()?;
+            let s = args[1].to_vec::<f32>()?;
+            let shape = args[0].shape()?.to_vec();
+            let sum: Vec<f32> = x.iter().zip(&s).map(|(a, b)| a + b).collect();
+            let ns: Vec<f32> = s.iter().zip(&x).map(|(a, b)| a + b).collect();
+            Ok(vec![f32_lit(&shape, &sum), f32_lit(&shape, &ns)])
+        })
+    }
+
+    #[test]
+    fn execute_donated_aliases_state_in_place() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = accumulator();
+        let state0 = f32_lit(&[2], &[10.0, 20.0]);
+        let mut buf = client.buffer_from_host_literal(&state0).unwrap();
+        let ptr_before = match &buf.lit.as_ref().unwrap().repr {
+            Repr::Dense { data, .. } => data.as_ptr(),
+            _ => unreachable!(),
+        };
+        // two steps: state accumulates on-device, x is the only host input
+        let x = f32_lit(&[2], &[1.0, 2.0]);
+        let outs = exe
+            .execute_donated(&mut [ExecArg::Ref(&x), ExecArg::Donate(&mut buf)])
+            .unwrap();
+        assert_eq!(outs.len(), 1, "aliased output must not come back host-side");
+        assert_eq!(outs[0].to_vec::<f32>().unwrap(), vec![11.0, 22.0]);
+        let outs = exe
+            .execute_donated(&mut [ExecArg::Ref(&x), ExecArg::Donate(&mut buf)])
+            .unwrap();
+        assert_eq!(outs[0].to_vec::<f32>().unwrap(), vec![12.0, 24.0]);
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![12.0, 24.0]);
+        let ptr_after = match &buf.lit.as_ref().unwrap().repr {
+            Repr::Dense { data, .. } => data.as_ptr(),
+            _ => unreachable!(),
+        };
+        assert_eq!(ptr_before, ptr_after, "donation must reuse the allocation in place");
+    }
+
+    #[test]
+    fn execute_donated_matches_copy_path_byte_identical() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = accumulator();
+        let x = f32_lit(&[4], &[0.5, -1.0, 2.0, 0.0]);
+        let mut state_copy = f32_lit(&[4], &[1.0, 2.0, 3.0, 4.0]);
+        let mut buf = client.buffer_from_host_literal(&state_copy).unwrap();
+        for _ in 0..5 {
+            // copy path: round-trip the state through host literals
+            let out = exe.execute(&[x.clone(), state_copy.clone()]).unwrap();
+            let mut parts = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+            state_copy = parts.pop().unwrap();
+            let sum_copy = parts.pop().unwrap();
+            // donated path: state stays resident
+            let outs = exe
+                .execute_donated(&mut [ExecArg::Ref(&x), ExecArg::Donate(&mut buf)])
+                .unwrap();
+            assert_eq!(
+                outs[0].untyped_data().unwrap(),
+                sum_copy.untyped_data().unwrap(),
+                "host outputs must be byte-identical"
+            );
+        }
+        assert_eq!(
+            buf.to_literal_sync().unwrap().untyped_data().unwrap(),
+            state_copy.untyped_data().unwrap(),
+            "resident state must be byte-identical to the copy path"
+        );
+    }
+
+    #[test]
+    fn execute_without_host_fn_reports_stub() {
+        let exe = PjRtLoadedExecutable { host_fn: None };
+        assert!(exe.execute(&[f32_lit(&[1], &[0.0])]).is_err());
+        assert!(exe.execute_donated(&mut []).is_err());
     }
 }

@@ -139,3 +139,67 @@ fn long_prompt_spans_multiple_prefill_chunks() {
     let toks = gen(&inst, 5, &prompt, 4);
     assert_eq!(toks.len(), 4);
 }
+
+// ---------------------------------------------------------------------
+// Stub-backend serving (runtime::testmodel): no PJRT artifacts needed,
+// so these run in every CI pass. They pin the zero-copy datapath
+// end-to-end: resident (donated) KV caches must generate exactly the
+// same tokens as the host round-trip baseline through the full
+// broker-to-head card chain.
+
+mod stub_backend {
+    use super::gen;
+    use npserve::runtime::testmodel::ToyConfig;
+    use npserve::service::{GenRequest, LlmInstance, ServeOptions, SharedEngine};
+    use std::sync::Arc;
+
+    fn stub_engine() -> SharedEngine {
+        SharedEngine(Arc::new(ToyConfig::small().engine()))
+    }
+
+    #[test]
+    fn serves_without_artifacts_and_is_deterministic() {
+        let inst = LlmInstance::start(stub_engine());
+        let a = gen(&inst, 1, "hello", 6);
+        let b = gen(&inst, 2, "hello", 6);
+        assert_eq!(a.len(), 6);
+        assert_eq!(a, b, "greedy generation must be deterministic");
+    }
+
+    #[test]
+    fn resident_kv_generates_identical_tokens_to_host_kv() {
+        let resident = LlmInstance::start_with(stub_engine(), ServeOptions::default());
+        let host = LlmInstance::start_with(
+            stub_engine(),
+            ServeOptions { resident_kv: false, ..Default::default() },
+        );
+        for (id, prompt) in [(1u64, "abc"), (2, "a longer prompt spanning chunks")] {
+            let t_res = gen(&resident, id, prompt, 8);
+            let t_host = gen(&host, id, prompt, 8);
+            assert_eq!(t_res.len(), 8);
+            assert_eq!(t_res, t_host, "resident KV diverged on {prompt:?}");
+        }
+    }
+
+    #[test]
+    fn stub_backend_batches_more_requests_than_slots() {
+        let inst = LlmInstance::start(stub_engine());
+        let b = inst.manifest().batch_slots;
+        let n_reqs = b * 2 + 1;
+        for i in 0..n_reqs {
+            inst.submit(GenRequest {
+                id: 100 + i as u64,
+                prompt: format!("p{i}"),
+                max_tokens: 3,
+                temperature: 0.0,
+                top_k: 0,
+                stop_byte: None,
+            });
+        }
+        let recs = inst.serve_until_drained();
+        assert_eq!(recs.len(), n_reqs, "every request must be served");
+        for r in &recs {
+            assert_eq!(r.n_out, 3);
+        }
+    }
+}
