@@ -1,0 +1,161 @@
+//! Rack-serve benchmark (EXPERIMENTS.md §Rack-serve): aggregate fleet
+//! throughput vs. instance count on the stub-backend toy model — the
+//! rack's scale-out claim (§I: independent instances share nothing but the
+//! card pool, so aggregate OTPS scales with instance count).
+//!
+//! Sweep: instances × users (requests) on `runtime::testmodel`, all
+//! instances consuming one model queue behind one broker. Acceptance bar
+//! (ISSUE 3): aggregate OTPS scales ≥ 1.8x from 1 → 2 instances.
+//! Results land in BENCH_PR3.json §rack_serve.
+//!
+//!   cargo bench --bench rack_serve             full sweep (1, 2, 4 instances)
+//!   RACK_SERVE_SMOKE=1 cargo bench --bench rack_serve   CI smoke (1, 2)
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use npserve::broker::Task;
+use npserve::config::hw::RackSpec;
+use npserve::rack::{InstanceSpec, RackService};
+use npserve::runtime::testmodel::ToyConfig;
+use npserve::service::SharedEngine;
+use npserve::util::json::{merge_into_file, Value};
+
+fn report_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR3.json")
+}
+
+const MODEL: &str = "toy-testmodel";
+const MAX_TOKENS: usize = 24;
+
+/// A toy model heavy enough that per-round compute dominates scheduler
+/// noise (the small default is latency-, not throughput-shaped).
+fn bench_config() -> ToyConfig {
+    let mut cfg = ToyConfig::small();
+    cfg.d_model = 48;
+    cfg.n_layers = 4;
+    cfg.max_context = 64;
+    cfg
+}
+
+struct Measured {
+    otps: f64,
+    tokens: usize,
+    wall_s: f64,
+}
+
+/// Deploy `n_instances` toy instances on one rack service and push
+/// `n_requests` through the shared model queue; aggregate OTPS is total
+/// tokens over the wall-clock window.
+fn run_fleet(cfg: &ToyConfig, n_instances: usize, n_requests: usize) -> Measured {
+    let svc = RackService::new(RackSpec::northpole_42u());
+    for _ in 0..n_instances {
+        let mut spec = InstanceSpec::live(MODEL, 16, SharedEngine(Arc::new(cfg.engine())));
+        spec.max_tokens = MAX_TOKENS;
+        svc.deploy(spec).expect("toy placement");
+    }
+    // warmup: one request per instance primes frame pools + serving loops
+    let broker = svc.broker().clone();
+    let warm: Vec<_> = (0..n_instances)
+        .map(|i| {
+            broker.post(
+                MODEL,
+                Task {
+                    id: 90_000 + i as u64,
+                    priority: 0,
+                    body: "warm".into(),
+                    reply_to: 90_000 + i as u64,
+                },
+            )
+        })
+        .collect();
+    for ch in &warm {
+        while ch.recv().is_some() {}
+    }
+
+    let t0 = Instant::now();
+    let chans: Vec<_> = (0..n_requests)
+        .map(|i| {
+            broker.post(
+                MODEL,
+                Task {
+                    id: i as u64,
+                    priority: (i % 3) as u8,
+                    body: format!("req-{i}"),
+                    reply_to: 10_000 + i as u64,
+                },
+            )
+        })
+        .collect();
+    let mut tokens = 0usize;
+    for ch in &chans {
+        while ch.recv().is_some() {
+            tokens += 1;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    svc.shutdown_all();
+    assert_eq!(
+        tokens,
+        n_requests * MAX_TOKENS,
+        "every request must generate its full budget"
+    );
+    Measured { otps: tokens as f64 / wall_s, tokens, wall_s }
+}
+
+/// Best of `trials` runs (the bar is about capacity, not scheduler luck).
+fn best_of(cfg: &ToyConfig, n_instances: usize, n_requests: usize, trials: usize) -> Measured {
+    (0..trials)
+        .map(|_| run_fleet(cfg, n_instances, n_requests))
+        .max_by(|a, b| a.otps.total_cmp(&b.otps))
+        .expect("at least one trial")
+}
+
+fn main() {
+    let smoke = std::env::var("RACK_SERVE_SMOKE").is_ok();
+    let cfg = bench_config();
+    let (sweep, n_requests, trials): (&[usize], usize, usize) =
+        if smoke { (&[1, 2], 32, 3) } else { (&[1, 2, 4], 48, 3) };
+
+    println!(
+        "== rack_serve: toy model ({} layers, D={}, B={}), {} requests x {} tokens ==",
+        cfg.n_layers, cfg.d_model, cfg.batch_slots, n_requests, MAX_TOKENS
+    );
+    let mut rows: Vec<(usize, Measured)> = Vec::new();
+    for &n in sweep {
+        let m = best_of(&cfg, n, n_requests, trials);
+        println!(
+            "  {n} instance(s): {:>8.0} tok/s aggregate ({} toks in {:.2}s)",
+            m.otps, m.tokens, m.wall_s
+        );
+        rows.push((n, m));
+    }
+    let otps1 = rows[0].1.otps;
+    let otps2 = rows[1].1.otps;
+    let scaling = otps2 / otps1;
+    println!("  -> 1 -> 2 instance scaling {scaling:.2}x (bar: >= 1.8x)");
+
+    let row_keys: Vec<String> = rows.iter().map(|(n, _)| format!("otps_{n}x")).collect();
+    let mut fields = vec![
+        ("layers", Value::num(cfg.n_layers as f64)),
+        ("d_model", Value::num(cfg.d_model as f64)),
+        ("batch_slots", Value::num(cfg.batch_slots as f64)),
+        ("requests", Value::num(n_requests as f64)),
+        ("max_tokens", Value::num(MAX_TOKENS as f64)),
+        ("scaling_1_to_2", Value::num(scaling)),
+    ];
+    for ((_, m), key) in rows.iter().zip(&row_keys) {
+        fields.push((key.as_str(), Value::num(m.otps)));
+    }
+    match merge_into_file(&report_path(), "rack_serve", Value::obj(fields)) {
+        Ok(()) => println!("\nwrote BENCH_PR3.json §rack_serve"),
+        Err(e) => eprintln!("\ncould not write BENCH_PR3.json: {e}"),
+    }
+
+    if scaling < 1.8 {
+        eprintln!("FAIL: aggregate OTPS scaled {scaling:.2}x from 1 to 2 instances (bar: >= 1.8x)");
+        std::process::exit(1);
+    }
+    println!("rack_serve OK");
+}

@@ -9,4 +9,7 @@ pub mod http;
 mod openai;
 
 pub use http::{http_request, HttpRequest, HttpResponse, HttpServer};
-pub use openai::{chat_completion_chunk, parse_chat_request, ApiServer, ChatRequest};
+pub use openai::{
+    chat_completion_chunk, model_not_found_json, model_overloaded_json, parse_chat_request,
+    AdmitDecision, Admission, ApiServer, ChatRequest,
+};

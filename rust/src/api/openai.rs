@@ -21,6 +21,59 @@ pub struct ChatRequest {
     pub priority: u8,
 }
 
+/// Front-door admission verdict for one request's `model` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitDecision {
+    Accept,
+    /// No instance serves this model → OpenAI-style `model_not_found`.
+    UnknownModel,
+    /// Every instance of the model is saturated → 503.
+    Saturated,
+}
+
+/// Capacity-aware admission hook: maps a model name to a verdict before
+/// the task is posted (rack::RackService::admission builds one from broker
+/// queue-depth introspection).
+pub type Admission = Arc<dyn Fn(&str) -> AdmitDecision + Send + Sync>;
+
+/// OpenAI-style error body for an unknown model (`model_not_found`).
+pub fn model_not_found_json(model: &str) -> String {
+    Value::obj(vec![(
+        "error",
+        Value::obj(vec![
+            (
+                "message",
+                Value::str(format!(
+                    "The model `{model}` does not exist or is not deployed on this rack"
+                )),
+            ),
+            ("type", Value::str("invalid_request_error")),
+            ("param", Value::str("model")),
+            ("code", Value::str("model_not_found")),
+        ]),
+    )])
+    .to_string()
+}
+
+/// OpenAI-style error body for a saturated model (503).
+pub fn model_overloaded_json(model: &str) -> String {
+    Value::obj(vec![(
+        "error",
+        Value::obj(vec![
+            (
+                "message",
+                Value::str(format!(
+                    "All instances of `{model}` are currently saturated; retry shortly"
+                )),
+            ),
+            ("type", Value::str("server_error")),
+            ("param", Value::str("model")),
+            ("code", Value::str("model_overloaded")),
+        ]),
+    )])
+    .to_string()
+}
+
 /// Parse a chat-completions body: {"model", "messages": [...], ...}.
 pub fn parse_chat_request(body: &str) -> Result<ChatRequest> {
     let v = Value::parse(body).map_err(|e| anyhow!("bad json: {e}"))?;
@@ -86,7 +139,22 @@ pub struct ApiServer {
 }
 
 impl ApiServer {
+    /// Admit-all server (single-model deployments and tests). Prefer
+    /// `serve_routed` behind anything multi-model: without admission, a
+    /// request naming a model nobody consumes posts to a dead queue and
+    /// hangs its client forever.
     pub fn serve(addr: &str, broker: Arc<Broker>) -> Result<ApiServer> {
+        Self::serve_routed(addr, broker, Arc::new(|_: &str| AdmitDecision::Accept))
+    }
+
+    /// Model-routed front door: each request is admitted per its `model`
+    /// field, then posted to the queue of that name; a model's instances
+    /// form its consumer group (§IV).
+    pub fn serve_routed(
+        addr: &str,
+        broker: Arc<Broker>,
+        admission: Admission,
+    ) -> Result<ApiServer> {
         let next_id = Arc::new(AtomicU64::new(1));
         let handler = {
             let broker = broker.clone();
@@ -108,6 +176,21 @@ impl ApiServer {
                                 )
                             }
                         };
+                        match admission(&chat.model) {
+                            AdmitDecision::Accept => {}
+                            AdmitDecision::UnknownModel => {
+                                return HttpResponse::json(
+                                    404,
+                                    model_not_found_json(&chat.model),
+                                )
+                            }
+                            AdmitDecision::Saturated => {
+                                return HttpResponse::json(
+                                    503,
+                                    model_overloaded_json(&chat.model),
+                                )
+                            }
+                        }
                         let id = next_id.fetch_add(1, Ordering::Relaxed);
                         // §IV: post an inference task with model + priority
                         let ch = broker.post(
@@ -119,6 +202,21 @@ impl ApiServer {
                                 reply_to: id,
                             },
                         );
+                        // Re-check after posting: a teardown can race the
+                        // admission verdict, leaving the task on an open
+                        // queue with no consumer. The departing worker
+                        // sweeps tasks posted before it deregistered; this
+                        // covers the tail where the post landed after that
+                        // sweep — releasing our own task (stream then ends
+                        // empty) rather than hanging the client. If the
+                        // task was already consumed, the sweep is a no-op.
+                        // (For the admit-all server the re-check is always
+                        // Accept, preserving raw-consumer setups.)
+                        if !matches!(admission(&chat.model), AdmitDecision::Accept)
+                            && broker.stats(&chat.model).consumers == 0
+                        {
+                            broker.abandon_all(&chat.model);
+                        }
                         let model = chat.model.clone();
                         if chat.stream {
                             HttpResponse::Sse(Box::new(move |w| {
@@ -248,6 +346,88 @@ mod tests {
         let content = v.get("choices").unwrap().as_arr().unwrap()[0]
             .get("message").unwrap().get("content").unwrap().as_str().unwrap();
         assert_eq!(content, "hello");
+    }
+
+    /// ISSUE 3 satellite: a request naming a model no instance serves must
+    /// come back as an OpenAI-shaped `model_not_found` error, not hang on
+    /// a queue nobody consumes.
+    #[test]
+    fn unknown_model_is_rejected_with_model_not_found() {
+        let broker = Broker::new();
+        let known = "served-model";
+        let admission: Admission = {
+            let broker = broker.clone();
+            Arc::new(move |model: &str| {
+                if broker.stats(model).consumers > 0 {
+                    AdmitDecision::Accept
+                } else {
+                    AdmitDecision::UnknownModel
+                }
+            })
+        };
+        let api = ApiServer::serve_routed("127.0.0.1:0", broker.clone(), admission).unwrap();
+
+        let (st, body) = http_request(
+            api.addr(),
+            "POST",
+            "/v1/chat/completions",
+            r#"{"model":"gpt-nonexistent","messages":[{"role":"user","content":"hi"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(st, 404);
+        let v = Value::parse(&String::from_utf8_lossy(&body)).unwrap();
+        let err = v.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("model_not_found"));
+        assert_eq!(err.get("type").unwrap().as_str(), Some("invalid_request_error"));
+        assert_eq!(err.get("param").unwrap().as_str(), Some("model"));
+
+        // the known model (with a registered consumer) still flows
+        let b2 = broker.clone();
+        let worker = std::thread::spawn(move || {
+            let _g = b2.register_consumer(known);
+            let task = b2.consume(known, &[0, 1, 2]).unwrap();
+            let ch = b2.response(task.reply_to).unwrap();
+            ch.send("ok".into());
+            ch.finish();
+        });
+        // wait until the consumer registered so admission sees it
+        while broker.stats(known).consumers == 0 {
+            std::thread::yield_now();
+        }
+        let (st, body) = http_request(
+            api.addr(),
+            "POST",
+            "/v1/chat/completions",
+            r#"{"model":"served-model","messages":[{"role":"user","content":"hi"}]}"#,
+        )
+        .unwrap();
+        worker.join().unwrap();
+        assert_eq!(st, 200);
+        assert!(String::from_utf8_lossy(&body).contains("ok"));
+    }
+
+    #[test]
+    fn saturated_model_returns_503() {
+        let broker = Broker::new();
+        let api = ApiServer::serve_routed(
+            "127.0.0.1:0",
+            broker,
+            Arc::new(|_: &str| AdmitDecision::Saturated),
+        )
+        .unwrap();
+        let (st, body) = http_request(
+            api.addr(),
+            "POST",
+            "/v1/chat/completions",
+            r#"{"model":"m","messages":[{"role":"user","content":"hi"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(st, 503);
+        let v = Value::parse(&String::from_utf8_lossy(&body)).unwrap();
+        assert_eq!(
+            v.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("model_overloaded")
+        );
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// A task posted by the API endpoint (§IV): model queue + priority + body.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,12 +24,52 @@ struct QueueState {
     /// One FIFO per priority level (higher value = higher priority).
     by_priority: BTreeMap<u8, VecDeque<Task>>,
     closed: bool,
+    /// Registered consumers (instances subscribed via
+    /// [`Broker::register_consumer`]) — the router's liveness signal.
+    consumers: usize,
 }
 
 /// One named task queue (e.g. "granite-3.3-8b").
 pub struct Queue {
     state: Mutex<QueueState>,
     ready: Condvar,
+}
+
+/// Queue introspection snapshot (§IV router: load balancing and
+/// capacity-aware admission read depth + consumer count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueStats {
+    /// Tasks waiting across all priority levels.
+    pub depth: usize,
+    /// Consumers currently registered on the queue.
+    pub consumers: usize,
+    pub closed: bool,
+    /// (priority level, waiting tasks) pairs, ascending by level.
+    pub by_priority: Vec<(u8, usize)>,
+}
+
+/// Result of one bounded-wait consume poll.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Consumed {
+    Task(Task),
+    /// Timed out with no task at the subscribed priorities.
+    Empty,
+    /// The queue is closed and drained (at the subscribed priorities).
+    Closed,
+}
+
+/// RAII consumer registration: increments the queue's consumer count so
+/// routers can tell a served model from an abandoned queue name; dropping
+/// the guard deregisters.
+pub struct ConsumerGuard {
+    q: Arc<Queue>,
+}
+
+impl Drop for ConsumerGuard {
+    fn drop(&mut self) {
+        let mut st = self.q.state.lock().unwrap();
+        st.consumers = st.consumers.saturating_sub(1);
+    }
 }
 
 /// The broker: named queues + response channels.
@@ -87,6 +128,13 @@ impl Broker {
             .clone()
     }
 
+    /// Non-creating lookup: introspection over client-controlled names
+    /// (e.g. the front door probing a request's `model`) must not leak a
+    /// queue entry per probe.
+    fn queue_if_exists(&self, name: &str) -> Option<Arc<Queue>> {
+        self.queues.lock().unwrap().get(name).cloned()
+    }
+
     /// Post an inference task to a model's queue (§IV: "posts an inference
     /// task specifying the requested LLM model and service priority").
     /// Returns the response channel for the caller to stream from.
@@ -96,7 +144,10 @@ impl Broker {
         let q = self.queue(queue);
         let mut st = q.state.lock().unwrap();
         st.by_priority.entry(task.priority).or_default().push_back(task);
-        q.ready.notify_one();
+        // notify_all, not notify_one: consumers may subscribe to disjoint
+        // priority subsets, and a single wakeup could land on one not
+        // entitled to this task's level, stalling the entitled ones.
+        q.ready.notify_all();
         ch
     }
 
@@ -106,18 +157,8 @@ impl Broker {
         let q = self.queue(queue);
         let mut st = q.state.lock().unwrap();
         loop {
-            for p in priorities.iter().rev() {
-                // priorities sorted ascending: scan from highest
-                let _ = p;
-            }
-            let mut levels: Vec<u8> = priorities.to_vec();
-            levels.sort_unstable_by(|a, b| b.cmp(a));
-            for p in levels {
-                if let Some(fifo) = st.by_priority.get_mut(&p) {
-                    if let Some(t) = fifo.pop_front() {
-                        return Some(t);
-                    }
-                }
+            if let Some(t) = Self::pop_highest(&mut st, priorities) {
+                return Some(t);
             }
             if st.closed {
                 return None;
@@ -126,10 +167,37 @@ impl Broker {
         }
     }
 
-    /// Non-blocking variant.
-    pub fn try_consume(&self, queue: &str, priorities: &[u8]) -> Option<Task> {
+    /// Bounded-wait consume: returns `Consumed::Empty` after `timeout` so
+    /// the caller can re-check stop/drain flags — this is what lets many
+    /// instances share one model queue without a shutdown of one closing
+    /// the queue for the others.
+    pub fn consume_deadline(
+        &self,
+        queue: &str,
+        priorities: &[u8],
+        timeout: Duration,
+    ) -> Consumed {
         let q = self.queue(queue);
+        let deadline = Instant::now() + timeout;
         let mut st = q.state.lock().unwrap();
+        loop {
+            if let Some(t) = Self::pop_highest(&mut st, priorities) {
+                return Consumed::Task(t);
+            }
+            if st.closed {
+                return Consumed::Closed;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Consumed::Empty;
+            }
+            let (guard, _) = q.ready.wait_timeout(st, left).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Pop the next task at the highest subscribed priority level.
+    fn pop_highest(st: &mut QueueState, priorities: &[u8]) -> Option<Task> {
         let mut levels: Vec<u8> = priorities.to_vec();
         levels.sort_unstable_by(|a, b| b.cmp(a));
         for p in levels {
@@ -140,6 +208,13 @@ impl Broker {
             }
         }
         None
+    }
+
+    /// Non-blocking variant.
+    pub fn try_consume(&self, queue: &str, priorities: &[u8]) -> Option<Task> {
+        let q = self.queue(queue);
+        let mut st = q.state.lock().unwrap();
+        Self::pop_highest(&mut st, priorities)
     }
 
     /// Close a queue: blocked consumers drain and then receive None.
@@ -160,9 +235,65 @@ impl Broker {
     }
 
     pub fn depth(&self, queue: &str) -> usize {
-        let q = self.queue(queue);
+        self.stats(queue).depth
+    }
+
+    /// Snapshot a queue's depth/consumer-count/closed state (§IV router).
+    /// Unknown queue names report empty stats without creating the queue.
+    pub fn stats(&self, queue: &str) -> QueueStats {
+        let Some(q) = self.queue_if_exists(queue) else {
+            return QueueStats {
+                depth: 0,
+                consumers: 0,
+                closed: false,
+                by_priority: Vec::new(),
+            };
+        };
         let st = q.state.lock().unwrap();
-        st.by_priority.values().map(|f| f.len()).sum()
+        QueueStats {
+            depth: st.by_priority.values().map(|f| f.len()).sum(),
+            consumers: st.consumers,
+            closed: st.closed,
+            by_priority: st.by_priority.iter().map(|(p, f)| (*p, f.len())).collect(),
+        }
+    }
+
+    pub fn is_closed(&self, queue: &str) -> bool {
+        self.queue_if_exists(queue)
+            .map(|q| q.state.lock().unwrap().closed)
+            .unwrap_or(false)
+    }
+
+    /// Register as a consumer of a queue (for introspection only — any
+    /// thread may still call `consume`). The guard deregisters on drop.
+    pub fn register_consumer(&self, queue: &str) -> ConsumerGuard {
+        let q = self.queue(queue);
+        q.state.lock().unwrap().consumers += 1;
+        ConsumerGuard { q }
+    }
+
+    /// Drain every queued task (all priority levels) and finish its
+    /// response channel, releasing clients blocked in `recv`. Called when
+    /// a queue's last consumer departs — without it, tasks posted but
+    /// never consumed would hang their callers forever. The queue itself
+    /// stays open (a later consumer may subscribe again). Returns the
+    /// number of tasks abandoned.
+    pub fn abandon_all(&self, queue: &str) -> usize {
+        let Some(q) = self.queue_if_exists(queue) else {
+            return 0;
+        };
+        let drained: Vec<Task> = {
+            let mut st = q.state.lock().unwrap();
+            st.by_priority.values_mut().flat_map(|f| f.drain(..)).collect()
+        };
+        let n = drained.len();
+        for t in drained {
+            if let Some(ch) = self.response(t.reply_to) {
+                ch.finish();
+            }
+            self.remove_response(t.reply_to);
+        }
+        n
     }
 }
 
@@ -240,6 +371,115 @@ mod tests {
         assert_eq!(ch.recv(), None);
         b.remove_response(1);
         assert!(b.response(1).is_none());
+    }
+
+    /// Regression (ISSUE 3): priority entitlements must hold when several
+    /// consumers drain one queue concurrently — a premium-only consumer
+    /// never sees lower priorities, every task is consumed exactly once,
+    /// and the consumer count is tracked through register/deregister.
+    #[test]
+    fn priority_entitlement_under_concurrent_consumers() {
+        let b = Broker::new();
+        const N: u64 = 60;
+        let subs: [(&str, Vec<u8>); 3] =
+            [("gen-a", vec![0, 1, 2]), ("gen-b", vec![0, 1, 2]), ("premium", vec![2])];
+        let mut handles = Vec::new();
+        for (who, prios) in subs {
+            let b2 = b.clone();
+            handles.push(thread::spawn(move || {
+                let _g = b2.register_consumer("m");
+                let mut got: Vec<Task> = Vec::new();
+                loop {
+                    match b2.consume_deadline("m", &prios, std::time::Duration::from_millis(20))
+                    {
+                        Consumed::Task(t) => got.push(t),
+                        Consumed::Empty => continue,
+                        Consumed::Closed => break,
+                    }
+                }
+                (who, got)
+            }));
+        }
+        // wait for all three consumers to register
+        while b.stats("m").consumers < 3 {
+            thread::yield_now();
+        }
+        for i in 0..N {
+            b.post("m", task(i, (i % 3) as u8));
+        }
+        // the entitled consumers drain everything (premium tasks may land
+        // on any of the three)
+        while b.stats("m").depth > 0 {
+            thread::yield_now();
+        }
+        b.close("m");
+        let mut seen: Vec<u64> = Vec::new();
+        for h in handles {
+            let (who, got) = h.join().unwrap();
+            if who == "premium" {
+                assert!(
+                    got.iter().all(|t| t.priority == 2),
+                    "premium-only consumer received a lower-priority task"
+                );
+            }
+            seen.extend(got.iter().map(|t| t.id));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..N).collect::<Vec<_>>(), "each task exactly once");
+        assert_eq!(b.stats("m").consumers, 0, "guards must deregister");
+        assert!(b.stats("m").closed);
+    }
+
+    #[test]
+    fn stats_reports_depth_by_priority() {
+        let b = Broker::new();
+        b.post("m", task(1, 0));
+        b.post("m", task(2, 2));
+        b.post("m", task(3, 2));
+        let st = b.stats("m");
+        assert_eq!(st.depth, 3);
+        assert_eq!(st.consumers, 0);
+        assert!(!st.closed);
+        assert_eq!(st.by_priority, vec![(0, 1), (2, 2)]);
+        let g = b.register_consumer("m");
+        assert_eq!(b.stats("m").consumers, 1);
+        drop(g);
+        assert_eq!(b.stats("m").consumers, 0);
+    }
+
+    /// Abandoning a queue releases every waiting client without closing
+    /// the queue (the last-consumer-departs path, rack teardown).
+    #[test]
+    fn abandon_all_releases_waiting_clients() {
+        let b = Broker::new();
+        let ch1 = b.post("m", task(1, 0));
+        let ch2 = b.post("m", task(2, 2));
+        assert_eq!(b.abandon_all("m"), 2);
+        assert_eq!(ch1.recv(), None, "client must unblock, not hang");
+        assert_eq!(ch2.recv(), None);
+        assert_eq!(b.depth("m"), 0);
+        assert!(b.response(1).is_none(), "response channels cleaned up");
+        assert!(!b.is_closed("m"), "queue stays open for future consumers");
+        assert_eq!(b.abandon_all("m"), 0);
+    }
+
+    #[test]
+    fn consume_deadline_times_out_then_delivers() {
+        let b = Broker::new();
+        assert_eq!(
+            b.consume_deadline("m", &[0], std::time::Duration::from_millis(5)),
+            Consumed::Empty
+        );
+        b.post("m", task(4, 0));
+        match b.consume_deadline("m", &[0], std::time::Duration::from_millis(100)) {
+            Consumed::Task(t) => assert_eq!(t.id, 4),
+            other => panic!("expected task, got {other:?}"),
+        }
+        b.close("m");
+        assert_eq!(
+            b.consume_deadline("m", &[0], std::time::Duration::from_millis(5)),
+            Consumed::Closed
+        );
     }
 
     #[test]

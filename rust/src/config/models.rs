@@ -118,7 +118,7 @@ impl LlmSpec {
     }
 }
 
-/// The four Table I configurations.
+/// The Table I configurations plus the §I rack-filling dense 70B.
 pub fn model_zoo() -> Vec<LlmSpec> {
     vec![
         // Granite-3.1 3B — A4-C4-W4, 16 cards / 1 node (Table I row 1).
@@ -195,6 +195,26 @@ pub fn model_zoo() -> Vec<LlmSpec> {
             tied_colocated_lmhead: false,
             context: 2048,
         },
+        // Llama-3.1 70B — A4-C4-W2, the §I "1 instance of a 70B model per
+        // rack" configuration. Dense Llama internals (80 layers, d=8192,
+        // GQA 64/8, ff=28672, vocab 128k); 2-bit weights are what make the
+        // 704M-parameter MLP blocks card-mappable (2 TP shards each) and
+        // keep the whole model inside one 288-card rack.
+        LlmSpec {
+            name: "llama-3.1-70b",
+            family: "Llama-3.1",
+            vocab: 128_256,
+            d_model: 8192,
+            n_layers: 80,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_ff: 28_672,
+            moe: None,
+            precision: Precision::A4C4W2,
+            lmhead_shards: 8,
+            tied_colocated_lmhead: false,
+            context: 2048,
+        },
     ]
 }
 
@@ -219,6 +239,8 @@ mod tests {
         assert!((18.0..23.0).contains(&p20), "20b got {p20}");
         let p120 = by_name("gpt-oss-120b").total_params() as f64 / b;
         assert!((100.0..130.0).contains(&p120), "120b got {p120}");
+        let p70 = by_name("llama-3.1-70b").total_params() as f64 / b;
+        assert!((65.0..75.0).contains(&p70), "70b got {p70}");
     }
 
     #[test]

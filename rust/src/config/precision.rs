@@ -16,6 +16,10 @@ impl Precision {
     pub const A8C8W4: Precision = Precision { a_bits: 8, c_bits: 8, w_bits: 4 };
     /// Fully 4-bit — the Granite-3.1 3B configuration (Table I).
     pub const A4C4W4: Precision = Precision { a_bits: 4, c_bits: 4, w_bits: 4 };
+    /// 4-bit activations & caches, 2-bit weights — the regime that lets a
+    /// dense 70B-class model fit a single rack (§I; 2-bit weight accuracy
+    /// is the Fig 5 study).
+    pub const A4C4W2: Precision = Precision { a_bits: 4, c_bits: 4, w_bits: 2 };
     /// 8-bit everywhere (used by ablations).
     pub const A8C8W8: Precision = Precision { a_bits: 8, c_bits: 8, w_bits: 8 };
 
@@ -72,7 +76,12 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for p in [Precision::A8C8W4, Precision::A4C4W4, Precision::A8C8W8] {
+        for p in [
+            Precision::A8C8W4,
+            Precision::A4C4W4,
+            Precision::A8C8W8,
+            Precision::A4C4W2,
+        ] {
             assert_eq!(Precision::parse(&p.to_string()), Some(p));
         }
         assert_eq!(Precision::parse("a8-c8-w4"), Some(Precision::A8C8W4));

@@ -36,6 +36,7 @@ pub mod tokenizer;
 pub mod chip;
 pub mod mapper;
 pub mod pipeline;
+pub mod rack;
 pub mod runtime;
 pub mod service;
 pub mod metrics;

@@ -6,22 +6,39 @@
 //!                                                  Table II-style sim run
 //!   npserve power [--instances K]                  §VI-C power report
 //!   npserve serve [--artifacts DIR] [--addr A]     OpenAI endpoint over PJRT
+//!   npserve rack <3x8b|18x3b|1x70b> [--requests R] [--addr A]
+//!                                                  rack-scale multi-instance
+//!                                                  serving (§I configurations)
 //!   npserve selftest [--artifacts DIR]             load + run artifacts
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use npserve::api::ApiServer;
-use npserve::broker::Broker;
+use npserve::api::{AdmitDecision, Admission, ApiServer};
+use npserve::broker::{Broker, Task};
 use npserve::config::hw::RackSpec;
 use npserve::config::models::{find_model, model_zoo};
 use npserve::mapper::map_model;
 use npserve::metrics::BatchMetrics;
 use npserve::pipeline::sim::{simulate, SimConfig};
 use npserve::power::deployment_power;
+use npserve::rack::{deploy_paper_config, InstanceSpec, PaperConfig, RackService};
+use npserve::runtime::testmodel::ToyConfig;
 use npserve::runtime::Engine;
 use npserve::service::{LlmInstance, SharedEngine};
 use npserve::util::stats::{fmt_bytes, fmt_ops};
+
+/// Admit models that have at least one live consumer on their queue.
+fn consumer_admission(broker: &Arc<Broker>) -> Admission {
+    let broker = broker.clone();
+    Arc::new(move |model: &str| {
+        if broker.stats(model).consumers > 0 {
+            AdmitDecision::Accept
+        } else {
+            AdmitDecision::UnknownModel
+        }
+    })
+}
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
@@ -116,12 +133,113 @@ fn main() {
             let inst = LlmInstance::start(engine);
             let broker = Broker::new();
             let _worker = inst.serve_broker(broker.clone(), &model, vec![0, 1, 2], max_tokens);
-            let api = ApiServer::serve(&addr, broker).expect("bind");
+            // model-routed admission: requests for anything but the served
+            // model come back as `model_not_found` instead of hanging
+            let api = ApiServer::serve_routed(&addr, broker.clone(), consumer_admission(&broker))
+                .expect("bind");
             println!("OpenAI endpoint: http://{}/v1/chat/completions (model `{model}`)", api.addr());
             println!("Ctrl-C to stop.");
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
+        }
+        "rack" => {
+            let cfg_name = args.get(1).map(|s| s.as_str()).unwrap_or("3x8b");
+            let Some(cfg) = PaperConfig::parse(cfg_name) else {
+                eprintln!("unknown rack configuration `{cfg_name}`; available: 3x8b 18x3b 1x70b");
+                std::process::exit(1);
+            };
+            let requests = flag_u32(&args, "--requests", 12) as usize;
+            let svc = RackService::new(rack);
+            let mapping = cfg.mapping(&svc.spec).expect("paper mapping");
+            // 8B/3B serve live on the testmodel backend (real placement,
+            // toy numerics); the 70B is validated at the placement level.
+            let live = cfg != PaperConfig::OneLlama70b;
+            let ids = deploy_paper_config(&svc, cfg, |_| {
+                live.then(|| SharedEngine(Arc::new(ToyConfig::small().engine())))
+            })
+            .expect("paper configuration must place");
+            println!(
+                "{} -> {} instance(s) of {} ({} cards each), {}/{} cards leased",
+                cfg.label(),
+                ids.len(),
+                cfg.model(),
+                mapping.n_cards(),
+                svc.inventory().in_use(),
+                svc.inventory().total(),
+            );
+            for info in svc.instances() {
+                println!(
+                    "  instance {}: {:?} cards {}..{}",
+                    info.id,
+                    info.state,
+                    info.first_card,
+                    info.first_card + info.n_cards
+                );
+            }
+            // the §I capacity wall: one more instance is a typed rejection
+            match svc.deploy(InstanceSpec {
+                model: cfg.model().to_string(),
+                cards: mapping.n_cards(),
+                engine: None,
+                opts: Default::default(),
+                priorities: vec![0, 1, 2],
+                max_tokens: 16,
+            }) {
+                Err(e) => println!("one more instance is rejected: {e}"),
+                Ok(_) => println!("WARNING: overcommit was not rejected"),
+            }
+            if !live {
+                if flag(&args, "--addr").is_some() {
+                    eprintln!(
+                        "note: --addr ignored for 1x70b — this configuration is \
+                         placement-level only (no live engine to serve)"
+                    );
+                }
+            }
+            if live {
+                if let Some(addr) = flag(&args, "--addr") {
+                    let api = ApiServer::serve_routed(
+                        &addr,
+                        svc.broker().clone(),
+                        svc.admission(),
+                    )
+                    .expect("bind");
+                    println!(
+                        "front door: http://{}/v1/chat/completions (model `{}`)",
+                        api.addr(),
+                        cfg.model()
+                    );
+                    println!("Ctrl-C to stop.");
+                    loop {
+                        std::thread::sleep(std::time::Duration::from_secs(3600));
+                    }
+                }
+                // smoke traffic through the shared queue
+                let broker = svc.broker().clone();
+                let chans: Vec<_> = (0..requests)
+                    .map(|i| {
+                        broker.post(
+                            cfg.model(),
+                            Task {
+                                id: i as u64,
+                                priority: (i % 3) as u8,
+                                body: format!("req{i}:"),
+                                reply_to: 5000 + i as u64,
+                            },
+                        )
+                    })
+                    .collect();
+                let mut tokens = 0usize;
+                for ch in &chans {
+                    while ch.recv().is_some() {
+                        tokens += 1;
+                    }
+                }
+                println!("\nserved {requests} requests ({tokens} tokens) across the fleet:");
+                print!("{}", svc.fleet_metrics().report());
+            }
+            svc.shutdown_all();
         }
         "selftest" => {
             let dir = PathBuf::from(
@@ -145,7 +263,7 @@ fn main() {
         }
         _ => {
             println!("npserve {} — NorthPole LLM inference system reproduction", npserve::version());
-            println!("commands: map | simulate | power | serve | selftest  (see --help in README)");
+            println!("commands: map | simulate | power | serve | rack | selftest  (see --help in README)");
         }
     }
 }

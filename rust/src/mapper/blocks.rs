@@ -10,6 +10,9 @@ pub enum BlockKind {
     Attn { layer: usize },
     /// Dense MLP block of one layer.
     Mlp { layer: usize },
+    /// One tensor-parallel shard of a dense MLP too large for a single
+    /// card (the 70B regime: d_ff split across `of` cards).
+    MlpShard { layer: usize, shard: usize, of: usize },
     /// Attention + MLP of `count` consecutive layers fused on one card
     /// (small models, §II-C / [6]).
     FusedLayers { first: usize, count: usize },
@@ -34,6 +37,9 @@ impl Block {
         match &self.kind {
             BlockKind::Attn { layer } => format!("attn[{layer}]"),
             BlockKind::Mlp { layer } => format!("mlp[{layer}]"),
+            BlockKind::MlpShard { layer, shard, of } => {
+                format!("mlp[{layer}][{shard}/{of}]")
+            }
             BlockKind::FusedLayers { first, count } => {
                 format!("layers[{first}..{}]", first + count)
             }
@@ -72,6 +78,29 @@ pub fn mlp_block(m: &LlmSpec, layer: usize) -> Block {
     let params = 3 * (m.d_model * m.d_ff) as u64;
     Block {
         kind: BlockKind::Mlp { layer },
+        weight_bytes: p.weight_bytes(params),
+        kv_bytes_per_user: 0,
+        cost: BlockCost {
+            weight_bytes: p.weight_bytes(params),
+            ops_per_token: 2 * params,
+            attn_ops_per_ctx_token: 0,
+            kv_bytes_per_ctx_token: 0,
+            compute_bits: p.compute_bits(),
+            io_elems: m.d_model as u64,
+            a_bits: p.a_bits,
+        },
+    }
+}
+
+/// Build one tensor-parallel shard of an oversized dense MLP: the d_ff
+/// dimension is split `of` ways (gate/up column-sharded, down row-sharded),
+/// so weights divide evenly and every shard sees the full d_model
+/// activation.
+pub fn mlp_shard(m: &LlmSpec, layer: usize, shard: usize, of: usize) -> Block {
+    let p = m.precision;
+    let params = 3 * (m.d_model * m.d_ff) as u64 / of as u64;
+    Block {
+        kind: BlockKind::MlpShard { layer, shard, of },
         weight_bytes: p.weight_bytes(params),
         kv_bytes_per_user: 0,
         cost: BlockCost {

@@ -5,7 +5,9 @@ use crate::chip::timing::{pass_time, BlockCost, PassKind};
 use crate::config::hw::{ChipSpec, RackSpec, MB};
 use crate::config::models::LlmSpec;
 
-use super::blocks::{attn_block, expert_group, fused_block, lmhead_shard, mlp_block, Block};
+use super::blocks::{
+    attn_block, expert_group, fused_block, lmhead_shard, mlp_block, mlp_shard, Block,
+};
 
 #[derive(Debug)]
 pub enum MapError {
@@ -288,6 +290,12 @@ pub fn map_model(
                 l += count;
             }
         } else {
+            // An MLP block larger than a card is split d_ff-wise into the
+            // smallest TP group whose shards fit (the 70B regime).
+            let mlp_usable = chip.core_mem_bytes - EXPERT_RESERVE;
+            let mlp_shards = (mlp_block(model, 0).weight_bytes.div_ceil(mlp_usable) as usize)
+                .min(model.d_ff)
+                .max(1);
             for l in 0..model.n_layers {
                 let a = place(vec![attn_block(model, l, context as usize)], &mut cards)?;
                 stages.push(Stage {
@@ -295,12 +303,24 @@ pub fn map_model(
                     role: StageRole::Pipeline,
                     label: format!("attn[{l}]"),
                 });
-                let m = place(vec![mlp_block(model, l)], &mut cards)?;
-                stages.push(Stage {
-                    cards: vec![m],
-                    role: StageRole::Pipeline,
-                    label: format!("mlp[{l}]"),
-                });
+                if mlp_shards == 1 {
+                    let m = place(vec![mlp_block(model, l)], &mut cards)?;
+                    stages.push(Stage {
+                        cards: vec![m],
+                        role: StageRole::Pipeline,
+                        label: format!("mlp[{l}]"),
+                    });
+                } else {
+                    let mut group = Vec::new();
+                    for s in 0..mlp_shards {
+                        group.push(place(vec![mlp_shard(model, l, s, mlp_shards)], &mut cards)?);
+                    }
+                    stages.push(Stage {
+                        cards: group,
+                        role: StageRole::TensorParallel,
+                        label: format!("mlp[{l}][TPx{mlp_shards}]"),
+                    });
+                }
             }
         }
     }
@@ -471,6 +491,25 @@ mod tests {
             }
             assert_eq!(attn_layers, m.n_layers, "{}", m.name);
         }
+    }
+
+    /// §I: one instance of a dense 70B fills (and fits) a single rack.
+    /// The MLP blocks exceed one card and must come out TP-sharded.
+    #[test]
+    fn llama70b_fits_one_rack_with_sharded_mlp() {
+        let m = find_model("llama-3.1-70b").unwrap();
+        let map = map_model(&m, 28, 2048, &rack()).unwrap();
+        assert!(map.n_cards() <= rack().cards(), "got {} cards", map.n_cards());
+        assert_eq!(map.n_racks(&rack()), 1);
+        assert_eq!(map.instances_per_rack(&rack()), 1, "exactly one 70B per rack");
+        let mlp_tp: Vec<_> = map
+            .stages
+            .iter()
+            .filter(|s| s.label.starts_with("mlp[") && s.role == StageRole::TensorParallel)
+            .collect();
+        assert_eq!(mlp_tp.len(), m.n_layers, "every MLP must be TP-sharded");
+        assert!(mlp_tp.iter().all(|s| s.cards.len() >= 2));
+        assert_eq!(map.micro_batch, 1);
     }
 
     #[test]

@@ -100,6 +100,120 @@ impl BatchMetrics {
     }
 }
 
+// ------------------------------------------------------------- fleet view
+
+/// One registered instance's slice of the rack (rack::RackService).
+#[derive(Debug, Clone)]
+pub struct InstanceReport {
+    pub id: u64,
+    pub model: String,
+    /// First card of the instance's lease.
+    pub first_card: usize,
+    /// Cards leased by the instance.
+    pub n_cards: usize,
+    pub metrics: BatchMetrics,
+}
+
+/// Rack-aggregated serving metrics: per-instance and fleet TTFT/ITL/OTPS
+/// plus card utilization against the inventory (§VI-B, at rack scope).
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    pub instances: Vec<InstanceReport>,
+    pub cards_total: usize,
+    pub cards_leased: usize,
+}
+
+impl FleetMetrics {
+    /// Aggregate generation throughput: instances decode concurrently, so
+    /// fleet OTPS is the sum of per-instance OTPS.
+    pub fn otps(&self) -> f64 {
+        self.instances.iter().map(|i| i.metrics.otps).sum()
+    }
+
+    /// Sequences served across the fleet.
+    pub fn n_seqs(&self) -> usize {
+        self.instances.iter().map(|i| i.metrics.n_seqs).sum()
+    }
+
+    /// Fleet mean TTFT, weighted by each instance's sequence count
+    /// (0.0 when nothing was served yet).
+    pub fn mean_ttft(&self) -> f64 {
+        self.weighted_mean(|m| (m.ttft.sum(), m.ttft.count()))
+    }
+
+    /// Fleet mean ITL, weighted by per-instance ITL sample counts.
+    pub fn mean_itl(&self) -> f64 {
+        self.weighted_mean(|m| (m.itl.sum(), m.itl.count()))
+    }
+
+    fn weighted_mean(&self, pick: impl Fn(&BatchMetrics) -> (f64, usize)) -> f64 {
+        let (sum, count) = self
+            .instances
+            .iter()
+            .map(|i| pick(&i.metrics))
+            .fold((0.0, 0usize), |(s, c), (ps, pc)| (s + ps, c + pc));
+        if count == 0 {
+            0.0
+        } else {
+            sum / count as f64
+        }
+    }
+
+    /// Fraction of the rack's cards under lease.
+    pub fn card_utilization(&self) -> f64 {
+        if self.cards_total == 0 {
+            0.0
+        } else {
+            self.cards_leased as f64 / self.cards_total as f64
+        }
+    }
+
+    /// Generation throughput per leased card — the per-card efficiency the
+    /// rack design trades against latency.
+    pub fn otps_per_card(&self) -> f64 {
+        if self.cards_leased == 0 {
+            0.0
+        } else {
+            self.otps() / self.cards_leased as f64
+        }
+    }
+
+    /// Human-readable fleet report (one row per instance + totals).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "| inst | model            | cards    | seqs | TTFT ms | ITL ms | OTPS   |\n",
+        );
+        for i in &self.instances {
+            let ttft = i.metrics.ttft.mean();
+            let itl = i.metrics.itl.mean();
+            out.push_str(&format!(
+                "| {:>4} | {:<16} | {:>3}..{:<3} | {:>4} | {:>7.1} | {:>6.2} | {:>6.0} |\n",
+                i.id,
+                i.model,
+                i.first_card,
+                i.first_card + i.n_cards,
+                i.metrics.n_seqs,
+                if ttft.is_nan() { 0.0 } else { ttft * 1e3 },
+                if itl.is_nan() { 0.0 } else { itl * 1e3 },
+                i.metrics.otps,
+            ));
+        }
+        out.push_str(&format!(
+            "fleet: {} seqs | TTFT {:.1} ms | ITL {:.2} ms | OTPS {:.0} | \
+             {}/{} cards leased ({:.0}%)\n",
+            self.n_seqs(),
+            self.mean_ttft() * 1e3,
+            self.mean_itl() * 1e3,
+            self.otps(),
+            self.cards_leased,
+            self.cards_total,
+            100.0 * self.card_utilization(),
+        ));
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +263,37 @@ mod tests {
         let a = rec(0, 0.0, 0.1, 0.1, 5, vec![]);
         let m = BatchMetrics::from_records(&[a]);
         assert_eq!(m.itl.count(), 0);
+    }
+
+    #[test]
+    fn fleet_aggregates_across_instances() {
+        let inst = |id: u64, first_card: usize, recs: &[SeqRecord]| InstanceReport {
+            id,
+            model: "m".into(),
+            first_card,
+            n_cards: 16,
+            metrics: BatchMetrics::from_records(recs),
+        };
+        let a = [rec(0, 0.0, 0.1, 0.4, 10, vec![0.1, 0.1, 0.1])]; // otps 4/0.3
+        let b = [rec(1, 0.0, 0.2, 0.7, 10, vec![0.1; 4])]; // otps 5/0.5
+        let f = FleetMetrics {
+            instances: vec![inst(1, 0, &a), inst(2, 16, &b)],
+            cards_total: 288,
+            cards_leased: 32,
+        };
+        assert_eq!(f.n_seqs(), 2);
+        assert!((f.otps() - (4.0 / 0.3 + 5.0 / 0.5)).abs() < 1e-9);
+        assert!((f.mean_ttft() - 0.15).abs() < 1e-12);
+        assert!((f.mean_itl() - 0.1).abs() < 1e-12);
+        assert!((f.card_utilization() - 32.0 / 288.0).abs() < 1e-12);
+        assert!(f.otps_per_card() > 0.0);
+        let rep = f.report();
+        assert!(rep.contains("fleet:"), "{rep}");
+
+        // an empty fleet reports zeros, not NaN
+        let empty = FleetMetrics { instances: vec![], cards_total: 288, cards_leased: 0 };
+        assert_eq!(empty.otps(), 0.0);
+        assert_eq!(empty.mean_ttft(), 0.0);
+        assert_eq!(empty.card_utilization(), 0.0);
     }
 }

@@ -1,0 +1,302 @@
+//! The rack's shared card inventory: one pool of card slots (derived from
+//! `config::hw::RackSpec`) from which every instance leases a contiguous
+//! range sized by its `mapper::Mapping`. Placement is memory-truthful at
+//! the mapping level (the mapper already validated per-card fit); the
+//! inventory adds the *rack-level* constraint — leases may not overlap and
+//! may not exceed the pool — and fails loudly with a typed error on
+//! overcommit instead of panicking.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::hw::RackSpec;
+use crate::mapper::{MapError, Mapping};
+
+/// Rack orchestration errors. `Overcommit` is the §I capacity wall:
+/// a placement that does not fit the remaining card pool.
+#[derive(Debug)]
+pub enum RackError {
+    Overcommit {
+        model: String,
+        requested: usize,
+        /// Total free cards (may be fragmented across gaps).
+        available: usize,
+        /// Largest contiguous free range.
+        largest_gap: usize,
+        total: usize,
+    },
+    /// The front door saw a model no registered instance serves.
+    UnknownModel(String),
+    /// The model→card mapping itself failed (per-card memory fit).
+    Mapping(MapError),
+    NoSuchInstance(u64),
+    /// The operation needs a live (serving) instance, e.g. `drain`.
+    NotServing(u64),
+}
+
+impl fmt::Display for RackError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RackError::Overcommit { model, requested, available, largest_gap, total } => {
+                write!(
+                    f,
+                    "placement of `{model}` overcommits the rack: {requested} cards \
+                     requested, {available} of {total} free (largest contiguous range \
+                     {largest_gap})"
+                )
+            }
+            RackError::UnknownModel(m) => write!(f, "no instance serves model `{m}`"),
+            RackError::Mapping(e) => write!(f, "mapping failed: {e}"),
+            RackError::NoSuchInstance(id) => write!(f, "no instance with id {id}"),
+            RackError::NotServing(id) => write!(f, "instance {id} is not serving"),
+        }
+    }
+}
+
+impl std::error::Error for RackError {}
+
+impl From<MapError> for RackError {
+    fn from(e: MapError) -> RackError {
+        RackError::Mapping(e)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct LeasedRange {
+    id: u64,
+    first: usize,
+    count: usize,
+    model: String,
+}
+
+#[derive(Default)]
+struct InventoryState {
+    /// Active leases, sorted by `first`.
+    leases: Vec<LeasedRange>,
+}
+
+struct InventoryShared {
+    total: usize,
+    cards_per_node: usize,
+    state: Mutex<InventoryState>,
+    next_id: AtomicU64,
+}
+
+/// A leased contiguous card range. Dropping the lease returns the cards to
+/// the pool (the registry holds the lease for an instance's lifetime).
+pub struct CardLease {
+    shared: Arc<InventoryShared>,
+    pub id: u64,
+    pub first: usize,
+    pub count: usize,
+    pub model: String,
+}
+
+impl CardLease {
+    /// Global card indices covered by this lease.
+    pub fn cards(&self) -> std::ops::Range<usize> {
+        self.first..self.first + self.count
+    }
+
+    /// Server nodes this lease spans (inclusive range endpoints).
+    pub fn nodes(&self) -> (usize, usize) {
+        let per = self.shared.cards_per_node.max(1);
+        (self.first / per, (self.first + self.count - 1) / per)
+    }
+}
+
+impl fmt::Debug for CardLease {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CardLease")
+            .field("id", &self.id)
+            .field("first", &self.first)
+            .field("count", &self.count)
+            .field("model", &self.model)
+            .finish()
+    }
+}
+
+impl Drop for CardLease {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.leases.retain(|l| l.id != self.id);
+    }
+}
+
+/// The rack's card pool. Clone-free sharing happens through the leases
+/// (each holds an `Arc` of the internal state).
+pub struct CardInventory {
+    shared: Arc<InventoryShared>,
+}
+
+impl CardInventory {
+    pub fn new(rack: &RackSpec) -> CardInventory {
+        Self::with_cards(rack.cards(), rack.node.cards_per_node)
+    }
+
+    pub fn with_cards(total: usize, cards_per_node: usize) -> CardInventory {
+        CardInventory {
+            shared: Arc::new(InventoryShared {
+                total,
+                cards_per_node,
+                state: Mutex::new(InventoryState::default()),
+                next_id: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    /// Lease `count` contiguous cards (first-fit over the free gaps).
+    pub fn lease(&self, model: &str, count: usize) -> Result<CardLease, RackError> {
+        let mut st = self.shared.state.lock().unwrap();
+        if count == 0 || count > self.shared.total {
+            return Err(self.overcommit_err(&st, model, count));
+        }
+        // scan the gaps between sorted leases (plus head and tail)
+        let mut cursor = 0usize;
+        let mut at = None;
+        for l in &st.leases {
+            if l.first.saturating_sub(cursor) >= count {
+                at = Some(cursor);
+                break;
+            }
+            cursor = cursor.max(l.first + l.count);
+        }
+        if at.is_none() && self.shared.total.saturating_sub(cursor) >= count {
+            at = Some(cursor);
+        }
+        let Some(first) = at else {
+            return Err(self.overcommit_err(&st, model, count));
+        };
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        st.leases.push(LeasedRange { id, first, count, model: model.to_string() });
+        st.leases.sort_by_key(|l| l.first);
+        Ok(CardLease {
+            shared: self.shared.clone(),
+            id,
+            first,
+            count,
+            model: model.to_string(),
+        })
+    }
+
+    /// Lease the cards a mapping needs.
+    pub fn lease_for(&self, mapping: &Mapping) -> Result<CardLease, RackError> {
+        self.lease(mapping.model.name, mapping.n_cards())
+    }
+
+    fn overcommit_err(&self, st: &InventoryState, model: &str, requested: usize) -> RackError {
+        let in_use: usize = st.leases.iter().map(|l| l.count).sum();
+        RackError::Overcommit {
+            model: model.to_string(),
+            requested,
+            available: self.shared.total - in_use,
+            largest_gap: Self::largest_gap_of(st, self.shared.total),
+            total: self.shared.total,
+        }
+    }
+
+    fn largest_gap_of(st: &InventoryState, total: usize) -> usize {
+        let mut best = 0usize;
+        let mut cursor = 0usize;
+        for l in &st.leases {
+            best = best.max(l.first.saturating_sub(cursor));
+            cursor = cursor.max(l.first + l.count);
+        }
+        best.max(total.saturating_sub(cursor))
+    }
+
+    pub fn total(&self) -> usize {
+        self.shared.total
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.shared.state.lock().unwrap().leases.iter().map(|l| l.count).sum()
+    }
+
+    pub fn available(&self) -> usize {
+        self.shared.total - self.in_use()
+    }
+
+    pub fn largest_gap(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        Self::largest_gap_of(&st, self.shared.total)
+    }
+
+    /// Snapshot of active leases as (lease id, first card, count, model).
+    pub fn leases(&self) -> Vec<(u64, usize, usize, String)> {
+        self.shared
+            .state
+            .lock()
+            .unwrap()
+            .leases
+            .iter()
+            .map(|l| (l.id, l.first, l.count, l.model.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inv(total: usize) -> CardInventory {
+        CardInventory::with_cards(total, 16)
+    }
+
+    #[test]
+    fn leases_are_contiguous_and_first_fit() {
+        let i = inv(48);
+        let a = i.lease("m", 16).unwrap();
+        let b = i.lease("m", 16).unwrap();
+        assert_eq!(a.cards(), 0..16);
+        assert_eq!(b.cards(), 16..32);
+        assert_eq!(i.in_use(), 32);
+        assert_eq!(i.available(), 16);
+        // releasing the first lease opens the head gap for reuse
+        drop(a);
+        let c = i.lease("m", 8).unwrap();
+        assert_eq!(c.cards(), 0..8);
+        assert_eq!(i.in_use(), 24);
+    }
+
+    #[test]
+    fn overcommit_is_a_typed_error_not_a_panic() {
+        let i = inv(32);
+        let _a = i.lease("big", 24).unwrap();
+        match i.lease("big", 24) {
+            Err(RackError::Overcommit { requested, available, largest_gap, total, .. }) => {
+                assert_eq!(requested, 24);
+                assert_eq!(available, 8);
+                assert_eq!(largest_gap, 8);
+                assert_eq!(total, 32);
+            }
+            other => panic!("expected Overcommit, got {other:?}"),
+        }
+        // fragmentation: total free may exceed the largest gap
+        let b = i.lease("small", 4).unwrap();
+        drop(_a);
+        // free: [0..24] and [28..32] -> 28 free, largest gap 24
+        assert_eq!(i.available(), 28);
+        assert_eq!(i.largest_gap(), 24);
+        assert!(i.lease("m", 26).is_err());
+        assert!(i.lease("m", 24).is_ok());
+        drop(b);
+    }
+
+    #[test]
+    fn node_span_reporting() {
+        let i = inv(288);
+        let l = i.lease("granite-3.3-8b", 84).unwrap();
+        assert_eq!(l.nodes(), (0, 5)); // 84 cards = 6 nodes of 16
+        let l2 = i.lease("granite-3.3-8b", 84).unwrap();
+        assert_eq!(l2.nodes(), (5, 10));
+    }
+
+    #[test]
+    fn zero_and_oversized_requests_fail() {
+        let i = inv(8);
+        assert!(i.lease("m", 0).is_err());
+        assert!(i.lease("m", 9).is_err());
+    }
+}

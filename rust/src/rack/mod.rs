@@ -1,0 +1,169 @@
+//! Rack-scale orchestration (§I, §III, Table I): one 42U rack runs many
+//! LLM instances — 3× Granite-8B at 28 users each, 18× a 3B model, or 1×
+//! a 70B — behind one model-routed front door.
+//!
+//! * [`CardInventory`]: the shared card/slot pool derived from
+//!   `config::hw::RackSpec`; instances lease contiguous card ranges sized
+//!   by their `mapper::Mapping`, and overcommit is a typed
+//!   [`RackError::Overcommit`], never a panic.
+//! * [`RackService`] + instance registry: spawns, drains, and tears down
+//!   `LlmInstance`s that *borrow* leased resources (chain built on the
+//!   rack's shared driver) instead of self-allocating them.
+//! * Front door: `api::ApiServer::serve_routed` + the broker route each
+//!   request to the queue named by its `model`; per-model consumer groups
+//!   (the instances' `serve_broker` subscriptions) load-balance a model's
+//!   queue, and [`RackService::admit`] rejects unknown models and
+//!   saturated queues using broker depth/consumer introspection.
+
+mod inventory;
+mod registry;
+
+pub use inventory::{CardInventory, CardLease, RackError};
+pub use registry::{
+    InstanceInfo, InstanceSpec, InstanceState, RackService, ADMIT_QUEUE_FACTOR,
+};
+
+use crate::config::models::find_model;
+use crate::mapper::{map_model, Mapping};
+use crate::service::SharedEngine;
+
+/// The three canonical rack configurations the paper claims (§I, §VI-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaperConfig {
+    /// 3 simultaneous instances of Granite-3.3-8b, 28 users each.
+    ThreeGranite8b,
+    /// 18 simultaneous instances of the 3B model, 28 users each.
+    EighteenGranite3b,
+    /// 1 instance of a 70B model filling the rack.
+    OneLlama70b,
+}
+
+impl PaperConfig {
+    pub fn parse(s: &str) -> Option<PaperConfig> {
+        match s {
+            "3x8b" => Some(PaperConfig::ThreeGranite8b),
+            "18x3b" => Some(PaperConfig::EighteenGranite3b),
+            "1x70b" => Some(PaperConfig::OneLlama70b),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [PaperConfig; 3] {
+        [
+            PaperConfig::ThreeGranite8b,
+            PaperConfig::EighteenGranite3b,
+            PaperConfig::OneLlama70b,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PaperConfig::ThreeGranite8b => "3x8b",
+            PaperConfig::EighteenGranite3b => "18x3b",
+            PaperConfig::OneLlama70b => "1x70b",
+        }
+    }
+
+    pub fn model(&self) -> &'static str {
+        match self {
+            PaperConfig::ThreeGranite8b => "granite-3.3-8b",
+            PaperConfig::EighteenGranite3b => "granite-3.1-3b",
+            PaperConfig::OneLlama70b => "llama-3.1-70b",
+        }
+    }
+
+    pub fn instances(&self) -> usize {
+        match self {
+            PaperConfig::ThreeGranite8b => 3,
+            PaperConfig::EighteenGranite3b => 18,
+            PaperConfig::OneLlama70b => 1,
+        }
+    }
+
+    pub fn users(&self) -> u32 {
+        28
+    }
+
+    pub fn ctx(&self) -> u32 {
+        2048
+    }
+
+    /// The paper mapping of this configuration's model.
+    pub fn mapping(&self, rack: &crate::config::hw::RackSpec) -> Result<Mapping, RackError> {
+        let m = find_model(self.model())
+            .ok_or_else(|| RackError::UnknownModel(self.model().to_string()))?;
+        Ok(map_model(&m, self.users(), self.ctx(), rack)?)
+    }
+}
+
+/// Bring up a canonical configuration on a rack service. Every instance's
+/// placement is the real paper mapping (real card counts against the
+/// shared inventory); numerics come from `engine_for(i)` — `Some(engine)`
+/// deploys a live serving instance (e.g. the `runtime::testmodel` backend
+/// in CI), `None` registers the placement only (the 70B path: validated at
+/// the lease level). Returns the registered instance ids.
+pub fn deploy_paper_config(
+    svc: &RackService,
+    cfg: PaperConfig,
+    mut engine_for: impl FnMut(usize) -> Option<SharedEngine>,
+) -> Result<Vec<u64>, RackError> {
+    let mapping = cfg.mapping(&svc.spec)?;
+    let mut ids = Vec::with_capacity(cfg.instances());
+    for i in 0..cfg.instances() {
+        let spec = match engine_for(i) {
+            Some(engine) => InstanceSpec::live(cfg.model(), mapping.n_cards(), engine),
+            None => InstanceSpec::placement(&mapping),
+        };
+        ids.push(svc.deploy(spec)?);
+    }
+    Ok(ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hw::RackSpec;
+
+    /// §I / Table I: all three canonical configurations place against one
+    /// rack's inventory, and one instance more than each claims is a typed
+    /// overcommit error.
+    #[test]
+    fn paper_configs_place_and_overcommit_fails_loudly() {
+        for cfg in PaperConfig::all() {
+            let svc = RackService::new(RackSpec::northpole_42u());
+            let ids = deploy_paper_config(&svc, cfg, |_| None).expect(cfg.label());
+            assert_eq!(ids.len(), cfg.instances(), "{}", cfg.label());
+            let per = cfg.mapping(&svc.spec).unwrap().n_cards();
+            assert_eq!(svc.inventory().in_use(), per * cfg.instances());
+            // one more instance of the same model must be rejected
+            match svc.deploy(InstanceSpec {
+                model: cfg.model().to_string(),
+                cards: per,
+                engine: None,
+                opts: Default::default(),
+                priorities: vec![0],
+                max_tokens: 8,
+            }) {
+                Err(RackError::Overcommit { requested, total, .. }) => {
+                    assert_eq!(requested, per, "{}", cfg.label());
+                    assert_eq!(total, 288);
+                }
+                other => panic!("{}: expected Overcommit, got {other:?}", cfg.label()),
+            }
+            svc.shutdown_all();
+            assert_eq!(svc.inventory().in_use(), 0, "teardown must release cards");
+        }
+    }
+
+    #[test]
+    fn admit_rejects_unknown_models() {
+        let svc = RackService::new(RackSpec::northpole_42u());
+        assert_eq!(svc.admit("gpt-oss-20b"), crate::api::AdmitDecision::UnknownModel);
+        // placement-only instances have no serving capacity either
+        svc.place_model("llama-3.1-70b", 28, 2048).unwrap();
+        assert_eq!(
+            svc.admit("llama-3.1-70b"),
+            crate::api::AdmitDecision::UnknownModel
+        );
+    }
+}

@@ -1,0 +1,337 @@
+//! The instance registry + rack service: spawn, drain, and tear down N
+//! `LlmInstance`s — possibly of different models — against one shared card
+//! inventory, broker, and driver (§I: 3×8B, 18×3B, or 1×70B in one 42U
+//! rack).
+//!
+//! Ownership refactor (ISSUE 3): instances *borrow* their execution
+//! resources. The service leases cards from the [`CardInventory`], builds
+//! the card chain on the rack's shared [`Driver`]
+//! (`service::build_chain`), and hands the chain to
+//! `LlmInstance::start_on`; teardown retires the instance and the lease
+//! drop returns the cards to the pool.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::api::{AdmitDecision, Admission};
+use crate::broker::Broker;
+use crate::config::hw::RackSpec;
+use crate::config::models::find_model;
+use crate::driver::Driver;
+use crate::mapper::{map_model, Mapping};
+use crate::metrics::{BatchMetrics, FleetMetrics, InstanceReport};
+use crate::service::{build_chain, LlmInstance, ServeOptions, SharedEngine};
+
+use super::inventory::{CardInventory, CardLease, RackError};
+
+/// Admission holds while queue depth < capacity × this factor (capacity =
+/// the model's aggregate batch slots): one full wave may wait behind the
+/// wave being decoded. Beyond that every instance is saturated → 503.
+pub const ADMIT_QUEUE_FACTOR: usize = 2;
+
+/// Lifecycle of a registered instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Cards leased and placement validated; no live engine (the 70B
+    /// placement-level path).
+    Placed,
+    Serving,
+    Draining,
+}
+
+/// What to deploy: a model name (= broker queue), a card count (from the
+/// model's `Mapping`), and optionally a live engine. `engine: None`
+/// registers a placement-only instance — the lease is real, the numerics
+/// are not.
+pub struct InstanceSpec {
+    pub model: String,
+    pub cards: usize,
+    pub engine: Option<SharedEngine>,
+    pub opts: ServeOptions,
+    /// Priority levels this instance's consumer subscribes to (§IV
+    /// service-level entitlements).
+    pub priorities: Vec<u8>,
+    pub max_tokens: usize,
+}
+
+impl InstanceSpec {
+    /// Placement-level spec from a paper mapping (no live engine).
+    pub fn placement(mapping: &Mapping) -> InstanceSpec {
+        InstanceSpec {
+            model: mapping.model.name.to_string(),
+            cards: mapping.n_cards(),
+            engine: None,
+            opts: ServeOptions::default(),
+            priorities: vec![0, 1, 2],
+            max_tokens: 32,
+        }
+    }
+
+    /// Live spec: lease `cards` and serve `model` with the given engine.
+    /// The default token budget leaves prompt room even in the testmodel's
+    /// 32-token context (admission truncates prompts to ctx - budget - 1).
+    pub fn live(model: &str, cards: usize, engine: SharedEngine) -> InstanceSpec {
+        InstanceSpec {
+            model: model.to_string(),
+            cards,
+            engine: Some(engine),
+            opts: ServeOptions::default(),
+            priorities: vec![0, 1, 2],
+            max_tokens: 16,
+        }
+    }
+}
+
+struct InstanceEntry {
+    model: String,
+    lease: CardLease,
+    state: InstanceState,
+    instance: Option<Arc<LlmInstance>>,
+    worker: Option<JoinHandle<usize>>,
+    batch_slots: usize,
+}
+
+/// Registry snapshot row.
+#[derive(Debug, Clone)]
+pub struct InstanceInfo {
+    pub id: u64,
+    pub model: String,
+    pub state: InstanceState,
+    pub first_card: usize,
+    pub n_cards: usize,
+    pub batch_slots: usize,
+}
+
+/// The rack orchestrator: shared inventory + broker + driver, and the
+/// registry of instances leasing from them.
+pub struct RackService {
+    pub spec: RackSpec,
+    inventory: CardInventory,
+    broker: Arc<Broker>,
+    driver: Arc<Driver>,
+    reg: Mutex<BTreeMap<u64, InstanceEntry>>,
+    next_id: AtomicU64,
+}
+
+impl RackService {
+    pub fn new(spec: RackSpec) -> Arc<RackService> {
+        Self::with_broker(spec, Broker::new())
+    }
+
+    /// Share an existing broker (e.g. one front door over several racks).
+    pub fn with_broker(spec: RackSpec, broker: Arc<Broker>) -> Arc<RackService> {
+        Arc::new(RackService {
+            inventory: CardInventory::new(&spec),
+            spec,
+            broker,
+            driver: Driver::new(),
+            reg: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    pub fn broker(&self) -> &Arc<Broker> {
+        &self.broker
+    }
+
+    pub fn inventory(&self) -> &CardInventory {
+        &self.inventory
+    }
+
+    /// Deploy one instance: lease cards, and (if a live engine is given)
+    /// build its chain on the rack driver, start it, and subscribe it to
+    /// the model's queue. Fails with `RackError::Overcommit` when the pool
+    /// cannot fit the placement.
+    pub fn deploy(&self, spec: InstanceSpec) -> Result<u64, RackError> {
+        let lease = self.inventory.lease(&spec.model, spec.cards)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let entry = match spec.engine {
+            None => InstanceEntry {
+                model: spec.model,
+                lease,
+                state: InstanceState::Placed,
+                instance: None,
+                worker: None,
+                batch_slots: 0,
+            },
+            Some(engine) => {
+                let batch_slots = engine.manifest.batch_slots;
+                let chain = build_chain(&engine, &spec.opts, self.driver.clone());
+                let inst = LlmInstance::start_on(engine, chain, spec.opts);
+                let worker = inst.serve_broker(
+                    self.broker.clone(),
+                    &spec.model,
+                    spec.priorities,
+                    spec.max_tokens,
+                );
+                InstanceEntry {
+                    model: spec.model,
+                    lease,
+                    state: InstanceState::Serving,
+                    instance: Some(inst),
+                    worker: Some(worker),
+                    batch_slots,
+                }
+            }
+        };
+        self.reg.lock().unwrap().insert(id, entry);
+        Ok(id)
+    }
+
+    /// Map a zoo model at (users, ctx) and register its placement against
+    /// the inventory — the 70B-style placement/lease-level validation.
+    pub fn place_model(&self, name: &str, users: u32, ctx: u32) -> Result<u64, RackError> {
+        let m = find_model(name).ok_or_else(|| RackError::UnknownModel(name.to_string()))?;
+        let mapping = map_model(&m, users, ctx, &self.spec)?;
+        self.deploy(InstanceSpec::placement(&mapping))
+    }
+
+    pub fn instances(&self) -> Vec<InstanceInfo> {
+        self.reg
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, e)| InstanceInfo {
+                id: *id,
+                model: e.model.clone(),
+                state: e.state,
+                first_card: e.lease.first,
+                n_cards: e.lease.count,
+                batch_slots: e.batch_slots,
+            })
+            .collect()
+    }
+
+    /// Aggregate serving capacity of a model: Σ batch slots over its live
+    /// (serving, non-draining) instances.
+    pub fn capacity_of(&self, model: &str) -> usize {
+        self.reg
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|e| e.model == model && e.state == InstanceState::Serving)
+            .map(|e| e.batch_slots)
+            .sum()
+    }
+
+    /// Capacity-aware admission for the front door. A model nobody ever
+    /// deployed live is rejected outright (`model_not_found`); a known
+    /// model is admitted while its queue depth (broker introspection) has
+    /// room relative to the model's aggregate serving capacity — a model
+    /// whose instances are all draining has capacity 0 and saturates
+    /// immediately (503: retryable, unlike an unknown model).
+    pub fn admit(&self, model: &str) -> AdmitDecision {
+        let (known, capacity) = {
+            let reg = self.reg.lock().unwrap();
+            let mut known = false;
+            let mut cap = 0usize;
+            for e in reg.values() {
+                if e.model == model && e.instance.is_some() {
+                    known = true;
+                    if e.state == InstanceState::Serving {
+                        cap += e.batch_slots;
+                    }
+                }
+            }
+            (known, cap)
+        };
+        if !known {
+            return AdmitDecision::UnknownModel;
+        }
+        if capacity == 0 || self.broker.stats(model).depth >= capacity * ADMIT_QUEUE_FACTOR {
+            return AdmitDecision::Saturated;
+        }
+        AdmitDecision::Accept
+    }
+
+    /// The admission closure the API server plugs in front of the broker.
+    pub fn admission(self: &Arc<Self>) -> Admission {
+        let svc = self.clone();
+        Arc::new(move |model: &str| svc.admit(model))
+    }
+
+    /// Stop an instance from taking new tasks; its current batch finishes.
+    pub fn drain(&self, id: u64) -> Result<(), RackError> {
+        let mut reg = self.reg.lock().unwrap();
+        let e = reg.get_mut(&id).ok_or(RackError::NoSuchInstance(id))?;
+        let inst = e.instance.as_ref().ok_or(RackError::NotServing(id))?;
+        inst.request_drain();
+        e.state = InstanceState::Draining;
+        Ok(())
+    }
+
+    /// Retire an instance and return its cards to the pool. The model's
+    /// queue stays open — other instances keep serving it; when this was
+    /// the model's *last* live instance, tasks still queued are abandoned
+    /// (their clients' response channels finished) so no caller blocks on
+    /// a queue nobody consumes. Returns the number of tasks the instance
+    /// served.
+    pub fn teardown(&self, id: u64) -> Result<usize, RackError> {
+        let entry = self
+            .reg
+            .lock()
+            .unwrap()
+            .remove(&id)
+            .ok_or(RackError::NoSuchInstance(id))?;
+        if let Some(inst) = &entry.instance {
+            inst.retire();
+        }
+        let served = match entry.worker {
+            Some(w) => w.join().unwrap_or(0),
+            None => 0,
+        };
+        // The departing worker already swept the queue if it was the last
+        // consumer; re-check here (broker-wide, so instances of the same
+        // model on *other* racks sharing this broker count) to cover a
+        // worker that died without sweeping.
+        if entry.instance.is_some() && self.broker.stats(&entry.model).consumers == 0 {
+            self.broker.abandon_all(&entry.model);
+        }
+        drop(entry.lease); // cards back to the inventory
+        Ok(served)
+    }
+
+    /// Tear down every registered instance (placement-only ones included).
+    pub fn shutdown_all(&self) {
+        let ids: Vec<u64> = self.reg.lock().unwrap().keys().copied().collect();
+        for id in ids {
+            let _ = self.teardown(id);
+        }
+    }
+
+    /// Rack-aggregated serving metrics: per-instance batch metrics plus
+    /// the fleet view (metrics::FleetMetrics).
+    pub fn fleet_metrics(&self) -> FleetMetrics {
+        let reg = self.reg.lock().unwrap();
+        let instances = reg
+            .iter()
+            .map(|(id, e)| {
+                let recs = e
+                    .instance
+                    .as_ref()
+                    .map(|i| i.records.lock().unwrap().clone())
+                    .unwrap_or_default();
+                InstanceReport {
+                    id: *id,
+                    model: e.model.clone(),
+                    first_card: e.lease.first,
+                    n_cards: e.lease.count,
+                    metrics: BatchMetrics::from_records(&recs),
+                }
+            })
+            .collect();
+        FleetMetrics {
+            instances,
+            cards_total: self.inventory.total(),
+            cards_leased: self.inventory.in_use(),
+        }
+    }
+}
+
+impl Drop for RackService {
+    fn drop(&mut self) {
+        self.shutdown_all();
+    }
+}

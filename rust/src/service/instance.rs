@@ -19,7 +19,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::broker::{Broker, Task};
+use crate::broker::{Broker, Consumed, Task};
 use crate::consensus::Ring;
 use crate::driver::Driver;
 use crate::npruntime::{NpRuntime, StageExecutor};
@@ -119,34 +119,62 @@ pub struct LlmInstance {
     subscriptions: Mutex<Vec<(Arc<Broker>, String)>>,
     opts: ServeOptions,
     stop: AtomicBool,
+    /// Set by `request_drain`: stop pulling new broker tasks, finish what
+    /// was already consumed. In-flight generation is unaffected.
+    draining: AtomicBool,
     t0: Instant,
 }
 
+/// Build an instance's card chain (one LayerExecutor per layer + head) on
+/// the given driver and run the §IV-2 startup consensus across the
+/// "application containers". Standalone instances call this with a private
+/// `Driver::new()`; the rack orchestrator (`rack::RackService`) calls it
+/// with the rack's shared driver so the chain is built *from a card
+/// lease* rather than self-allocated.
+pub fn build_chain(
+    engine: &SharedEngine,
+    opts: &ServeOptions,
+    driver: Arc<Driver>,
+) -> Arc<NpRuntime> {
+    let n_layers = engine.manifest.n_layers;
+    // pipeline management: ring consensus over app containers
+    let ring = Ring::new(n_layers + 1);
+    let mut execs: Vec<Arc<dyn StageExecutor>> = Vec::new();
+    for l in 0..n_layers {
+        execs.push(if opts.resident_kv {
+            LayerExecutor::new(engine.clone(), l)
+        } else {
+            LayerExecutor::new_host_kv(engine.clone(), l)
+        });
+        ring.report_ready(l); // container configured its card
+    }
+    execs.push(HeadExecutor::new(engine.clone()));
+    ring.report_ready(n_layers);
+    ring.wait_committed();
+    Arc::new(NpRuntime::load_circuit(driver, 0, execs, 8))
+}
+
 impl LlmInstance {
-    /// Build the card chain (one LayerExecutor per layer + head) and run
-    /// the §IV-2 startup consensus across the "application containers".
+    /// Standalone start: self-allocate a driver and card chain.
     pub fn start(engine: SharedEngine) -> Arc<LlmInstance> {
         Self::start_with(engine, ServeOptions::default())
     }
 
     pub fn start_with(engine: SharedEngine, opts: ServeOptions) -> Arc<LlmInstance> {
-        let n_layers = engine.manifest.n_layers;
-        // pipeline management: ring consensus over app containers
-        let ring = Ring::new(n_layers + 1);
-        let mut execs: Vec<Arc<dyn StageExecutor>> = Vec::new();
-        for l in 0..n_layers {
-            execs.push(if opts.resident_kv {
-                LayerExecutor::new(engine.clone(), l)
-            } else {
-                LayerExecutor::new_host_kv(engine.clone(), l)
-            });
-            ring.report_ready(l); // container configured its card
-        }
-        execs.push(HeadExecutor::new(engine.clone()));
-        ring.report_ready(n_layers);
-        ring.wait_committed();
+        let chain = build_chain(&engine, &opts, Driver::new());
+        Self::start_on(engine, chain, opts)
+    }
 
-        let chain = Arc::new(NpRuntime::load_circuit(Driver::new(), 0, execs, 8));
+    /// Start on a chain built elsewhere — the instance *borrows* its
+    /// execution resources (driver, card chain) instead of owning their
+    /// allocation. This is the rack path: `rack::RackService` leases cards
+    /// from the shared inventory, builds the chain on the rack driver, and
+    /// hands it in.
+    pub fn start_on(
+        engine: SharedEngine,
+        chain: Arc<NpRuntime>,
+        opts: ServeOptions,
+    ) -> Arc<LlmInstance> {
         let sched = PacketScheduler::new(chain.clone());
         let (utx, urx) = mpsc::channel();
         Arc::new(LlmInstance {
@@ -161,6 +189,7 @@ impl LlmInstance {
             subscriptions: Mutex::new(Vec::new()),
             opts,
             stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
             t0: Instant::now(),
         })
     }
@@ -487,8 +516,16 @@ impl LlmInstance {
             .lock()
             .unwrap()
             .push((broker.clone(), queue.clone()));
+        // register synchronously, before the worker thread is scheduled:
+        // consumer-count-based admission must see the model as served the
+        // moment serve_broker returns, not when the OS first runs the
+        // thread
+        let consumer = broker.register_consumer(&queue);
         std::thread::spawn(move || {
             let mut served = 0usize;
+            // consumer registration guard: dropped (deregistered) when
+            // this worker exits
+            let _consumer = consumer;
             // release a waiting client whose task will not be served
             let abandon = |broker: &Broker, reply_to: u64| {
                 if let Some(ch) = broker.response(reply_to) {
@@ -497,12 +534,22 @@ impl LlmInstance {
                 broker.remove_response(reply_to);
             };
             loop {
-                if inst.stop.load(Ordering::Relaxed) {
+                if inst.stop.load(Ordering::Relaxed) || inst.draining.load(Ordering::Relaxed)
+                {
                     break;
                 }
-                // batch up available tasks, then drain the batch
-                let Some(task) = broker.consume(&queue, &priorities) else {
-                    break;
+                // batch up available tasks, then drain the batch. The
+                // bounded wait (not a blocking consume) keeps stop/drain
+                // flags live even when several instances share one queue
+                // and no task ever arrives for this one.
+                let task = match broker.consume_deadline(
+                    &queue,
+                    &priorities,
+                    Duration::from_millis(20),
+                ) {
+                    Consumed::Task(t) => t,
+                    Consumed::Empty => continue,
+                    Consumed::Closed => break,
                 };
                 if inst.stop.load(Ordering::Relaxed) {
                     abandon(&broker, task.reply_to);
@@ -557,14 +604,15 @@ impl LlmInstance {
                     break;
                 }
             }
-            if inst.stop.load(Ordering::Relaxed) {
-                // tasks still queued behind the one being served when the
-                // stop landed will never be consumed: release their
-                // clients too (shutdown() closed the queue, so no new
-                // consumers will pick them up)
-                while let Some(t) = broker.try_consume(&queue, &priorities) {
-                    abandon(&broker, t.reply_to);
-                }
+            // Deregister first, then decide whether queued clients must be
+            // released: if the queue is closed for good, or this was its
+            // last consumer (stop, drain, or close — a queue nobody
+            // consumes must not hold blocked callers), finish the waiting
+            // clients. When other consumers remain (rack drain/teardown of
+            // one of several instances), queued tasks are left for them.
+            drop(_consumer);
+            if broker.is_closed(&queue) || broker.stats(&queue).consumers == 0 {
+                broker.abandon_all(&queue);
             }
             served
         })
@@ -572,15 +620,43 @@ impl LlmInstance {
 
     /// Stop serving: the flag is observed by `serve_until_drained` (which
     /// abandons its in-flight window) and `serve_broker`; it propagates
-    /// into the card chain so workers stalled on backpressure exit too,
-    /// and every broker queue this instance subscribed to is closed so a
-    /// `serve_broker` thread parked in `consume` wakes up.
+    /// into the card chain so workers stalled on backpressure exit too.
+    /// Every broker queue this instance subscribed to is closed — the
+    /// sole-owner semantics (queued tasks are abandoned so clients don't
+    /// hang). For one of several instances sharing a queue, use
+    /// [`retire`](Self::retire) instead.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
         self.chain.request_stop();
         for (broker, queue) in self.subscriptions.lock().unwrap().iter() {
             broker.close(queue);
+            // Sweep tasks still queued: the worker may already have
+            // observed the stop flag and exited before this close landed
+            // (its own abandon drain only runs when it sees the queue
+            // closed), so finish leftover clients here to guarantee no
+            // caller blocks forever.
+            broker.abandon_all(queue);
         }
+    }
+
+    /// Stop consuming *new* broker tasks; the batch currently being served
+    /// completes normally. Unlike `shutdown`, this leaves the queues open —
+    /// other instances of the same model keep serving.
+    pub fn request_drain(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    /// Stop this instance without closing its broker queues: the rack
+    /// teardown path for one of several instances sharing a model queue.
+    /// (`serve_broker` threads observe the stop flag at their next bounded
+    /// wait; queued tasks stay available to the model's other consumers.)
+    pub fn retire(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.chain.request_stop();
     }
 
     pub fn manifest(&self) -> &crate::runtime::Manifest {

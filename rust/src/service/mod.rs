@@ -22,6 +22,6 @@ mod scheduler;
 
 pub use codec::{PacketHeader, PacketKind};
 pub use executors::{HeadExecutor, LayerExecutor, SharedEngine};
-pub use instance::{GenRequest, GenUpdate, LlmInstance, ServeOptions};
+pub use instance::{build_chain, GenRequest, GenUpdate, LlmInstance, ServeOptions};
 pub use sampler::Sampler;
 pub use scheduler::{CompletionRouter, PacketScheduler};
