@@ -47,9 +47,10 @@ struct Measured {
 }
 
 /// Serve one prompt to completion and meter the datapath. A single
-/// sequence keeps the decode-round count exact (one full-batch round per
-/// token after the prefill chunk), so byte counts are deterministic and
-/// the scaling assertion cannot flake on scheduler timing.
+/// sequence keeps the decode-packet count exact (one packet per token
+/// after the prefill chunk — a per-sequence [1,D] packet since ISSUE 4),
+/// so byte counts are deterministic and the scaling assertion cannot
+/// flake on scheduler timing.
 fn run(cfg: &ToyConfig, resident: bool, max_tokens: usize) -> Measured {
     let engine = SharedEngine(Arc::new(cfg.engine()));
     let inst = LlmInstance::start_with(

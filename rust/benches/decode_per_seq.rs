@@ -1,0 +1,191 @@
+//! Per-sequence decode benchmark (EXPERIMENTS.md §Per-seq-decode): mean
+//! inter-token latency, batched round vs per-sequence packets
+//! (micro-batch-1, §V-C), over the full serving stack on the stub-backend
+//! toy model — no PJRT artifacts needed, so this runs in every CI pass.
+//!
+//! The toy model charges a fixed amount of work **per attended row**
+//! (`ToyConfig::row_work_ns`), the real-hardware regime where a
+//! [B]-batched decode round costs B× a per-sequence packet:
+//!
+//! * **batched** (`ServeOptions { per_seq_decode: false }`): at most one
+//!   decode round in flight covering all slots — every token of every
+//!   sequence pays the full-batch round (masked rows included, even after
+//!   other slots retire), serialized through the whole chain;
+//! * **per-seq** (default): one in-flight packet per decoding slot — a
+//!   slot's round k+1 waits only on *its own* round k, so B sequences
+//!   pipeline through the chain and a retired slot stops costing anyone
+//!   anything.
+//!
+//! The workload mixes generation lengths so slots finish at different
+//! times (the regime the batched round hides: survivors keep paying for
+//! empty rows). Acceptance bars (ISSUE 4):
+//! * mean ITL improves ≥ 1.5× per-seq vs batched (full mode only; the
+//!   smoke run is too short to be timing-stable),
+//! * ≥ 2 decode packets concurrently in flight in per-seq mode
+//!   (structural — asserted in smoke mode too), exactly 1 in batched.
+//!
+//! Results land in BENCH_PR4.json §decode_per_seq.
+//!
+//!   cargo bench --bench decode_per_seq                     # full run
+//!   DECODE_PER_SEQ_SMOKE=1 cargo bench --bench decode_per_seq   # CI smoke
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use npserve::runtime::testmodel::ToyConfig;
+use npserve::service::{GenRequest, LlmInstance, ServeOptions, SharedEngine};
+use npserve::util::json::{merge_into_file, Value};
+
+/// Cargo runs bench binaries with cwd = the package root (rust/); the
+/// report lives one level up, at the repo root (EXPERIMENTS.md).
+fn report_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR4.json")
+}
+
+struct Measured {
+    /// Pooled mean inter-token gap across every sequence (seconds).
+    mean_itl_s: f64,
+    /// Most decode packets ever concurrently in flight.
+    decode_hwm: usize,
+    tokens: usize,
+    wall_s: f64,
+}
+
+/// Serve one mixed-length wave to completion and measure ITL.
+fn run(cfg: &ToyConfig, per_seq: bool, gen_lens: &[usize]) -> Measured {
+    let engine = SharedEngine(Arc::new(cfg.engine()));
+    let inst = LlmInstance::start_with(
+        engine,
+        ServeOptions { per_seq_decode: per_seq, ..Default::default() },
+    );
+    let req = |id: u64, max_tokens: usize| GenRequest {
+        id,
+        prompt: "ab".into(),
+        max_tokens,
+        temperature: 0.0,
+        top_k: 0,
+        stop_byte: None,
+    };
+    // warmup: primes the frame pool and the serving loop's row buffers
+    inst.submit(req(1000, 2));
+    inst.serve_until_drained();
+
+    let t0 = Instant::now();
+    for (i, &n) in gen_lens.iter().enumerate() {
+        inst.submit(req(i as u64, n));
+    }
+    let recs = inst.serve_until_drained();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let hwm = inst.decode_packets_hwm();
+    inst.shutdown();
+
+    let recs: Vec<_> = recs.iter().filter(|r| r.id != 1000).collect();
+    let tokens: usize = recs.iter().map(|r| r.n_out as usize).sum();
+    assert_eq!(
+        tokens,
+        gen_lens.iter().sum::<usize>(),
+        "every request must complete fully"
+    );
+    let (gap_sum, gap_n) = recs
+        .iter()
+        .flat_map(|r| r.itl_gaps.iter())
+        .fold((0.0f64, 0usize), |(s, n), &g| (s + g, n + 1));
+    assert!(gap_n > 0, "no inter-token gaps measured");
+    Measured {
+        mean_itl_s: gap_sum / gap_n as f64,
+        decode_hwm: hwm,
+        tokens,
+        wall_s,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("DECODE_PER_SEQ_SMOKE").is_ok();
+    let mut cfg = ToyConfig::small();
+    // per-attended-row model work: makes stage time proportional to rows
+    // processed, as on real hardware (see module docs)
+    cfg.row_work_ns = if smoke { 100_000 } else { 300_000 };
+    // mixed generation lengths: slots retire at different rounds
+    let gen_lens: Vec<usize> = if smoke {
+        vec![10, 7, 4, 2]
+    } else {
+        vec![28, 20, 12, 6]
+    };
+    assert_eq!(gen_lens.len(), cfg.batch_slots);
+
+    println!(
+        "== decode per-seq: toy model, {} layers, B={}, {} µs/row, gen lens {:?} ==",
+        cfg.n_layers,
+        cfg.batch_slots,
+        cfg.row_work_ns / 1000,
+        gen_lens
+    );
+    let batched = run(&cfg, false, &gen_lens);
+    println!(
+        "  batched round (1 in flight)   ITL {:>8.2} ms  hwm {}  ({} toks in {:.2}s)",
+        batched.mean_itl_s * 1e3,
+        batched.decode_hwm,
+        batched.tokens,
+        batched.wall_s
+    );
+    let per_seq = run(&cfg, true, &gen_lens);
+    println!(
+        "  per-seq packets (micro-b-1)   ITL {:>8.2} ms  hwm {}  ({} toks in {:.2}s)",
+        per_seq.mean_itl_s * 1e3,
+        per_seq.decode_hwm,
+        per_seq.tokens,
+        per_seq.wall_s
+    );
+    let improvement = batched.mean_itl_s / per_seq.mean_itl_s;
+    println!("  -> mean ITL improvement {improvement:.2}x (bar: ≥ 1.5x)");
+    println!(
+        "  -> decode packets concurrently in flight: batched {} (must be 1), per-seq {} (bar: ≥ 2)",
+        batched.decode_hwm, per_seq.decode_hwm
+    );
+
+    let section = Value::obj(vec![
+        ("layers", Value::num(cfg.n_layers as f64)),
+        ("batch_slots", Value::num(cfg.batch_slots as f64)),
+        ("row_work_ns", Value::num(cfg.row_work_ns as f64)),
+        ("tokens", Value::num(per_seq.tokens as f64)),
+        ("batched_itl_ms", Value::num(batched.mean_itl_s * 1e3)),
+        ("per_seq_itl_ms", Value::num(per_seq.mean_itl_s * 1e3)),
+        ("itl_improvement", Value::num(improvement)),
+        ("batched_decode_hwm", Value::num(batched.decode_hwm as f64)),
+        ("per_seq_decode_hwm", Value::num(per_seq.decode_hwm as f64)),
+        ("batched_wall_s", Value::num(batched.wall_s)),
+        ("per_seq_wall_s", Value::num(per_seq.wall_s)),
+        ("smoke", Value::Bool(smoke)),
+    ]);
+    match merge_into_file(&report_path(), "decode_per_seq", section) {
+        Ok(()) => println!("\nwrote BENCH_PR4.json §decode_per_seq"),
+        Err(e) => eprintln!("\ncould not write BENCH_PR4.json: {e}"),
+    }
+
+    let mut failed = false;
+    if per_seq.decode_hwm < 2 {
+        eprintln!(
+            "FAIL: per-seq decode never pipelined (hwm {} < 2)",
+            per_seq.decode_hwm
+        );
+        failed = true;
+    }
+    if batched.decode_hwm != 1 {
+        eprintln!(
+            "FAIL: batched baseline kept {} decode rounds in flight (must be 1)",
+            batched.decode_hwm
+        );
+        failed = true;
+    }
+    if !smoke && improvement < 1.5 {
+        eprintln!(
+            "FAIL: per-seq ITL improvement {improvement:.2}x below the 1.5x acceptance bar"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("decode_per_seq OK");
+}

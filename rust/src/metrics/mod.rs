@@ -42,6 +42,10 @@ impl BatchMetrics {
             n_in += s.n_in as u64;
             n_out += s.n_out as u64;
             ttft.add(s.t_first - s.t_start);
+            // single-token completions have no inter-token gap: they must
+            // not enter the ITL distribution at all (a 0.0 sample would
+            // deflate per-instance means and, through the count-weighted
+            // fleet aggregation, FleetMetrics::mean_itl)
             if !s.itl_gaps.is_empty() {
                 itl.add(s.itl_gaps.iter().sum::<f64>() / s.itl_gaps.len() as f64);
             }
@@ -263,6 +267,40 @@ mod tests {
         let a = rec(0, 0.0, 0.1, 0.1, 5, vec![]);
         let m = BatchMetrics::from_records(&[a]);
         assert_eq!(m.itl.count(), 0);
+    }
+
+    /// Regression (ISSUE 4): an instance serving many single-token
+    /// completions (empty gap vectors) must not drag the fleet ITL mean
+    /// toward zero — empty-gap records contribute no ITL samples, so the
+    /// count-weighted fleet aggregation sees only real gaps.
+    #[test]
+    fn fleet_itl_not_deflated_by_single_token_completions() {
+        let gappy = [rec(0, 0.0, 0.1, 0.4, 10, vec![0.1, 0.1, 0.1])];
+        // ten single-token completions: real ITL samples: none
+        let stubby: Vec<SeqRecord> =
+            (0..10).map(|i| rec(10 + i, 0.0, 0.05, 0.05, 3, vec![])).collect();
+        let inst = |id: u64, recs: &[SeqRecord]| InstanceReport {
+            id,
+            model: "m".into(),
+            first_card: 0,
+            n_cards: 16,
+            metrics: BatchMetrics::from_records(recs),
+        };
+        let f = FleetMetrics {
+            instances: vec![inst(1, &gappy), inst(2, &stubby)],
+            cards_total: 288,
+            cards_leased: 32,
+        };
+        // the only ITL evidence in the fleet is the 0.1 s gaps
+        assert!((f.mean_itl() - 0.1).abs() < 1e-12, "deflated: {}", f.mean_itl());
+        // and a fleet with *only* single-token completions reports 0.0
+        // (no evidence), never NaN
+        let empty_itl = FleetMetrics {
+            instances: vec![inst(1, &stubby)],
+            cards_total: 288,
+            cards_leased: 16,
+        };
+        assert_eq!(empty_itl.mean_itl(), 0.0);
     }
 
     #[test]

@@ -64,6 +64,19 @@ fn sig_list(v: &Value) -> Result<Vec<TensorSig>> {
 }
 
 impl Manifest {
+    /// Whether the artifacts ship the full per-sequence decode kernel set
+    /// (§V-C micro-batch 1): `embed_decode_seq` plus slot-indexed
+    /// attention/MLP decode stages for every layer. Older artifact sets
+    /// only ship the [B]-batched decode kernels; the serving loop falls
+    /// back to the batched round when any per-seq stage is missing.
+    pub fn has_per_seq_decode(&self) -> bool {
+        self.stages.contains_key("embed_decode_seq")
+            && (0..self.n_layers).all(|l| {
+                self.stages.contains_key(&format!("attn_decode_seq_{l}"))
+                    && self.stages.contains_key(&format!("mlp_decode_seq_{l}"))
+            })
+    }
+
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {path:?}"))?;
@@ -157,5 +170,15 @@ mod tests {
     fn missing_fields_error() {
         assert!(Manifest::parse("{}").is_err());
         assert!(Manifest::parse("{\"model\": \"x\"}").is_err());
+    }
+
+    #[test]
+    fn per_seq_decode_detection() {
+        // batched-only artifact set: no per-seq kernels
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(!m.has_per_seq_decode());
+        // the stub-backend toy model ships the full per-seq set
+        let toy = crate::runtime::testmodel::ToyConfig::small().manifest();
+        assert!(toy.has_per_seq_decode());
     }
 }

@@ -35,6 +35,11 @@ pub struct ToyConfig {
     pub shard_vocab: usize,
     pub prefill_chunk: usize,
     pub kv_scale: f32,
+    /// Deterministic busy-work per *attended row* in the attention stages
+    /// (nanoseconds). 0 for unit tests; benches set it so stage service
+    /// time is proportional to rows processed — the real-hardware regime
+    /// where a [B]-batched decode round costs B× a per-sequence packet.
+    pub row_work_ns: u64,
 }
 
 impl ToyConfig {
@@ -52,6 +57,7 @@ impl ToyConfig {
             shard_vocab: 16,
             prefill_chunk: 4,
             kv_scale: 0.05,
+            row_work_ns: 0,
         }
     }
 
@@ -86,6 +92,10 @@ impl ToyConfig {
             sig(vec![i32s(vec![b])], vec![f32s(vec![b, d])]),
         );
         stages.insert(
+            "embed_decode_seq".to_string(),
+            sig(vec![i32s(vec![1])], vec![f32s(vec![1, d])]),
+        );
+        stages.insert(
             "embed_prefill".to_string(),
             sig(vec![i32s(vec![1, t])], vec![f32s(vec![1, t, d])]),
         );
@@ -105,6 +115,26 @@ impl ToyConfig {
             stages.insert(
                 format!("mlp_decode_{l}"),
                 sig(vec![f32s(vec![b, d])], vec![f32s(vec![b, d])]),
+            );
+            // per-sequence decode (micro-batch-1, §V-C): one row, the
+            // slot and cache position arrive as scalars off the packet
+            // header instead of masked [B] rows
+            stages.insert(
+                format!("attn_decode_seq_{l}"),
+                sig(
+                    vec![
+                        f32s(vec![1, d]),
+                        i8s(kv.clone()),
+                        i8s(kv.clone()),
+                        i32s(vec![]),
+                        i32s(vec![]),
+                    ],
+                    vec![f32s(vec![1, d]), i8s(kv.clone()), i8s(kv.clone())],
+                ),
+            );
+            stages.insert(
+                format!("mlp_decode_seq_{l}"),
+                sig(vec![f32s(vec![1, d])], vec![f32s(vec![1, d])]),
             );
             stages.insert(
                 format!("attn_prefill_{l}"),
@@ -173,6 +203,14 @@ impl ToyConfig {
             }),
         );
         stages.insert(
+            "embed_decode_seq".to_string(),
+            xla::PjRtLoadedExecutable::from_host_fn(move |args| {
+                let tok = args[0].to_vec::<i32>()?[0];
+                let h: Vec<f32> = (0..cfg.d_model).map(|d| embed(tok, d)).collect();
+                Ok(vec![lit_f32(&[1, cfg.d_model], &h)?])
+            }),
+        );
+        stages.insert(
             "embed_prefill".to_string(),
             xla::PjRtLoadedExecutable::from_host_fn(move |args| {
                 let toks = args[0].to_vec::<i32>()?;
@@ -212,8 +250,35 @@ impl ToyConfig {
                 format!("mlp_decode_{l}"),
                 xla::PjRtLoadedExecutable::from_host_fn(move |args| {
                     let h = args[0].to_vec::<f32>()?;
-                    let out = mlp(&h, l);
+                    let out = mlp(&h, l, cfg.d_model);
                     Ok(vec![lit_f32(&[cfg.batch_slots, cfg.d_model], &out)?])
+                }),
+            );
+            let shape = kv_shape.clone();
+            stages.insert(
+                format!("attn_decode_seq_{l}"),
+                xla::PjRtLoadedExecutable::from_host_fn(move |args| {
+                    let mut h = args[0].to_vec::<f32>()?; // [1, D]
+                    let mut kc = args[1].to_vec::<i8>()?;
+                    let mut vc = args[2].to_vec::<i8>()?;
+                    let slot =
+                        (args[3].to_vec::<i32>()?[0].max(0) as usize).min(cfg.batch_slots - 1);
+                    let p = (args[4].to_vec::<i32>()?[0].max(0) as usize)
+                        .min(cfg.max_context - 1);
+                    attn_token(&cfg, l, &mut kc, &mut vc, slot, p, &mut h);
+                    Ok(vec![
+                        lit_f32(&[1, cfg.d_model], &h)?,
+                        lit_i8(&shape, &kc)?,
+                        lit_i8(&shape, &vc)?,
+                    ])
+                }),
+            );
+            stages.insert(
+                format!("mlp_decode_seq_{l}"),
+                xla::PjRtLoadedExecutable::from_host_fn(move |args| {
+                    let h = args[0].to_vec::<f32>()?;
+                    let out = mlp(&h, l, cfg.d_model);
+                    Ok(vec![lit_f32(&[1, cfg.d_model], &out)?])
                 }),
             );
             let shape = kv_shape.clone();
@@ -242,7 +307,7 @@ impl ToyConfig {
                 format!("mlp_prefill_{l}"),
                 xla::PjRtLoadedExecutable::from_host_fn(move |args| {
                     let h = args[0].to_vec::<f32>()?;
-                    let out = mlp(&h, l);
+                    let out = mlp(&h, l, cfg.d_model);
                     Ok(vec![lit_f32(&[1, cfg.prefill_chunk, cfg.d_model], &out)?])
                 }),
             );
@@ -289,10 +354,17 @@ fn lm_w(j: usize, v: usize, d: usize) -> f32 {
     ((((j * 16 + v) * 131 + d * 17) % 23) as f32 - 11.0) * 0.01
 }
 
-fn mlp(h: &[f32], l: usize) -> Vec<f32> {
+/// Per-row toy MLP. The positional term is **row-local** (`i % d` — the
+/// feature index within the row), never the row's offset in the batch
+/// buffer: a hidden row must transform identically whether it travels in a
+/// [B, D] batched round, a [1, D] per-sequence packet, or a [1, T, D]
+/// prefill chunk. (The earlier flat-index form made outputs depend on
+/// which slot a row happened to occupy, which broke slot isolation and
+/// batched-vs-per-sequence equivalence on the stub backend.)
+fn mlp(h: &[f32], l: usize, d: usize) -> Vec<f32> {
     h.iter()
         .enumerate()
-        .map(|(i, x)| x * 0.9 + 0.013 * l as f32 + 0.001 * (i % 7) as f32)
+        .map(|(i, x)| x * 0.9 + 0.013 * l as f32 + 0.001 * ((i % d) % 7) as f32)
         .collect()
 }
 
@@ -309,6 +381,15 @@ fn attn_token(
     p: usize,
     row: &mut [f32],
 ) {
+    // model compute cost per processed row: a batched round pays this for
+    // every one of its B rows (masked ones included), a per-sequence
+    // packet exactly once
+    if cfg.row_work_ns > 0 {
+        let t0 = std::time::Instant::now();
+        while (t0.elapsed().as_nanos() as u64) < cfg.row_work_ns {
+            std::hint::spin_loop();
+        }
+    }
     let (hk_n, dh_n, c, d_model) = (cfg.n_kv_heads, cfg.d_head, cfg.max_context, cfg.d_model);
     let q = |x: f32| (x / cfg.kv_scale).round().clamp(-127.0, 127.0) as i8;
     for hk in 0..hk_n {
@@ -357,7 +438,10 @@ mod tests {
         let cfg = ToyConfig::small();
         let eng = cfg.engine();
         let m = &eng.manifest;
-        assert_eq!(m.stages.len(), 2 + 4 * cfg.n_layers + 2 * cfg.lmhead_shards);
+        // embed_decode + embed_decode_seq + embed_prefill, 6 per-layer
+        // stages (batched/per-seq/prefill × attn/mlp), 2 head variants
+        // per shard
+        assert_eq!(m.stages.len(), 3 + 6 * cfg.n_layers + 2 * cfg.lmhead_shards);
         let toks = Tensor::i32(vec![m.batch_slots], vec![3; m.batch_slots]);
         let out = eng.run("embed_decode", &[toks]).unwrap();
         assert_eq!(out[0].shape, vec![m.batch_slots, m.d_model]);
@@ -389,6 +473,69 @@ mod tests {
             .run("attn_decode_0", &[h.clone(), kc.clone(), vc.clone(), Tensor::i32(vec![b], vec![1; b])])
             .unwrap();
         assert_ne!(out1_fresh[0].data, out1[0].data);
+    }
+
+    /// The per-sequence kernels are the batched kernels restricted to one
+    /// slot: driving each slot through `embed_decode_seq` →
+    /// `attn_decode_seq` must reproduce the batched round's row and the
+    /// exact same cache lines for that slot, step after step.
+    #[test]
+    fn per_seq_stages_match_batched_rows_and_cache() {
+        let cfg = ToyConfig::small();
+        let eng = cfg.engine();
+        let b = cfg.batch_slots;
+        let d = cfg.d_model;
+        let mut kc_batch = Tensor::zeros(cfg.kv_shape(), crate::runtime::DType::I8);
+        let mut vc_batch = kc_batch.clone();
+        let mut kc_seq = kc_batch.clone();
+        let mut vc_seq = vc_batch.clone();
+        for step in 0..6i32 {
+            let toks: Vec<i32> = (0..b as i32).map(|s| 3 + s * 5 + step).collect();
+            // batched round over all B slots
+            let h = eng
+                .run("embed_decode", &[Tensor::i32(vec![b], toks.clone())])
+                .unwrap()
+                .remove(0);
+            let pos = Tensor::i32(vec![b], vec![step; b]);
+            let mut out = eng
+                .run("attn_decode_0", &[h, kc_batch, vc_batch, pos])
+                .unwrap();
+            vc_batch = out.pop().unwrap();
+            kc_batch = out.pop().unwrap();
+            let h_batch = out.pop().unwrap();
+            let h_batch = eng.run("mlp_decode_0", &[h_batch]).unwrap().remove(0);
+            // the same step as B independent per-sequence packets
+            for s in 0..b {
+                let h1 = eng
+                    .run("embed_decode_seq", &[Tensor::i32(vec![1], vec![toks[s]])])
+                    .unwrap()
+                    .remove(0);
+                let mut out = eng
+                    .run(
+                        "attn_decode_seq_0",
+                        &[
+                            h1,
+                            kc_seq,
+                            vc_seq,
+                            Tensor::scalar_i32(s as i32),
+                            Tensor::scalar_i32(step),
+                        ],
+                    )
+                    .unwrap();
+                vc_seq = out.pop().unwrap();
+                kc_seq = out.pop().unwrap();
+                let h1 = out.pop().unwrap();
+                let h1 = eng.run("mlp_decode_seq_0", &[h1]).unwrap().remove(0);
+                assert_eq!(
+                    h1.data,
+                    h_batch.data[s * d * 4..(s + 1) * d * 4],
+                    "slot {s} row diverged at step {step}"
+                );
+            }
+            // every slot decoded this step, so the full caches agree
+            assert_eq!(kc_seq.data, kc_batch.data, "K cache diverged at step {step}");
+            assert_eq!(vc_seq.data, vc_batch.data, "V cache diverged at step {step}");
+        }
     }
 
     #[test]

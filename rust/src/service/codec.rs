@@ -21,14 +21,19 @@ pub enum PacketKind {
     Decode = 0,
     /// Prefill chunk for one slot: payload = h [1,T,D] f32.
     Prefill = 1,
+    /// Per-sequence decode step (micro-batch-1, §V-C): payload = h [1,D]
+    /// f32 only — the slot and cache position ride the header, so no
+    /// masked dummy rows and no positions tensor travel the chain.
+    DecodeSeq = 2,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PacketHeader {
     pub kind: PacketKind,
-    /// Cache slot (prefill only).
+    /// Cache slot (prefill and per-sequence decode).
     pub slot: i32,
-    /// Absolute position of the chunk start (prefill only).
+    /// Absolute position: chunk start (prefill) or the token's cache
+    /// write position (per-sequence decode).
     pub pos_off: i32,
     /// Index of the last valid token within the chunk (prefill only);
     /// the head executor reads the hidden state at this row.
@@ -44,6 +49,12 @@ impl PacketHeader {
 
     pub fn decode_step() -> Self {
         PacketHeader { kind: PacketKind::Decode, slot: 0, pos_off: 0, last_idx: 0, flags: 0 }
+    }
+
+    /// One sequence's decode step: `slot` owns the cache lines, `pos` is
+    /// the token's write position.
+    pub fn decode_seq(slot: i32, pos: i32) -> Self {
+        PacketHeader { kind: PacketKind::DecodeSeq, slot, pos_off: pos, last_idx: 0, flags: 0 }
     }
 
     pub fn prefill(slot: i32, pos_off: i32, last_idx: i32, is_final: bool) -> Self {
@@ -91,6 +102,7 @@ impl PacketHeader {
         let kind = match bytes[0] {
             0 => PacketKind::Decode,
             1 => PacketKind::Prefill,
+            2 => PacketKind::DecodeSeq,
             k => bail!("bad packet kind {k}"),
         };
         let slot = i32::from_le_bytes(bytes[1..5].try_into()?);
@@ -145,6 +157,18 @@ mod tests {
         assert_eq!(h2.kind, PacketKind::Decode);
         assert!(!h2.is_final_chunk());
         assert!(ts.is_empty());
+    }
+
+    #[test]
+    fn decode_seq_header_carries_slot_and_position() {
+        let h = PacketHeader::decode_seq(2, 17);
+        let t = Tensor::f32(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let (h2, ts) = PacketHeader::decode(&h.encode(&[&t])).unwrap();
+        assert_eq!(h2.kind, PacketKind::DecodeSeq);
+        assert_eq!(h2.slot, 2);
+        assert_eq!(h2.pos_off, 17);
+        assert!(!h2.is_final_chunk());
+        assert_eq!(ts, vec![t]);
     }
 
     #[test]

@@ -56,6 +56,8 @@ pub struct LayerExecutor {
     /// path allocates no strings.
     attn_decode: String,
     mlp_decode: String,
+    attn_decode_seq: String,
+    mlp_decode_seq: String,
     attn_prefill: String,
     mlp_prefill: String,
 }
@@ -100,6 +102,8 @@ impl LayerExecutor {
             cache: Mutex::new(cache),
             attn_decode: format!("attn_decode_{layer}"),
             mlp_decode: format!("mlp_decode_{layer}"),
+            attn_decode_seq: format!("attn_decode_seq_{layer}"),
+            mlp_decode_seq: format!("mlp_decode_seq_{layer}"),
             attn_prefill: format!("attn_prefill_{layer}"),
             mlp_prefill: format!("mlp_prefill_{layer}"),
         })
@@ -189,6 +193,43 @@ impl StageExecutor for LayerExecutor {
                 // clone of the tensor, just a re-encode off the frame
                 hdr.encode_into(&[&h as &dyn WireEncode, &positions], out)
             }
+            PacketKind::DecodeSeq => {
+                // payload: h [1,D]; slot + position ride the header —
+                // this packet touches exactly one sequence's cache lines
+                // (micro-batch-1), no masked rows. Slot/position are
+                // header data off the wire: validate them loudly (the
+                // `bad packet` convention, as for prefill `last_idx`) —
+                // a silent clamp would overwrite another sequence's KV.
+                let m = &self.engine.manifest;
+                if usize::try_from(hdr.slot).map_or(true, |s| s >= m.batch_slots) {
+                    panic!(
+                        "bad packet: decode_seq slot {} outside [0, {})",
+                        hdr.slot, m.batch_slots
+                    );
+                }
+                if usize::try_from(hdr.pos_off).map_or(true, |p| p >= m.max_context) {
+                    panic!(
+                        "bad packet: decode_seq position {} outside [0, {})",
+                        hdr.pos_off, m.max_context
+                    );
+                }
+                let mut it = views.into_iter();
+                let h = it.next().expect("h");
+                let slot = Tensor::scalar_i32(hdr.slot);
+                let pos = Tensor::scalar_i32(hdr.pos_off);
+                let h = self.attn(
+                    &self.attn_decode_seq,
+                    &mut cache,
+                    h,
+                    &[slot.view(), pos.view()],
+                );
+                let h = self
+                    .engine
+                    .run(&self.mlp_decode_seq, &[h])
+                    .expect("mlp_decode_seq")
+                    .remove(0);
+                hdr.encode_into(&[&h as &dyn WireEncode], out)
+            }
             PacketKind::Prefill => {
                 // payload: h [1,T,D]
                 let mut it = views.into_iter();
@@ -275,6 +316,14 @@ impl StageExecutor for HeadExecutor {
                 let rows = h.shape[0];
                 let all = self.logits(&self.lmhead, h); // [B, V]
                 let logits = F32Slice { shape: vec![rows, m.vocab], data: &all };
+                hdr.encode_into(&[&logits as &dyn WireEncode], out)
+            }
+            PacketKind::DecodeSeq => {
+                // payload: h [1,D] — one sequence, one full-vocab logits
+                // row via the single-row TP head shards
+                let h = views.into_iter().next().expect("h");
+                let all = self.logits(&self.lmhead1, h); // [1, V]
+                let logits = F32Slice { shape: vec![1, m.vocab], data: &all };
                 hdr.encode_into(&[&logits as &dyn WireEncode], out)
             }
             PacketKind::Prefill => {
@@ -439,6 +488,112 @@ mod tests {
         let mut args = [StageArg::View(row.view())];
         let expect0 = e.run_args("lmhead1_0", &mut args).unwrap().remove(0);
         assert_eq!(&ts[0].as_f32()[..cfg.shard_vocab], &expect0.as_f32()[..]);
+    }
+
+    /// Per-sequence packets through the card chain are the batched round
+    /// restricted to one slot: with every slot decoding each step, a
+    /// batched-driven executor and a per-seq-driven executor must hold
+    /// byte-identical resident caches and produce matching hidden rows.
+    #[test]
+    fn per_seq_layer_packets_match_batched_rows() {
+        let cfg = ToyConfig::small();
+        let e = shared(&cfg);
+        let batched = LayerExecutor::new(e.clone(), 0);
+        let per_seq = LayerExecutor::new(e.clone(), 0);
+        assert!(batched.is_resident() && per_seq.is_resident());
+        let b = cfg.batch_slots;
+        let d = cfg.d_model;
+        for stepi in 0..6 {
+            let toks: Vec<i32> = (0..b as i32).map(|s| 2 + 7 * s + stepi).collect();
+            let h = e
+                .run("embed_decode", &[Tensor::i32(vec![b], toks.clone())])
+                .unwrap()
+                .remove(0);
+            let pos = Tensor::i32(vec![b], vec![stepi; b]);
+            let packet = PacketHeader::decode_step().encode(&[&h, &pos]);
+            let out = step(batched.as_ref(), &packet);
+            let (_, ts) = PacketHeader::decode(&out).unwrap();
+            let h_batch = ts[0].as_f32(); // [B, D]
+            for s in 0..b {
+                let h1 = e
+                    .run("embed_decode_seq", &[Tensor::i32(vec![1], vec![toks[s]])])
+                    .unwrap()
+                    .remove(0);
+                let hdr = PacketHeader::decode_seq(s as i32, stepi);
+                let out = step(per_seq.as_ref(), &hdr.encode(&[&h1]));
+                let (oh, ts) = PacketHeader::decode(&out).unwrap();
+                // header forwarded intact for the next card in the chain
+                assert_eq!(oh, hdr);
+                assert_eq!(ts[0].shape, vec![1, d]);
+                assert_eq!(
+                    ts[0].as_f32(),
+                    &h_batch[s * d..(s + 1) * d],
+                    "slot {s} diverged at step {stepi}"
+                );
+            }
+        }
+    }
+
+    /// The head's per-sequence path: one [1,D] row in, the full-vocab
+    /// logits row out — matching the corresponding row of a batched head
+    /// dispatch.
+    #[test]
+    fn head_per_seq_logits_match_batched_row() {
+        let cfg = ToyConfig::small();
+        let e = shared(&cfg);
+        let head = HeadExecutor::new(e.clone());
+        let b = cfg.batch_slots;
+        let toks: Vec<i32> = (0..b as i32).map(|s| 11 + s).collect();
+        let h = e
+            .run("embed_decode", &[Tensor::i32(vec![b], toks.clone())])
+            .unwrap()
+            .remove(0);
+        let pos = Tensor::i32(vec![b], vec![0; b]);
+        let out = step(head.as_ref(), &PacketHeader::decode_step().encode(&[&h, &pos]));
+        let (_, ts) = PacketHeader::decode(&out).unwrap();
+        let batch_logits = ts[0].as_f32(); // [B, V]
+        let v = cfg.vocab();
+        for s in 0..b {
+            let h1 = e
+                .run("embed_decode_seq", &[Tensor::i32(vec![1], vec![toks[s]])])
+                .unwrap()
+                .remove(0);
+            let hdr = PacketHeader::decode_seq(s as i32, 0);
+            let out = step(head.as_ref(), &hdr.encode(&[&h1]));
+            let (_, ts) = PacketHeader::decode(&out).unwrap();
+            assert_eq!(ts[0].shape, vec![1, v]);
+            assert_eq!(ts[0].as_f32(), &batch_logits[s * v..(s + 1) * v], "slot {s}");
+        }
+    }
+
+    /// A lying DecodeSeq header must fail loudly (the `bad packet`
+    /// convention), never silently clamp into another sequence's cache.
+    #[test]
+    #[should_panic(expected = "bad packet: decode_seq slot")]
+    fn decode_seq_rejects_out_of_range_slot() {
+        let cfg = ToyConfig::small();
+        let e = shared(&cfg);
+        let layer = LayerExecutor::new(e.clone(), 0);
+        let h = e
+            .run("embed_decode_seq", &[Tensor::i32(vec![1], vec![1])])
+            .unwrap()
+            .remove(0);
+        let hdr = PacketHeader::decode_seq(cfg.batch_slots as i32, 0);
+        step(layer.as_ref(), &hdr.encode(&[&h]));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad packet: decode_seq position")]
+    fn decode_seq_rejects_out_of_range_position() {
+        let cfg = ToyConfig::small();
+        let e = shared(&cfg);
+        let layer = LayerExecutor::new(e.clone(), 0);
+        let h = e
+            .run("embed_decode_seq", &[Tensor::i32(vec![1], vec![1])])
+            .unwrap()
+            .remove(0);
+        let hdr = PacketHeader::decode_seq(0, -1);
+        step(layer.as_ref(), &hdr.encode(&[&h]));
     }
 
     #[test]

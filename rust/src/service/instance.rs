@@ -14,7 +14,7 @@
 //! whole chain drains.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -48,7 +48,10 @@ pub struct GenRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub enum GenUpdate {
     Token { id: u64, token: u32, text: String },
-    Done { id: u64, n_in: usize, n_out: usize, ttft_s: f64, itl_s: f64 },
+    /// `itl_s` is `None` for single-token completions: one token has no
+    /// inter-token gap, and reporting it as `0.0` deflated downstream ITL
+    /// averages.
+    Done { id: u64, n_in: usize, n_out: usize, ttft_s: f64, itl_s: Option<f64> },
 }
 
 #[derive(Debug, Clone)]
@@ -61,11 +64,23 @@ pub struct ServeOptions {
     /// host round-trip baseline, kept for A/B measurement
     /// (`decode_datapath` bench).
     pub resident_kv: bool,
+    /// Decode every sequence as its own packet (the paper's §V-C
+    /// micro-batch-1 regime): one in-flight decode packet **per decoding
+    /// slot**, each slot's round k+1 gated only on its own round k, so B
+    /// sequences pipeline through the card chain concurrently. `false`
+    /// selects the single batched round (at most one decode packet in
+    /// flight, covering all slots), kept as the measured baseline
+    /// (`decode_per_seq` bench).
+    pub per_seq_decode: bool,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { poll: Duration::from_millis(5), resident_kv: true }
+        ServeOptions {
+            poll: Duration::from_millis(5),
+            resident_kv: true,
+            per_seq_decode: true,
+        }
     }
 }
 
@@ -102,6 +117,39 @@ enum PendingOp {
     Prefill { slot: usize, is_final: bool },
     /// One batched decode round covering the listed (decoding) slots.
     Decode { covered: Vec<usize> },
+    /// One sequence's decode step (micro-batch-1): the packet carries only
+    /// `slot`'s row, so other slots' rounds stay in flight concurrently.
+    DecodeSeq { slot: usize },
+}
+
+/// Pop the logits tensor off a completion frame (one copy: bytes → f32
+/// values), then recycle the frame to the pool.
+fn take_logits(sched: &PacketScheduler<PendingOp>, data: Vec<u8>, what: &str) -> Vec<f32> {
+    let logits = {
+        let (_, mut ts) = PacketHeader::decode_views(&data).expect(what);
+        ts.pop().expect("logits").to_f32_vec()
+    };
+    sched.recycle(data);
+    logits
+}
+
+/// Forward one generation update to its broker response channel
+/// (`serve_broker`'s streaming contract); `served` counts completions.
+fn pump_update(broker: &Broker, served: &AtomicUsize, u: GenUpdate) {
+    match u {
+        GenUpdate::Token { id, text, .. } => {
+            if let Some(ch) = broker.response(id) {
+                ch.send(text);
+            }
+        }
+        GenUpdate::Done { id, .. } => {
+            if let Some(ch) = broker.response(id) {
+                ch.finish();
+            }
+            broker.remove_response(id);
+            served.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 /// The running instance.
@@ -122,6 +170,15 @@ pub struct LlmInstance {
     /// Set by `request_drain`: stop pulling new broker tasks, finish what
     /// was already consumed. In-flight generation is unaffected.
     draining: AtomicBool,
+    /// High-water mark of decode packets *outstanding* — submitted, with
+    /// the completion not yet routed — (cumulative across serving runs).
+    /// Batched rounds cap this at 1; the per-sequence regime reaches up
+    /// to `batch_slots`. This is the host-side structural signal that the
+    /// serving loop keeps per-slot packets concurrently submitted (the
+    /// `decode_per_seq` bench's bar); true stage-level chain concurrency
+    /// is measured separately by the scheduler's Meter unit test and by
+    /// the bench's full-mode ITL bar.
+    decode_hwm: AtomicUsize,
     t0: Instant,
 }
 
@@ -175,6 +232,17 @@ impl LlmInstance {
         chain: Arc<NpRuntime>,
         opts: ServeOptions,
     ) -> Arc<LlmInstance> {
+        let mut opts = opts;
+        if opts.per_seq_decode && !engine.manifest.has_per_seq_decode() {
+            // loud, like the resident-KV fallback: silently serving the
+            // batched round would look like a per-seq latency regression
+            eprintln!(
+                "instance[{}]: artifacts ship no per-sequence decode kernels; \
+                 falling back to the batched decode round",
+                engine.manifest.model
+            );
+            opts.per_seq_decode = false;
+        }
         let sched = PacketScheduler::new(chain.clone());
         let (utx, urx) = mpsc::channel();
         Arc::new(LlmInstance {
@@ -190,8 +258,16 @@ impl LlmInstance {
             opts,
             stop: AtomicBool::new(false),
             draining: AtomicBool::new(false),
+            decode_hwm: AtomicUsize::new(0),
             t0: Instant::now(),
         })
+    }
+
+    /// Most decode packets ever observed concurrently outstanding —
+    /// submitted with completions not yet routed (1 in the batched
+    /// baseline; up to `batch_slots` in the per-sequence regime).
+    pub fn decode_packets_hwm(&self) -> usize {
+        self.decode_hwm.load(Ordering::Relaxed)
     }
 
     pub fn submit(&self, req: GenRequest) {
@@ -282,6 +358,40 @@ impl LlmInstance {
         PacketHeader::decode_step().encode_into(&[&h as &dyn WireEncode, &pos], frame);
     }
 
+    /// Host-side embed of one sequence's decode step (micro-batch-1),
+    /// encoded into a pooled `frame`: a [1,D] row plus a header carrying
+    /// the slot and cache position — no masked dummy rows travel the
+    /// chain.
+    fn encode_decode_seq(&self, token: i32, slot: usize, position: usize, frame: &mut Vec<u8>) {
+        let h = self
+            .engine
+            .run("embed_decode_seq", &[Tensor::i32(vec![1], vec![token])])
+            .expect("embed_decode_seq")
+            .remove(0);
+        PacketHeader::decode_seq(slot as i32, position as i32)
+            .encode_into(&[&h as &dyn WireEncode], frame);
+    }
+
+    /// One decode completion for `slot`: sample its logits row, advance
+    /// the cache position, stream the token, and retire the slot when
+    /// finished. Shared by the batched round (per covered slot) and the
+    /// per-sequence path.
+    fn complete_decode_token(
+        &self,
+        slots: &mut [Option<SlotState>],
+        slot: usize,
+        row: &[f32],
+    ) {
+        let st = slots[slot].as_mut().expect("decode for empty slot");
+        let tok = st.sampler.sample(row);
+        st.position += 1;
+        let full = self.push_token(st, tok);
+        if full {
+            let st = slots[slot].take().unwrap();
+            self.finish_slot(st);
+        }
+    }
+
     /// Stream one sampled token and decide whether the slot is finished.
     fn push_token(&self, st: &mut SlotState, tok: u32) -> bool {
         let now = Instant::now();
@@ -311,10 +421,12 @@ impl LlmInstance {
             .t_first
             .map(|t| t.duration_since(st.t_submit).as_secs_f64())
             .unwrap_or(0.0);
+        // a single-token completion has no inter-token gap: report None,
+        // not a fake 0.0 that deflates downstream ITL averages
         let itl = if st.gaps.is_empty() {
-            0.0
+            None
         } else {
-            st.gaps.iter().sum::<f64>() / st.gaps.len() as f64
+            Some(st.gaps.iter().sum::<f64>() / st.gaps.len() as f64)
         };
         let _ = self.updates_tx.send(GenUpdate::Done {
             id: st.req.id,
@@ -346,24 +458,37 @@ impl LlmInstance {
     /// (or `shutdown` is called). Returns per-sequence records (real
     /// wall-clock metrics).
     ///
-    /// The loop keeps the card chain full: at most one decode round is in
-    /// flight (round k+1 needs round k's sampled tokens), and every spare
-    /// entry credit carries a prefill chunk of a filling slot, so new
-    /// prompts stream through the chain *between* decode packets instead
-    /// of stalling the mini-batch.
+    /// The loop keeps the card chain full. In the per-sequence regime
+    /// (default — the paper's §V-C micro-batch 1) every decoding slot
+    /// keeps **its own** decode packet in flight: a slot's round k+1 is
+    /// gated only on its own round k, so B sequences pipeline through the
+    /// chain concurrently and no user waits on another user's token. The
+    /// batched baseline keeps at most one decode round in flight covering
+    /// all slots. Either way, every spare entry credit carries a prefill
+    /// chunk of a filling slot, so new prompts stream through the chain
+    /// *between* decode packets instead of stalling the mini-batch.
     pub fn serve_until_drained(&self) -> Vec<SeqRecord> {
         let b = self.engine.manifest.batch_slots;
         let vocab = self.engine.manifest.vocab;
         let max_ctx = self.engine.manifest.max_context;
         let mut sched = self.sched.lock().unwrap();
         let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
-        // row buffers reused across rounds — no per-round allocation on
-        // the hot path (the embed tensor copy is unavoidable: the packet
-        // owns its bytes)
-        let mut tokens = vec![0i32; b];
-        let mut positions = vec![0i32; b];
+        // batched-round row buffers, reused across rounds — no per-round
+        // allocation on the hot path (the embed tensor copy is
+        // unavoidable: the packet owns its bytes). The per-seq regime
+        // never touches them, so it skips the allocation too.
+        let (mut tokens, mut positions) = if self.opts.per_seq_decode {
+            (Vec::new(), Vec::new())
+        } else {
+            (vec![0i32; b], vec![0i32; b])
+        };
+        // batched baseline: the single round in flight. Per-seq regime:
+        // which slots have their own decode packet in flight.
         let mut decode_in_flight = false;
+        let mut seq_in_flight = vec![false; b];
+        let mut seq_in_flight_n = 0usize;
         let mut rr = 0usize; // round-robin cursor over filling slots
+        let mut drr = 0usize; // round-robin cursor over decoding slots
 
         loop {
             if self.stop.load(Ordering::Relaxed) {
@@ -382,8 +507,60 @@ impl LlmInstance {
                 slots[s] = Some(self.admit(req));
             }
 
-            // ---- inject a decode round over the decoding slots ----------
-            if !decode_in_flight && sched.has_capacity() {
+            // ---- inject decode work -------------------------------------
+            if self.opts.per_seq_decode {
+                // one packet per decoding slot whose previous round came
+                // back — each slot re-enters the chain independently. The
+                // round-robin cursor keeps injection fair when entry
+                // credits are scarcer than decoding slots (a fixed 0..b
+                // scan would let low-index slots monopolize the chain).
+                // When any slot is still filling, one entry credit is
+                // reserved for its prefill chunks: with decoding slots ≥
+                // the credit window, an uncapped decode loop would eat
+                // every freed credit and newly admitted prompts would
+                // never enter the chain.
+                let reserve = u32::from(
+                    slots
+                        .iter()
+                        .any(|s| s.as_ref().is_some_and(|st| st.fill.is_some())),
+                );
+                // snapshot the cursor: drr moves on each submit, and a
+                // mid-scan base would skip ready slots within this pass
+                let start = drr;
+                for off in 0..b {
+                    if sched.chain().credits_available() <= reserve {
+                        break;
+                    }
+                    let s = (start + off) % b;
+                    if seq_in_flight[s] {
+                        continue;
+                    }
+                    let Some(st) = slots[s].as_ref() else { continue };
+                    if !st.decoding {
+                        continue;
+                    }
+                    let mut frame = sched.frame();
+                    self.encode_decode_seq(
+                        st.last_token as i32,
+                        s,
+                        st.position,
+                        &mut frame,
+                    );
+                    match sched.try_submit(0, frame, PendingOp::DecodeSeq { slot: s }) {
+                        Ok(_) => {
+                            seq_in_flight[s] = true;
+                            seq_in_flight_n += 1;
+                            self.decode_hwm.fetch_max(seq_in_flight_n, Ordering::Relaxed);
+                            drr = (s + 1) % b;
+                        }
+                        Err((frame, _)) => {
+                            sched.recycle(frame);
+                            break; // backpressure: retry next pass
+                        }
+                    }
+                }
+            } else if !decode_in_flight && sched.has_capacity() {
+                // ---- batched baseline: one round over the decoding slots
                 let covered: Vec<usize> = (0..b)
                     .filter(|&s| slots[s].as_ref().is_some_and(|st| st.decoding))
                     .collect();
@@ -401,7 +578,10 @@ impl LlmInstance {
                     let mut frame = sched.frame();
                     self.encode_decode_round(&tokens, &positions, &mut frame);
                     match sched.try_submit(0, frame, PendingOp::Decode { covered }) {
-                        Ok(_) => decode_in_flight = true,
+                        Ok(_) => {
+                            decode_in_flight = true;
+                            self.decode_hwm.fetch_max(1, Ordering::Relaxed);
+                        }
                         Err((frame, _)) => sched.recycle(frame),
                     }
                 }
@@ -455,14 +635,7 @@ impl LlmInstance {
                         sched.recycle(data);
                         continue; // intermediate chunk ack
                     }
-                    // read the logits straight off the frame (one copy:
-                    // bytes → f32 values), then recycle it
-                    let logits = {
-                        let (_, mut ts) =
-                            PacketHeader::decode_views(&data).expect("prefill out");
-                        ts.pop().expect("logits").to_f32_vec()
-                    };
-                    sched.recycle(data);
+                    let logits = take_logits(&sched, data, "prefill out");
                     let st = slots[slot].as_mut().expect("prefill for empty slot");
                     st.position = st.n_in;
                     let first = st.sampler.sample(&logits);
@@ -476,23 +649,20 @@ impl LlmInstance {
                 }
                 PendingOp::Decode { covered } => {
                     decode_in_flight = false;
-                    let logits = {
-                        let (_, mut ts) =
-                            PacketHeader::decode_views(&data).expect("decode out");
-                        ts.pop().expect("logits").to_f32_vec() // [B, V]
-                    };
-                    sched.recycle(data);
+                    let logits = take_logits(&sched, data, "decode out"); // [B, V]
                     for &s in &covered {
-                        let st = slots[s].as_mut().expect("decode for empty slot");
-                        let row = &logits[s * vocab..(s + 1) * vocab];
-                        let tok = st.sampler.sample(row);
-                        st.position += 1;
-                        let full = self.push_token(st, tok);
-                        if full {
-                            let st = slots[s].take().unwrap();
-                            self.finish_slot(st);
-                        }
+                        self.complete_decode_token(
+                            &mut slots,
+                            s,
+                            &logits[s * vocab..(s + 1) * vocab],
+                        );
                     }
+                }
+                PendingOp::DecodeSeq { slot } => {
+                    seq_in_flight[slot] = false;
+                    seq_in_flight_n -= 1;
+                    let logits = take_logits(&sched, data, "decode_seq out"); // [1, V]
+                    self.complete_decode_token(&mut slots, slot, &logits);
                 }
             }
         }
@@ -503,6 +673,23 @@ impl LlmInstance {
     /// (or `shutdown` is called). Each consumed task is streamed back on
     /// its response channel as raw token text messages followed by an
     /// empty finish.
+    ///
+    /// The returned handle yields the number of completions this worker's
+    /// streamer pumped. With several `serve_broker` workers sharing one
+    /// instance, completions are credited to whichever worker's streamer
+    /// holds the instance-wide `updates` receiver at the time — only the
+    /// sum across workers is meaningful per instance.
+    ///
+    /// Streaming is **live**: a dedicated streamer thread pumps `updates`
+    /// to the response channels *while* generation is still in flight, so
+    /// a client sees its first token when it is sampled — not after the
+    /// whole batch drains (DeepServe's per-request streaming contract;
+    /// the old in-loop drain made client-observed TTFT equal the batch's
+    /// full drain time). The `updates` receiver is owned by one streamer
+    /// at a time (`try_lock`, instance-wide channel): with several
+    /// workers on one instance, whichever streamer holds it pumps every
+    /// worker's updates, and the others stand by without blocking their
+    /// workers' shutdown.
     pub fn serve_broker(
         self: &Arc<Self>,
         broker: Arc<Broker>,
@@ -522,7 +709,6 @@ impl LlmInstance {
         // thread
         let consumer = broker.register_consumer(&queue);
         std::thread::spawn(move || {
-            let mut served = 0usize;
             // consumer registration guard: dropped (deregistered) when
             // this worker exits
             let _consumer = consumer;
@@ -533,6 +719,72 @@ impl LlmInstance {
                 }
                 broker.remove_response(reply_to);
             };
+            // ---- live streamer: updates -> response channels, started
+            // before any generation and joined before any abandon sweep
+            let served = Arc::new(AtomicUsize::new(0));
+            let gen_done = Arc::new(AtomicBool::new(false));
+            let streamer = {
+                let inst = inst.clone();
+                let broker = broker.clone();
+                let served = served.clone();
+                let gen_done = gen_done.clone();
+                std::thread::spawn(move || {
+                    // try_lock, never a blocking lock: with several
+                    // serve_broker workers on one instance the receiver
+                    // is owned by whichever streamer got there first —
+                    // that one pumps every worker's updates (the channel
+                    // is instance-wide), and this streamer must still
+                    // exit promptly when its own worker finishes, or the
+                    // worker's streamer.join() would hang for the other
+                    // worker's whole lifetime.
+                    loop {
+                        if let Ok(updates) = inst.updates.try_lock() {
+                            loop {
+                                // read BEFORE the recv, applied after it:
+                                // a steady token stream from another
+                                // worker sharing this instance must not
+                                // starve the exit check (our worker's
+                                // streamer.join() would hang for that
+                                // worker's whole lifetime)
+                                let done = gen_done.load(Ordering::Relaxed);
+                                match updates.recv_timeout(Duration::from_millis(5)) {
+                                    Ok(u) => pump_update(&broker, &served, u),
+                                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                                }
+                                if done {
+                                    // our worker finished: everything it
+                                    // produced is already queued — drain
+                                    // and hand the receiver over
+                                    while let Ok(u) = updates.try_recv() {
+                                        pump_update(&broker, &served, u);
+                                    }
+                                    break;
+                                }
+                            }
+                            break;
+                        }
+                        if gen_done.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                })
+            };
+            // Bound the streamer's life to this worker even if generation
+            // panics: an unwound worker never reaches the explicit
+            // gen_done store below, and an orphaned streamer would spin
+            // forever holding the `updates` mutex.
+            struct SetOnDrop(Arc<AtomicBool>);
+            impl Drop for SetOnDrop {
+                fn drop(&mut self) {
+                    self.0.store(true, Ordering::Relaxed);
+                }
+            }
+            let _gen_done_guard = SetOnDrop(gen_done.clone());
+            // tasks consumed but not completed when a stop interrupted the
+            // worker; their clients are released after the streamer drains
+            let mut interrupted: Vec<u64> = Vec::new();
             loop {
                 if inst.stop.load(Ordering::Relaxed) || inst.draining.load(Ordering::Relaxed)
                 {
@@ -552,7 +804,7 @@ impl LlmInstance {
                     Consumed::Closed => break,
                 };
                 if inst.stop.load(Ordering::Relaxed) {
-                    abandon(&broker, task.reply_to);
+                    interrupted.push(task.reply_to);
                     break;
                 }
                 let mut batch: Vec<Task> = vec![task];
@@ -572,37 +824,42 @@ impl LlmInstance {
                         stop_byte: Some(b';'),
                     });
                 }
+                // tokens stream to the clients live from the streamer
+                // thread while this call generates
                 inst.serve_until_drained();
-                // stream responses back
-                {
-                    let updates = inst.updates.lock().unwrap();
-                    while let Ok(u) = updates.try_recv() {
-                        match u {
-                            GenUpdate::Token { id, text, .. } => {
-                                if let Some(ch) = broker.response(id) {
-                                    ch.send(text);
-                                }
-                            }
-                            GenUpdate::Done { id, .. } => {
-                                if let Some(ch) = broker.response(id) {
-                                    ch.finish();
-                                }
-                                broker.remove_response(id);
-                                served += 1;
-                            }
-                        }
-                    }
-                }
                 if inst.stop.load(Ordering::Relaxed) {
-                    // a stop mid-drain abandons the rest of the batch:
-                    // finish their channels so clients don't hang (tasks
-                    // already Done above had their channels removed, so
-                    // abandon() is a no-op for them)
-                    for t in &batch {
-                        abandon(&broker, t.reply_to);
+                    // a stop mid-drain abandons the rest of the batch
+                    // (tasks that completed have their channels removed by
+                    // the streamer before the sweep below, so abandoning
+                    // them is a no-op)
+                    interrupted.extend(batch.iter().map(|t| t.reply_to));
+                    break;
+                }
+            }
+            // let the streamer flush every queued Token/Done first, then
+            // release clients whose tasks were cut short
+            gen_done.store(true, Ordering::Relaxed);
+            let _ = streamer.join();
+            // Final drain, unconditional: our queued updates may live
+            // with ANOTHER worker's streamer (it owns the instance-wide
+            // receiver), and this worker's last Token/Done can land just
+            // after that streamer's final try_recv — stranding a client
+            // on a never-finished channel. Drain directly if the receiver
+            // is free; otherwise give the owner a bounded grace to flush,
+            // so a task that in fact completed is finished by its Done —
+            // not abandoned with its tokens still queued. Bounded: an
+            // abandoned client must never wait on an unbounded handoff.
+            for _ in 0..4 {
+                if let Ok(updates) = inst.updates.try_lock() {
+                    while let Ok(u) = updates.try_recv() {
+                        pump_update(&broker, &served, u);
                     }
                     break;
                 }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            for id in interrupted {
+                abandon(&broker, id);
             }
             // Deregister first, then decide whether queued clients must be
             // released: if the queue is closed for good, or this was its
@@ -614,7 +871,7 @@ impl LlmInstance {
             if broker.is_closed(&queue) || broker.stats(&queue).consumers == 0 {
                 broker.abandon_all(&queue);
             }
-            served
+            served.load(Ordering::Relaxed)
         })
     }
 

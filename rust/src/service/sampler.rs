@@ -23,32 +23,61 @@ impl Sampler {
         if self.temperature <= 0.0 {
             return argmax(logits) as u32;
         }
-        // top-k + temperature softmax sampling
+        // top-k + temperature softmax sampling. A NaN logit (overflowed
+        // accumulation, bad artifact) must not panic the serving loop
+        // (the old partial_cmp().unwrap()) — and must not hijack it
+        // either: total_cmp alone sorts NaN *above* +inf, poisoning the
+        // top of the window. NaNs are treated as -inf throughout: they
+        // sort last and carry zero softmax weight, so the remaining valid
+        // logits sample normally.
+        let val = |i: usize| {
+            let x = logits[i];
+            if x.is_nan() {
+                f32::NEG_INFINITY
+            } else {
+                x
+            }
+        };
         let mut idx: Vec<usize> = (0..logits.len()).collect();
-        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.sort_unstable_by(|&a, &b| val(b).total_cmp(&val(a)));
         let k = if self.top_k == 0 { logits.len() } else { self.top_k.min(logits.len()) };
         let top = &idx[..k];
-        let mx = logits[top[0]] as f64;
+        let mx = val(top[0]) as f64;
+        if mx == f64::NEG_INFINITY {
+            // nothing in the window carries information (all NaN/-inf)
+            return top[0] as u32;
+        }
         let ws: Vec<f64> = top
             .iter()
-            .map(|&i| ((logits[i] as f64 - mx) / self.temperature).exp())
+            .map(|&i| ((val(i) as f64 - mx) / self.temperature).exp())
             .collect();
         let total: f64 = ws.iter().sum();
         let mut u = self.rng.f64() * total;
+        // zero-weight entries (NaN/-inf logits) are skipped outright so
+        // float rounding in the final subtraction can never select one
+        let mut last = top[0];
         for (i, w) in top.iter().zip(&ws) {
-            u -= w;
-            if u <= 0.0 {
-                return *i as u32;
+            if *w > 0.0 {
+                last = *i;
+                u -= w;
+                if u <= 0.0 {
+                    return *i as u32;
+                }
             }
         }
-        top[k - 1] as u32
+        last as u32
     }
 }
 
+/// Index of the largest value, ignoring NaNs (a NaN at index 0 must not
+/// win by making every `>` comparison false). All-NaN input returns 0.
 pub fn argmax(v: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in v.iter().enumerate() {
-        if x > v[best] {
+        if x.is_nan() {
+            continue;
+        }
+        if v[best].is_nan() || x > v[best] {
             best = i;
         }
     }
@@ -82,6 +111,43 @@ mod tests {
         let mut b = Sampler::new(0.0, 5, 2);
         let logits = vec![0.0, 1.0, 2.0, 1.5];
         assert_eq!(a.sample(&logits), b.sample(&logits));
+    }
+
+    /// Regression (ISSUE 4): NaN logits panicked the top-k sort
+    /// (`partial_cmp(...).unwrap()`), taking down the serving loop for
+    /// every slot in the batch. Sampling must survive, never *select* a
+    /// NaN over valid logits (NaN ranks as -inf with zero weight), and
+    /// return a valid token index.
+    #[test]
+    fn nan_logits_do_not_panic_or_hijack() {
+        let logits = vec![0.5, f32::NAN, 2.0, f32::NAN, -1.0];
+        for top_k in [0usize, 2, 5] {
+            let mut s = Sampler::new(0.8, top_k, 3);
+            for _ in 0..50 {
+                let t = s.sample(&logits) as usize;
+                assert!(t < logits.len(), "out-of-range token {t}");
+                assert!(
+                    !logits[t].is_nan(),
+                    "sampled a NaN logit (top_k={top_k}): {t}"
+                );
+            }
+        }
+        // top-2 window is exactly the two best *valid* logits
+        let mut s = Sampler::new(1.0, 2, 7);
+        for _ in 0..100 {
+            let t = s.sample(&logits);
+            assert!(t == 2 || t == 0, "outside the valid top-2: {t}");
+        }
+        // greedy is NaN-safe wherever the NaN lands — including index 0,
+        // where a naive `>` scan would let it win by default
+        let mut g = Sampler::greedy();
+        assert_eq!(g.sample(&logits), 2);
+        assert_eq!(g.sample(&[f32::NAN, 1.0, 3.0, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN, 0.5]), 2);
+        // an all-NaN row still yields an in-range token
+        let mut s = Sampler::new(1.0, 0, 9);
+        let all_nan = vec![f32::NAN; 4];
+        assert!((s.sample(&all_nan) as usize) < 4);
     }
 
     #[test]

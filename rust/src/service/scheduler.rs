@@ -276,6 +276,70 @@ mod tests {
         assert_eq!(sched.in_flight(), 0);
     }
 
+    /// The per-sequence decode regime (ISSUE 4): B independent closed
+    /// rings — one per decoding slot — must actually overlap inside the
+    /// chain. A stage that tracks its high-water concurrent-packet count
+    /// proves ≥ 2 packets were in flight at once, and each ring still
+    /// completes strictly in its own order.
+    #[test]
+    fn per_slot_closed_rings_overlap_in_the_chain() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        /// Counts packets concurrently inside any stage of the chain.
+        struct Meter {
+            inside: Arc<AtomicUsize>,
+            hwm: Arc<AtomicUsize>,
+            service: Duration,
+        }
+        impl StageExecutor for Meter {
+            fn execute(&self, _c: u32, _t: u64, input: &[u8], out: &mut Vec<u8>) {
+                let now = self.inside.fetch_add(1, Ordering::SeqCst) + 1;
+                self.hwm.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(self.service);
+                self.inside.fetch_sub(1, Ordering::SeqCst);
+                out.extend_from_slice(input);
+            }
+        }
+
+        let inside = Arc::new(AtomicUsize::new(0));
+        let hwm = Arc::new(AtomicUsize::new(0));
+        let execs: Vec<Arc<dyn StageExecutor>> = (0..3)
+            .map(|_| {
+                Arc::new(Meter {
+                    inside: inside.clone(),
+                    hwm: hwm.clone(),
+                    service: Duration::from_millis(2),
+                }) as Arc<dyn StageExecutor>
+            })
+            .collect();
+        let chain = Arc::new(NpRuntime::load_circuit(Driver::new(), 0, execs, 4));
+        let mut sched: PacketScheduler<(usize, usize)> = PacketScheduler::new(chain);
+
+        const RINGS: usize = 4;
+        const TOKENS: usize = 8;
+        for s in 0..RINGS {
+            sched.submit(0, vec![s as u8, 0], (s, 0)).unwrap();
+        }
+        let mut expected = [0usize; RINGS];
+        let mut done = 0usize;
+        while done < RINGS * TOKENS {
+            let (_t, data, (s, k)) = sched.next_completion(WAIT).expect("completion");
+            assert_eq!(data, vec![s as u8, k as u8]);
+            assert_eq!(expected[s], k, "ring {s} out of order");
+            expected[s] += 1;
+            done += 1;
+            if k + 1 < TOKENS {
+                sched.submit(0, vec![s as u8, (k + 1) as u8], (s, k + 1)).unwrap();
+            }
+        }
+        assert_eq!(expected, [TOKENS; RINGS]);
+        assert!(
+            hwm.load(Ordering::SeqCst) >= 2,
+            "rings never overlapped: hwm {}",
+            hwm.load(Ordering::SeqCst)
+        );
+    }
+
     #[test]
     fn backpressure_with_one_slot_framebuffers_under_full_window() {
         // 1-slot framebuffers: the credit window is tiny, so most of the

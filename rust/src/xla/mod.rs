@@ -503,6 +503,83 @@ mod tests {
         );
     }
 
+    /// The per-sequence decode regime (§V-C micro-batch 1) donates the
+    /// same resident state buffer to many small slot-indexed updates in an
+    /// interleaved order. Each donation must alias in place (one
+    /// allocation for the whole stream) and the final state must be
+    /// byte-identical to the copy path replaying the identical update
+    /// sequence.
+    #[test]
+    fn interleaved_slot_indexed_donations_alias_one_buffer() {
+        // state [4, 2]; update (slot, x) writes row `slot` += x
+        let exe = PjRtLoadedExecutable::from_host_fn(|args| {
+            let slot = args[0].to_vec::<i32>()?[0] as usize;
+            let x = args[1].to_vec::<f32>()?;
+            let mut s = args[2].to_vec::<f32>()?;
+            for (d, v) in x.iter().enumerate() {
+                s[slot * 2 + d] += v;
+            }
+            let row: Vec<f32> = s[slot * 2..slot * 2 + 2].to_vec();
+            let bytes: Vec<u8> = s.iter().flat_map(|v| v.to_le_bytes()).collect();
+            Ok(vec![
+                f32_lit(&[2], &row),
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32,
+                    &[4, 2],
+                    &bytes,
+                )
+                .unwrap(),
+            ])
+        });
+        let client = PjRtClient::cpu().unwrap();
+        let zeros = f32_lit(&[4, 2], &[0.0; 8]);
+        let mut state_copy = zeros.clone();
+        let mut buf = client.buffer_from_host_literal(&zeros).unwrap();
+        let ptr0 = match &buf.lit.as_ref().unwrap().repr {
+            Repr::Dense { data, .. } => data.as_ptr(),
+            _ => unreachable!(),
+        };
+        // interleaved per-slot stream: 0,1,2,3,2,0,3,1, ...
+        let order = [0i32, 1, 2, 3, 2, 0, 3, 1, 3, 0, 1, 2];
+        for (k, &slot) in order.iter().enumerate() {
+            let s_lit = Literal::create_from_shape_and_untyped_data(
+                ElementType::S32,
+                &[],
+                &slot.to_le_bytes(),
+            )
+            .unwrap();
+            let x = f32_lit(&[2], &[1.0 + k as f32, 0.5 * slot as f32]);
+            // donated path
+            let outs = exe
+                .execute_donated(&mut [
+                    ExecArg::Ref(&s_lit),
+                    ExecArg::Ref(&x),
+                    ExecArg::Donate(&mut buf),
+                ])
+                .unwrap();
+            // copy path
+            let copy_out = exe.execute(&[&s_lit, &x, &state_copy]).unwrap();
+            let mut parts = copy_out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+            state_copy = parts.pop().unwrap();
+            let row_copy = parts.pop().unwrap();
+            assert_eq!(
+                outs[0].untyped_data().unwrap(),
+                row_copy.untyped_data().unwrap(),
+                "row output diverged at update {k}"
+            );
+        }
+        assert_eq!(
+            buf.to_literal_sync().unwrap().untyped_data().unwrap(),
+            state_copy.untyped_data().unwrap(),
+            "resident state diverged from the copy path"
+        );
+        let ptr1 = match &buf.lit.as_ref().unwrap().repr {
+            Repr::Dense { data, .. } => data.as_ptr(),
+            _ => unreachable!(),
+        };
+        assert_eq!(ptr0, ptr1, "12 interleaved donations must reuse one allocation");
+    }
+
     #[test]
     fn execute_without_host_fn_reports_stub() {
         let exe = PjRtLoadedExecutable { host_fn: None };

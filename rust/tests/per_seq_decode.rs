@@ -1,0 +1,285 @@
+//! ISSUE 4 integration: per-sequence decode packets (the paper's §V-C
+//! micro-batch-1 regime) on the stub-backend toy model — runs in every CI
+//! pass, no PJRT artifacts needed.
+//!
+//! The contract under test: per-sequence decode is the batched round
+//! *restricted to one slot*. Greedy outputs must be byte-identical between
+//! the two regimes (at 1 and at `batch_slots` concurrent sequences), a
+//! slot decoding into the last cache line must not collide with the
+//! batched baseline's masked-row convention, the per-sequence serving
+//! loop must actually pipeline (≥ 2 decode packets concurrently in
+//! flight), and broker clients must see their first token while the batch
+//! is still generating.
+
+use std::sync::Arc;
+
+use npserve::broker::{Broker, Task};
+use npserve::npruntime::StageExecutor;
+use npserve::runtime::testmodel::ToyConfig;
+use npserve::runtime::Tensor;
+use npserve::service::{
+    GenRequest, GenUpdate, LayerExecutor, LlmInstance, PacketHeader, ServeOptions,
+    SharedEngine,
+};
+
+fn stub_engine(cfg: &ToyConfig) -> SharedEngine {
+    SharedEngine(Arc::new(cfg.engine()))
+}
+
+fn opts(per_seq: bool) -> ServeOptions {
+    ServeOptions { per_seq_decode: per_seq, ..Default::default() }
+}
+
+fn req(id: u64, prompt: &str, max_tokens: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: prompt.into(),
+        max_tokens,
+        temperature: 0.0,
+        top_k: 0,
+        stop_byte: None,
+    }
+}
+
+/// Serve `reqs` on a fresh instance and return each request's token
+/// stream, keyed by position in `reqs`.
+fn serve(cfg: &ToyConfig, per_seq: bool, reqs: &[GenRequest]) -> Vec<Vec<u32>> {
+    let inst = LlmInstance::start_with(stub_engine(cfg), opts(per_seq));
+    for r in reqs {
+        inst.submit(r.clone());
+    }
+    inst.serve_until_drained();
+    let updates = inst.updates.lock().unwrap();
+    let mut out = vec![Vec::new(); reqs.len()];
+    while let Ok(u) = updates.try_recv() {
+        if let GenUpdate::Token { id, token, .. } = u {
+            let i = reqs.iter().position(|r| r.id == id).expect("unknown id");
+            out[i].push(token);
+        }
+    }
+    out
+}
+
+/// The tentpole acceptance: greedy outputs byte-identical per-seq vs
+/// batched, at 1 and at `batch_slots` concurrent sequences with mixed
+/// prompt lengths and generation lengths.
+#[test]
+fn greedy_per_seq_matches_batched_byte_identical() {
+    let cfg = ToyConfig::small();
+    // one sequence
+    let solo = [req(7, "hello", 8)];
+    let batched = serve(&cfg, false, &solo);
+    let per_seq = serve(&cfg, true, &solo);
+    assert_eq!(batched[0].len(), 8);
+    assert_eq!(batched, per_seq, "solo sequence diverged");
+
+    // a full batch of mixed lengths (multi-chunk prefill + staggered
+    // retirement: slots finish at different rounds)
+    let reqs = [
+        req(1, "a", 8),
+        req(2, "a longer prompt spanning chunks", 5),
+        req(3, "mid", 3),
+        req(4, "another one", 7),
+    ];
+    assert_eq!(reqs.len(), cfg.batch_slots);
+    let batched = serve(&cfg, false, &reqs);
+    let per_seq = serve(&cfg, true, &reqs);
+    for (i, r) in reqs.iter().enumerate() {
+        assert_eq!(batched[i].len(), r.max_tokens, "req {} truncated", r.id);
+        assert_eq!(batched[i], per_seq[i], "req {} diverged", r.id);
+    }
+}
+
+/// Slot isolation: a prompt generates the same tokens whether it runs
+/// alone (slot 0) or alongside a full batch (any slot), in both decode
+/// regimes. (Pinned here because the toy MLP once leaked the slot index
+/// into the row transform, which made this untestable on the stub
+/// backend.)
+#[test]
+fn batch_company_does_not_change_a_sequence() {
+    let cfg = ToyConfig::small();
+    let lone = serve(&cfg, true, &[req(9, "isolated", 6)]);
+    for per_seq in [false, true] {
+        let reqs = [
+            req(1, "noise one", 6),
+            req(9, "isolated", 6),
+            req(3, "noise two", 4),
+            req(4, "noise three", 5),
+        ];
+        let out = serve(&cfg, per_seq, &reqs);
+        assert_eq!(out[1], lone[0], "per_seq={per_seq}: batch company changed output");
+    }
+}
+
+/// Context-boundary decode (ISSUE 4 satellite): a sequence that runs into
+/// `max_context` must retire cleanly — exactly `max_context - n_in`
+/// tokens, no panic, identical across regimes — while other slots are
+/// mid-flight, i.e. while the batched baseline is writing masked dummy
+/// rows at the last cache line (`positions.fill(max_ctx - 1)`).
+#[test]
+fn context_boundary_retires_cleanly_in_both_regimes() {
+    let cfg = ToyConfig::small();
+    let max_ctx = cfg.max_context;
+    // max_tokens ≫ context: admission clamps the prompt to one token and
+    // generation must stop at the context edge (position max_ctx - 1)
+    let boundary = req(1, "xy", max_ctx * 2);
+    let company = [
+        boundary.clone(),
+        req(2, "co one", 4),
+        req(3, "co two", 6),
+        req(4, "co three", 3),
+    ];
+    let batched = serve(&cfg, false, &company);
+    let per_seq = serve(&cfg, true, &company);
+    // n_in clamps to 1, so the boundary slot generates max_ctx - 1 tokens
+    assert_eq!(batched[0].len(), max_ctx - 1, "batched did not fill the context");
+    assert_eq!(per_seq[0].len(), max_ctx - 1, "per-seq did not fill the context");
+    for i in 0..company.len() {
+        assert_eq!(batched[i], per_seq[i], "req {} diverged at the boundary", i + 1);
+    }
+}
+
+/// The masked-row collision itself, pinned at the packet level: in the
+/// batched baseline, idle slots write (masked, never-attended) KV at cache
+/// line `max_ctx - 1`. A later *real* decode of that slot at position
+/// `max_ctx - 1` must overwrite the garbage before attending — its output
+/// must match an executor whose cache never saw a masked write at all.
+#[test]
+fn masked_row_cache_line_is_overwritten_by_real_boundary_decode() {
+    let cfg = ToyConfig::small();
+    let e = stub_engine(&cfg);
+    let b = cfg.batch_slots;
+    let last = cfg.max_context as i32 - 1;
+    let dirty = LayerExecutor::new(e.clone(), 0);
+    let clean = LayerExecutor::new(e.clone(), 0);
+    let step = |ex: &dyn StageExecutor, packet: &[u8]| {
+        let mut out = Vec::new();
+        ex.execute(0, 0, packet, &mut out);
+        out
+    };
+    // batched round with slot 0 masked (the serving loop's convention for
+    // idle/filling slots: token 0 at the last cache line) while slot 1
+    // decodes for real — pollutes slot 0's line max_ctx-1 on `dirty`
+    let mut toks = vec![0i32; b];
+    let mut pos = vec![last; b];
+    toks[1] = 5;
+    pos[1] = 0;
+    let h = e
+        .run("embed_decode", &[Tensor::i32(vec![b], toks)])
+        .unwrap()
+        .remove(0);
+    let pos_t = Tensor::i32(vec![b], pos);
+    step(dirty.as_ref(), &PacketHeader::decode_step().encode(&[&h, &pos_t]));
+    // now slot 0 decodes for real at the last line, on both executors
+    let h1 = e
+        .run("embed_decode_seq", &[Tensor::i32(vec![1], vec![9])])
+        .unwrap()
+        .remove(0);
+    let hdr = PacketHeader::decode_seq(0, last);
+    let packet = hdr.encode(&[&h1]);
+    let out_dirty = step(dirty.as_ref(), &packet);
+    let out_clean = step(clean.as_ref(), &packet);
+    assert_eq!(
+        out_dirty, out_clean,
+        "masked dummy row leaked into a real boundary decode"
+    );
+}
+
+/// The per-sequence loop must actually pipeline: with a full batch
+/// decoding, at least two decode packets are concurrently in flight
+/// (deterministic: a slot's flag clears only when its completion is
+/// routed, and the injection pass submits every ready slot first). The
+/// batched baseline never exceeds one.
+#[test]
+fn per_seq_keeps_multiple_decode_packets_in_flight() {
+    let cfg = ToyConfig::small();
+    let reqs: Vec<GenRequest> =
+        (0..cfg.batch_slots as u64).map(|i| req(i, "prompt", 6)).collect();
+
+    let inst = LlmInstance::start_with(stub_engine(&cfg), opts(true));
+    for r in &reqs {
+        inst.submit(r.clone());
+    }
+    inst.serve_until_drained();
+    assert!(
+        inst.decode_packets_hwm() >= 2,
+        "per-seq decode never pipelined: hwm {}",
+        inst.decode_packets_hwm()
+    );
+
+    let inst = LlmInstance::start_with(stub_engine(&cfg), opts(false));
+    for r in &reqs {
+        inst.submit(r.clone());
+    }
+    inst.serve_until_drained();
+    assert_eq!(
+        inst.decode_packets_hwm(),
+        1,
+        "batched baseline must keep exactly one decode round in flight"
+    );
+}
+
+/// Single-token completions carry no inter-token latency: `Done.itl_s`
+/// must be `None` (ISSUE 4 satellite — a fake 0.0 deflated fleet ITL
+/// averages downstream).
+#[test]
+fn single_token_done_reports_no_itl() {
+    let cfg = ToyConfig::small();
+    let inst = LlmInstance::start_with(stub_engine(&cfg), opts(true));
+    inst.submit(req(1, "one token only", 1));
+    inst.serve_until_drained();
+    let updates = inst.updates.lock().unwrap();
+    let mut saw_done = false;
+    while let Ok(u) = updates.try_recv() {
+        if let GenUpdate::Done { n_out, itl_s, .. } = u {
+            assert_eq!(n_out, 1);
+            assert_eq!(itl_s, None, "single-token completion fabricated an ITL");
+            saw_done = true;
+        }
+    }
+    assert!(saw_done);
+}
+
+/// Broker streaming is live (ISSUE 4 satellite): the first `Token` must
+/// reach the client's response channel while the batch is still
+/// generating — not buffered until `serve_until_drained` returns. With
+/// per-row model work dialed up, the first of 24 tokens arrives with
+/// ~200 ms of generation still to go, so the instance cannot have
+/// recorded the sequence as finished yet.
+#[test]
+fn broker_client_sees_first_token_before_batch_done() {
+    // ~9 ms of model work per generated token: after the first token
+    // arrives, ≥ 200 ms of generation remain — a comfortable window to
+    // observe "still generating"
+    let cfg = ToyConfig { row_work_ns: 3_000_000, ..ToyConfig::small() };
+    let inst = LlmInstance::start_with(stub_engine(&cfg), opts(true));
+    let broker = Broker::new();
+    let ch = broker.post(
+        "toy",
+        Task { id: 1, priority: 1, body: "stream me".into(), reply_to: 42 },
+    );
+    let max_tokens = (cfg.max_context - cfg.prefill_chunk).min(24);
+    let handle = inst.serve_broker(broker.clone(), "toy", vec![0, 1, 2], max_tokens);
+    let _first = ch.recv().expect("stream closed without a single token");
+    // the moment the first token reaches the client, generation of the
+    // remaining tokens is still in flight: no record exists yet
+    let finished = inst
+        .records
+        .lock()
+        .unwrap()
+        .iter()
+        .any(|r| r.id == 42);
+    assert!(
+        !finished,
+        "first token only arrived after the batch drained (buffered streaming)"
+    );
+    // drain the rest; the stream must still complete and close
+    let mut n = 1;
+    while ch.recv().is_some() {
+        n += 1;
+    }
+    assert_eq!(n, max_tokens, "stream delivered {n} of {max_tokens} tokens");
+    broker.close("toy");
+    assert_eq!(handle.join().unwrap(), 1);
+    inst.shutdown();
+}
