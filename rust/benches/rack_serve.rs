@@ -8,22 +8,34 @@
 //! (ISSUE 3): aggregate OTPS scales ≥ 1.8x from 1 → 2 instances.
 //! Results land in BENCH_PR3.json §rack_serve.
 //!
+//! Autoscale variant (ISSUE 5): the same peak load served by a fleet the
+//! `rack::Autoscaler` provisioned itself — starts at 1 instance, a
+//! pre-wave triggers the depth-driven scale-up to 2, then the measured
+//! wave runs. Bar: steady-state fleet OTPS within 10% of the statically
+//! provisioned 2-instance fleet. Results land in BENCH_PR5.json
+//! §rack_autoscale.
+//!
 //!   cargo bench --bench rack_serve             full sweep (1, 2, 4 instances)
 //!   RACK_SERVE_SMOKE=1 cargo bench --bench rack_serve   CI smoke (1, 2)
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use npserve::broker::Task;
 use npserve::config::hw::RackSpec;
-use npserve::rack::{InstanceSpec, RackService};
+use npserve::metrics::ScaleTrigger;
+use npserve::rack::{Autoscaler, InstanceSpec, ModelScaler, RackService, ScalePolicy};
 use npserve::runtime::testmodel::ToyConfig;
 use npserve::service::SharedEngine;
 use npserve::util::json::{merge_into_file, Value};
 
 fn report_path() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR3.json")
+}
+
+fn report_path_pr5() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR5.json")
 }
 
 const MODEL: &str = "toy-testmodel";
@@ -112,6 +124,113 @@ fn best_of(cfg: &ToyConfig, n_instances: usize, n_requests: usize, trials: usize
         .expect("at least one trial")
 }
 
+/// ISSUE 5: the same peak load, but provisioning is the autoscaler's job.
+/// The fleet starts at 1 instance; a saturating pre-wave drives the
+/// *depth-triggered* scale-up to the 2-instance cap (min stays 1 so the
+/// HotQueue path — not the below-floor replenish — must do the work;
+/// the trigger is asserted), an effectively-infinite `down_after` rules
+/// out a scale-down mid-measurement, and the measured wave then sees
+/// the steady-state autoscaled fleet.
+fn run_autoscaled(cfg: &ToyConfig, n_requests: usize) -> Measured {
+    let svc = RackService::new(RackSpec::northpole_42u());
+    let make_spec = {
+        let cfg = *cfg;
+        move || {
+            let mut spec =
+                InstanceSpec::live(MODEL, 16, SharedEngine(Arc::new(cfg.engine())));
+            spec.max_tokens = MAX_TOKENS;
+            spec
+        }
+    };
+    svc.deploy(make_spec()).expect("initial toy placement");
+    let scaler = Autoscaler::new(
+        svc.clone(),
+        vec![ModelScaler::new(
+            MODEL,
+            16,
+            ScalePolicy {
+                min_instances: 1,
+                max_instances: 2,
+                up_after: 1,
+                cooldown: 0,
+                // no scale-down within the bench's lifetime: the quiet
+                // window can never fill
+                down_after: 1_000_000,
+                ..Default::default()
+            },
+            make_spec,
+        )],
+    );
+    let log = scaler.log();
+    let mut handle = scaler.spawn_every(Duration::from_millis(1));
+
+    // pre-wave: saturate the queue so the control loop scales up, then
+    // drain it — the measurement below starts from a warm 2-instance fleet
+    let broker = svc.broker().clone();
+    let warm: Vec<_> = (0..8 * cfg.batch_slots)
+        .map(|i| {
+            broker.post(
+                MODEL,
+                Task {
+                    id: 80_000 + i as u64,
+                    priority: 0,
+                    body: format!("warm-{i}"),
+                    reply_to: 80_000 + i as u64,
+                },
+            )
+        })
+        .collect();
+    let ramp = Instant::now();
+    while svc.capacity_of(MODEL) < 2 * cfg.batch_slots {
+        assert!(
+            ramp.elapsed() < Duration::from_secs(20),
+            "autoscaler failed to scale up under the pre-wave (log: {:?})",
+            log.kinds()
+        );
+        std::thread::yield_now();
+    }
+    // the deploy must have been demand-driven — a regression that broke
+    // the HotQueue path but left the below-floor replenish working would
+    // otherwise still pass the OTPS bar
+    assert!(
+        log.events()
+            .iter()
+            .any(|e| matches!(e.trigger, ScaleTrigger::HotQueue { .. })),
+        "scale-up was not depth-triggered (log: {:?})",
+        log.kinds()
+    );
+    for ch in &warm {
+        while ch.recv().is_some() {}
+    }
+
+    // measured wave, identical to the static fleet's
+    let t0 = Instant::now();
+    let chans: Vec<_> = (0..n_requests)
+        .map(|i| {
+            broker.post(
+                MODEL,
+                Task {
+                    id: i as u64,
+                    priority: (i % 3) as u8,
+                    body: format!("req-{i}"),
+                    reply_to: 10_000 + i as u64,
+                },
+            )
+        })
+        .collect();
+    let mut tokens = 0usize;
+    for ch in &chans {
+        while ch.recv().is_some() {
+            tokens += 1;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    handle.stop();
+    svc.shutdown_all();
+    assert_eq!(tokens, n_requests * MAX_TOKENS, "full budget under the scaler");
+    Measured { otps: tokens as f64 / wall_s, tokens, wall_s }
+}
+
 fn main() {
     let smoke = std::env::var("RACK_SERVE_SMOKE").is_ok();
     let cfg = bench_config();
@@ -153,9 +272,48 @@ fn main() {
         Err(e) => eprintln!("\ncould not write BENCH_PR3.json: {e}"),
     }
 
+    // fail fast on the static bar BEFORE the autoscale runs: a static
+    // scaling regression must be diagnosed as such, not surface as a
+    // confusing failure inside the autoscale section
     if scaling < 1.8 {
         eprintln!("FAIL: aggregate OTPS scaled {scaling:.2}x from 1 to 2 instances (bar: >= 1.8x)");
         std::process::exit(1);
     }
-    println!("rack_serve OK");
+
+    // ---- autoscale variant (ISSUE 5): same peak load, scaler-provisioned
+    println!("\n== rack_autoscale: 1 instance + scaler (cap 2) vs static 2-instance ==");
+    let auto = (0..trials)
+        .map(|_| run_autoscaled(&cfg, n_requests))
+        .max_by(|a, b| a.otps.total_cmp(&b.otps))
+        .expect("at least one trial");
+    let otps_static2 = otps2;
+    let ratio = auto.otps / otps_static2;
+    println!(
+        "  static 2x: {otps_static2:>8.0} tok/s | autoscaled: {:>8.0} tok/s ({} toks in {:.2}s)",
+        auto.otps, auto.tokens, auto.wall_s
+    );
+    println!("  -> autoscaled / static ratio {ratio:.2} (bar: >= 0.90)");
+    let pr5 = Value::obj(vec![
+        ("layers", Value::num(cfg.n_layers as f64)),
+        ("d_model", Value::num(cfg.d_model as f64)),
+        ("batch_slots", Value::num(cfg.batch_slots as f64)),
+        ("requests", Value::num(n_requests as f64)),
+        ("max_tokens", Value::num(MAX_TOKENS as f64)),
+        ("otps_static_2x", Value::num(otps_static2)),
+        ("otps_autoscaled", Value::num(auto.otps)),
+        ("ratio", Value::num(ratio)),
+    ]);
+    match merge_into_file(&report_path_pr5(), "rack_autoscale", pr5) {
+        Ok(()) => println!("wrote BENCH_PR5.json §rack_autoscale"),
+        Err(e) => eprintln!("could not write BENCH_PR5.json: {e}"),
+    }
+
+    if ratio < 0.90 {
+        eprintln!(
+            "FAIL: autoscaled fleet OTPS is {ratio:.2}x the static 2-instance fleet \
+             (bar: >= 0.90 — within 10%)"
+        );
+        std::process::exit(1);
+    }
+    println!("rack_serve OK (static scaling + autoscale steady state)");
 }

@@ -48,6 +48,81 @@ pub struct QueueStats {
     pub by_priority: Vec<(u8, usize)>,
 }
 
+/// Rolling depth-over-time window for control loops (the rack
+/// autoscaler): a bounded ring of recent per-tick samples with
+/// sustained-threshold predicates. Scale decisions want "depth has been
+/// ≥ N for K consecutive ticks", not one instantaneous reading that
+/// flaps on every queue wobble.
+#[derive(Debug, Clone)]
+pub struct DepthWindow {
+    cap: usize,
+    samples: VecDeque<usize>,
+}
+
+impl DepthWindow {
+    /// Window retaining the last `cap` samples (`cap` ≥ 1).
+    pub fn new(cap: usize) -> DepthWindow {
+        DepthWindow { cap: cap.max(1), samples: VecDeque::new() }
+    }
+
+    pub fn record(&mut self, sample: usize) {
+        if self.samples.len() == self.cap {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(sample);
+    }
+
+    /// Forget history — e.g. after a scale action changes capacity, stale
+    /// samples measured against the old threshold must not re-trigger.
+    pub fn reset(&mut self) {
+        self.samples.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Test-only until a product consumer exists (the autoscaler uses
+    /// only record/reset + the sustained predicates).
+    #[cfg(test)]
+    pub(crate) fn last(&self) -> Option<usize> {
+        self.samples.back().copied()
+    }
+
+    /// The last `n` samples all ≥ `thr`. False until `n` samples exist
+    /// (`n` must fit the window's capacity to ever hold).
+    pub fn sustained_at_least(&self, thr: usize, n: usize) -> bool {
+        n > 0
+            && self.samples.len() >= n
+            && self.samples.iter().rev().take(n).all(|&s| s >= thr)
+    }
+
+    /// The last `n` samples all ≤ `thr` (false until `n` samples exist).
+    pub fn sustained_at_most(&self, thr: usize, n: usize) -> bool {
+        n > 0
+            && self.samples.len() >= n
+            && self.samples.iter().rev().take(n).all(|&s| s <= thr)
+    }
+
+    #[cfg(test)]
+    pub(crate) fn peak(&self) -> usize {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    #[cfg(test)]
+    pub(crate) fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<usize>() as f64 / self.samples.len() as f64
+        }
+    }
+}
+
 /// Result of one bounded-wait consume poll.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Consumed {
@@ -258,6 +333,15 @@ impl Broker {
         }
     }
 
+    /// Depth-over-time sampling helper (ISSUE 5): snapshot a queue's depth
+    /// into a rolling window and return the sample. One call per control
+    /// tick gives the autoscaler its sustained-pressure signal.
+    pub fn sample_depth(&self, queue: &str, into: &mut DepthWindow) -> usize {
+        let depth = self.depth(queue);
+        into.record(depth);
+        depth
+    }
+
     pub fn is_closed(&self, queue: &str) -> bool {
         self.queue_if_exists(queue)
             .map(|q| q.state.lock().unwrap().closed)
@@ -461,6 +545,53 @@ mod tests {
         assert!(b.response(1).is_none(), "response channels cleaned up");
         assert!(!b.is_closed("m"), "queue stays open for future consumers");
         assert_eq!(b.abandon_all("m"), 0);
+    }
+
+    /// ISSUE 5: the depth window is a bounded ring with sustained
+    /// predicates — the autoscaler's flap shield.
+    #[test]
+    fn depth_window_sustained_predicates() {
+        let mut w = DepthWindow::new(3);
+        assert!(w.is_empty());
+        assert!(!w.sustained_at_least(0, 1), "no samples: nothing sustained");
+        assert!(!w.sustained_at_most(100, 1));
+        w.record(10);
+        w.record(12);
+        assert!(w.sustained_at_least(10, 2));
+        assert!(!w.sustained_at_least(10, 3), "needs 3 samples, has 2");
+        w.record(9);
+        assert!(w.sustained_at_least(9, 3));
+        assert!(!w.sustained_at_least(10, 3), "last sample dipped below");
+        assert!(w.sustained_at_least(10, 2) == false && w.sustained_at_least(9, 1));
+        // ring: a 4th sample evicts the oldest
+        w.record(9);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.peak(), 12);
+        assert_eq!(w.last(), Some(9));
+        w.record(0);
+        w.record(0);
+        w.record(0);
+        assert!(w.sustained_at_most(0, 3));
+        assert_eq!(w.mean(), 0.0);
+        w.reset();
+        assert!(w.is_empty());
+        assert!(!w.sustained_at_most(0, 1), "reset forgets history");
+    }
+
+    #[test]
+    fn sample_depth_tracks_queue_depth() {
+        let b = Broker::new();
+        let mut w = DepthWindow::new(4);
+        assert_eq!(b.sample_depth("m", &mut w), 0);
+        b.post("m", task(1, 0));
+        b.post("m", task(2, 2));
+        assert_eq!(b.sample_depth("m", &mut w), 2);
+        b.consume("m", &[0, 1, 2]).unwrap();
+        assert_eq!(b.sample_depth("m", &mut w), 1);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.peak(), 2);
+        assert!(w.sustained_at_least(1, 2));
+        assert!(!w.sustained_at_least(2, 2));
     }
 
     #[test]

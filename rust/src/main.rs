@@ -7,8 +7,14 @@
 //!   npserve power [--instances K]                  §VI-C power report
 //!   npserve serve [--artifacts DIR] [--addr A]     OpenAI endpoint over PJRT
 //!   npserve rack <3x8b|18x3b|1x70b> [--requests R] [--addr A]
+//!                [--autoscale] [--min N] [--max N] [--tick-ms T]
+//!                [--up-after K] [--down-after K] [--cooldown K]
 //!                                                  rack-scale multi-instance
-//!                                                  serving (§I configurations)
+//!                                                  serving (§I configurations);
+//!                                                  --autoscale starts at --min
+//!                                                  instances and lets the
+//!                                                  queue-depth control loop
+//!                                                  deploy/drain the rest
 //!   npserve selftest [--artifacts DIR]             load + run artifacts
 
 use std::path::PathBuf;
@@ -22,7 +28,10 @@ use npserve::mapper::map_model;
 use npserve::metrics::BatchMetrics;
 use npserve::pipeline::sim::{simulate, SimConfig};
 use npserve::power::deployment_power;
-use npserve::rack::{deploy_paper_config, InstanceSpec, PaperConfig, RackService};
+use npserve::rack::{
+    deploy_paper_config, Autoscaler, InstanceSpec, ModelScaler, PaperConfig, RackService,
+    ScalePolicy,
+};
 use npserve::runtime::testmodel::ToyConfig;
 use npserve::runtime::Engine;
 use npserve::service::{LlmInstance, SharedEngine};
@@ -150,15 +159,75 @@ fn main() {
                 std::process::exit(1);
             };
             let requests = flag_u32(&args, "--requests", 12) as usize;
+            let autoscale = args.iter().any(|a| a == "--autoscale");
             let svc = RackService::new(rack);
             let mapping = cfg.mapping(&svc.spec).expect("paper mapping");
             // 8B/3B serve live on the testmodel backend (real placement,
             // toy numerics); the 70B is validated at the placement level.
             let live = cfg != PaperConfig::OneLlama70b;
-            let ids = deploy_paper_config(&svc, cfg, |_| {
-                live.then(|| SharedEngine(Arc::new(ToyConfig::small().engine())))
-            })
-            .expect("paper configuration must place");
+            // clamp the floor to what the configuration can hold AND to
+            // the requested ceiling, so the policy never carries a min
+            // above its max (which would silently disable scale-down)
+            let max_instances =
+                (flag_u32(&args, "--max", cfg.instances() as u32) as usize).max(1);
+            let min = (flag_u32(&args, "--min", 1) as usize)
+                .max(1)
+                .min(cfg.instances())
+                .min(max_instances);
+            let mut scaler_handle = None;
+            let ids = if autoscale && live {
+                // ONE spec builder for both the initial fleet and the
+                // scaler's deploys — the two must not drift apart
+                let scale_model = cfg.model().to_string();
+                let scale_cards = mapping.n_cards();
+                let make_spec = move || {
+                    let mut s = InstanceSpec::live(
+                        &scale_model,
+                        scale_cards,
+                        SharedEngine(Arc::new(ToyConfig::small().engine())),
+                    );
+                    s.max_tokens = 16;
+                    s
+                };
+                // start at --min instances; the control loop deploys the
+                // rest when queue depth sustains above the admission
+                // saturation threshold
+                let ids: Vec<u64> = (0..min)
+                    .map(|_| {
+                        svc.deploy(make_spec()).expect("initial autoscale instance must place")
+                    })
+                    .collect();
+                let policy = ScalePolicy {
+                    min_instances: min,
+                    max_instances,
+                    up_after: flag_u32(&args, "--up-after", 2) as usize,
+                    down_after: flag_u32(&args, "--down-after", 3) as usize,
+                    cooldown: flag_u32(&args, "--cooldown", 2) as usize,
+                    ..Default::default()
+                };
+                // floor at 1 ms: a 0 period would busy-spin the control
+                // thread on the broker/registry locks
+                let tick_ms = (flag_u32(&args, "--tick-ms", 10) as u64).max(1);
+                println!(
+                    "autoscale: {} min {} / max {} instances, tick {} ms",
+                    cfg.model(),
+                    policy.min_instances,
+                    policy.max_instances,
+                    tick_ms,
+                );
+                let scaler = Autoscaler::new(
+                    svc.clone(),
+                    vec![ModelScaler::new(cfg.model(), scale_cards, policy, make_spec)],
+                );
+                scaler_handle =
+                    Some(scaler.spawn_every(std::time::Duration::from_millis(tick_ms)));
+                ids
+            } else {
+                deploy_paper_config(&svc, cfg, |_| {
+                    live.then(|| SharedEngine(Arc::new(ToyConfig::small().engine())))
+                })
+                .expect("paper configuration must place")
+            };
             println!(
                 "{} -> {} instance(s) of {} ({} cards each), {}/{} cards leased",
                 cfg.label(),
@@ -177,23 +246,33 @@ fn main() {
                     info.first_card + info.n_cards
                 );
             }
-            // the §I capacity wall: one more instance is a typed rejection
-            match svc.deploy(InstanceSpec {
-                model: cfg.model().to_string(),
-                cards: mapping.n_cards(),
-                engine: None,
-                opts: Default::default(),
-                priorities: vec![0, 1, 2],
-                max_tokens: 16,
-            }) {
-                Err(e) => println!("one more instance is rejected: {e}"),
-                Ok(_) => println!("WARNING: overcommit was not rejected"),
+            if !autoscale {
+                // the §I capacity wall: one more instance is a typed
+                // rejection (skipped under --autoscale: the pool
+                // deliberately has headroom for the scaler)
+                match svc.deploy(InstanceSpec {
+                    model: cfg.model().to_string(),
+                    cards: mapping.n_cards(),
+                    engine: None,
+                    opts: Default::default(),
+                    priorities: vec![0, 1, 2],
+                    max_tokens: 16,
+                }) {
+                    Err(e) => println!("one more instance is rejected: {e}"),
+                    Ok(_) => println!("WARNING: overcommit was not rejected"),
+                }
             }
             if !live {
                 if flag(&args, "--addr").is_some() {
                     eprintln!(
                         "note: --addr ignored for 1x70b — this configuration is \
                          placement-level only (no live engine to serve)"
+                    );
+                }
+                if autoscale {
+                    eprintln!(
+                        "note: --autoscale ignored for 1x70b — placement-level \
+                         only (no live engines to scale)"
                     );
                 }
             }
@@ -238,6 +317,14 @@ fn main() {
                 }
                 println!("\nserved {requests} requests ({tokens} tokens) across the fleet:");
                 print!("{}", svc.fleet_metrics().report());
+            }
+            if let Some(handle) = scaler_handle.as_mut() {
+                handle.stop();
+                let events = handle.log().events();
+                println!("\nautoscale events ({}):", events.len());
+                for ev in &events {
+                    println!("  {ev}");
+                }
             }
             svc.shutdown_all();
         }

@@ -9,7 +9,12 @@
 //!   EOTPS_B = N_out_B / (t_end_B - t_start_B)
 //! where batch-level timestamps span the whole batch window.
 
+use std::fmt;
+use std::path::Path;
+use std::sync::Mutex;
+
 use crate::pipeline::sim::SeqRecord;
+use crate::util::json::Value;
 use crate::util::stats::Summary;
 
 /// Batch-level metrics over a set of served sequences.
@@ -218,6 +223,145 @@ impl FleetMetrics {
     }
 }
 
+// ------------------------------------------------------ autoscale event log
+
+/// Why the autoscaler acted at a tick (ISSUE 5).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScaleTrigger {
+    /// Queue depth ≥ the admission saturation threshold for `ticks`
+    /// consecutive control ticks.
+    HotQueue { depth: usize, capacity: usize, ticks: usize },
+    /// Depth and in-flight sequences at/below the low-water marks for
+    /// `ticks` consecutive control ticks.
+    QuietQueue { depth: usize, in_flight: usize, ticks: usize },
+    /// A previously initiated scale-down finished draining.
+    DrainComplete { instance: u64 },
+    /// A `Serving` instance's broker workers all died (panic or closed
+    /// queue): it contributes no capacity but still holds cards and
+    /// counts toward the instance cap, so the scaler reaps it.
+    DeadInstance { instance: u64 },
+    /// Serving instances fell below the policy floor (deaths/reaps):
+    /// the scaler redeploys without waiting for queue pressure — a
+    /// zero-capacity model 503s at the front door, so depth alone could
+    /// never recover it.
+    BelowFloor { serving: usize, min: usize },
+}
+
+/// What the autoscaler did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScaleAction {
+    ScaleUp,
+    /// Drain an instance (mark `ScalingDown`, stop new work).
+    ScaleDown { instance: u64 },
+    /// Retire a fully drained instance and return its cards.
+    Teardown { instance: u64 },
+}
+
+/// How the action came out.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleOutcome {
+    Deployed { instance: u64 },
+    /// The pool cannot fit another instance: typed backoff, no retry storm.
+    Overcommit { requested: usize, largest_gap: usize, backoff_ticks: usize },
+    Draining,
+    TornDown { served: usize },
+    Failed(String),
+}
+
+/// One autoscale decision: tick, trigger, action, outcome — the audit
+/// trail the soak test pins as a golden sequence and CI uploads on
+/// failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleEvent {
+    pub tick: u64,
+    pub model: String,
+    pub trigger: ScaleTrigger,
+    pub action: ScaleAction,
+    pub outcome: ScaleOutcome,
+}
+
+impl AutoscaleEvent {
+    /// Compact `action:outcome` label — the stable vocabulary golden-log
+    /// assertions compare against (tick counts and ids vary; kinds don't).
+    pub fn kind(&self) -> String {
+        let action = match self.action {
+            ScaleAction::ScaleUp => "scale_up",
+            ScaleAction::ScaleDown { .. } | ScaleAction::Teardown { .. } => "scale_down",
+        };
+        let outcome = match &self.outcome {
+            ScaleOutcome::Deployed { .. } => "deployed",
+            ScaleOutcome::Overcommit { .. } => "overcommit",
+            ScaleOutcome::Draining => "draining",
+            ScaleOutcome::TornDown { .. } => "torn_down",
+            ScaleOutcome::Failed(_) => "failed",
+        };
+        format!("{action}:{outcome}")
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("tick", Value::num(self.tick as f64)),
+            ("model", Value::str(self.model.clone())),
+            ("kind", Value::str(self.kind())),
+            ("trigger", Value::str(format!("{:?}", self.trigger))),
+            ("action", Value::str(format!("{:?}", self.action))),
+            ("outcome", Value::str(format!("{:?}", self.outcome))),
+        ])
+    }
+}
+
+impl fmt::Display for AutoscaleEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "tick {:>4} | {:<16} | {:<19} | {:?} <- {:?}",
+            self.tick,
+            self.model,
+            self.kind(),
+            self.outcome,
+            self.trigger,
+        )
+    }
+}
+
+/// Shared, thread-safe autoscale event log. The scaler appends; tests
+/// read kinds for golden comparison; `write_json` dumps the full trail
+/// for the CI failure artifact.
+#[derive(Default)]
+pub struct AutoscaleLog {
+    events: Mutex<Vec<AutoscaleEvent>>,
+}
+
+impl AutoscaleLog {
+    pub fn push(&self, ev: AutoscaleEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    pub fn events(&self) -> Vec<AutoscaleEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn kinds(&self) -> Vec<String> {
+        self.events.lock().unwrap().iter().map(|e| e.kind()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.lock().unwrap().is_empty()
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::arr(self.events.lock().unwrap().iter().map(|e| e.to_json()))
+    }
+
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +445,62 @@ mod tests {
             cards_leased: 16,
         };
         assert_eq!(empty_itl.mean_itl(), 0.0);
+    }
+
+    /// The golden-log vocabulary is stable: one kind per action/outcome
+    /// pair, and the JSON dump carries tick + trigger + action + outcome.
+    #[test]
+    fn autoscale_log_kinds_and_json() {
+        let log = AutoscaleLog::default();
+        assert!(log.is_empty());
+        log.push(AutoscaleEvent {
+            tick: 3,
+            model: "m".into(),
+            trigger: ScaleTrigger::HotQueue { depth: 9, capacity: 4, ticks: 2 },
+            action: ScaleAction::ScaleUp,
+            outcome: ScaleOutcome::Deployed { instance: 2 },
+        });
+        log.push(AutoscaleEvent {
+            tick: 4,
+            model: "m".into(),
+            trigger: ScaleTrigger::HotQueue { depth: 9, capacity: 4, ticks: 2 },
+            action: ScaleAction::ScaleUp,
+            outcome: ScaleOutcome::Overcommit { requested: 84, largest_gap: 36, backoff_ticks: 2 },
+        });
+        log.push(AutoscaleEvent {
+            tick: 9,
+            model: "m".into(),
+            trigger: ScaleTrigger::QuietQueue { depth: 0, in_flight: 0, ticks: 3 },
+            action: ScaleAction::ScaleDown { instance: 2 },
+            outcome: ScaleOutcome::Draining,
+        });
+        log.push(AutoscaleEvent {
+            tick: 11,
+            model: "m".into(),
+            trigger: ScaleTrigger::DrainComplete { instance: 2 },
+            action: ScaleAction::Teardown { instance: 2 },
+            outcome: ScaleOutcome::TornDown { served: 17 },
+        });
+        assert_eq!(
+            log.kinds(),
+            vec![
+                "scale_up:deployed",
+                "scale_up:overcommit",
+                "scale_down:draining",
+                "scale_down:torn_down"
+            ]
+        );
+        assert_eq!(log.len(), 4);
+        let json = log.to_json().to_string();
+        let v = Value::parse(&json).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].get("tick").unwrap().as_usize(), Some(3));
+        assert_eq!(arr[0].get("kind").unwrap().as_str(), Some("scale_up:deployed"));
+        assert!(arr[3].get("outcome").unwrap().as_str().unwrap().contains("served: 17"));
+        // display is human-scannable (main.rs prints the trail)
+        let line = log.events()[1].to_string();
+        assert!(line.contains("scale_up:overcommit"), "{line}");
     }
 
     #[test]

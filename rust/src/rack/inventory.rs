@@ -223,6 +223,18 @@ impl CardInventory {
         Self::largest_gap_of(&st, self.shared.total)
     }
 
+    /// Non-blocking placement probe: would a `count`-card contiguous lease
+    /// fit right now? The autoscaler asks before constructing an engine
+    /// for a scale-up, so a doomed deploy allocates nothing. The answer
+    /// can race other leases — it is a hint, not a reservation; `lease`
+    /// remains the authority and may still return `Overcommit`.
+    pub fn can_fit(&self, count: usize) -> bool {
+        count > 0 && {
+            let st = self.shared.state.lock().unwrap();
+            Self::largest_gap_of(&st, self.shared.total) >= count
+        }
+    }
+
     /// Snapshot of active leases as (lease id, first card, count, model).
     pub fn leases(&self) -> Vec<(u64, usize, usize, String)> {
         self.shared
@@ -298,5 +310,95 @@ mod tests {
         let i = inv(8);
         assert!(i.lease("m", 0).is_err());
         assert!(i.lease("m", 9).is_err());
+        assert!(!i.can_fit(0));
+        assert!(!i.can_fit(9));
+        assert!(i.can_fit(8));
+    }
+
+    /// ISSUE 5 satellite: property-style fuzz over random interleaved
+    /// lease/release/`can_fit` sequences (util::prng seeds). Invariants
+    /// after every step, against a shadow occupancy model:
+    /// cards are conserved, never double-leased, `largest_gap` matches a
+    /// brute-force recount, and `can_fit` agrees with `lease`'s verdict.
+    #[test]
+    fn fuzz_lease_release_conserves_cards() {
+        use crate::util::prng::Rng;
+
+        fn occupancy(held: &[CardLease], total: usize) -> Vec<bool> {
+            let mut occ = vec![false; total];
+            for l in held {
+                for c in l.cards() {
+                    assert!(!occ[c], "card {c} double-leased");
+                    occ[c] = true;
+                }
+            }
+            occ
+        }
+
+        fn brute_largest_gap(occ: &[bool]) -> usize {
+            let mut best = 0usize;
+            let mut run = 0usize;
+            for &o in occ {
+                run = if o { 0 } else { run + 1 };
+                best = best.max(run);
+            }
+            best
+        }
+
+        for seed in 0..300u64 {
+            let mut rng = Rng::seed(seed);
+            let total = rng.usize(8, 64);
+            let inv = CardInventory::with_cards(total, 8);
+            let mut held: Vec<CardLease> = Vec::new();
+            for step in 0..200 {
+                match rng.usize(0, 3) {
+                    0 => {
+                        // lease a random size (may exceed the pool)
+                        let want = rng.usize(1, total + 2);
+                        let fit = inv.can_fit(want);
+                        match inv.lease("fuzz", want) {
+                            Ok(l) => {
+                                assert!(fit, "seed {seed} step {step}: lease ok but can_fit said no");
+                                assert!(l.first + l.count <= total);
+                                held.push(l);
+                            }
+                            Err(RackError::Overcommit { requested, available, .. }) => {
+                                assert!(!fit, "seed {seed} step {step}: can_fit said yes but lease failed");
+                                assert_eq!(requested, want);
+                                assert_eq!(available, inv.available());
+                            }
+                            Err(e) => panic!("seed {seed} step {step}: unexpected error {e}"),
+                        }
+                    }
+                    1 => {
+                        // release a random lease (drop returns the cards)
+                        if !held.is_empty() {
+                            let idx = rng.usize(0, held.len());
+                            held.swap_remove(idx);
+                        }
+                    }
+                    _ => {
+                        // probe only: must agree with the shadow model
+                        let want = rng.usize(1, total + 2);
+                        let occ = occupancy(&held, total);
+                        assert_eq!(
+                            inv.can_fit(want),
+                            brute_largest_gap(&occ) >= want,
+                            "seed {seed} step {step}: can_fit({want}) disagrees with recount"
+                        );
+                    }
+                }
+                // invariants, every step
+                let occ = occupancy(&held, total);
+                let used = occ.iter().filter(|&&o| o).count();
+                assert_eq!(inv.in_use(), used, "seed {seed} step {step}: cards not conserved");
+                assert_eq!(inv.available(), total - used);
+                assert_eq!(
+                    inv.largest_gap(),
+                    brute_largest_gap(&occ),
+                    "seed {seed} step {step}: largest_gap diverged from brute-force recount"
+                );
+            }
+        }
     }
 }

@@ -14,13 +14,22 @@
 //!   (the instances' `serve_broker` subscriptions) load-balance a model's
 //!   queue, and [`RackService::admit`] rejects unknown models and
 //!   saturated queues using broker depth/consumer introspection.
+//! * [`Autoscaler`]: the queue-depth-driven control loop (ISSUE 5) that
+//!   deploys on sustained pressure and drains + tears down on sustained
+//!   quiet, under a declarative [`ScalePolicy`] — tick-injected, so the
+//!   whole story is deterministic under test (`tests/autoscale.rs`).
 
+mod autoscaler;
 mod inventory;
 mod registry;
 
+pub use autoscaler::{
+    AutoscaleHandle, Autoscaler, ModelScaler, ScalePolicy, SpecFactory, TickSource,
+    WallTicks,
+};
 pub use inventory::{CardInventory, CardLease, RackError};
 pub use registry::{
-    InstanceInfo, InstanceSpec, InstanceState, RackService, ADMIT_QUEUE_FACTOR,
+    InstanceInfo, InstanceSpec, InstanceState, ModelLoad, RackService, ADMIT_QUEUE_FACTOR,
 };
 
 use crate::config::models::find_model;

@@ -38,7 +38,21 @@ pub enum InstanceState {
     /// placement-level path).
     Placed,
     Serving,
+    /// Operator-requested drain ([`RackService::drain`]): finishing its
+    /// current batch, taking no new work, awaiting manual teardown.
     Draining,
+    /// Autoscaler-requested drain ([`RackService::scale_down`]): same
+    /// mechanics as `Draining`, but the registry remembers the intent so
+    /// operators can tell policy-driven drains from manual ones. The
+    /// scaler tears it down once [`RackService::drain_complete`] holds.
+    ScalingDown,
+}
+
+impl InstanceState {
+    /// Draining in either flavor — excluded from serving capacity.
+    pub fn is_draining(&self) -> bool {
+        matches!(self, InstanceState::Draining | InstanceState::ScalingDown)
+    }
 }
 
 /// What to deploy: a model name (= broker queue), a card count (from the
@@ -91,6 +105,43 @@ struct InstanceEntry {
     instance: Option<Arc<LlmInstance>>,
     worker: Option<JoinHandle<usize>>,
     batch_slots: usize,
+}
+
+impl InstanceEntry {
+    /// Slots this entry contributes to serving capacity: a live instance
+    /// in the `Serving` state that is *actually* serving. The instance's
+    /// own signals are consulted too (ISSUE 5 fix): a drain requested
+    /// directly on the `LlmInstance` — bypassing the registry, so the
+    /// state still reads `Serving` — and a worker that died (panicked or
+    /// exited on a closed queue) both used to keep the slots in the
+    /// capacity sum, admitting work that then queued behind nobody.
+    fn serving_slots(&self) -> usize {
+        match &self.instance {
+            Some(inst)
+                if self.state == InstanceState::Serving
+                    && !inst.is_draining()
+                    && inst.has_active_workers() =>
+            {
+                self.batch_slots
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// A model's load as one consistent registry snapshot
+/// ([`RackService::load_of`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelLoad {
+    /// Σ batch slots over serving (non-draining) instances.
+    pub capacity: usize,
+    /// Instances actually taking work.
+    pub serving: usize,
+    /// Every registered entry of the model (draining and placement-only
+    /// included — their card leases are still held).
+    pub live: usize,
+    /// Sequences owned by the model's instances (queued or generating).
+    pub in_flight: usize,
 }
 
 /// Registry snapshot row.
@@ -205,15 +256,62 @@ impl RackService {
     }
 
     /// Aggregate serving capacity of a model: Σ batch slots over its live
-    /// (serving, non-draining) instances.
+    /// (serving, non-draining) instances. Draining is judged by both the
+    /// registry state *and* the instance's own flag — see
+    /// [`InstanceEntry::serving_slots`].
     pub fn capacity_of(&self, model: &str) -> usize {
         self.reg
             .lock()
             .unwrap()
             .values()
-            .filter(|e| e.model == model && e.state == InstanceState::Serving)
-            .map(|e| e.batch_slots)
+            .filter(|e| e.model == model)
+            .map(|e| e.serving_slots())
             .sum()
+    }
+
+    /// Instance counts for a model as the autoscaler sees them:
+    /// `(serving, live)`. `serving` excludes draining/scaling-down
+    /// instances (they take no new work); `live` counts every registered
+    /// entry of the model — draining ones still hold their card leases, so
+    /// the scaler's `max_instances` cap must see them, and placement-only
+    /// entries occupy cards all the same.
+    pub fn instance_counts_of(&self, model: &str) -> (usize, usize) {
+        let l = self.load_of(model);
+        (l.serving, l.live)
+    }
+
+    /// One-lock snapshot of everything the autoscaler samples about a
+    /// model: a single registry pass, so capacity / instance counts /
+    /// in-flight are consistent with *each other* even while operators
+    /// deploy or drain concurrently (four separate lock acquisitions
+    /// could mix old-fleet capacity with new-fleet counts).
+    pub fn load_of(&self, model: &str) -> ModelLoad {
+        let reg = self.reg.lock().unwrap();
+        let mut l = ModelLoad { capacity: 0, serving: 0, live: 0, in_flight: 0 };
+        for e in reg.values().filter(|e| e.model == model) {
+            l.live += 1;
+            let slots = e.serving_slots();
+            if slots > 0 {
+                l.serving += 1;
+                l.capacity += slots;
+            }
+            if let Some(inst) = &e.instance {
+                l.in_flight += inst.in_flight();
+            }
+        }
+        l
+    }
+
+    /// Sequences currently owned by the model's instances (queued in a
+    /// slot ring or mid-generation) — the autoscaler's in-flight low-water
+    /// probe.
+    pub fn in_flight_of(&self, model: &str) -> usize {
+        self.load_of(model).in_flight
+    }
+
+    /// The live instance behind a registry id (tests and diagnostics).
+    pub fn instance_handle(&self, id: u64) -> Option<Arc<LlmInstance>> {
+        self.reg.lock().unwrap().get(&id).and_then(|e| e.instance.clone())
     }
 
     /// Capacity-aware admission for the front door. A model nobody ever
@@ -230,9 +328,11 @@ impl RackService {
             for e in reg.values() {
                 if e.model == model && e.instance.is_some() {
                     known = true;
-                    if e.state == InstanceState::Serving {
-                        cap += e.batch_slots;
-                    }
+                    // serving_slots, not raw batch_slots: draining
+                    // instances (registry-marked or drained directly on
+                    // the instance) admit nothing — work admitted against
+                    // their slots would queue behind nobody (ISSUE 5 fix)
+                    cap += e.serving_slots();
                 }
             }
             (known, cap)
@@ -254,12 +354,70 @@ impl RackService {
 
     /// Stop an instance from taking new tasks; its current batch finishes.
     pub fn drain(&self, id: u64) -> Result<(), RackError> {
+        self.drain_as(id, InstanceState::Draining)
+    }
+
+    /// Autoscaler scale-down: drain like [`drain`](Self::drain), but mark
+    /// the entry `ScalingDown` so the registry records the intent. The
+    /// caller polls [`drain_complete`](Self::drain_complete) and tears the
+    /// instance down only once it holds.
+    pub fn scale_down(&self, id: u64) -> Result<(), RackError> {
+        self.drain_as(id, InstanceState::ScalingDown)
+    }
+
+    fn drain_as(&self, id: u64, state: InstanceState) -> Result<(), RackError> {
+        debug_assert!(state.is_draining());
         let mut reg = self.reg.lock().unwrap();
         let e = reg.get_mut(&id).ok_or(RackError::NoSuchInstance(id))?;
         let inst = e.instance.as_ref().ok_or(RackError::NotServing(id))?;
         inst.request_drain();
-        e.state = InstanceState::Draining;
+        e.state = state;
         Ok(())
+    }
+
+    /// True once a draining instance has finished every sequence it owned
+    /// and all its broker workers exited — the point at which teardown is
+    /// guaranteed not to cut off in-flight work. Placement-only entries
+    /// are vacuously complete. Non-blocking: the autoscaler polls this
+    /// each control tick instead of parking on a worker join.
+    pub fn drain_complete(&self, id: u64) -> Result<bool, RackError> {
+        let reg = self.reg.lock().unwrap();
+        let e = reg.get(&id).ok_or(RackError::NoSuchInstance(id))?;
+        Ok(e.instance.as_ref().map_or(true, |i| i.drain_complete()))
+    }
+
+    /// The instance the autoscaler should retire next for `model`: the
+    /// newest (highest-id) one still serving. Newest-first keeps the
+    /// longest-lived instances (warm pools, stable leases) in place.
+    pub fn scale_down_candidate(&self, model: &str) -> Option<u64> {
+        self.reg
+            .lock()
+            .unwrap()
+            .iter()
+            .rev()
+            .find(|(_, e)| e.model == model && e.serving_slots() > 0)
+            .map(|(id, _)| *id)
+    }
+
+    /// A live instance the registry still believes is `Serving` whose
+    /// broker workers are all gone — worker panic, exit on a closed
+    /// queue, or a drain requested directly on the `LlmInstance` that
+    /// has since finished. It serves nothing yet still holds its card
+    /// lease and counts toward the scaler's instance cap — the scaler
+    /// reaps it through the normal two-phase scale-down. Registry-marked
+    /// `Draining`/`ScalingDown` entries are excluded: those drains have
+    /// an owner (operator or scaler) who will tear them down.
+    pub fn dead_instance_of(&self, model: &str) -> Option<u64> {
+        self.reg
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(_, e)| {
+                e.model == model
+                    && e.state == InstanceState::Serving
+                    && e.instance.as_ref().is_some_and(|i| !i.has_active_workers())
+            })
+            .map(|(id, _)| *id)
     }
 
     /// Retire an instance and return its cards to the pool. The model's

@@ -1,7 +1,15 @@
 //! Wire format of tensors moving card-to-card (§V-C packet conversion).
 //!
-//! header: [kind u8][slot i32][pos_off i32][last_idx i32][flags u8]
+//! header: [kind u8][slot i32][pos_off i32][last_idx i32][flags u8][check u8]
 //! payload: one or more runtime::Tensor in wire encoding.
+//!
+//! The trailing byte is a header checksum: every field of the header steers
+//! routing (slot/position index straight into KV cache lines), so a frame
+//! corrupted in transit must fail as a typed decode error — never route a
+//! token into another sequence's cache because a slot byte flipped. The
+//! checksum chain multiplies each byte by 31 (a bijection mod 256) before
+//! folding, so *any* single corrupted header byte is guaranteed to be
+//! detected; payload integrity is the tensor parser's length/shape checks.
 //!
 //! The hot path is zero-copy on both sides: encoders append into a pooled
 //! frame ([`PacketHeader::encode_into`], taking any mix of owned tensors
@@ -44,8 +52,18 @@ pub struct PacketHeader {
 
 pub const FLAG_FINAL_CHUNK: u8 = 1;
 
+/// Header checksum over the 14 content bytes. The ×31 (odd, hence a
+/// bijection mod 256) keeps distinct byte values distinct before the
+/// rotate/xor fold, so any single-byte corruption anywhere in the header
+/// (checksum byte included) changes the check value and is rejected.
+fn header_check(bytes: &[u8]) -> u8 {
+    bytes
+        .iter()
+        .fold(0x9Eu8, |acc, &b| acc.rotate_left(3) ^ b.wrapping_mul(31))
+}
+
 impl PacketHeader {
-    pub const LEN: usize = 1 + 4 + 4 + 4 + 1;
+    pub const LEN: usize = 1 + 4 + 4 + 4 + 1 + 1;
 
     pub fn decode_step() -> Self {
         PacketHeader { kind: PacketKind::Decode, slot: 0, pos_off: 0, last_idx: 0, flags: 0 }
@@ -74,11 +92,14 @@ impl PacketHeader {
     /// Append header + payload into `out` (a cleared pooled frame on the
     /// hot path — no allocation when the frame's capacity suffices).
     pub fn encode_into(&self, tensors: &[&dyn WireEncode], out: &mut Vec<u8>) {
+        let start = out.len();
         out.push(self.kind as u8);
         out.extend(self.slot.to_le_bytes());
         out.extend(self.pos_off.to_le_bytes());
         out.extend(self.last_idx.to_le_bytes());
         out.push(self.flags);
+        let check = header_check(&out[start..]);
+        out.push(check);
         for t in tensors {
             t.encode_wire_into(out);
         }
@@ -98,6 +119,12 @@ impl PacketHeader {
     fn decode_header(bytes: &[u8]) -> Result<PacketHeader> {
         if bytes.len() < Self::LEN {
             bail!("packet too short");
+        }
+        // integrity first: a corrupted kind/slot/position byte must never
+        // route a payload (the checksum also covers the kind byte, so the
+        // match below only ever sees intact headers with novel kinds)
+        if header_check(&bytes[..Self::LEN - 1]) != bytes[Self::LEN - 1] {
+            bail!("header checksum mismatch");
         }
         let kind = match bytes[0] {
             0 => PacketKind::Decode,
@@ -206,6 +233,109 @@ mod tests {
         bytes.truncate(bytes.len() - 3);
         assert!(PacketHeader::decode_views(&bytes).is_err());
         assert!(PacketHeader::decode(&bytes).is_err());
+    }
+
+    /// Every possible single-byte corruption of the header region — any
+    /// byte, any xor delta — must surface as a typed decode error. This is
+    /// the checksum's hard guarantee (×31 bijection + rotate/xor chain),
+    /// not a statistical one.
+    #[test]
+    fn any_single_byte_header_corruption_is_rejected() {
+        let h = PacketHeader::prefill(3, 64, 7, true);
+        let t = Tensor::i32(vec![2], vec![1, 2]);
+        let frame = h.encode(&[&t]);
+        for i in 0..PacketHeader::LEN {
+            for delta in 1..=255u8 {
+                let mut c = frame.clone();
+                c[i] ^= delta;
+                assert!(
+                    PacketHeader::decode_views(&c).is_err(),
+                    "header byte {i} xor {delta:#04x} decoded silently"
+                );
+            }
+        }
+    }
+
+    /// ISSUE 5 satellite: seeded random truncation/corruption of encoded
+    /// frames over 10k seeds. Decoding must always yield a typed error or
+    /// an intact result — never a panic, and never a silently-wrong header
+    /// (single-byte header corruption is always caught; payload corruption
+    /// may reshape a tensor but must leave the decoded header intact).
+    #[test]
+    fn fuzz_truncation_and_corruption_never_panics_or_lies() {
+        use crate::util::prng::Rng;
+
+        for seed in 0..10_000u64 {
+            let mut rng = Rng::seed(seed);
+            let hdr = match rng.usize(0, 3) {
+                0 => PacketHeader::decode_step(),
+                1 => PacketHeader::prefill(
+                    rng.range(0, 64) as i32,
+                    rng.range(0, 4096) as i32,
+                    rng.range(0, 64) as i32,
+                    rng.bool(0.5),
+                ),
+                _ => PacketHeader::decode_seq(rng.range(0, 64) as i32, rng.range(0, 4096) as i32),
+            };
+            let tensors: Vec<Tensor> = (0..rng.usize(0, 4))
+                .map(|_| {
+                    let shape: Vec<usize> =
+                        (0..rng.usize(1, 3)).map(|_| rng.usize(1, 5)).collect();
+                    let n = shape.iter().product::<usize>();
+                    match rng.usize(0, 3) {
+                        0 => Tensor::f32(shape, (0..n).map(|_| rng.f64() as f32).collect()),
+                        1 => Tensor::i32(shape, (0..n).map(|_| rng.range(0, 100) as i32).collect()),
+                        _ => Tensor::i8(shape, (0..n).map(|_| rng.range(0, 100) as i8).collect()),
+                    }
+                })
+                .collect();
+            let refs: Vec<&Tensor> = tensors.iter().collect();
+            let frame = hdr.encode(&refs);
+
+            if rng.bool(0.5) {
+                // --- truncation: typed error, or an exact prefix ---------
+                let cut = rng.usize(0, frame.len());
+                match PacketHeader::decode_views(&frame[..cut]) {
+                    Err(_) => {}
+                    Ok((h2, views)) => {
+                        assert_eq!(h2, hdr, "seed {seed}: truncation altered the header");
+                        assert!(views.len() <= tensors.len(), "seed {seed}");
+                        for (v, t0) in views.iter().zip(&tensors) {
+                            assert_eq!(&v.to_tensor(), t0, "seed {seed}: tensor prefix mangled");
+                        }
+                    }
+                }
+            } else {
+                // --- corruption: 1..3 xor-flipped bytes ------------------
+                let mut c = frame.clone();
+                let mut hit_header = 0usize;
+                for _ in 0..rng.usize(1, 4) {
+                    let i = rng.usize(0, c.len());
+                    c[i] ^= rng.range(1, 256) as u8;
+                    if i < PacketHeader::LEN {
+                        hit_header += 1;
+                    }
+                }
+                match PacketHeader::decode_views(&c) {
+                    Err(_) => {}
+                    Ok((h2, _)) => {
+                        // a 1-byte checksum guarantees detection of single
+                        // header corruptions; multi-byte header hits may
+                        // collide, but a clean header region must decode
+                        // back to exactly the original header
+                        if hit_header == 1 {
+                            panic!("seed {seed}: corrupted header decoded silently");
+                        }
+                        if hit_header == 0 {
+                            assert_eq!(
+                                h2, hdr,
+                                "seed {seed}: payload corruption bled into the header"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

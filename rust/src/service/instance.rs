@@ -170,6 +170,15 @@ pub struct LlmInstance {
     /// Set by `request_drain`: stop pulling new broker tasks, finish what
     /// was already consumed. In-flight generation is unaffected.
     draining: AtomicBool,
+    /// Requests admitted (`submit`) and not yet retired (`finish_slot`).
+    /// A stop abandons its window without retiring, so after `shutdown`/
+    /// `retire` the counter may stay nonzero — it is meaningful for live
+    /// and draining instances, which always run their work to completion.
+    in_flight: AtomicUsize,
+    /// Live `serve_broker` workers; decremented as each worker thread
+    /// exits (panic included). Together with `in_flight` this is the
+    /// drain-completion signal the rack autoscaler polls each tick.
+    active_workers: AtomicUsize,
     /// High-water mark of decode packets *outstanding* — submitted, with
     /// the completion not yet routed — (cumulative across serving runs).
     /// Batched rounds cap this at 1; the per-sequence regime reaches up
@@ -258,6 +267,8 @@ impl LlmInstance {
             opts,
             stop: AtomicBool::new(false),
             draining: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            active_workers: AtomicUsize::new(0),
             decode_hwm: AtomicUsize::new(0),
             t0: Instant::now(),
         })
@@ -271,11 +282,19 @@ impl LlmInstance {
     }
 
     pub fn submit(&self, req: GenRequest) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
         self.queue.lock().unwrap().push_back(req);
     }
 
     pub fn pending(&self) -> usize {
         self.queue.lock().unwrap().len()
+    }
+
+    /// Requests admitted and not yet completed (queued + occupying slots).
+    /// The autoscaler's low-water probe: scale-down quiesces only when
+    /// this reaches zero alongside an empty broker queue.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
     }
 
     /// Tokenize a request and stage it in a slot; injection happens later,
@@ -417,6 +436,7 @@ impl LlmInstance {
 
     /// Emit the Done update + wall-clock record for a retired slot.
     fn finish_slot(&self, mut st: SlotState) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
         let ttft = st
             .t_first
             .map(|t| t.duration_since(st.t_submit).as_secs_f64())
@@ -706,12 +726,24 @@ impl LlmInstance {
         // register synchronously, before the worker thread is scheduled:
         // consumer-count-based admission must see the model as served the
         // moment serve_broker returns, not when the OS first runs the
-        // thread
+        // thread. The worker count follows the same rule so drain_complete
+        // can never report true between serve_broker returning and the OS
+        // first scheduling the thread.
         let consumer = broker.register_consumer(&queue);
+        self.active_workers.fetch_add(1, Ordering::SeqCst);
         std::thread::spawn(move || {
             // consumer registration guard: dropped (deregistered) when
             // this worker exits
             let _consumer = consumer;
+            // worker-exit guard: the drain-completion signal must flip
+            // even if this worker unwinds
+            struct WorkerExit(Arc<LlmInstance>);
+            impl Drop for WorkerExit {
+                fn drop(&mut self) {
+                    self.0.active_workers.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            let _worker_exit = WorkerExit(inst.clone());
             // release a waiting client whose task will not be served
             let abandon = |broker: &Broker, reply_to: u64| {
                 if let Some(ch) = broker.response(reply_to) {
@@ -905,6 +937,26 @@ impl LlmInstance {
 
     pub fn is_draining(&self) -> bool {
         self.draining.load(Ordering::Relaxed)
+    }
+
+    /// Any `serve_broker` worker still running? Registered synchronously
+    /// in `serve_broker` (before the thread is scheduled) and decremented
+    /// by a drop guard at worker exit — panic included — so capacity
+    /// accounting can tell a served queue from one whose only consumer
+    /// died.
+    pub fn has_active_workers(&self) -> bool {
+        self.active_workers.load(Ordering::SeqCst) > 0
+    }
+
+    /// Drain-completion signal (ISSUE 5): true once a drain was requested
+    /// AND every `serve_broker` worker has exited with nothing in flight.
+    /// The rack autoscaler polls this each control tick instead of
+    /// sleeping on a worker join, so scale-down can never tear down an
+    /// instance that still owns live sequences.
+    pub fn drain_complete(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+            && self.active_workers.load(Ordering::SeqCst) == 0
+            && self.in_flight.load(Ordering::SeqCst) == 0
     }
 
     /// Stop this instance without closing its broker queues: the rack

@@ -204,3 +204,104 @@ fn admission_tracks_capacity_and_unknown_models() {
     assert_eq!(svc.admit(MODEL), AdmitDecision::Saturated);
     svc.shutdown_all();
 }
+
+/// Regression (ISSUE 5 satellite): admission capacity must come from
+/// instances that are *actually* serving. A drain requested directly on
+/// the `LlmInstance` (bypassing `RackService::drain`, so the registry
+/// state still reads `Serving`) used to keep the instance's slots in the
+/// capacity sum — the front door kept admitting work that then queued
+/// behind nobody.
+#[test]
+fn admission_excludes_directly_drained_instances() {
+    use npserve::api::AdmitDecision;
+    let svc = RackService::new(RackSpec::northpole_42u());
+    let ids = deploy_toys(&svc, 2);
+    let slots = ToyConfig::small().batch_slots;
+    assert_eq!(svc.capacity_of(MODEL), 2 * slots);
+
+    // drain one instance behind the registry's back
+    svc.instance_handle(ids[0]).unwrap().request_drain();
+    assert_eq!(
+        svc.capacity_of(MODEL),
+        slots,
+        "a directly-drained instance must not count as capacity"
+    );
+    // the registry still says Serving — the instance flag is the truth
+    assert_eq!(
+        svc.instances().iter().find(|i| i.id == ids[0]).unwrap().state,
+        InstanceState::Serving
+    );
+    // the survivor keeps the model admittable...
+    assert_eq!(svc.admit(MODEL), AdmitDecision::Accept);
+    // ...but once it too is drained directly, capacity is 0 and the door
+    // saturates instead of queueing work behind nobody
+    svc.instance_handle(ids[1]).unwrap().request_drain();
+    assert_eq!(svc.capacity_of(MODEL), 0);
+    assert_eq!(svc.admit(MODEL), AdmitDecision::Saturated);
+    svc.shutdown_all();
+}
+
+/// ISSUE 5: an instance whose only broker worker died — here: exited on
+/// a closed queue, the same signal a panicked worker leaves — contributes
+/// no serving capacity, even though the registry still reads `Serving`
+/// and no drain was ever requested. Without the `has_active_workers`
+/// check, admission would keep accepting work that queues behind nobody.
+#[test]
+fn admission_excludes_instances_with_dead_workers() {
+    use npserve::api::AdmitDecision;
+    let svc = RackService::new(RackSpec::northpole_42u());
+    let ids = deploy_toys(&svc, 1);
+    assert_eq!(svc.capacity_of(MODEL), ToyConfig::small().batch_slots);
+
+    // kill the consumer from the outside: closing the queue makes the
+    // worker exit with the registry none the wiser
+    svc.broker().close(MODEL);
+    let h = svc.instance_handle(ids[0]).unwrap();
+    while h.has_active_workers() {
+        std::thread::yield_now();
+    }
+    assert_eq!(
+        svc.instances().iter().find(|i| i.id == ids[0]).unwrap().state,
+        InstanceState::Serving,
+        "registry state alone cannot see the dead worker"
+    );
+    assert_eq!(svc.capacity_of(MODEL), 0, "dead-worker instance must not count");
+    assert_eq!(svc.admit(MODEL), AdmitDecision::Saturated);
+    svc.shutdown_all();
+}
+
+/// ISSUE 5: `scale_down` marks the autoscaler's intent (`ScalingDown`),
+/// excludes the instance from capacity, and `drain_complete` flips only
+/// once the worker exited with nothing in flight — the teardown gate.
+#[test]
+fn scale_down_marks_state_and_drain_completes() {
+    let svc = RackService::new(RackSpec::northpole_42u());
+    let ids = deploy_toys(&svc, 2);
+    let slots = ToyConfig::small().batch_slots;
+
+    // serve something first so the drained instance had real work
+    let first = roundtrip(&svc, &["hello".to_string(), "world".to_string()]);
+    assert_eq!(first.len(), 2);
+
+    svc.scale_down(ids[1]).unwrap();
+    assert_eq!(
+        svc.instances().iter().find(|i| i.id == ids[1]).unwrap().state,
+        InstanceState::ScalingDown
+    );
+    assert_eq!(svc.capacity_of(MODEL), slots, "scaling-down excluded from capacity");
+    assert_eq!(svc.instance_counts_of(MODEL), (1, 2), "serving=1, live=2");
+
+    // drain completion: the worker observes the flag at its next bounded
+    // wait and exits; poll without sleeping
+    while !svc.drain_complete(ids[1]).unwrap() {
+        std::thread::yield_now();
+    }
+    assert_eq!(svc.in_flight_of(MODEL), 0);
+    svc.teardown(ids[1]).unwrap();
+    assert_eq!(svc.inventory().in_use(), 4, "cards returned");
+
+    // the survivor still serves identically
+    let again = roundtrip(&svc, &["hello".to_string(), "world".to_string()]);
+    assert_eq!(again, first);
+    svc.shutdown_all();
+}
