@@ -64,6 +64,8 @@ fn run(cfg: &ToyConfig, resident: bool, max_tokens: usize) -> Measured {
         temperature: 0.0,
         top_k: 0,
         stop_byte: None,
+        retries: 0,
+        resume_from: 0,
     };
     // warmup: primes the frame pool and the serving loop's row buffers
     inst.submit(req(1000, 2));

@@ -66,6 +66,8 @@ fn run(cfg: &ToyConfig, per_seq: bool, gen_lens: &[usize]) -> Measured {
         temperature: 0.0,
         top_k: 0,
         stop_byte: None,
+        retries: 0,
+        resume_from: 0,
     };
     // warmup: primes the frame pool and the serving loop's row buffers
     inst.submit(req(1000, 2));

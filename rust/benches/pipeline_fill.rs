@@ -48,9 +48,16 @@ fn report_path() -> PathBuf {
 struct StubStage(Duration);
 
 impl StageExecutor for StubStage {
-    fn execute(&self, _c: u32, _t: u64, input: &[u8], out: &mut Vec<u8>) {
+    fn execute(
+        &self,
+        _c: u32,
+        _t: u64,
+        input: &[u8],
+        out: &mut Vec<u8>,
+    ) -> Result<(), npserve::npruntime::StageError> {
         std::thread::sleep(self.0);
         out.extend_from_slice(input);
+        Ok(())
     }
 }
 

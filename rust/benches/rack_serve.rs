@@ -15,6 +15,15 @@
 //! provisioned 2-instance fleet. Results land in BENCH_PR5.json
 //! §rack_autoscale.
 //!
+//! Fault-recovery variant (ISSUE 7): the same 2-instance fleet, but one
+//! instance's card chain is killed mid-wave by a deterministic
+//! `FaultPlan`. The wave must still complete exactly once (lost sequences
+//! requeue and replay on the survivor), aggregate OTPS across the
+//! degraded window must hold ≥ 0.45x the 2-instance steady state, and —
+//! after the autoscaler reaps the dead instance and redeploys to the
+//! floor — a follow-up wave must be back at full 2-instance throughput.
+//! Results land in BENCH_PR7.json §fault_recovery.
+//!
 //!   cargo bench --bench rack_serve             full sweep (1, 2, 4 instances)
 //!   RACK_SERVE_SMOKE=1 cargo bench --bench rack_serve   CI smoke (1, 2)
 
@@ -24,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use npserve::broker::Task;
 use npserve::config::hw::RackSpec;
+use npserve::fault::FaultPlan;
 use npserve::metrics::ScaleTrigger;
 use npserve::rack::{Autoscaler, InstanceSpec, ModelScaler, RackService, ScalePolicy};
 use npserve::runtime::testmodel::ToyConfig;
@@ -36,6 +46,10 @@ fn report_path() -> PathBuf {
 
 fn report_path_pr5() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR5.json")
+}
+
+fn report_path_pr7() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR7.json")
 }
 
 const MODEL: &str = "toy-testmodel";
@@ -78,6 +92,8 @@ fn run_fleet(cfg: &ToyConfig, n_instances: usize, n_requests: usize) -> Measured
                     priority: 0,
                     body: "warm".into(),
                     reply_to: 90_000 + i as u64,
+                    retries: 0,
+                    resume_from: 0,
                 },
             )
         })
@@ -96,6 +112,8 @@ fn run_fleet(cfg: &ToyConfig, n_instances: usize, n_requests: usize) -> Measured
                     priority: (i % 3) as u8,
                     body: format!("req-{i}"),
                     reply_to: 10_000 + i as u64,
+                    retries: 0,
+                    resume_from: 0,
                 },
             )
         })
@@ -176,6 +194,8 @@ fn run_autoscaled(cfg: &ToyConfig, n_requests: usize) -> Measured {
                     priority: 0,
                     body: format!("warm-{i}"),
                     reply_to: 80_000 + i as u64,
+                    retries: 0,
+                    resume_from: 0,
                 },
             )
         })
@@ -214,6 +234,8 @@ fn run_autoscaled(cfg: &ToyConfig, n_requests: usize) -> Measured {
                     priority: (i % 3) as u8,
                     body: format!("req-{i}"),
                     reply_to: 10_000 + i as u64,
+                    retries: 0,
+                    resume_from: 0,
                 },
             )
         })
@@ -229,6 +251,162 @@ fn run_autoscaled(cfg: &ToyConfig, n_requests: usize) -> Measured {
     svc.shutdown_all();
     assert_eq!(tokens, n_requests * MAX_TOKENS, "full budget under the scaler");
     Measured { otps: tokens as f64 / wall_s, tokens, wall_s }
+}
+
+/// ISSUE 7: kill one of two instances mid-wave and measure what the
+/// clients see. Returns (degraded-window OTPS, post-recovery OTPS).
+///
+/// The fleet starts with one healthy instance and one whose card 0 dies
+/// on its `kill_at`-th packet — deep enough into the wave that clients
+/// are already streaming from it. The autoscaler (floor = 2) reaps the
+/// dead instance and redeploys a healthy replacement; lost sequences
+/// requeue and replay on whatever is serving. The wave's token count
+/// must be exact: recovery may cost throughput, never tokens.
+fn run_fault_chaos(cfg: &ToyConfig, n_requests: usize, kill_at: u64) -> (Measured, Measured) {
+    let svc = RackService::new(RackSpec::northpole_42u());
+    let make_spec = {
+        let cfg = *cfg;
+        move || {
+            let mut spec =
+                InstanceSpec::live(MODEL, 16, SharedEngine(Arc::new(cfg.engine())));
+            spec.max_tokens = MAX_TOKENS;
+            spec
+        }
+    };
+    svc.deploy(make_spec()).expect("healthy toy placement");
+    let plan = FaultPlan::kill_card(0, kill_at);
+    let mut victim = make_spec();
+    victim.opts.faults = Some(plan.clone());
+    svc.deploy(victim).expect("victim toy placement");
+
+    let scaler = Autoscaler::new(
+        svc.clone(),
+        vec![ModelScaler::new(
+            MODEL,
+            16,
+            ScalePolicy {
+                min_instances: 2,
+                max_instances: 2,
+                up_after: 1,
+                cooldown: 0,
+                down_after: 1_000_000,
+                ..Default::default()
+            },
+            make_spec,
+        )],
+    );
+    let log = scaler.log();
+    let mut handle = scaler.spawn_every(Duration::from_millis(1));
+
+    // warmup (counts toward the victim's packet schedule — kill_at is
+    // chosen well past it)
+    let broker = svc.broker().clone();
+    let warm: Vec<_> = (0..2)
+        .map(|i| {
+            broker.post(
+                MODEL,
+                Task {
+                    id: 90_000 + i as u64,
+                    priority: 0,
+                    body: "warm".into(),
+                    reply_to: 90_000 + i as u64,
+                    retries: 0,
+                    resume_from: 0,
+                },
+            )
+        })
+        .collect();
+    for ch in &warm {
+        while ch.recv().is_some() {}
+    }
+
+    // degraded window: the chain death, the requeues, the reap and the
+    // redeploy all land inside this wave's wall clock
+    let t0 = Instant::now();
+    let chans: Vec<_> = (0..n_requests)
+        .map(|i| {
+            broker.post(
+                MODEL,
+                Task {
+                    id: i as u64,
+                    priority: (i % 3) as u8,
+                    body: format!("req-{i}"),
+                    reply_to: 10_000 + i as u64,
+                    retries: 0,
+                    resume_from: 0,
+                },
+            )
+        })
+        .collect();
+    let mut tokens = 0usize;
+    for ch in &chans {
+        while ch.recv().is_some() {
+            tokens += 1;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(plan.injected(), 1, "the scheduled chain death must have fired");
+    assert_eq!(
+        tokens,
+        n_requests * MAX_TOKENS,
+        "recovery may cost throughput, never tokens: replay suppression \
+         must make the degraded wave token-exact"
+    );
+    let degraded = Measured { otps: tokens as f64 / wall_s, tokens, wall_s };
+
+    let snap = svc.fault_counters().snapshot();
+    assert_eq!(snap.chain_deaths, 1, "{snap}");
+    assert!(snap.sequences_requeued >= 1, "death mid-wave must strand sequences: {snap}");
+    assert_eq!(snap.sequences_recovered, snap.sequences_requeued, "{snap}");
+    assert_eq!(snap.sequences_lost, 0, "{snap}");
+
+    // the scaler must have reaped the dead instance and refilled the floor
+    let ramp = Instant::now();
+    while svc.instance_counts_of(MODEL) != (2, 2) {
+        assert!(
+            ramp.elapsed() < Duration::from_secs(20),
+            "fleet never recovered to the floor (log: {:?})",
+            log.kinds()
+        );
+        std::thread::yield_now();
+    }
+    assert!(
+        log.events()
+            .iter()
+            .any(|e| matches!(e.trigger, ScaleTrigger::DeadInstance { .. })),
+        "recovery was not reap-driven (log: {:?})",
+        log.kinds()
+    );
+
+    // post-recovery wave: same load, fleet back at strength
+    let t0 = Instant::now();
+    let chans: Vec<_> = (0..n_requests)
+        .map(|i| {
+            broker.post(
+                MODEL,
+                Task {
+                    id: i as u64,
+                    priority: (i % 3) as u8,
+                    body: format!("req-{i}"),
+                    reply_to: 20_000 + i as u64,
+                    retries: 0,
+                    resume_from: 0,
+                },
+            )
+        })
+        .collect();
+    let mut tokens = 0usize;
+    for ch in &chans {
+        while ch.recv().is_some() {
+            tokens += 1;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    handle.stop();
+    svc.shutdown_all();
+    assert_eq!(tokens, n_requests * MAX_TOKENS, "full budget after recovery");
+    let recovered = Measured { otps: tokens as f64 / wall_s, tokens, wall_s };
+    (degraded, recovered)
 }
 
 fn main() {
@@ -315,5 +493,56 @@ fn main() {
         );
         std::process::exit(1);
     }
-    println!("rack_serve OK (static scaling + autoscale steady state)");
+
+    // ---- fault-recovery variant (ISSUE 7): chain death mid-wave
+    println!("\n== rack_fault: 2-instance fleet, one chain killed mid-wave ==");
+    // card 0 of the victim dies on its 120th packet: past warmup, inside
+    // the victim's second in-flight batch — clients are mid-stream
+    const KILL_AT: u64 = 120;
+    let (degraded, recovered) = (0..trials.min(2))
+        .map(|_| run_fault_chaos(&cfg, n_requests, KILL_AT))
+        .max_by(|a, b| a.0.otps.total_cmp(&b.0.otps))
+        .expect("at least one trial");
+    let degraded_ratio = degraded.otps / otps_static2;
+    let recovered_ratio = recovered.otps / otps_static2;
+    println!(
+        "  degraded:  {:>8.0} tok/s ({} toks in {:.2}s) — {degraded_ratio:.2}x static 2x (bar: >= 0.45)",
+        degraded.otps, degraded.tokens, degraded.wall_s
+    );
+    println!(
+        "  recovered: {:>8.0} tok/s ({} toks in {:.2}s) — {recovered_ratio:.2}x static 2x (bar: >= 0.85)",
+        recovered.otps, recovered.tokens, recovered.wall_s
+    );
+    let pr7 = Value::obj(vec![
+        ("layers", Value::num(cfg.n_layers as f64)),
+        ("d_model", Value::num(cfg.d_model as f64)),
+        ("batch_slots", Value::num(cfg.batch_slots as f64)),
+        ("requests", Value::num(n_requests as f64)),
+        ("max_tokens", Value::num(MAX_TOKENS as f64)),
+        ("kill_at_packet", Value::num(KILL_AT as f64)),
+        ("otps_static_2x", Value::num(otps_static2)),
+        ("otps_degraded", Value::num(degraded.otps)),
+        ("degraded_ratio", Value::num(degraded_ratio)),
+        ("otps_recovered", Value::num(recovered.otps)),
+        ("recovered_ratio", Value::num(recovered_ratio)),
+    ]);
+    match merge_into_file(&report_path_pr7(), "fault_recovery", pr7) {
+        Ok(()) => println!("wrote BENCH_PR7.json §fault_recovery"),
+        Err(e) => eprintln!("could not write BENCH_PR7.json: {e}"),
+    }
+    if degraded_ratio < 0.45 {
+        eprintln!(
+            "FAIL: degraded-window OTPS is {degraded_ratio:.2}x the 2-instance steady \
+             state (bar: >= 0.45)"
+        );
+        std::process::exit(1);
+    }
+    if recovered_ratio < 0.85 {
+        eprintln!(
+            "FAIL: post-recovery OTPS is {recovered_ratio:.2}x the 2-instance steady \
+             state (bar: >= 0.85 — the redeploy must restore full strength)"
+        );
+        std::process::exit(1);
+    }
+    println!("rack_serve OK (static scaling + autoscale steady state + fault recovery)");
 }

@@ -200,6 +200,8 @@ impl ApiServer {
                                 priority: chat.priority,
                                 body: chat.prompt.clone(),
                                 reply_to: id,
+                                retries: 0,
+                                resume_from: 0,
                             },
                         );
                         // Re-check after posting: a teardown can race the

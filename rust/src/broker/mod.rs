@@ -17,6 +17,13 @@ pub struct Task {
     pub body: String,
     /// Correlation id for the response channel.
     pub reply_to: u64,
+    /// Retry epoch (ISSUE 7): 0 on first admission, bumped by
+    /// [`Broker::requeue`] each time a chain death hands the task back.
+    pub retries: u32,
+    /// Tokens already streamed to the client in earlier epochs; the
+    /// serving instance suppresses re-emitting the first `resume_from`
+    /// tokens so the client sees one seamless stream.
+    pub resume_from: usize,
 }
 
 #[derive(Default)]
@@ -27,6 +34,9 @@ struct QueueState {
     /// Registered consumers (instances subscribed via
     /// [`Broker::register_consumer`]) — the router's liveness signal.
     consumers: usize,
+    /// Tasks re-admitted via [`Broker::requeue`] after a chain death
+    /// (ISSUE 7) — cumulative, survives the tasks being consumed again.
+    retried: u64,
 }
 
 /// One named task queue (e.g. "granite-3.3-8b").
@@ -46,6 +56,9 @@ pub struct QueueStats {
     pub closed: bool,
     /// (priority level, waiting tasks) pairs, ascending by level.
     pub by_priority: Vec<(u8, usize)>,
+    /// Cumulative count of tasks re-admitted after a chain death
+    /// (ISSUE 7 recovery plane).
+    pub retried: u64,
 }
 
 /// Rolling depth-over-time window for control loops (the rack
@@ -226,6 +239,23 @@ impl Broker {
         ch
     }
 
+    /// Re-admit a task whose serving instance died mid-flight (ISSUE 7).
+    ///
+    /// The task goes to the *front* of its priority class — it already
+    /// waited its turn once, so it must be served before newer arrivals at
+    /// the same level — with its retry epoch bumped. The caller is
+    /// expected to have set `resume_from` to the number of tokens already
+    /// streamed; the existing response channel is left untouched so the
+    /// client keeps streaming from wherever the dead instance stopped.
+    pub fn requeue(&self, queue: &str, mut task: Task) {
+        task.retries += 1;
+        let q = self.queue(queue);
+        let mut st = q.state.lock().unwrap();
+        st.retried += 1;
+        st.by_priority.entry(task.priority).or_default().push_front(task);
+        q.ready.notify_all();
+    }
+
     /// Consume the next task at one of the subscribed priority levels,
     /// highest priority first; blocks until available or the queue closes.
     pub fn consume(&self, queue: &str, priorities: &[u8]) -> Option<Task> {
@@ -322,6 +352,7 @@ impl Broker {
                 consumers: 0,
                 closed: false,
                 by_priority: Vec::new(),
+                retried: 0,
             };
         };
         let st = q.state.lock().unwrap();
@@ -330,6 +361,7 @@ impl Broker {
             consumers: st.consumers,
             closed: st.closed,
             by_priority: st.by_priority.iter().map(|(p, f)| (*p, f.len())).collect(),
+            retried: st.retried,
         }
     }
 
@@ -387,7 +419,14 @@ mod tests {
     use std::thread;
 
     fn task(id: u64, prio: u8) -> Task {
-        Task { id, priority: prio, body: format!("req{id}"), reply_to: id }
+        Task {
+            id,
+            priority: prio,
+            body: format!("req{id}"),
+            reply_to: id,
+            retries: 0,
+            resume_from: 0,
+        }
     }
 
     #[test]
@@ -512,6 +551,40 @@ mod tests {
         assert_eq!(seen, (0..N).collect::<Vec<_>>(), "each task exactly once");
         assert_eq!(b.stats("m").consumers, 0, "guards must deregister");
         assert!(b.stats("m").closed);
+    }
+
+    /// Regression (ISSUE 7): a requeued task jumps the line within its
+    /// priority class — it is served before newer arrivals at the same
+    /// level, its retry epoch is bumped, and the queue's retried counter
+    /// reflects every re-admission. Priority entitlements still dominate:
+    /// a higher-priority task beats a requeued lower-priority one.
+    #[test]
+    fn requeue_readmits_at_front_of_priority_class() {
+        let b = Broker::new();
+        b.post("m", task(1, 0));
+        b.post("m", task(2, 0));
+        // instance picks up task 1, streams 3 tokens, then its chain dies
+        let mut lost = b.consume("m", &[0]).unwrap();
+        assert_eq!(lost.id, 1);
+        lost.resume_from = 3;
+        b.requeue("m", lost);
+        // a newer same-priority arrival must wait behind the retry
+        b.post("m", task(3, 0));
+        let st = b.stats("m");
+        assert_eq!(st.retried, 1);
+        assert_eq!(st.depth, 3);
+        let again = b.consume("m", &[0]).unwrap();
+        assert_eq!(again.id, 1, "requeued task is served first");
+        assert_eq!(again.retries, 1, "retry epoch bumped");
+        assert_eq!(again.resume_from, 3, "resume point travels with the task");
+        assert_eq!(b.consume("m", &[0]).unwrap().id, 2);
+        assert_eq!(b.consume("m", &[0]).unwrap().id, 3);
+        // priority still dominates: requeued prio-0 loses to fresh prio-2
+        b.requeue("m", task(4, 0));
+        b.post("m", task(5, 2));
+        assert_eq!(b.consume("m", &[0, 1, 2]).unwrap().id, 5);
+        assert_eq!(b.consume("m", &[0, 1, 2]).unwrap().id, 4);
+        assert_eq!(b.stats("m").retried, 2, "counter is cumulative");
     }
 
     #[test]

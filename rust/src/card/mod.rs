@@ -14,6 +14,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::util::sync::{lock_clean, wait_clean, wait_timeout_clean};
+
 /// A pool of recycled packet frames (`Vec<u8>`). Card workers and the
 /// host-side packet encoders draw frames here instead of allocating a
 /// fresh buffer per hop, and return them when the packet is consumed or
@@ -51,7 +53,7 @@ impl BufPool {
     /// happens at the encode site when the frame first grows, which is
     /// where `util::traffic` meters it.
     pub fn get(&self) -> Vec<u8> {
-        if let Some(f) = self.frames.lock().unwrap().pop() {
+        if let Some(f) = lock_clean(&self.frames).pop() {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return f;
         }
@@ -63,7 +65,7 @@ impl BufPool {
     /// what makes the next `get` allocation-free.
     pub fn put(&self, mut f: Vec<u8>) {
         f.clear();
-        let mut frames = self.frames.lock().unwrap();
+        let mut frames = lock_clean(&self.frames);
         if frames.len() < self.max_frames {
             frames.push(f);
         }
@@ -119,13 +121,13 @@ impl Framebuffer {
     }
 
     pub fn free_slots(&self) -> u32 {
-        self.slots - self.queue.lock().unwrap().len() as u32
+        self.slots - lock_clean(&self.queue).len() as u32
     }
 
     /// Place a packet (the *destination* side of a C2C transfer). Fails if
     /// the framebuffer is full — the credit protocol must prevent this.
     pub fn place(&self, p: Packet) -> Result<(), CardError> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_clean(&self.queue);
         if q.len() as u32 >= self.slots {
             return Err(CardError::FramebufferFull(self.slots));
         }
@@ -136,30 +138,29 @@ impl Framebuffer {
 
     /// Consume the next staged packet, blocking until one is available.
     pub fn consume(&self) -> Packet {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_clean(&self.queue);
         loop {
             if let Some(p) = q.pop_front() {
                 return p;
             }
-            q = self.avail.wait(q).unwrap();
+            q = wait_clean(&self.avail, q);
         }
     }
 
     /// Non-blocking consume.
     pub fn try_consume(&self) -> Option<Packet> {
-        self.queue.lock().unwrap().pop_front()
+        lock_clean(&self.queue).pop_front()
     }
 
     /// Consume with a timeout (returns None on expiry). The hot path uses
     /// this instead of polling: §Perf showed a 50 µs poll sleep adding up
     /// to ~150 µs per chain round-trip.
     pub fn consume_timeout(&self, dur: std::time::Duration) -> Option<Packet> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_clean(&self.queue);
         if let Some(p) = q.pop_front() {
             return Some(p);
         }
-        let (mut q, res) = self.avail.wait_timeout(q, dur).unwrap();
-        let _ = res;
+        let (mut q, _timed_out) = wait_timeout_clean(&self.avail, q, dur);
         q.pop_front()
     }
 }
@@ -181,15 +182,15 @@ impl CreditCounter {
     /// Take one credit, blocking until available ("further outputs are held
     /// at the source card until there is space at the destination").
     pub fn take(&self) {
-        let mut c = self.state.lock().unwrap();
+        let mut c = lock_clean(&self.state);
         while *c == 0 {
-            c = self.returned.wait(c).unwrap();
+            c = wait_clean(&self.returned, c);
         }
         *c -= 1;
     }
 
     pub fn try_take(&self) -> bool {
-        let mut c = self.state.lock().unwrap();
+        let mut c = lock_clean(&self.state);
         if *c == 0 {
             return false;
         }
@@ -204,7 +205,7 @@ impl CreditCounter {
     /// Re-waits after spurious/competed wakeups until the deadline.
     pub fn take_timeout(&self, dur: std::time::Duration) -> bool {
         let deadline = std::time::Instant::now() + dur;
-        let mut c = self.state.lock().unwrap();
+        let mut c = lock_clean(&self.state);
         loop {
             if *c > 0 {
                 *c -= 1;
@@ -214,20 +215,20 @@ impl CreditCounter {
             if left.is_zero() {
                 return false;
             }
-            let (g, _) = self.returned.wait_timeout(c, left).unwrap();
+            let (g, _timed_out) = wait_timeout_clean(&self.returned, c, left);
             c = g;
         }
     }
 
     /// Return one credit (destination consumed a tensor).
     pub fn put(&self) {
-        let mut c = self.state.lock().unwrap();
+        let mut c = lock_clean(&self.state);
         *c += 1;
         self.returned.notify_one();
     }
 
     pub fn available(&self) -> u32 {
-        *self.state.lock().unwrap()
+        *lock_clean(&self.state)
     }
 }
 
@@ -260,13 +261,13 @@ impl CardFpga {
 
     /// Store a circuit hop (precomputed DMA descriptor chain, §V-C-3).
     pub fn configure_circuit(&self, hop: CircuitHop) {
-        let mut h = self.hops.lock().unwrap();
+        let mut h = lock_clean(&self.hops);
         h.retain(|x| x.circuit != hop.circuit);
         h.push(hop);
     }
 
     fn hop(&self, circuit: u32) -> Result<CircuitHop, CardError> {
-        let h = self.hops.lock().unwrap();
+        let h = lock_clean(&self.hops);
         h.iter()
             .find(|x| x.circuit == circuit)
             .cloned()
@@ -278,7 +279,11 @@ impl CardFpga {
         match hop.dest {
             None => Ok(Some(p)), // host-bound output
             Some(fb) => {
-                fb.place(p).expect("credit protocol must prevent overflow");
+                // a full destination here is a credit-protocol violation:
+                // surface it as a typed error so the worker can die clean
+                // (the old `.expect(...)` panicked and poisoned the hop
+                // mutexes of every peer sharing the chain).
+                fb.place(p)?;
                 Ok(None)
             }
         }

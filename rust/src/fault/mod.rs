@@ -1,0 +1,193 @@
+//! Deterministic fault-injection plane (ISSUE 7).
+//!
+//! At rack scale — 288 cards behind one front door — a card stall or
+//! worker death is a *when*, not an *if*. This module makes those faults
+//! reproducible: a [`FaultPlan`] is a seeded, packet-scheduled list of
+//! [`FaultEvent`]s threaded through the chain workers
+//! (`npruntime::NpRuntime::load_circuit_faulty`), in the same spirit as
+//! the tick-injected autoscaler harness of ISSUE 5 — no wall-clock
+//! triggers, so a chaos run replays byte-identically from its seed.
+//!
+//! Fault taxonomy (EXPERIMENTS.md §Fault-injection):
+//! * [`FaultKind::Die`] — the card worker exits mid-stream (chain death),
+//! * [`FaultKind::Stall`] — the card holds a packet for a fixed duration
+//!   (exceeding the watchdog deadline looks like a death; shorter stalls
+//!   are absorbed),
+//! * [`FaultKind::DropFrame`] — the packet vanishes after credits are
+//!   accounted (its completion never arrives; only the watchdog notices),
+//! * [`FaultKind::CorruptFrame`] — one output byte is flipped, exercising
+//!   the codec's header checksum and the typed bad-packet path downstream.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::prng::Rng;
+use crate::util::sync::lock_clean;
+
+/// What goes wrong when a [`FaultEvent`] fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The card's worker exits immediately: chain death.
+    Die,
+    /// The card holds the packet for this long before processing it.
+    Stall(Duration),
+    /// The packet is consumed (credits returned) but never forwarded.
+    DropFrame,
+    /// One byte of the card's output frame is flipped.
+    CorruptFrame,
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Die => "die",
+            FaultKind::Stall(_) => "stall",
+            FaultKind::DropFrame => "drop_frame",
+            FaultKind::CorruptFrame => "corrupt_frame",
+        }
+    }
+}
+
+/// One scheduled fault: fires when card `card` consumes its
+/// `at_packet`-th packet (1-indexed), exactly once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub card: u32,
+    pub at_packet: u64,
+    pub kind: FaultKind,
+}
+
+struct PlanState {
+    /// Packets consumed so far, per card.
+    seen: HashMap<u32, u64>,
+    /// Scheduled events; `true` once fired (each fires at most once).
+    events: Vec<(FaultEvent, bool)>,
+}
+
+/// A deterministic schedule of card faults, shared by every worker of a
+/// chain. Workers call [`check`](Self::check) once per consumed packet;
+/// the plan advances that card's packet counter and returns the fault (if
+/// any) scheduled for that exact packet.
+pub struct FaultPlan {
+    state: Mutex<PlanState>,
+    injected: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(events: Vec<FaultEvent>) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            state: Mutex::new(PlanState {
+                seen: HashMap::new(),
+                events: events.into_iter().map(|e| (e, false)).collect(),
+            }),
+            injected: AtomicU64::new(0),
+        })
+    }
+
+    /// The most common chaos plan: card `card` dies when it consumes its
+    /// `at_packet`-th packet.
+    pub fn kill_card(card: u32, at_packet: u64) -> Arc<FaultPlan> {
+        Self::new(vec![FaultEvent { card, at_packet, kind: FaultKind::Die }])
+    }
+
+    /// A seeded random plan: `n_events` faults spread over `n_cards` cards
+    /// within the first `horizon` packets each. Same seed → same plan.
+    pub fn seeded(seed: u64, n_cards: u32, horizon: u64, n_events: usize) -> Arc<FaultPlan> {
+        let mut rng = Rng::seed(seed);
+        let kinds = [
+            FaultKind::Die,
+            FaultKind::Stall(Duration::from_millis(20)),
+            FaultKind::DropFrame,
+            FaultKind::CorruptFrame,
+        ];
+        let events = (0..n_events)
+            .map(|_| FaultEvent {
+                card: rng.range(0, n_cards.max(1) as u64) as u32,
+                at_packet: rng.range(1, horizon.max(2)),
+                kind: *rng.choose(&kinds),
+            })
+            .collect();
+        Self::new(events)
+    }
+
+    /// Advance `card`'s packet counter and return the fault scheduled for
+    /// this packet, if any. Called by the chain worker once per consumed
+    /// packet; an event fires at most once.
+    pub fn check(&self, card: u32) -> Option<FaultKind> {
+        let mut s = lock_clean(&self.state);
+        let n = s.seen.entry(card).or_insert(0);
+        *n += 1;
+        let n = *n;
+        for (ev, fired) in s.events.iter_mut() {
+            if !*fired && ev.card == card && ev.at_packet == n {
+                *fired = true;
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return Some(ev.kind);
+            }
+        }
+        None
+    }
+
+    /// Faults actually injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Packets consumed by `card` so far (test introspection).
+    pub fn packets_seen(&self, card: u32) -> u64 {
+        lock_clean(&self.state).seen.get(&card).copied().unwrap_or(0)
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = lock_clean(&self.state);
+        f.debug_struct("FaultPlan")
+            .field("events", &s.events)
+            .field("injected", &self.injected.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_exactly_once_at_the_scheduled_packet() {
+        let plan = FaultPlan::kill_card(2, 3);
+        // other cards never trigger it
+        for _ in 0..10 {
+            assert_eq!(plan.check(0), None);
+        }
+        assert_eq!(plan.check(2), None); // packet 1
+        assert_eq!(plan.check(2), None); // packet 2
+        assert_eq!(plan.check(2), Some(FaultKind::Die)); // packet 3
+        assert_eq!(plan.check(2), None, "events fire at most once");
+        assert_eq!(plan.injected(), 1);
+        assert_eq!(plan.packets_seen(2), 4);
+    }
+
+    #[test]
+    fn multiple_events_on_one_card() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent { card: 0, at_packet: 1, kind: FaultKind::DropFrame },
+            FaultEvent { card: 0, at_packet: 2, kind: FaultKind::CorruptFrame },
+        ]);
+        assert_eq!(plan.check(0), Some(FaultKind::DropFrame));
+        assert_eq!(plan.check(0), Some(FaultKind::CorruptFrame));
+        assert_eq!(plan.check(0), None);
+        assert_eq!(plan.injected(), 2);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = format!("{:?}", FaultPlan::seeded(42, 4, 100, 6));
+        let b = format!("{:?}", FaultPlan::seeded(42, 4, 100, 6));
+        let c = format!("{:?}", FaultPlan::seeded(43, 4, 100, 6));
+        assert_eq!(a, b, "same seed, same plan");
+        assert_ne!(a, c, "different seed, different plan");
+    }
+}

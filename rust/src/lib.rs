@@ -17,6 +17,7 @@ pub mod util {
     pub mod json;
     pub mod prng;
     pub mod stats;
+    pub mod sync;
     pub mod traffic;
 }
 
@@ -31,6 +32,7 @@ pub mod config;
 pub mod consensus;
 pub mod driver;
 pub mod fabric;
+pub mod fault;
 pub mod npruntime;
 pub mod tokenizer;
 pub mod chip;

@@ -305,6 +305,8 @@ fn main() {
                                 priority: (i % 3) as u8,
                                 body: format!("req{i}:"),
                                 reply_to: 5000 + i as u64,
+                                retries: 0,
+                                resume_from: 0,
                             },
                         )
                     })
@@ -344,6 +346,8 @@ fn main() {
             inst.submit(npserve::service::GenRequest {
                 id: 1, prompt: "3+4=".into(), max_tokens: 4,
                 temperature: 0.0, top_k: 0, stop_byte: None,
+                retries: 0,
+                resume_from: 0,
             });
             let recs = inst.serve_until_drained();
             println!("generated {} tokens; selftest OK", recs[0].n_out);

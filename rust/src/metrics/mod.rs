@@ -11,6 +11,7 @@
 
 use std::fmt;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::pipeline::sim::SeqRecord;
@@ -109,6 +110,97 @@ impl BatchMetrics {
     }
 }
 
+// ---------------------------------------------------------- fault counters
+
+/// Cumulative fault-plane counters (ISSUE 7). One shared cell per rack:
+/// `rack::RackService` threads its counters into every instance it
+/// deploys (via `ServeOptions`), so the tally survives an instance being
+/// reaped and torn down — exactly the case the counters exist to record.
+/// Standalone instances get a private cell.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    /// Chain faults observed (every [`crate::npruntime::ChainError`]).
+    chain_deaths: AtomicU64,
+    /// Subset of `chain_deaths`: watchdog packet-deadline expiries.
+    packet_timeouts: AtomicU64,
+    /// Subset of `chain_deaths`: completion frames that failed host-side
+    /// decode (codec checksum).
+    bad_frames: AtomicU64,
+    /// Sequences re-admitted to the broker after a chain death.
+    sequences_requeued: AtomicU64,
+    /// Requeued sequences that later completed on another chain.
+    sequences_recovered: AtomicU64,
+    /// Sequences abandoned after exhausting their retry budget (the
+    /// client got a typed `recoverable_error`).
+    sequences_lost: AtomicU64,
+}
+
+impl FaultCounters {
+    pub fn on_chain_fault(&self, e: &crate::npruntime::ChainError) {
+        use crate::npruntime::ChainError;
+        self.chain_deaths.fetch_add(1, Ordering::Relaxed);
+        match e {
+            ChainError::PacketTimeout { .. } => {
+                self.packet_timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            ChainError::BadFrame { .. } => {
+                self.bad_frames.fetch_add(1, Ordering::Relaxed);
+            }
+            ChainError::CardDead { .. } => {}
+        }
+    }
+
+    pub fn on_requeued(&self) {
+        self.sequences_requeued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_recovered(&self) {
+        self.sequences_recovered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_lost(&self) {
+        self.sequences_lost.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> FaultSnapshot {
+        FaultSnapshot {
+            chain_deaths: self.chain_deaths.load(Ordering::Relaxed),
+            packet_timeouts: self.packet_timeouts.load(Ordering::Relaxed),
+            bad_frames: self.bad_frames.load(Ordering::Relaxed),
+            sequences_requeued: self.sequences_requeued.load(Ordering::Relaxed),
+            sequences_recovered: self.sequences_recovered.load(Ordering::Relaxed),
+            sequences_lost: self.sequences_lost.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`FaultCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultSnapshot {
+    pub chain_deaths: u64,
+    pub packet_timeouts: u64,
+    pub bad_frames: u64,
+    pub sequences_requeued: u64,
+    pub sequences_recovered: u64,
+    pub sequences_lost: u64,
+}
+
+impl fmt::Display for FaultSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "chain deaths {} (timeouts {}, bad frames {}) | seqs requeued {}, \
+             recovered {}, lost {}",
+            self.chain_deaths,
+            self.packet_timeouts,
+            self.bad_frames,
+            self.sequences_requeued,
+            self.sequences_recovered,
+            self.sequences_lost,
+        )
+    }
+}
+
 // ------------------------------------------------------------- fleet view
 
 /// One registered instance's slice of the rack (rack::RackService).
@@ -130,6 +222,9 @@ pub struct FleetMetrics {
     pub instances: Vec<InstanceReport>,
     pub cards_total: usize,
     pub cards_leased: usize,
+    /// Rack-cumulative fault-plane tally (ISSUE 7) — survives instance
+    /// teardown because the counters live on the rack, not the instance.
+    pub faults: FaultSnapshot,
 }
 
 impl FleetMetrics {
@@ -207,6 +302,9 @@ impl FleetMetrics {
                 if itl.is_nan() { 0.0 } else { itl * 1e3 },
                 i.metrics.otps,
             ));
+        }
+        if self.faults != FaultSnapshot::default() {
+            out.push_str(&format!("faults: {}\n", self.faults));
         }
         out.push_str(&format!(
             "fleet: {} seqs | TTFT {:.1} ms | ITL {:.2} ms | OTPS {:.0} | \
@@ -434,6 +532,7 @@ mod tests {
             instances: vec![inst(1, &gappy), inst(2, &stubby)],
             cards_total: 288,
             cards_leased: 32,
+            faults: FaultSnapshot::default(),
         };
         // the only ITL evidence in the fleet is the 0.1 s gaps
         assert!((f.mean_itl() - 0.1).abs() < 1e-12, "deflated: {}", f.mean_itl());
@@ -443,6 +542,7 @@ mod tests {
             instances: vec![inst(1, &stubby)],
             cards_total: 288,
             cards_leased: 16,
+            faults: FaultSnapshot::default(),
         };
         assert_eq!(empty_itl.mean_itl(), 0.0);
     }
@@ -518,6 +618,7 @@ mod tests {
             instances: vec![inst(1, 0, &a), inst(2, 16, &b)],
             cards_total: 288,
             cards_leased: 32,
+            faults: FaultSnapshot::default(),
         };
         assert_eq!(f.n_seqs(), 2);
         assert!((f.otps() - (4.0 / 0.3 + 5.0 / 0.5)).abs() < 1e-9);
@@ -529,9 +630,46 @@ mod tests {
         assert!(rep.contains("fleet:"), "{rep}");
 
         // an empty fleet reports zeros, not NaN
-        let empty = FleetMetrics { instances: vec![], cards_total: 288, cards_leased: 0 };
+        let empty = FleetMetrics {
+            instances: vec![],
+            cards_total: 288,
+            cards_leased: 0,
+            faults: FaultSnapshot::default(),
+        };
         assert_eq!(empty.otps(), 0.0);
         assert_eq!(empty.mean_ttft(), 0.0);
         assert_eq!(empty.card_utilization(), 0.0);
+    }
+
+    #[test]
+    fn fault_counters_classify_chain_errors() {
+        use crate::npruntime::ChainError;
+        let c = FaultCounters::default();
+        assert_eq!(c.snapshot(), FaultSnapshot::default());
+
+        c.on_chain_fault(&ChainError::CardDead { card: 3, cause: "x".into() });
+        c.on_chain_fault(&ChainError::PacketTimeout { tag: 7, waited_ms: 90 });
+        c.on_chain_fault(&ChainError::BadFrame { tag: 8, cause: "checksum".into() });
+        c.on_requeued();
+        c.on_requeued();
+        c.on_recovered();
+        c.on_lost();
+
+        let s = c.snapshot();
+        assert_eq!(
+            s,
+            FaultSnapshot {
+                chain_deaths: 3,
+                packet_timeouts: 1,
+                bad_frames: 1,
+                sequences_requeued: 2,
+                sequences_recovered: 1,
+                sequences_lost: 1,
+            }
+        );
+        // the Display form is what `FleetMetrics::report` prints
+        let line = s.to_string();
+        assert!(line.contains("chain deaths 3"), "{line}");
+        assert!(line.contains("requeued 2"), "{line}");
     }
 }

@@ -14,29 +14,126 @@
 //! * `request_stop` propagates end-to-end: card workers, hosts blocked in
 //!   `send_input`, and cards stalled on downstream backpressure all exit
 //!   within one stop-check interval — mid-stream shutdown cannot deadlock,
-//! * model loading, input submission, and output handling run on separate
-//!   threads while preserving per-circuit FIFO ordering.
+//! * faults are first-class (ISSUE 7): a stage error, a failed emit, or an
+//!   injected [`FaultKind::Die`] records a typed [`ChainError`] in the
+//!   chain's health cell and stops the chain — workers die clean (no
+//!   panic, no poisoned mutex), blocked hosts unblock, and credits
+//!   reconcile through the same stop machinery as a normal shutdown.
+//!   [`failure`](NpRuntime::failure) exposes the cause to the watchdog
+//!   (`service::PacketScheduler`).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::card::{BufPool, CardFpga, CircuitHop, CreditCounter, Packet};
 use crate::driver::Driver;
+use crate::fault::{FaultKind, FaultPlan};
+use crate::util::sync::lock_clean;
+
+/// A typed stage failure: what a configured card reports instead of
+/// panicking when it cannot process a packet (bad header, corrupt frame,
+/// backend error). The message is carried into [`ChainError::CardDead`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageError(pub String);
+
+impl StageError {
+    pub fn msg(m: impl std::fmt::Display) -> StageError {
+        StageError(m.to_string())
+    }
+}
+
+impl std::fmt::Display for StageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Why a chain died. `CardDead` is recorded by the chain itself (worker
+/// exit path); `PacketTimeout` is the watchdog's verdict when a completion
+/// never arrives (dropped frame, silent stall) — see
+/// `service::PacketScheduler::watchdog`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChainError {
+    /// A card worker exited abnormally: stage error, emit failure, credit
+    /// protocol violation, or an injected death.
+    CardDead { card: u32, cause: String },
+    /// An in-flight packet exceeded its completion deadline.
+    PacketTimeout { tag: u64, waited_ms: u64 },
+    /// A completion frame reached the host but failed to decode (e.g. a
+    /// corrupted header caught by the codec checksum).
+    BadFrame { tag: u64, cause: String },
+}
+
+impl std::fmt::Display for ChainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChainError::CardDead { card, cause } => {
+                write!(f, "card {card} dead: {cause}")
+            }
+            ChainError::PacketTimeout { tag, waited_ms } => {
+                write!(f, "packet tag {tag} timed out after {waited_ms} ms")
+            }
+            ChainError::BadFrame { tag, cause } => {
+                write!(f, "bad completion frame tag {tag}: {cause}")
+            }
+        }
+    }
+}
+
+/// Shared health cell of one chain: the first recorded [`ChainError`]
+/// wins; recording also stops the chain. Distinguishes a fault from a
+/// requested stop — `request_stop` sets the stop flag without marking the
+/// chain dead.
+#[derive(Debug)]
+struct ChainHealth {
+    dead: AtomicBool,
+    cause: Mutex<Option<ChainError>>,
+}
+
+impl ChainHealth {
+    fn new() -> Arc<ChainHealth> {
+        Arc::new(ChainHealth { dead: AtomicBool::new(false), cause: Mutex::new(None) })
+    }
+
+    /// Record a failure (first cause wins) and mark the chain dead.
+    fn record(&self, e: ChainError) {
+        let mut c = lock_clean(&self.cause);
+        if c.is_none() {
+            *c = Some(e);
+        }
+        self.dead.store(true, Ordering::Release);
+    }
+
+    fn failure(&self) -> Option<ChainError> {
+        if !self.dead.load(Ordering::Acquire) {
+            return None;
+        }
+        lock_clean(&self.cause).clone()
+    }
+}
+
+type OutputCallback = Arc<dyn Fn(u32, u64, Vec<u8>) + Send + Sync>;
 
 /// What a configured card computes: input tensor bytes → output tensor
 /// bytes, appended into `out` — a cleared frame drawn from the chain's
 /// [`BufPool`], so steady-state hops reuse a fixed working set of buffers
 /// instead of allocating per packet. Implemented by the service stage
-/// executors (real numerics) and by test stubs.
+/// executors (real numerics) and by test stubs. An `Err` kills the chain
+/// with a typed [`ChainError::CardDead`] instead of panicking the worker.
 pub trait StageExecutor: Send + Sync {
-    fn execute(&self, circuit: u32, tag: u64, input: &[u8], out: &mut Vec<u8>);
+    fn execute(
+        &self,
+        circuit: u32,
+        tag: u64,
+        input: &[u8],
+        out: &mut Vec<u8>,
+    ) -> Result<(), StageError>;
     fn name(&self) -> String {
         "stage".into()
     }
 }
-
-type OutputCallback = Arc<dyn Fn(u32, u64, Vec<u8>) + Send + Sync>;
 
 /// A chain of cards within one server node, executing one virtual circuit.
 pub struct NpRuntime {
@@ -45,11 +142,16 @@ pub struct NpRuntime {
     entry_credits: Vec<Arc<CreditCounter>>,
     workers: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
+    health: Arc<ChainHealth>,
     callback: Arc<Mutex<Option<OutputCallback>>>,
     /// Recycled packet frames shared by every hop of the chain (and by the
     /// host-side encoders via [`pool`](Self::pool)).
     pool: Arc<BufPool>,
 }
+
+/// How long an injected stall sleeps between stop checks: a stalled card
+/// must still honour shutdown promptly.
+const STALL_CHECK: Duration = Duration::from_millis(5);
 
 impl NpRuntime {
     /// Configure a pipeline of `executors` as circuit `circuit` over
@@ -61,6 +163,21 @@ impl NpRuntime {
         circuit: u32,
         executors: Vec<Arc<dyn StageExecutor>>,
         slots: u32,
+    ) -> NpRuntime {
+        Self::load_circuit_faulty(driver, circuit, executors, slots, None)
+    }
+
+    /// [`load_circuit`](Self::load_circuit) with a fault-injection plan
+    /// threaded through every card worker (ISSUE 7): each consumed packet
+    /// advances the plan, and a scheduled [`FaultKind`] fires in the
+    /// worker loop — deterministic chain deaths, stalls, drops, and
+    /// corruptions for the chaos tests.
+    pub fn load_circuit_faulty(
+        driver: Arc<Driver>,
+        circuit: u32,
+        executors: Vec<Arc<dyn StageExecutor>>,
+        slots: u32,
+        faults: Option<Arc<FaultPlan>>,
     ) -> NpRuntime {
         let n = executors.len();
         let cards: Vec<Arc<CardFpga>> =
@@ -82,6 +199,7 @@ impl NpRuntime {
         let entry = CreditCounter::new(slots);
 
         let stop = Arc::new(AtomicBool::new(false));
+        let health = ChainHealth::new();
         let callback: Arc<Mutex<Option<OutputCallback>>> = Arc::new(Mutex::new(None));
         let pool = BufPool::new();
 
@@ -91,8 +209,10 @@ impl NpRuntime {
             let fb = cards[i].framebuffer.clone();
             let fpga = cards[i].clone();
             let stop_w = stop.clone();
+            let health_w = health.clone();
             let cb = callback.clone();
             let pool_w = pool.clone();
+            let faults_w = faults.clone();
             let entry_w = if i == 0 { Some(entry.clone()) } else { None };
             // the card that feeds me returns credits when I consume
             let upstream: Option<Arc<CreditCounter>> = if i > 0 {
@@ -109,6 +229,15 @@ impl NpRuntime {
                 None
             };
             workers.push(std::thread::spawn(move || {
+                // Dying clean = record a typed cause + stop the chain; the
+                // stop flag then reconciles everything a dead chain could
+                // otherwise leak: hosts blocked in send_input return
+                // false, peers blocked on credits exit their take_timeout
+                // loops, and Drop joins every worker.
+                let die = |e: ChainError| {
+                    health_w.record(e);
+                    stop_w.store(true, Ordering::Relaxed);
+                };
                 loop {
                     // blocking consume with a stop-check timeout (condvar
                     // wait, not a poll — see EXPERIMENTS.md §Perf)
@@ -116,9 +245,7 @@ impl NpRuntime {
                         if stop_w.load(Ordering::Relaxed) {
                             return;
                         }
-                        if let Some(p) =
-                            fb.consume_timeout(std::time::Duration::from_millis(5))
-                        {
+                        if let Some(p) = fb.consume_timeout(Duration::from_millis(5)) {
                             break p;
                         }
                     };
@@ -129,19 +256,73 @@ impl NpRuntime {
                     if let Some(e) = &entry_w {
                         e.put();
                     }
+                    let Packet { circuit, tag, data } = p;
+                    // fault-injection plane: this card's packet counter
+                    // advances; a scheduled fault fires here.
+                    let mut corrupt = false;
+                    if let Some(plan) = &faults_w {
+                        match plan.check(i as u32) {
+                            Some(FaultKind::Die) => {
+                                pool_w.put(data);
+                                die(ChainError::CardDead {
+                                    card: i as u32,
+                                    cause: "injected fault: card died".into(),
+                                });
+                                return;
+                            }
+                            Some(FaultKind::Stall(d)) => {
+                                // stall in stop-aware slices: a stalled
+                                // card must not block shutdown
+                                let until = std::time::Instant::now() + d;
+                                loop {
+                                    if stop_w.load(Ordering::Relaxed) {
+                                        return;
+                                    }
+                                    let left = until
+                                        .saturating_duration_since(std::time::Instant::now());
+                                    if left.is_zero() {
+                                        break;
+                                    }
+                                    std::thread::sleep(STALL_CHECK.min(left));
+                                }
+                            }
+                            Some(FaultKind::DropFrame) => {
+                                // the packet vanishes: credits are already
+                                // reconciled (upstream/entry returned on
+                                // consume, downstream never taken), so
+                                // only the missing completion remains —
+                                // that is the watchdog's job to notice.
+                                pool_w.put(data);
+                                continue;
+                            }
+                            Some(FaultKind::CorruptFrame) => corrupt = true,
+                            None => {}
+                        }
+                    }
                     // execute into a pooled output frame; the consumed
                     // input frame goes straight back to the pool
-                    let Packet { circuit, tag, data } = p;
                     let mut out = pool_w.get();
-                    exec.execute(circuit, tag, &data, &mut out);
+                    if let Err(e) = exec.execute(circuit, tag, &data, &mut out) {
+                        pool_w.put(data);
+                        pool_w.put(out);
+                        die(ChainError::CardDead { card: i as u32, cause: e.0 });
+                        return;
+                    }
                     pool_w.put(data);
+                    if corrupt && !out.is_empty() {
+                        // flip one mid-frame byte: downstream sees either a
+                        // header-checksum failure or garbage payload, both
+                        // surfacing as a typed stage error, never UB.
+                        let at = out.len() / 2;
+                        out[at] ^= 0xFF;
+                    }
                     let packet = Packet { circuit, tag, data: out };
                     if let Some(dc) = &downstream {
                         loop {
                             if stop_w.load(Ordering::Relaxed) {
                                 return; // drop the in-flight packet on stop
                             }
-                            if dc.take_timeout(std::time::Duration::from_millis(5)) {
+                            if dc.take_timeout(Duration::from_millis(5)) {
                                 break;
                             }
                         }
@@ -149,11 +330,21 @@ impl NpRuntime {
                     match fpga.emit_prepaid(packet) {
                         Ok(None) => {}
                         Ok(Some(host_bound)) => {
-                            if let Some(cb) = cb.lock().unwrap().as_ref() {
+                            let cb = lock_clean(&cb).clone();
+                            if let Some(cb) = cb {
                                 cb(host_bound.circuit, host_bound.tag, host_bound.data);
                             }
                         }
-                        Err(e) => panic!("card {i} emit failed: {e}"),
+                        Err(e) => {
+                            // typed exit instead of the old
+                            // `panic!("card {i} emit failed")` — the cause
+                            // reaches the watchdog, and no mutex poisons.
+                            die(ChainError::CardDead {
+                                card: i as u32,
+                                cause: format!("emit failed: {e}"),
+                            });
+                            return;
+                        }
                     }
                 }
             }));
@@ -165,6 +356,7 @@ impl NpRuntime {
             entry_credits: vec![entry],
             workers,
             stop,
+            health,
             callback,
             pool,
         }
@@ -180,24 +372,31 @@ impl NpRuntime {
 
     /// Register the asynchronous output callback (§V-B).
     pub fn on_output<F: Fn(u32, u64, Vec<u8>) + Send + Sync + 'static>(&self, f: F) {
-        *self.callback.lock().unwrap() = Some(Arc::new(f));
+        *lock_clean(&self.callback) = Some(Arc::new(f));
     }
 
     /// Submit an input tensor. Blocks only while the first card's
     /// framebuffer is out of credits; the wait is interrupted by
     /// [`request_stop`](Self::request_stop). Returns false (dropping the
-    /// packet) if the runtime stopped before a credit became available.
+    /// packet) if the runtime stopped — or the chain died — before a
+    /// credit became available, or if placement itself failed (a credit
+    /// protocol violation, recorded as a [`ChainError`]).
     pub fn send_input(&self, circuit: u32, tag: u64, data: Vec<u8>) -> bool {
         loop {
             if self.stop.load(Ordering::Relaxed) {
                 return false;
             }
-            if self.entry_credits[0].take_timeout(std::time::Duration::from_millis(5)) {
-                self.cards[0]
-                    .framebuffer
-                    .place(Packet { circuit, tag, data })
-                    .expect("entry credits must prevent overflow");
-                return true;
+            if self.entry_credits[0].take_timeout(Duration::from_millis(5)) {
+                return match self.cards[0].framebuffer.place(Packet { circuit, tag, data }) {
+                    Ok(()) => true,
+                    Err(e) => {
+                        self.fail(ChainError::CardDead {
+                            card: 0,
+                            cause: format!("entry placement failed: {e}"),
+                        });
+                        false
+                    }
+                };
             }
         }
     }
@@ -214,11 +413,19 @@ impl NpRuntime {
         if !self.entry_credits[0].try_take() {
             return Err(data);
         }
-        self.cards[0]
-            .framebuffer
-            .place(Packet { circuit, tag, data })
-            .expect("entry credits must prevent overflow");
-        Ok(())
+        match self.cards[0].framebuffer.place(Packet { circuit, tag, data }) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                // entry credits should make this unreachable; if the
+                // protocol is violated, kill the chain with a typed cause
+                // instead of the old `.expect(...)` panic.
+                self.fail(ChainError::CardDead {
+                    card: 0,
+                    cause: format!("entry placement failed: {e}"),
+                });
+                Err(Vec::new())
+            }
+        }
     }
 
     /// Entry credits currently available (free slots in card 0's
@@ -238,6 +445,26 @@ impl NpRuntime {
         self.stop.load(Ordering::Relaxed)
     }
 
+    /// Record a chain failure from the host side (e.g. the watchdog's
+    /// packet-timeout verdict, or a corrupt host-bound completion) and
+    /// stop the chain. First cause wins.
+    pub fn fail(&self, e: ChainError) {
+        self.health.record(e);
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// The chain's recorded death cause, if any. `None` for a healthy
+    /// chain *and* for a chain stopped via [`request_stop`](Self::request_stop)
+    /// — a requested stop is not a fault.
+    pub fn failure(&self) -> Option<ChainError> {
+        self.health.failure()
+    }
+
+    /// True once a fault has been recorded (faster than cloning the cause).
+    pub fn is_dead(&self) -> bool {
+        self.health.dead.load(Ordering::Acquire)
+    }
+
     pub fn n_cards(&self) -> usize {
         self.cards.len()
     }
@@ -255,24 +482,40 @@ impl Drop for NpRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::FaultEvent;
     use std::sync::mpsc;
 
     /// A stage that appends its id byte — composition order is observable.
     struct Tagger(u8);
     impl StageExecutor for Tagger {
-        fn execute(&self, _c: u32, _t: u64, input: &[u8], out: &mut Vec<u8>) {
+        fn execute(
+            &self,
+            _c: u32,
+            _t: u64,
+            input: &[u8],
+            out: &mut Vec<u8>,
+        ) -> Result<(), StageError> {
             out.extend_from_slice(input);
             out.push(self.0);
+            Ok(())
         }
     }
 
     fn chain(n: u8, slots: u32) -> (NpRuntime, mpsc::Receiver<(u64, Vec<u8>)>) {
+        chain_faulty(n, slots, None)
+    }
+
+    fn chain_faulty(
+        n: u8,
+        slots: u32,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> (NpRuntime, mpsc::Receiver<(u64, Vec<u8>)>) {
         let execs: Vec<Arc<dyn StageExecutor>> =
             (0..n).map(|i| Arc::new(Tagger(i)) as Arc<dyn StageExecutor>).collect();
-        let rt = NpRuntime::load_circuit(Driver::new(), 0, execs, slots);
+        let rt = NpRuntime::load_circuit_faulty(Driver::new(), 0, execs, slots, faults);
         let (tx, rx) = mpsc::channel();
         rt.on_output(move |_c, tag, data| {
-            tx.send((tag, data)).unwrap();
+            let _ = tx.send((tag, data));
         });
         (rt, rx)
     }
@@ -350,9 +593,16 @@ mod tests {
     /// A stage that holds each packet for a fixed service time.
     struct Slow(u64);
     impl StageExecutor for Slow {
-        fn execute(&self, _c: u32, _t: u64, input: &[u8], out: &mut Vec<u8>) {
+        fn execute(
+            &self,
+            _c: u32,
+            _t: u64,
+            input: &[u8],
+            out: &mut Vec<u8>,
+        ) -> Result<(), StageError> {
             std::thread::sleep(std::time::Duration::from_millis(self.0));
             out.extend_from_slice(input);
+            Ok(())
         }
     }
 
@@ -412,6 +662,9 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(40));
         rt.request_stop();
         assert!(rt.stopped());
+        // a requested stop is NOT a fault
+        assert_eq!(rt.failure(), None);
+        assert!(!rt.is_dead());
         // a post-stop submit is refused both ways
         assert!(rt.try_send_input(0, 99, vec![9]).is_err());
         assert!(!rt.send_input(0, 100, vec![9]));
@@ -424,5 +677,142 @@ mod tests {
         // fewer packets completed than were submitted (mid-stream stop)
         let done = rx.try_iter().count();
         assert!(done < 4, "stop had no effect, {done} completions");
+    }
+
+    /// A stage that fails on a chosen tag.
+    struct FailOn(u64);
+    impl StageExecutor for FailOn {
+        fn execute(
+            &self,
+            _c: u32,
+            tag: u64,
+            input: &[u8],
+            out: &mut Vec<u8>,
+        ) -> Result<(), StageError> {
+            if tag == self.0 {
+                return Err(StageError::msg(format!("bad packet: tag {tag}")));
+            }
+            out.extend_from_slice(input);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn stage_error_kills_chain_with_typed_cause() {
+        let execs: Vec<Arc<dyn StageExecutor>> = vec![
+            Arc::new(Tagger(0)),
+            Arc::new(FailOn(3)),
+        ];
+        let rt = NpRuntime::load_circuit(Driver::new(), 0, execs, 4);
+        let (tx, rx) = mpsc::channel();
+        rt.on_output(move |_c, tag, data| {
+            let _ = tx.send((tag, data));
+        });
+        for i in 0..3u64 {
+            assert!(rt.send_input(0, i, vec![1]));
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert!(rt.send_input(0, 3, vec![1]));
+        // the failing packet kills the chain: no completion, typed cause
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !rt.is_dead() && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        match rt.failure() {
+            Some(ChainError::CardDead { card: 1, cause }) => {
+                assert!(cause.contains("bad packet: tag 3"), "{cause}");
+            }
+            other => panic!("expected CardDead on card 1, got {other:?}"),
+        }
+        assert!(rt.stopped(), "a dead chain must stop");
+        // post-death submits are refused; shutdown joins cleanly
+        assert!(!rt.send_input(0, 99, vec![1]));
+        drop(rt);
+    }
+
+    #[test]
+    fn injected_die_fault_is_a_typed_chain_death() {
+        let plan = FaultPlan::kill_card(1, 2);
+        let (rt, rx) = chain_faulty(3, 4, Some(plan.clone()));
+        assert!(rt.send_input(0, 0, vec![1]));
+        rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(rt.failure(), None, "healthy before the scheduled packet");
+        assert!(rt.send_input(0, 1, vec![2]));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !rt.is_dead() && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        match rt.failure() {
+            Some(ChainError::CardDead { card: 1, cause }) => {
+                assert!(cause.contains("injected fault"), "{cause}");
+            }
+            other => panic!("expected injected CardDead, got {other:?}"),
+        }
+        assert_eq!(plan.injected(), 1);
+        // shutdown after an injected death must not hang or poison
+        let t0 = std::time::Instant::now();
+        drop(rt);
+        assert!(t0.elapsed() < std::time::Duration::from_secs(2));
+    }
+
+    #[test]
+    fn injected_drop_swallows_exactly_one_completion() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            card: 0,
+            at_packet: 2,
+            kind: FaultKind::DropFrame,
+        }]);
+        let (rt, rx) = chain_faulty(2, 4, Some(plan));
+        for i in 0..4u64 {
+            assert!(rt.send_input(0, i, vec![i as u8]));
+        }
+        // packet with tag 1 (card 0's 2nd) vanishes; the rest complete
+        let mut tags = Vec::new();
+        for _ in 0..3 {
+            let (tag, _) =
+                rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            tags.push(tag);
+        }
+        assert_eq!(tags, vec![0, 2, 3]);
+        assert_eq!(rt.failure(), None, "a dropped frame is silent at the chain level");
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(50)).is_err(),
+            "the dropped packet must never complete"
+        );
+    }
+
+    #[test]
+    fn injected_stall_delays_but_completes() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            card: 0,
+            at_packet: 1,
+            kind: FaultKind::Stall(std::time::Duration::from_millis(60)),
+        }]);
+        let (rt, rx) = chain_faulty(1, 4, Some(plan));
+        let t0 = std::time::Instant::now();
+        assert!(rt.send_input(0, 0, vec![1]));
+        let (tag, _) = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(tag, 0);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(50), "stall not applied");
+        assert_eq!(rt.failure(), None);
+    }
+
+    #[test]
+    fn injected_corruption_flips_one_byte() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            card: 0,
+            at_packet: 1,
+            kind: FaultKind::CorruptFrame,
+        }]);
+        let (rt, rx) = chain_faulty(1, 4, Some(plan));
+        assert!(rt.send_input(0, 0, vec![0x11, 0x22, 0x33, 0x44]));
+        let (_, data) = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        // Tagger(0) appends its id: expected clean output is the input + 0
+        let clean = vec![0x11, 0x22, 0x33, 0x44, 0x00];
+        assert_eq!(data.len(), clean.len());
+        let flipped: Vec<usize> =
+            (0..clean.len()).filter(|&i| data[i] != clean[i]).collect();
+        assert_eq!(flipped.len(), 1, "exactly one byte flipped: {data:?}");
+        assert_eq!(data[flipped[0]], clean[flipped[0]] ^ 0xFF);
     }
 }

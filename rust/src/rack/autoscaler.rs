@@ -573,6 +573,8 @@ mod tests {
                     priority: 0,
                     body: format!("synthetic-{}", base + i as u64),
                     reply_to: base + i as u64,
+                    retries: 0,
+                    resume_from: 0,
                 },
             );
         }

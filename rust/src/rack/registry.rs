@@ -21,7 +21,7 @@ use crate::config::hw::RackSpec;
 use crate::config::models::find_model;
 use crate::driver::Driver;
 use crate::mapper::{map_model, Mapping};
-use crate::metrics::{BatchMetrics, FleetMetrics, InstanceReport};
+use crate::metrics::{BatchMetrics, FaultCounters, FleetMetrics, InstanceReport};
 use crate::service::{build_chain, LlmInstance, ServeOptions, SharedEngine};
 
 use super::inventory::{CardInventory, CardLease, RackError};
@@ -164,6 +164,10 @@ pub struct RackService {
     driver: Arc<Driver>,
     reg: Mutex<BTreeMap<u64, InstanceEntry>>,
     next_id: AtomicU64,
+    /// Rack-cumulative fault-plane counters (ISSUE 7): shared with every
+    /// instance this service deploys, so chain deaths and recoveries stay
+    /// visible after the faulty instance is reaped and torn down.
+    faults: Arc<FaultCounters>,
 }
 
 impl RackService {
@@ -180,7 +184,13 @@ impl RackService {
             driver: Driver::new(),
             reg: Mutex::new(BTreeMap::new()),
             next_id: AtomicU64::new(1),
+            faults: Arc::new(FaultCounters::default()),
         })
+    }
+
+    /// The rack's cumulative fault-plane counters.
+    pub fn fault_counters(&self) -> &Arc<FaultCounters> {
+        &self.faults
     }
 
     pub fn broker(&self) -> &Arc<Broker> {
@@ -196,6 +206,10 @@ impl RackService {
     /// the model's queue. Fails with `RackError::Overcommit` when the pool
     /// cannot fit the placement.
     pub fn deploy(&self, spec: InstanceSpec) -> Result<u64, RackError> {
+        let mut spec = spec;
+        // rack-deployed instances report faults into the rack's shared
+        // counters, not a private per-instance cell
+        spec.opts.counters = self.faults.clone();
         let lease = self.inventory.lease(&spec.model, spec.cards)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let entry = match spec.engine {
@@ -443,8 +457,19 @@ impl RackService {
         // The departing worker already swept the queue if it was the last
         // consumer; re-check here (broker-wide, so instances of the same
         // model on *other* racks sharing this broker count) to cover a
-        // worker that died without sweeping.
-        if entry.instance.is_some() && self.broker.stats(&entry.model).consumers == 0 {
+        // worker that died without sweeping. Exception (ISSUE 7): an
+        // instance whose chain died requeued its lost sequences — those
+        // must survive this teardown so the autoscaler's redeploy (one
+        // tick phase later) can serve them; abandoning them here would
+        // finish their clients' streams mid-recovery.
+        let chain_died = entry
+            .instance
+            .as_ref()
+            .is_some_and(|i| i.chain_failure().is_some());
+        if entry.instance.is_some()
+            && !chain_died
+            && self.broker.stats(&entry.model).consumers == 0
+        {
             self.broker.abandon_all(&entry.model);
         }
         drop(entry.lease); // cards back to the inventory
@@ -484,6 +509,7 @@ impl RackService {
             instances,
             cards_total: self.inventory.total(),
             cards_leased: self.inventory.in_use(),
+            faults: self.faults.snapshot(),
         }
     }
 }

@@ -15,7 +15,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::npruntime::StageExecutor;
+use crate::npruntime::{StageError, StageExecutor};
 use crate::runtime::{
     DType, DeviceTensor, Engine, F32Slice, StageArg, Tensor, TensorView, WireEncode,
 };
@@ -131,14 +131,16 @@ impl LayerExecutor {
     /// Run the attention stage over a borrowed hidden-state view plus this
     /// card's KV cache, returning the new hidden state. Resident caches
     /// are donated (aliased in place, nothing crosses the host boundary);
-    /// host caches round-trip.
+    /// host caches round-trip. Backend failures surface as a typed
+    /// [`StageError`] — the worker records a `ChainError::CardDead`
+    /// instead of panicking (ISSUE 7).
     fn attn(
         &self,
         stage: &str,
         cache: &mut KvCache,
         h: TensorView<'_>,
         rest: &[TensorView<'_>],
-    ) -> Tensor {
+    ) -> Result<Tensor, StageError> {
         match cache {
             KvCache::Resident(kc, vc) => {
                 let mut args = Vec::with_capacity(3 + rest.len());
@@ -148,7 +150,11 @@ impl LayerExecutor {
                 for r in rest {
                     args.push(StageArg::View(r.clone()));
                 }
-                self.engine.run_args(stage, &mut args).expect(stage).remove(0)
+                let out = self
+                    .engine
+                    .run_args(stage, &mut args)
+                    .map_err(|e| StageError::msg(format!("{stage}: {e}")))?;
+                first(stage, out)
             }
             KvCache::Host(kc, vc) => {
                 let mut args = Vec::with_capacity(3 + rest.len());
@@ -158,40 +164,70 @@ impl LayerExecutor {
                 for r in rest {
                     args.push(StageArg::View(r.clone()));
                 }
-                let mut out = self.engine.run_args(stage, &mut args).expect(stage);
+                let mut out = self
+                    .engine
+                    .run_args(stage, &mut args)
+                    .map_err(|e| StageError::msg(format!("{stage}: {e}")))?;
                 drop(args);
-                *vc = out.pop().expect("vc");
-                *kc = out.pop().expect("kc");
-                out.pop().expect("h")
+                let missing = || StageError::msg(format!("{stage}: missing outputs"));
+                *vc = out.pop().ok_or_else(missing)?;
+                *kc = out.pop().ok_or_else(missing)?;
+                out.pop().ok_or_else(missing)
             }
         }
     }
 }
 
+/// First output of a stage dispatch, or a typed error naming the stage.
+fn first(stage: &str, mut outs: Vec<Tensor>) -> Result<Tensor, StageError> {
+    if outs.is_empty() {
+        return Err(StageError::msg(format!("{stage}: no outputs")));
+    }
+    Ok(outs.remove(0))
+}
+
+/// Next payload view of a decoded packet, or a typed bad-packet error.
+fn need<'a>(
+    what: &str,
+    it: &mut impl Iterator<Item = TensorView<'a>>,
+) -> Result<TensorView<'a>, StageError> {
+    it.next()
+        .ok_or_else(|| StageError::msg(format!("bad packet: missing {what} tensor")))
+}
+
 impl StageExecutor for LayerExecutor {
-    fn execute(&self, _circuit: u32, _tag: u64, input: &[u8], out: &mut Vec<u8>) {
-        let (hdr, views) = PacketHeader::decode_views(input).expect("bad packet");
-        let mut cache = self.cache.lock().unwrap();
+    fn execute(
+        &self,
+        _circuit: u32,
+        _tag: u64,
+        input: &[u8],
+        out: &mut Vec<u8>,
+    ) -> Result<(), StageError> {
+        let (hdr, views) = PacketHeader::decode_views(input)
+            .map_err(|e| StageError::msg(format!("bad packet: {e}")))?;
+        let mut cache = crate::util::sync::lock_clean(&self.cache);
         match hdr.kind {
             PacketKind::Decode => {
                 // payload: h [B,D], positions [B] — both read in place
                 let mut it = views.into_iter();
-                let h = it.next().expect("h");
-                let positions = it.next().expect("positions");
+                let h = need("h", &mut it)?;
+                let positions = need("positions", &mut it)?;
                 let h = self.attn(
                     &self.attn_decode,
                     &mut cache,
                     h,
                     std::slice::from_ref(&positions),
-                );
-                let h = self
-                    .engine
-                    .run(&self.mlp_decode, &[h])
-                    .expect("mlp_decode")
-                    .remove(0);
+                )?;
+                let h = first(
+                    &self.mlp_decode,
+                    self.engine
+                        .run(&self.mlp_decode, &[h])
+                        .map_err(|e| StageError::msg(format!("mlp_decode: {e}")))?,
+                )?;
                 // positions forwarded from the borrowed input — no owned
                 // clone of the tensor, just a re-encode off the frame
-                hdr.encode_into(&[&h as &dyn WireEncode, &positions], out)
+                hdr.encode_into(&[&h as &dyn WireEncode, &positions], out);
+                Ok(())
             }
             PacketKind::DecodeSeq => {
                 // payload: h [1,D]; slot + position ride the header —
@@ -202,19 +238,19 @@ impl StageExecutor for LayerExecutor {
                 // a silent clamp would overwrite another sequence's KV.
                 let m = &self.engine.manifest;
                 if usize::try_from(hdr.slot).map_or(true, |s| s >= m.batch_slots) {
-                    panic!(
+                    return Err(StageError::msg(format!(
                         "bad packet: decode_seq slot {} outside [0, {})",
                         hdr.slot, m.batch_slots
-                    );
+                    )));
                 }
                 if usize::try_from(hdr.pos_off).map_or(true, |p| p >= m.max_context) {
-                    panic!(
+                    return Err(StageError::msg(format!(
                         "bad packet: decode_seq position {} outside [0, {})",
                         hdr.pos_off, m.max_context
-                    );
+                    )));
                 }
                 let mut it = views.into_iter();
-                let h = it.next().expect("h");
+                let h = need("h", &mut it)?;
                 let slot = Tensor::scalar_i32(hdr.slot);
                 let pos = Tensor::scalar_i32(hdr.pos_off);
                 let h = self.attn(
@@ -222,18 +258,20 @@ impl StageExecutor for LayerExecutor {
                     &mut cache,
                     h,
                     &[slot.view(), pos.view()],
-                );
-                let h = self
-                    .engine
-                    .run(&self.mlp_decode_seq, &[h])
-                    .expect("mlp_decode_seq")
-                    .remove(0);
-                hdr.encode_into(&[&h as &dyn WireEncode], out)
+                )?;
+                let h = first(
+                    &self.mlp_decode_seq,
+                    self.engine
+                        .run(&self.mlp_decode_seq, &[h])
+                        .map_err(|e| StageError::msg(format!("mlp_decode_seq: {e}")))?,
+                )?;
+                hdr.encode_into(&[&h as &dyn WireEncode], out);
+                Ok(())
             }
             PacketKind::Prefill => {
                 // payload: h [1,T,D]
                 let mut it = views.into_iter();
-                let h = it.next().expect("h");
+                let h = need("h", &mut it)?;
                 let slot = Tensor::scalar_i32(hdr.slot);
                 let off = Tensor::scalar_i32(hdr.pos_off);
                 let h = self.attn(
@@ -241,13 +279,15 @@ impl StageExecutor for LayerExecutor {
                     &mut cache,
                     h,
                     &[slot.view(), off.view()],
-                );
-                let h = self
-                    .engine
-                    .run(&self.mlp_prefill, &[h])
-                    .expect("mlp_prefill")
-                    .remove(0);
-                hdr.encode_into(&[&h as &dyn WireEncode], out)
+                )?;
+                let h = first(
+                    &self.mlp_prefill,
+                    self.engine
+                        .run(&self.mlp_prefill, &[h])
+                        .map_err(|e| StageError::msg(format!("mlp_prefill: {e}")))?,
+                )?;
+                hdr.encode_into(&[&h as &dyn WireEncode], out);
+                Ok(())
             }
         }
     }
@@ -283,17 +323,22 @@ impl HeadExecutor {
     /// the assembled [rows * vocab] values; the caller streams them into
     /// the pooled frame via [`F32Slice`] without materializing a byte
     /// tensor.
-    fn logits(&self, stages: &[String], h: TensorView<'_>) -> Vec<f32> {
+    fn logits(
+        &self,
+        stages: &[String],
+        h: TensorView<'_>,
+    ) -> Result<Vec<f32>, StageError> {
         let m = &self.engine.manifest;
         let rows = h.shape[0];
         let mut all = vec![0f32; rows * m.vocab];
         for (j, stage) in stages.iter().enumerate() {
             let mut args = [StageArg::View(h.clone())];
-            let part = self
-                .engine
-                .run_args(stage, &mut args)
-                .expect("lmhead")
-                .remove(0);
+            let part = first(
+                stage,
+                self.engine
+                    .run_args(stage, &mut args)
+                    .map_err(|e| StageError::msg(format!("{stage}: {e}")))?,
+            )?;
             let pv = part.as_f32();
             let sv = m.shard_vocab;
             for r in 0..rows {
@@ -301,36 +346,46 @@ impl HeadExecutor {
                     .copy_from_slice(&pv[r * sv..(r + 1) * sv]);
             }
         }
-        all
+        Ok(all)
     }
 }
 
 impl StageExecutor for HeadExecutor {
-    fn execute(&self, _circuit: u32, _tag: u64, input: &[u8], out: &mut Vec<u8>) {
-        let (hdr, views) = PacketHeader::decode_views(input).expect("bad packet");
+    fn execute(
+        &self,
+        _circuit: u32,
+        _tag: u64,
+        input: &[u8],
+        out: &mut Vec<u8>,
+    ) -> Result<(), StageError> {
+        let (hdr, views) = PacketHeader::decode_views(input)
+            .map_err(|e| StageError::msg(format!("bad packet: {e}")))?;
         let m = &self.engine.manifest;
         match hdr.kind {
             PacketKind::Decode => {
                 // payload: h [B,D], positions [B] (positions die here)
-                let h = views.into_iter().next().expect("h");
+                let h = need("h", &mut views.into_iter())?;
                 let rows = h.shape[0];
-                let all = self.logits(&self.lmhead, h); // [B, V]
+                let all = self.logits(&self.lmhead, h)?; // [B, V]
                 let logits = F32Slice { shape: vec![rows, m.vocab], data: &all };
-                hdr.encode_into(&[&logits as &dyn WireEncode], out)
+                hdr.encode_into(&[&logits as &dyn WireEncode], out);
+                Ok(())
             }
             PacketKind::DecodeSeq => {
                 // payload: h [1,D] — one sequence, one full-vocab logits
                 // row via the single-row TP head shards
-                let h = views.into_iter().next().expect("h");
-                let all = self.logits(&self.lmhead1, h); // [1, V]
+                let h = need("h", &mut views.into_iter())?;
+                let all = self.logits(&self.lmhead1, h)?; // [1, V]
                 let logits = F32Slice { shape: vec![1, m.vocab], data: &all };
-                hdr.encode_into(&[&logits as &dyn WireEncode], out)
+                hdr.encode_into(&[&logits as &dyn WireEncode], out);
+                Ok(())
             }
             PacketKind::Prefill => {
                 if !hdr.is_final_chunk() {
                     // intermediate chunk: nothing for the host but an ack
                     let ack = Tensor::i32(vec![1], vec![hdr.pos_off]);
-                    return hdr.encode_into(&[&ack as &dyn WireEncode], out);
+                    hdr.encode_into(&[&ack as &dyn WireEncode], out);
+                    return Ok(());
                 }
                 // borrow the hidden row of the last valid prompt token
                 // straight out of the frame — no [1,T,D] materialization.
@@ -338,27 +393,28 @@ impl StageExecutor for HeadExecutor {
                 // the codec validates shapes — loud on a lying header
                 // (matching the `bad packet` convention), never an opaque
                 // out-of-bounds slice panic, never a silent clamp.
-                let h = views.into_iter().next().expect("h"); // [1, T, D]
+                let h = need("h", &mut views.into_iter())?; // [1, T, D]
                 let d = m.d_model;
                 let es = h.dtype.size();
                 let t = *h.shape.get(1).unwrap_or(&1);
                 let row = usize::try_from(hdr.last_idx)
                     .ok()
                     .filter(|&r| r < t.max(1))
-                    .unwrap_or_else(|| {
-                        panic!(
+                    .ok_or_else(|| {
+                        StageError::msg(format!(
                             "bad packet: final-chunk last_idx {} outside [0, {t})",
                             hdr.last_idx
-                        )
-                    });
+                        ))
+                    })?;
                 let h1 = TensorView {
                     shape: vec![1, d],
                     dtype: h.dtype,
                     data: &h.data[row * d * es..(row + 1) * d * es],
                 };
-                let all = self.logits(&self.lmhead1, h1); // [1, V]
+                let all = self.logits(&self.lmhead1, h1)?; // [1, V]
                 let logits = F32Slice { shape: vec![1, m.vocab], data: &all };
-                hdr.encode_into(&[&logits as &dyn WireEncode], out)
+                hdr.encode_into(&[&logits as &dyn WireEncode], out);
+                Ok(())
             }
         }
     }
@@ -380,7 +436,7 @@ mod tests {
     /// Drive one executor with a raw packet and return its output frame.
     fn step(ex: &dyn StageExecutor, packet: &[u8]) -> Vec<u8> {
         let mut out = Vec::new();
-        ex.execute(0, 0, packet, &mut out);
+        ex.execute(0, 0, packet, &mut out).unwrap();
         out
     }
 

@@ -22,7 +22,9 @@ use std::time::{Duration, Instant};
 use crate::broker::{Broker, Consumed, Task};
 use crate::consensus::Ring;
 use crate::driver::Driver;
-use crate::npruntime::{NpRuntime, StageExecutor};
+use crate::fault::FaultPlan;
+use crate::metrics::FaultCounters;
+use crate::npruntime::{ChainError, NpRuntime, StageExecutor};
 use crate::pipeline::sim::SeqRecord;
 use crate::runtime::{Tensor, WireEncode};
 use crate::tokenizer::ByteTokenizer;
@@ -42,6 +44,14 @@ pub struct GenRequest {
     pub top_k: usize,
     /// Stop generation at this byte (e.g. b';'), if any.
     pub stop_byte: Option<u8>,
+    /// Retry epoch (ISSUE 7): how many chains died under this request
+    /// before it reached us. 0 for a first admission.
+    pub retries: u32,
+    /// Tokens already streamed to the client by earlier epochs: the
+    /// prompt is replayed and generation re-run deterministically, but
+    /// the first `resume_from` sampled tokens are *not* re-streamed, so
+    /// the client sees one seamless stream across the chain death.
+    pub resume_from: usize,
 }
 
 /// Streaming updates for a request.
@@ -72,6 +82,20 @@ pub struct ServeOptions {
     /// flight, covering all slots), kept as the measured baseline
     /// (`decode_per_seq` bench).
     pub per_seq_decode: bool,
+    /// Per-packet completion deadline for the chain watchdog (ISSUE 7):
+    /// a submitted packet whose completion does not arrive within this
+    /// window is declared lost and the chain dead. `None` disarms the
+    /// watchdog. The default is orders of magnitude above a healthy
+    /// packet's chain transit, so it only ever fires on a real fault.
+    pub packet_deadline: Option<Duration>,
+    /// Deterministic fault plan threaded into the card chain at build
+    /// time (`build_chain`) — the chaos-test injection point. `None` (the
+    /// default) serves faultlessly.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Fault-plane counters. The rack passes one shared cell to every
+    /// instance it deploys so the tally survives instance teardown;
+    /// standalone instances default to a private cell.
+    pub counters: Arc<FaultCounters>,
 }
 
 impl Default for ServeOptions {
@@ -80,9 +104,26 @@ impl Default for ServeOptions {
             poll: Duration::from_millis(5),
             resident_kv: true,
             per_seq_decode: true,
+            packet_deadline: Some(Duration::from_secs(5)),
+            faults: None,
+            counters: Arc::new(FaultCounters::default()),
         }
     }
 }
+
+/// A sequence a dead chain took down mid-flight (ISSUE 7): enough to
+/// re-admit its task with the right resume point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LostSeq {
+    /// The request id (= broker `reply_to` on the serve_broker path).
+    pub id: u64,
+    /// Total tokens streamed to the client across all epochs so far.
+    pub streamed: usize,
+}
+
+/// Give up on a sequence after this many chain deaths and hand the client
+/// a typed `recoverable_error` instead of retrying forever.
+pub const MAX_SEQ_RETRIES: u32 = 3;
 
 /// Prompt tokens not yet injected into the chain.
 struct FillState {
@@ -123,11 +164,24 @@ enum PendingOp {
 }
 
 /// Pop the logits tensor off a completion frame (one copy: bytes → f32
-/// values), then recycle the frame to the pool.
-fn take_logits(sched: &PacketScheduler<PendingOp>, data: Vec<u8>, what: &str) -> Vec<f32> {
-    let logits = {
-        let (_, mut ts) = PacketHeader::decode_views(&data).expect(what);
-        ts.pop().expect("logits").to_f32_vec()
+/// values), then recycle the frame to the pool. A frame that fails to
+/// decode (corrupted in flight) is a chain fault, not a panic: the caller
+/// routes the typed error into the recovery path.
+fn take_logits(
+    sched: &PacketScheduler<PendingOp>,
+    tag: u64,
+    data: Vec<u8>,
+    what: &str,
+) -> Result<Vec<f32>, ChainError> {
+    let logits = match PacketHeader::decode_views(&data) {
+        Ok((_, mut ts)) => match ts.pop() {
+            Some(t) => Ok(t.to_f32_vec()),
+            None => Err(ChainError::BadFrame {
+                tag,
+                cause: format!("{what}: no logits tensor"),
+            }),
+        },
+        Err(e) => Err(ChainError::BadFrame { tag, cause: format!("{what}: {e}") }),
     };
     sched.recycle(data);
     logits
@@ -170,6 +224,10 @@ pub struct LlmInstance {
     /// Set by `request_drain`: stop pulling new broker tasks, finish what
     /// was already consumed. In-flight generation is unaffected.
     draining: AtomicBool,
+    /// Sequences a chain fault took down mid-flight, captured by
+    /// `serve_until_drained`'s exit path and consumed (`take_lost`) by
+    /// `serve_broker`, which requeues their tasks (ISSUE 7).
+    lost: Mutex<Vec<LostSeq>>,
     /// Requests admitted (`submit`) and not yet retired (`finish_slot`).
     /// A stop abandons its window without retiring, so after `shutdown`/
     /// `retire` the counter may stay nonzero — it is meaningful for live
@@ -217,7 +275,9 @@ pub fn build_chain(
     execs.push(HeadExecutor::new(engine.clone()));
     ring.report_ready(n_layers);
     ring.wait_committed();
-    Arc::new(NpRuntime::load_circuit(driver, 0, execs, 8))
+    // thread the (usually absent) fault plan into the chain workers —
+    // the chaos tests' injection point (ISSUE 7)
+    Arc::new(NpRuntime::load_circuit_faulty(driver, 0, execs, 8, opts.faults.clone()))
 }
 
 impl LlmInstance {
@@ -264,6 +324,7 @@ impl LlmInstance {
             updates: Mutex::new(urx),
             records: Mutex::new(Vec::new()),
             subscriptions: Mutex::new(Vec::new()),
+            lost: Mutex::new(Vec::new()),
             opts,
             stop: AtomicBool::new(false),
             draining: AtomicBool::new(false),
@@ -284,6 +345,25 @@ impl LlmInstance {
     pub fn submit(&self, req: GenRequest) {
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         self.queue.lock().unwrap().push_back(req);
+    }
+
+    /// Sequences the last chain fault took down, cleared on read. The
+    /// serve_broker worker requeues them; standalone callers inspect them
+    /// after `serve_until_drained` returns early.
+    pub fn take_lost(&self) -> Vec<LostSeq> {
+        std::mem::take(&mut *self.lost.lock().unwrap())
+    }
+
+    /// The chain's recorded fault, if it died (delegates to the runtime's
+    /// health cell).
+    pub fn chain_failure(&self) -> Option<ChainError> {
+        self.chain.failure()
+    }
+
+    /// This instance's fault-plane counters (rack-shared when deployed by
+    /// `rack::RackService`).
+    pub fn fault_counters(&self) -> &Arc<FaultCounters> {
+        &self.opts.counters
     }
 
     pub fn pending(&self) -> usize {
@@ -423,11 +503,17 @@ impl LlmInstance {
         st.tokens_out += 1;
         st.last_token = tok;
         st.generated.push(tok);
-        let _ = self.updates_tx.send(GenUpdate::Token {
-            id: st.req.id,
-            token: tok,
-            text: self.tokenizer.decode(&[tok]),
-        });
+        // Replay suppression (ISSUE 7): a retried request regenerates its
+        // whole stream deterministically, but the first `resume_from`
+        // tokens already reached the client in an earlier epoch — count
+        // them, don't re-stream them.
+        if st.tokens_out > st.req.resume_from {
+            let _ = self.updates_tx.send(GenUpdate::Token {
+                id: st.req.id,
+                token: tok,
+                text: self.tokenizer.decode(&[tok]),
+            });
+        }
         let hit_stop = st.req.stop_byte.map(|sb| tok == sb as u32).unwrap_or(false);
         st.tokens_out >= st.req.max_tokens
             || st.position + 1 >= self.engine.manifest.max_context
@@ -437,6 +523,11 @@ impl LlmInstance {
     /// Emit the Done update + wall-clock record for a retired slot.
     fn finish_slot(&self, mut st: SlotState) {
         self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        if st.req.retries > 0 {
+            // a sequence that outlived at least one chain death just
+            // completed — the recovery plane's success counter
+            self.opts.counters.on_recovered();
+        }
         let ttft = st
             .t_first
             .map(|t| t.duration_since(st.t_submit).as_secs_f64())
@@ -509,10 +600,23 @@ impl LlmInstance {
         let mut seq_in_flight_n = 0usize;
         let mut rr = 0usize; // round-robin cursor over filling slots
         let mut drr = 0usize; // round-robin cursor over decoding slots
+        // the chain fault (if any) that ended this serving run — handled
+        // by the capture block after the loop
+        let mut fault: Option<ChainError> = None;
+        sched.set_packet_deadline(self.opts.packet_deadline);
 
         loop {
             if self.stop.load(Ordering::Relaxed) {
                 sched.drain();
+                break;
+            }
+
+            // ---- chain watchdog (ISSUE 7) -------------------------------
+            // surfaces a recorded chain death immediately, and converts a
+            // silently lost packet (dropped frame, wedged card) into a
+            // typed PacketTimeout once its deadline expires
+            if let Some(e) = sched.watchdog() {
+                fault = Some(e);
                 break;
             }
 
@@ -646,7 +750,7 @@ impl LlmInstance {
             }
 
             // ---- route one completion (bounded wait: stop stays live) ---
-            let Some((_tag, data, op)) = sched.next_completion(self.opts.poll) else {
+            let Some((tag, data, op)) = sched.next_completion(self.opts.poll) else {
                 continue;
             };
             match op {
@@ -655,7 +759,13 @@ impl LlmInstance {
                         sched.recycle(data);
                         continue; // intermediate chunk ack
                     }
-                    let logits = take_logits(&sched, data, "prefill out");
+                    let logits = match take_logits(&sched, tag, data, "prefill out") {
+                        Ok(l) => l,
+                        Err(e) => {
+                            fault = Some(e);
+                            break;
+                        }
+                    };
                     let st = slots[slot].as_mut().expect("prefill for empty slot");
                     st.position = st.n_in;
                     let first = st.sampler.sample(&logits);
@@ -669,7 +779,14 @@ impl LlmInstance {
                 }
                 PendingOp::Decode { covered } => {
                     decode_in_flight = false;
-                    let logits = take_logits(&sched, data, "decode out"); // [B, V]
+                    // [B, V]
+                    let logits = match take_logits(&sched, tag, data, "decode out") {
+                        Ok(l) => l,
+                        Err(e) => {
+                            fault = Some(e);
+                            break;
+                        }
+                    };
                     for &s in &covered {
                         self.complete_decode_token(
                             &mut slots,
@@ -681,10 +798,49 @@ impl LlmInstance {
                 PendingOp::DecodeSeq { slot } => {
                     seq_in_flight[slot] = false;
                     seq_in_flight_n -= 1;
-                    let logits = take_logits(&sched, data, "decode_seq out"); // [1, V]
+                    // [1, V]
+                    let logits = match take_logits(&sched, tag, data, "decode_seq out") {
+                        Ok(l) => l,
+                        Err(e) => {
+                            fault = Some(e);
+                            break;
+                        }
+                    };
                     self.complete_decode_token(&mut slots, slot, &logits);
                 }
             }
+        }
+
+        // ---- lost-sequence capture (ISSUE 7) ----------------------------
+        // A chain fault ended the run: record it, mark the chain dead (a
+        // watchdog verdict already did; a bad frame does it here), and
+        // capture every sequence this run still owned — occupied slots AND
+        // queued admissions — so serve_broker can requeue their tasks.
+        // Each capture releases its in_flight hold: without that, a dead
+        // instance would never satisfy drain_complete and the autoscaler
+        // could not reap it.
+        if let Some(e) = fault {
+            self.chain.fail(e.clone());
+            self.opts.counters.on_chain_fault(&e);
+            let mut lost = Vec::new();
+            for s in slots.iter_mut() {
+                if let Some(st) = s.take() {
+                    lost.push(LostSeq {
+                        id: st.req.id,
+                        streamed: st.tokens_out.max(st.req.resume_from),
+                    });
+                    self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            loop {
+                let Some(req) = self.queue.lock().unwrap().pop_front() else {
+                    break;
+                };
+                lost.push(LostSeq { id: req.id, streamed: req.resume_from });
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            }
+            sched.drain();
+            self.lost.lock().unwrap().extend(lost);
         }
         self.records.lock().unwrap().clone()
     }
@@ -817,6 +973,11 @@ impl LlmInstance {
             // tasks consumed but not completed when a stop interrupted the
             // worker; their clients are released after the streamer drains
             let mut interrupted: Vec<u64> = Vec::new();
+            // set when a chain death handed sequences back to the broker:
+            // the exit sweep must then NOT abandon the queue even as its
+            // last consumer — the rack autoscaler's reap/redeploy (or a
+            // surviving sibling instance) will serve the requeued tasks
+            let mut recovery_pending = false;
             loop {
                 if inst.stop.load(Ordering::Relaxed) || inst.draining.load(Ordering::Relaxed)
                 {
@@ -854,11 +1015,56 @@ impl LlmInstance {
                         temperature: 0.0,
                         top_k: 0,
                         stop_byte: Some(b';'),
+                        retries: t.retries,
+                        resume_from: t.resume_from,
                     });
                 }
                 // tokens stream to the clients live from the streamer
                 // thread while this call generates
                 inst.serve_until_drained();
+                // ---- lost-sequence recovery (ISSUE 7) -------------------
+                // A chain fault ended the run early: requeue each captured
+                // sequence's task (front of its priority class, retry
+                // epoch bumped, resume point = tokens its client already
+                // has) so a sibling instance or the autoscaler's redeploy
+                // picks it up — or, past the retry budget, fail the client
+                // with a typed recoverable_error. The response channel of
+                // a requeued task is left open: the client keeps
+                // streaming across the chain death. This worker then
+                // exits — a dead chain serves nothing — which flips
+                // has_active_workers and lets the rack reap the instance.
+                let lost_seqs = inst.take_lost();
+                if !lost_seqs.is_empty() || inst.chain_failure().is_some() {
+                    let cause = inst
+                        .chain_failure()
+                        .map(|e| e.to_string())
+                        .unwrap_or_else(|| "chain fault".into());
+                    for l in &lost_seqs {
+                        let Some(t) = batch.iter().find(|t| t.reply_to == l.id)
+                        else {
+                            continue;
+                        };
+                        let mut t = t.clone();
+                        if t.retries >= MAX_SEQ_RETRIES {
+                            inst.opts.counters.on_lost();
+                            if let Some(ch) = broker.response(l.id) {
+                                ch.send(format!(
+                                    "recoverable_error: {cause} \
+                                     (gave up after {} retries)",
+                                    t.retries
+                                ));
+                                ch.finish();
+                            }
+                            broker.remove_response(l.id);
+                        } else {
+                            t.resume_from = l.streamed;
+                            broker.requeue(&queue, t);
+                            inst.opts.counters.on_requeued();
+                            recovery_pending = true;
+                        }
+                    }
+                    break;
+                }
                 if inst.stop.load(Ordering::Relaxed) {
                     // a stop mid-drain abandons the rest of the batch
                     // (tasks that completed have their channels removed by
@@ -900,7 +1106,9 @@ impl LlmInstance {
             // clients. When other consumers remain (rack drain/teardown of
             // one of several instances), queued tasks are left for them.
             drop(_consumer);
-            if broker.is_closed(&queue) || broker.stats(&queue).consumers == 0 {
+            if (broker.is_closed(&queue) || broker.stats(&queue).consumers == 0)
+                && !recovery_pending
+            {
                 broker.abandon_all(&queue);
             }
             served.load(Ordering::Relaxed)

@@ -22,6 +22,8 @@ mod scheduler;
 
 pub use codec::{PacketHeader, PacketKind};
 pub use executors::{HeadExecutor, LayerExecutor, SharedEngine};
-pub use instance::{build_chain, GenRequest, GenUpdate, LlmInstance, ServeOptions};
+pub use instance::{
+    build_chain, GenRequest, GenUpdate, LlmInstance, LostSeq, ServeOptions, MAX_SEQ_RETRIES,
+};
 pub use sampler::Sampler;
 pub use scheduler::{CompletionRouter, PacketScheduler};

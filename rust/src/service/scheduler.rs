@@ -18,16 +18,24 @@
 //!   arrival order, so multiple operation kinds (decode rounds, prefill
 //!   chunks, different circuits) can share the chain simultaneously,
 //! * waiting is stop-aware: `next_completion` returns within its timeout
-//!   so the owner can observe a shutdown request mid-stream.
+//!   so the owner can observe a shutdown request mid-stream,
+//! * a **chain watchdog** (ISSUE 7): each in-flight packet carries its
+//!   submission instant; [`PacketScheduler::watchdog`] surfaces the
+//!   chain's own typed death cause, or declares the chain dead with a
+//!   [`ChainError::PacketTimeout`] when the oldest in-flight packet
+//!   exceeds its completion deadline (a dropped frame or a silent stall
+//!   produces no completion — only a deadline can catch it). Declaring
+//!   death stops the chain, which is exactly the credit-reconciliation
+//!   path a normal shutdown uses: nothing leaks, nothing deadlocks.
 //!
 //! The scheduler is single-owner (no internal locking beyond the output
 //! channel): one serving thread drives submissions and completions.
 
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::npruntime::NpRuntime;
+use crate::npruntime::{ChainError, NpRuntime};
 
 /// Tag → pending-operation table. Completions may be claimed in any order,
 /// which is what lets prefill chunks and decode rounds share one chain.
@@ -78,7 +86,12 @@ impl<T> CompletionRouter<T> {
 pub struct PacketScheduler<T> {
     chain: Arc<NpRuntime>,
     rx: mpsc::Receiver<(u64, Vec<u8>)>,
+    tx: mpsc::Sender<(u64, Vec<u8>)>,
     router: CompletionRouter<T>,
+    /// Submission instant per in-flight tag — the watchdog's evidence.
+    submitted: HashMap<u64, Instant>,
+    /// Per-packet completion deadline (None = no watchdog).
+    deadline: Option<Duration>,
     next_tag: u64,
 }
 
@@ -88,10 +101,64 @@ impl<T> PacketScheduler<T> {
     /// attach at submission.
     pub fn new(chain: Arc<NpRuntime>) -> PacketScheduler<T> {
         let (tx, rx) = mpsc::channel();
+        let cb_tx = tx.clone();
         chain.on_output(move |_c, tag, data| {
-            let _ = tx.send((tag, data));
+            let _ = cb_tx.send((tag, data));
         });
-        PacketScheduler { chain, rx, router: CompletionRouter::new(), next_tag: 1 }
+        PacketScheduler {
+            chain,
+            rx,
+            tx,
+            router: CompletionRouter::new(),
+            submitted: HashMap::new(),
+            deadline: None,
+            next_tag: 1,
+        }
+    }
+
+    /// Arm (or disarm) the per-packet completion deadline the watchdog
+    /// enforces. A packet that stays in flight longer than this marks the
+    /// chain dead with [`ChainError::PacketTimeout`].
+    pub fn set_packet_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+    }
+
+    /// The chain's typed death verdict, if any: either the chain's own
+    /// recorded failure (a card died) or — with a deadline armed — a
+    /// packet-timeout verdict reached here. A timeout verdict also fails
+    /// the chain, so workers stop, blocked peers unblock, and the
+    /// instance's recovery path takes over. Returns `None` while healthy.
+    pub fn watchdog(&mut self) -> Option<ChainError> {
+        if let Some(e) = self.chain.failure() {
+            return Some(e);
+        }
+        if let Some(deadline) = self.deadline {
+            let oldest = self
+                .submitted
+                .iter()
+                .min_by_key(|(_, t)| **t)
+                .map(|(tag, t)| (*tag, *t));
+            if let Some((tag, t)) = oldest {
+                let waited = t.elapsed();
+                if waited > deadline {
+                    let e = ChainError::PacketTimeout {
+                        tag,
+                        waited_ms: waited.as_millis() as u64,
+                    };
+                    self.chain.fail(e.clone());
+                    return Some(e);
+                }
+            }
+        }
+        None
+    }
+
+    /// Re-inject a completion frame (fault-injection hook: the packet-loss
+    /// fuzz uses this to model a duplicated completion racing the real
+    /// one). Routed like any chain output — an already-claimed tag is
+    /// ignored, which is what makes retirement idempotent.
+    pub fn inject_completion(&self, tag: u64, data: Vec<u8>) {
+        let _ = self.tx.send((tag, data));
     }
 
     pub fn chain(&self) -> &Arc<NpRuntime> {
@@ -133,6 +200,7 @@ impl<T> PacketScheduler<T> {
             Ok(()) => {
                 self.next_tag += 1;
                 self.router.register(tag, op);
+                self.submitted.insert(tag, Instant::now());
                 Ok(tag)
             }
             Err(data) => Err((data, op)),
@@ -146,6 +214,7 @@ impl<T> PacketScheduler<T> {
         if self.chain.send_input(circuit, tag, data) {
             self.next_tag += 1;
             self.router.register(tag, op);
+            self.submitted.insert(tag, Instant::now());
             Some(tag)
         } else {
             None
@@ -162,9 +231,11 @@ impl<T> PacketScheduler<T> {
             match self.rx.recv_timeout(left) {
                 Ok((tag, data)) => {
                     if let Some(op) = self.router.route(tag) {
+                        self.submitted.remove(&tag);
                         return Some((tag, data, op));
                     }
-                    // completion for an op forgotten by drain(): skip it
+                    // completion for an op forgotten by drain() — or a
+                    // duplicate of one already claimed: skip it
                 }
                 Err(_) => return None,
             }
@@ -172,8 +243,10 @@ impl<T> PacketScheduler<T> {
     }
 
     /// Forget all in-flight operations (their completions will be
-    /// dropped). Used on shutdown.
+    /// dropped). Used on shutdown and by the recovery path after a chain
+    /// death — the returned ops are what the instance re-admits.
     pub fn drain(&mut self) -> Vec<T> {
+        self.submitted.clear();
         self.router.drain()
     }
 }
@@ -190,11 +263,18 @@ mod tests {
     /// Passthrough stage with a fixed service time per packet.
     struct Stage(Duration);
     impl StageExecutor for Stage {
-        fn execute(&self, _c: u32, _t: u64, input: &[u8], out: &mut Vec<u8>) {
+        fn execute(
+            &self,
+            _c: u32,
+            _t: u64,
+            input: &[u8],
+            out: &mut Vec<u8>,
+        ) -> Result<(), crate::npruntime::StageError> {
             if !self.0.is_zero() {
                 std::thread::sleep(self.0);
             }
             out.extend_from_slice(input);
+            Ok(())
         }
     }
 
@@ -292,12 +372,19 @@ mod tests {
             service: Duration,
         }
         impl StageExecutor for Meter {
-            fn execute(&self, _c: u32, _t: u64, input: &[u8], out: &mut Vec<u8>) {
+            fn execute(
+                &self,
+                _c: u32,
+                _t: u64,
+                input: &[u8],
+                out: &mut Vec<u8>,
+            ) -> Result<(), crate::npruntime::StageError> {
                 let now = self.inside.fetch_add(1, Ordering::SeqCst) + 1;
                 self.hwm.fetch_max(now, Ordering::SeqCst);
                 std::thread::sleep(self.service);
                 self.inside.fetch_sub(1, Ordering::SeqCst);
                 out.extend_from_slice(input);
+                Ok(())
             }
         }
 
@@ -371,6 +458,94 @@ mod tests {
         assert!(refusals > 0, "1-slot window never exerted backpressure");
         got.sort_unstable();
         assert_eq!(got, (0..N).collect::<Vec<_>>(), "every packet completes exactly once");
+    }
+
+    #[test]
+    fn watchdog_times_out_a_dropped_completion() {
+        use crate::fault::{FaultEvent, FaultKind, FaultPlan};
+        // card 0 silently swallows its first packet: no completion, no
+        // chain-level error — only the armed deadline can notice.
+        let plan = FaultPlan::new(vec![FaultEvent {
+            card: 0,
+            at_packet: 1,
+            kind: FaultKind::DropFrame,
+        }]);
+        let execs: Vec<Arc<dyn StageExecutor>> =
+            vec![Arc::new(Stage(Duration::ZERO)) as Arc<dyn StageExecutor>];
+        let chain = Arc::new(NpRuntime::load_circuit_faulty(
+            Driver::new(),
+            0,
+            execs,
+            4,
+            Some(plan),
+        ));
+        let mut sched: PacketScheduler<u64> = PacketScheduler::new(chain);
+        sched.set_packet_deadline(Some(Duration::from_millis(50)));
+        let tag = sched.submit(0, vec![1], 7).unwrap();
+        assert_eq!(sched.watchdog(), None, "fresh packet is within deadline");
+        assert!(sched.next_completion(Duration::from_millis(80)).is_none());
+        match sched.watchdog() {
+            Some(ChainError::PacketTimeout { tag: t, waited_ms }) => {
+                assert_eq!(t, tag);
+                assert!(waited_ms >= 50, "waited {waited_ms} ms");
+            }
+            other => panic!("expected PacketTimeout, got {other:?}"),
+        }
+        // the verdict kills the chain: submissions refused, ops drainable
+        assert!(sched.chain().stopped());
+        assert!(sched.chain().is_dead());
+        assert!(sched.try_submit(0, vec![2], 8).is_err());
+        assert_eq!(sched.drain(), vec![7]);
+    }
+
+    #[test]
+    fn watchdog_surfaces_a_card_death() {
+        use crate::fault::FaultPlan;
+        let execs: Vec<Arc<dyn StageExecutor>> =
+            vec![Arc::new(Stage(Duration::ZERO)) as Arc<dyn StageExecutor>];
+        let chain = Arc::new(NpRuntime::load_circuit_faulty(
+            Driver::new(),
+            0,
+            execs,
+            4,
+            Some(FaultPlan::kill_card(0, 1)),
+        ));
+        let mut sched: PacketScheduler<u64> = PacketScheduler::new(chain);
+        sched.submit(0, vec![1], 1).unwrap();
+        let deadline = Instant::now() + WAIT;
+        loop {
+            match sched.watchdog() {
+                Some(ChainError::CardDead { card: 0, cause }) => {
+                    assert!(cause.contains("injected"), "{cause}");
+                    break;
+                }
+                Some(other) => panic!("unexpected verdict {other:?}"),
+                None => {
+                    assert!(Instant::now() < deadline, "watchdog never fired");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_completion_is_ignored() {
+        let mut sched: PacketScheduler<&'static str> =
+            PacketScheduler::new(chain(2, Duration::ZERO, 4));
+        let tag = sched.submit(0, vec![3], "op").unwrap();
+        let (t, data, op) = sched.next_completion(WAIT).expect("completion");
+        assert_eq!((t, op), (tag, "op"));
+        // a slow duplicate of the same completion arrives after claim:
+        // it must not re-route, re-deliver, or disturb in-flight counts
+        sched.inject_completion(tag, data.clone());
+        sched.inject_completion(tag, data);
+        assert!(sched.next_completion(Duration::from_millis(40)).is_none());
+        assert_eq!(sched.in_flight(), 0);
+        assert_eq!(sched.watchdog(), None, "duplicates are not a fault");
+        // the chain is still fully usable
+        let tag2 = sched.submit(0, vec![4], "op2").unwrap();
+        assert!(tag2 > tag);
+        assert!(sched.next_completion(WAIT).is_some());
     }
 
     #[test]

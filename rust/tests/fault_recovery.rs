@@ -1,0 +1,320 @@
+//! Card-failure fault domains (ISSUE 7): chain death, watchdog timeout,
+//! and lost-sequence recovery, end to end over the stub backend.
+//!
+//! The contract under test: a card fault costs the fleet one chain, never
+//! a sequence. Every in-flight sequence of a dead chain is requeued at the
+//! front of its priority class with a bumped retry epoch and replayed
+//! deterministically (greedy sampling + replay suppression), so the
+//! client's stream is byte-identical to a faultless run — or, past the
+//! retry budget, terminated with a typed `recoverable_error` message
+//! instead of a hang. Fault counters make every step visible.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use npserve::broker::Task;
+use npserve::config::hw::RackSpec;
+use npserve::fault::{FaultEvent, FaultKind, FaultPlan};
+use npserve::metrics::FaultSnapshot;
+use npserve::npruntime::ChainError;
+use npserve::rack::{InstanceSpec, RackService};
+use npserve::runtime::testmodel::ToyConfig;
+use npserve::service::{GenRequest, LlmInstance, ServeOptions, SharedEngine};
+
+fn toy_engine() -> SharedEngine {
+    SharedEngine(Arc::new(ToyConfig::small().engine()))
+}
+
+const MODEL: &str = "toy-testmodel";
+
+fn toy_spec() -> InstanceSpec {
+    let mut spec = InstanceSpec::live(MODEL, 4, toy_engine());
+    // leave room for the whole prompt in the toy's 32-token context
+    spec.max_tokens = 8;
+    spec
+}
+
+type Wave = Vec<(u64, Arc<npserve::broker::ResponseChannel>)>;
+
+fn post_wave(svc: &RackService, prompts: &[String]) -> Wave {
+    let broker = svc.broker();
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            (
+                100 + i as u64,
+                broker.post(
+                    MODEL,
+                    Task {
+                        id: i as u64,
+                        priority: (i % 3) as u8,
+                        body: p.clone(),
+                        reply_to: 100 + i as u64,
+                        retries: 0,
+                        resume_from: 0,
+                    },
+                ),
+            )
+        })
+        .collect()
+}
+
+fn collect(chans: Wave) -> Vec<(u64, String)> {
+    chans
+        .into_iter()
+        .map(|(id, ch)| {
+            let mut text = String::new();
+            while let Some(t) = ch.recv() {
+                text.push_str(&t);
+            }
+            (id, text)
+        })
+        .collect()
+}
+
+/// Poll until the instance's chain recorded a fault AND its broker worker
+/// exited (the requeue of its lost sequences happens before the exit, so
+/// once this returns the broker state is settled).
+fn wait_chain_death(svc: &RackService, id: u64) -> ChainError {
+    let h = svc.instance_handle(id).expect("instance handle");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if let Some(e) = h.chain_failure() {
+            if !h.has_active_workers() {
+                return e;
+            }
+        }
+        assert!(Instant::now() < deadline, "chain death never observed");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Acceptance chaos run: one of two instances is killed mid-wave by a
+/// deterministic fault plan; every sequence still completes exactly once,
+/// byte-identical to a faultless reference, and the rack's fault counters
+/// account for the whole recovery.
+#[test]
+fn chain_death_mid_wave_loses_no_sequence() {
+    let prompts: Vec<String> = (0..12)
+        .map(|i| format!("prompt-{i}-{}", "x".repeat(i % 5)))
+        .collect();
+
+    // faultless reference: a single healthy instance serves everything
+    // (greedy sampling — the same replay determinism recovery relies on)
+    let reference = {
+        let svc = RackService::new(RackSpec::northpole_42u());
+        svc.deploy(toy_spec()).unwrap();
+        let out = collect(post_wave(&svc, &prompts));
+        svc.shutdown_all();
+        out
+    };
+    assert!(reference.iter().all(|(_, t)| !t.is_empty()));
+
+    // chaos fleet: the wave is queued first, then a victim instance whose
+    // card 0 dies on its 6th packet consumes a batch — mid-prefill, with
+    // clients already streaming — and a healthy survivor is deployed
+    // after the death (the autoscaler's reap/redeploy sequence, driven by
+    // hand so the schedule is deterministic).
+    let svc = RackService::new(RackSpec::northpole_42u());
+    let plan = FaultPlan::kill_card(0, 6);
+    let chans = post_wave(&svc, &prompts);
+
+    let mut victim = toy_spec();
+    victim.opts.faults = Some(plan.clone());
+    let vid = svc.deploy(victim).unwrap();
+    let cause = wait_chain_death(&svc, vid);
+    assert!(
+        matches!(cause, ChainError::CardDead { card: 0, .. }),
+        "unexpected death verdict: {cause}"
+    );
+    assert_eq!(plan.injected(), 1, "exactly the scheduled fault fired");
+
+    // the rack sees the dead instance through the same signal the
+    // autoscaler reaps on
+    assert_eq!(svc.dead_instance_of(MODEL), Some(vid));
+
+    // the victim's in-flight sequences went back to the broker, not to
+    // their clients as truncated streams
+    let snap = svc.fault_counters().snapshot();
+    assert_eq!(snap.chain_deaths, 1);
+    assert!(
+        (1..=4).contains(&snap.sequences_requeued),
+        "a batch of at most 4 slots was in flight: {snap}"
+    );
+    assert_eq!(snap.sequences_lost, 0, "retry budget must not be spent: {snap}");
+    assert_eq!(
+        svc.broker().stats(MODEL).retried,
+        snap.sequences_requeued,
+        "requeues flow through Broker::requeue"
+    );
+
+    // redeploy: a healthy instance drains the queue, requeued tasks first
+    let sid = svc.deploy(toy_spec()).unwrap();
+    let out = collect(chans);
+    assert_eq!(
+        out, reference,
+        "recovered streams must be byte-identical to the faultless run"
+    );
+
+    // the retried sequences completed on the survivor
+    let snap = svc.fault_counters().snapshot();
+    assert_eq!(snap.sequences_recovered, snap.sequences_requeued, "{snap}");
+    assert_eq!(snap.sequences_lost, 0);
+    assert_eq!(svc.fleet_metrics().faults, snap, "fleet metrics expose the tally");
+
+    // exactly-once: completions pumped across both instances cover the
+    // wave with no duplicates
+    let served = svc.teardown(vid).unwrap() + svc.teardown(sid).unwrap();
+    assert_eq!(served, prompts.len(), "every sequence completed exactly once");
+    assert_eq!(svc.inventory().in_use(), 0);
+}
+
+/// Past the retry budget the client gets a typed `recoverable_error`
+/// message and a finished stream — never a silent hang. Teardown of each
+/// dead instance must leave the requeued task in the broker (the
+/// chain-death exception to the last-consumer abandon sweep).
+#[test]
+fn retry_budget_exhausts_to_a_typed_error() {
+    let svc = RackService::new(RackSpec::northpole_42u());
+    let chans = post_wave(&svc, &["doomed".to_string()]);
+
+    // MAX_SEQ_RETRIES = 3: deaths at retries 0, 1 and 2 requeue; the
+    // fourth chain death gives up.
+    for round in 0..4 {
+        let mut spec = toy_spec();
+        spec.opts.faults = Some(FaultPlan::kill_card(0, 1));
+        let vid = svc.deploy(spec).unwrap();
+        wait_chain_death(&svc, vid);
+        // the reap: requeued work must survive losing its last consumer
+        svc.teardown(vid).unwrap();
+        let snap = svc.fault_counters().snapshot();
+        assert_eq!(snap.chain_deaths, round + 1);
+    }
+
+    let out = collect(chans);
+    assert_eq!(out.len(), 1);
+    let text = &out[0].1;
+    assert!(
+        text.starts_with("recoverable_error: "),
+        "client must see a typed failure, got {text:?}"
+    );
+    assert!(text.contains("gave up after 3 retries"), "{text:?}");
+
+    let expect = FaultSnapshot {
+        chain_deaths: 4,
+        packet_timeouts: 0,
+        bad_frames: 0,
+        sequences_requeued: 3,
+        sequences_recovered: 0,
+        sequences_lost: 1,
+    };
+    assert_eq!(svc.fault_counters().snapshot(), expect);
+    svc.shutdown_all();
+}
+
+/// A dropped frame produces no completion and no chain-level error — only
+/// the armed per-packet deadline can catch it. The watchdog's timeout
+/// verdict kills the chain and the instance captures every owned sequence.
+#[test]
+fn watchdog_catches_a_silent_frame_drop() {
+    let opts = ServeOptions {
+        packet_deadline: Some(Duration::from_millis(80)),
+        faults: Some(FaultPlan::new(vec![FaultEvent {
+            card: 0,
+            at_packet: 2,
+            kind: FaultKind::DropFrame,
+        }])),
+        ..ServeOptions::default()
+    };
+    let inst = LlmInstance::start_with(toy_engine(), opts);
+    for id in [1u64, 2] {
+        inst.submit(GenRequest {
+            id,
+            prompt: format!("drop-{id}"),
+            max_tokens: 4,
+            temperature: 0.0,
+            top_k: 0,
+            stop_byte: None,
+            retries: 0,
+            resume_from: 0,
+        });
+    }
+    let records = inst.serve_until_drained();
+
+    match inst.chain_failure() {
+        Some(ChainError::PacketTimeout { waited_ms, .. }) => {
+            assert!(waited_ms >= 80, "deadline fired early: {waited_ms} ms")
+        }
+        other => panic!("expected PacketTimeout, got {other:?}"),
+    }
+    let snap = inst.fault_counters().snapshot();
+    assert_eq!(snap.chain_deaths, 1);
+    assert_eq!(snap.packet_timeouts, 1);
+
+    // exactly-once accounting: completed ∪ captured covers both
+    // sequences with no overlap, and nothing is left in flight
+    let lost = inst.take_lost();
+    assert!(!lost.is_empty(), "the dropped packet's sequence must be captured");
+    let completed: BTreeSet<u64> = records.iter().map(|r| r.id as u64).collect();
+    let captured: BTreeSet<u64> = lost.iter().map(|l| l.id).collect();
+    assert!(completed.is_disjoint(&captured), "{completed:?} vs {captured:?}");
+    let mut all = completed;
+    all.extend(&captured);
+    assert_eq!(all, BTreeSet::from([1, 2]));
+    assert_eq!(inst.in_flight(), 0, "captures must release in-flight holds");
+    inst.shutdown();
+}
+
+/// Seeded packet-loss fuzz (ISSUE 7 satellite): random die/stall/drop/
+/// corrupt schedules must never deadlock the serving loop, leak an
+/// in-flight hold, or double-account a sequence — every submitted id ends
+/// either completed or captured, exactly once, within the watchdog bound.
+#[test]
+fn seeded_fault_fuzz_accounts_for_every_sequence() {
+    for seed in 0..12u64 {
+        let opts = ServeOptions {
+            packet_deadline: Some(Duration::from_millis(100)),
+            faults: Some(FaultPlan::seeded(seed, 4, 40, 3)),
+            ..ServeOptions::default()
+        };
+        let inst = LlmInstance::start_with(toy_engine(), opts);
+        let ids: BTreeSet<u64> = (1..=4).collect();
+        for &id in &ids {
+            inst.submit(GenRequest {
+                id,
+                prompt: format!("fuzz-{seed}-{id}"),
+                max_tokens: 6,
+                temperature: 0.0,
+                top_k: 0,
+                stop_byte: None,
+                retries: 0,
+                resume_from: 0,
+            });
+        }
+        let records = inst.serve_until_drained();
+        let lost = inst.take_lost();
+
+        let completed: BTreeSet<u64> = records.iter().map(|r| r.id as u64).collect();
+        let captured: BTreeSet<u64> = lost.iter().map(|l| l.id).collect();
+        assert!(
+            completed.is_disjoint(&captured),
+            "seed {seed}: double-accounted ids {:?}",
+            completed.intersection(&captured).collect::<Vec<_>>()
+        );
+        let mut all = completed.clone();
+        all.extend(&captured);
+        assert_eq!(all, ids, "seed {seed}: sequences vanished or were invented");
+        assert_eq!(inst.in_flight(), 0, "seed {seed}: in-flight hold leaked");
+        let snap = inst.fault_counters().snapshot();
+        assert!(snap.chain_deaths <= 1, "seed {seed}: one run, one death: {snap}");
+        if !captured.is_empty() {
+            assert_eq!(
+                snap.chain_deaths, 1,
+                "seed {seed}: captures require a recorded chain death"
+            );
+        }
+        inst.shutdown();
+    }
+}

@@ -52,6 +52,8 @@ fn roundtrip(svc: &RackService, prompts: &[String]) -> BTreeMap<u64, String> {
                         priority: (i % 3) as u8,
                         body: p.clone(),
                         reply_to: 100 + i as u64,
+                        retries: 0,
+                        resume_from: 0,
                     },
                 ),
             )
@@ -170,6 +172,8 @@ fn paper_3x8b_runs_live_on_the_testmodel_backend() {
                     priority: (i % 3) as u8,
                     body: format!("q{i}"),
                     reply_to: 700 + i,
+                    retries: 0,
+                    resume_from: 0,
                 },
             )
         })

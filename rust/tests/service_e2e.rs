@@ -28,6 +28,8 @@ fn gen(inst: &Arc<LlmInstance>, id: u64, prompt: &str, n: usize) -> Vec<u32> {
         temperature: 0.0,
         top_k: 0,
         stop_byte: None,
+        retries: 0,
+        resume_from: 0,
     });
     inst.serve_until_drained();
     let updates = inst.updates.lock().unwrap();
@@ -66,10 +68,14 @@ fn batched_generation_matches_solo() {
     batch.submit(GenRequest {
         id: 11, prompt: "abc".into(), max_tokens: 5,
         temperature: 0.0, top_k: 0, stop_byte: None,
+        retries: 0,
+        resume_from: 0,
     });
     batch.submit(GenRequest {
         id: 12, prompt: "xyz9".into(), max_tokens: 5,
         temperature: 0.0, top_k: 0, stop_byte: None,
+        retries: 0,
+        resume_from: 0,
     });
     batch.serve_until_drained();
     let updates = batch.updates.lock().unwrap();
@@ -97,6 +103,8 @@ fn more_requests_than_slots_all_complete() {
             temperature: 0.0,
             top_k: 0,
             stop_byte: None,
+            retries: 0,
+            resume_from: 0,
         });
     }
     let recs = inst.serve_until_drained();
@@ -115,7 +123,7 @@ fn broker_roundtrip_streams_tokens() {
     let broker = Broker::new();
     let ch = broker.post(
         "granite-test",
-        Task { id: 1, priority: 1, body: "3+4=".into(), reply_to: 71 },
+        Task { id: 1, priority: 1, body: "3+4=".into(), reply_to: 71, retries: 0, resume_from: 0 },
     );
     let handle = inst.serve_broker(broker.clone(), "granite-test", vec![0, 1, 2], 4);
     let mut got = Vec::new();
@@ -194,6 +202,8 @@ mod stub_backend {
                 temperature: 0.0,
                 top_k: 0,
                 stop_byte: None,
+                retries: 0,
+                resume_from: 0,
             });
         }
         let recs = inst.serve_until_drained();
