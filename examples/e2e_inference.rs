@@ -65,6 +65,9 @@ fn main() {
             priority: 1,
             body: p.to_string(),
             reply_to: 1000 + i as u64,
+            retries: 0,
+            resume_from: 0,
+            prefix_hash: 0,
         });
         channels.push((p, ch));
     }

@@ -1,0 +1,78 @@
+//! Bench-trajectory consolidation (ISSUE 8 satellite): collect every
+//! per-PR bench report (`BENCH_PR<k>.json`, written at the repo root by
+//! the individual benches) into one `BENCH_TRAJECTORY.json` keyed by PR —
+//! a single machine-readable artifact tracking how the numbers move as
+//! the system grows, instead of N loose files per CI run.
+//!
+//! Reports merge (never replace): a run that only produced BENCH_PR8.json
+//! still keeps earlier PRs' sections that a previous consolidation wrote.
+//! Always exits 0 — missing reports are a note, not a failure (a smoke CI
+//! pass runs only a subset of benches).
+//!
+//!   cargo bench --bench bench_trajectory
+
+use std::path::{Path, PathBuf};
+
+use npserve::util::json::{merge_into_file, Value};
+
+/// Repo root (the package root's parent — where benches write reports).
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// `BENCH_PR7.json` -> `7`.
+fn pr_number(name: &str) -> Option<u32> {
+    name.strip_prefix("BENCH_PR")?.strip_suffix(".json")?.parse().ok()
+}
+
+fn main() {
+    let root = repo_root();
+    let out = root.join("BENCH_TRAJECTORY.json");
+
+    let mut reports: Vec<(u32, PathBuf)> = match std::fs::read_dir(&root) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                Some((pr_number(&name)?, e.path()))
+            })
+            .collect(),
+        Err(e) => {
+            eprintln!("could not scan {root:?}: {e}");
+            return;
+        }
+    };
+    reports.sort();
+
+    if reports.is_empty() {
+        println!("no BENCH_PR*.json reports found under {root:?}; nothing to consolidate");
+        return;
+    }
+
+    let mut merged = 0usize;
+    for (pr, path) in &reports {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("  skipping {path:?}: {e}");
+                continue;
+            }
+        };
+        let value = match Value::parse(&text) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("  skipping {path:?}: {e}");
+                continue;
+            }
+        };
+        let sections = value.as_obj().map(|m| m.len()).unwrap_or(0);
+        match merge_into_file(&out, &format!("PR{pr}"), value) {
+            Ok(()) => {
+                println!("  PR{pr}: {sections} section(s) from {:?}", path.file_name().unwrap_or_default());
+                merged += 1;
+            }
+            Err(e) => eprintln!("  could not merge {path:?}: {e}"),
+        }
+    }
+    println!("consolidated {merged} report(s) into BENCH_TRAJECTORY.json");
+}

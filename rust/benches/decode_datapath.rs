@@ -66,6 +66,8 @@ fn run(cfg: &ToyConfig, resident: bool, max_tokens: usize) -> Measured {
         stop_byte: None,
         retries: 0,
         resume_from: 0,
+        prefix_hash: 0,
+        affinity: false,
     };
     // warmup: primes the frame pool and the serving loop's row buffers
     inst.submit(req(1000, 2));

@@ -68,6 +68,8 @@ fn run(cfg: &ToyConfig, per_seq: bool, gen_lens: &[usize]) -> Measured {
         stop_byte: None,
         retries: 0,
         resume_from: 0,
+        prefix_hash: 0,
+        affinity: false,
     };
     // warmup: primes the frame pool and the serving loop's row buffers
     inst.submit(req(1000, 2));

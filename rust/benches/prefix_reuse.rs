@@ -1,0 +1,212 @@
+//! Prefix-reuse benchmark (EXPERIMENTS.md §Prefix-reuse): multi-turn
+//! conversation TTFT, warm (KV-reuse tier, ISSUE 8) vs cold (prefix cache
+//! disabled), over the full serving stack on the stub-backend toy model —
+//! no PJRT artifacts needed, so this runs in every CI pass.
+//!
+//! The toy model charges a fixed amount of work **per processed row**
+//! (`ToyConfig::row_work_ns`), so prefilling an n-token prompt costs ∝ n
+//! — the real-hardware regime where re-prefilling a conversation's whole
+//! history on every turn dominates TTFT. A warm turn resumes from the KV
+//! its previous turn left parked in the slot and prefills only the new
+//! suffix (the user's message plus the last reply), so the ideal turn-k
+//! speedup is `history_len / suffix_len`.
+//!
+//! The conversation: an 88-token system prompt, then turns that each
+//! append the 8-token reply plus an 8-token user message — turn k ≥ 2
+//! re-prefills 16 of 104+ tokens when warm.
+//!
+//! Acceptance bars (ISSUE 8):
+//! * every warm turn k ≥ 2 improves TTFT ≥ 5× over the cold run (full
+//!   mode only; the smoke run's row work is too small to be
+//!   timing-stable),
+//! * outputs are byte-identical warm vs cold on every turn (asserted in
+//!   smoke mode too — reuse may change latency, never tokens),
+//! * the warm instance's counters account for every reuse.
+//!
+//! Results land in BENCH_PR8.json §prefix_reuse.
+//!
+//!   cargo bench --bench prefix_reuse                    # full run
+//!   PREFIX_REUSE_SMOKE=1 cargo bench --bench prefix_reuse   # CI smoke
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use npserve::runtime::testmodel::ToyConfig;
+use npserve::service::{
+    GenRequest, LlmInstance, PrefixOptions, ServeOptions, SharedEngine,
+};
+use npserve::tokenizer::ByteTokenizer;
+use npserve::util::json::{merge_into_file, Value};
+
+/// Cargo runs bench binaries with cwd = the package root (rust/); the
+/// report lives one level up, at the repo root (EXPERIMENTS.md).
+fn report_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR8.json")
+}
+
+const SYSTEM_TOKENS: usize = 88;
+const USER_TOKENS: usize = 8;
+const GEN_TOKENS: usize = 8;
+const N_TURNS: usize = 4;
+
+/// Serve one request and return (tokens, ttft seconds).
+fn turn(inst: &Arc<LlmInstance>, id: u64, prompt: &str) -> (Vec<u32>, f64) {
+    inst.submit(GenRequest {
+        id,
+        prompt: prompt.into(),
+        max_tokens: GEN_TOKENS,
+        temperature: 0.0,
+        top_k: 0,
+        stop_byte: None,
+        retries: 0,
+        resume_from: 0,
+        prefix_hash: 0,
+        affinity: false,
+    });
+    let recs = inst.serve_until_drained();
+    let rec = recs
+        .iter()
+        .find(|r| r.id as u64 == id)
+        .unwrap_or_else(|| panic!("request {id} never completed"));
+    let ttft = rec.t_first - rec.t_start;
+    let updates = inst.updates.lock().unwrap();
+    let mut toks = Vec::new();
+    while let Ok(u) = updates.try_recv() {
+        if let npserve::service::GenUpdate::Token { id: uid, token, .. } = u {
+            if uid == id {
+                toks.push(token);
+            }
+        }
+    }
+    (toks, ttft)
+}
+
+/// Sub-vocab prompt bytes: distinct token ids under the toy's 32-token
+/// vocabulary clamp.
+fn filler(n: usize) -> String {
+    (0..n).map(|i| (1 + (i % 30) as u8) as char).collect()
+}
+
+struct Turn {
+    n_in: usize,
+    cold_ttft_s: f64,
+    warm_ttft_s: f64,
+}
+
+fn main() {
+    let smoke = std::env::var("PREFIX_REUSE_SMOKE").is_ok();
+    let mut cfg = ToyConfig::small();
+    // room for the whole conversation (the stock toy context is 32)
+    cfg.max_context = 160;
+    cfg.prefill_chunk = 8;
+    cfg.row_work_ns = if smoke { 5_000 } else { 100_000 };
+
+    let warm = LlmInstance::start_with(
+        SharedEngine(Arc::new(cfg.engine())),
+        ServeOptions::default(),
+    );
+    let cold = LlmInstance::start_with(
+        SharedEngine(Arc::new(cfg.engine())),
+        ServeOptions {
+            prefix: PrefixOptions { enabled: false, ..Default::default() },
+            ..Default::default()
+        },
+    );
+
+    println!(
+        "== prefix reuse: {} system + {}/turn over {} turns, {} µs/row, chunk {} ==",
+        SYSTEM_TOKENS,
+        USER_TOKENS + GEN_TOKENS,
+        N_TURNS,
+        cfg.row_work_ns / 1000,
+        cfg.prefill_chunk
+    );
+
+    let t = ByteTokenizer;
+    let mut history = filler(SYSTEM_TOKENS);
+    let mut turns: Vec<Turn> = Vec::new();
+    for k in 1..=N_TURNS {
+        if k > 1 {
+            history.push_str(&filler(USER_TOKENS));
+        }
+        let (w, warm_ttft) = turn(&warm, k as u64, &history);
+        let (c, cold_ttft) = turn(&cold, k as u64, &history);
+        assert_eq!(w.len(), GEN_TOKENS, "turn {k} truncated");
+        assert_eq!(
+            w, c,
+            "turn {k}: reuse changed the output bytes — the cache may only \
+             ever change latency, never tokens"
+        );
+        println!(
+            "  turn {k}: {:>3} tokens in  cold TTFT {:>8.2} ms  warm TTFT {:>8.2} ms  ({:.2}x)",
+            history.len(),
+            cold_ttft * 1e3,
+            warm_ttft * 1e3,
+            cold_ttft / warm_ttft
+        );
+        turns.push(Turn { n_in: history.len(), cold_ttft_s: cold_ttft, warm_ttft_s: warm_ttft });
+        // the assistant reply joins the conversation history
+        history.push_str(&t.decode(&w));
+    }
+
+    let s = warm.prefix_counters().snapshot();
+    println!("  warm counters: {s}");
+    warm.shutdown();
+    cold.shutdown();
+
+    let min_speedup = turns[1..]
+        .iter()
+        .map(|t| t.cold_ttft_s / t.warm_ttft_s)
+        .fold(f64::INFINITY, f64::min);
+    println!("  -> min warm-turn speedup {min_speedup:.2}x (bar: ≥ 5x)");
+
+    let section = Value::obj(vec![
+        ("system_tokens", Value::num(SYSTEM_TOKENS as f64)),
+        ("turn_growth_tokens", Value::num((USER_TOKENS + GEN_TOKENS) as f64)),
+        ("row_work_ns", Value::num(cfg.row_work_ns as f64)),
+        ("prefill_chunk", Value::num(cfg.prefill_chunk as f64)),
+        (
+            "turns",
+            Value::arr(turns.iter().map(|t| {
+                Value::obj(vec![
+                    ("n_in", Value::num(t.n_in as f64)),
+                    ("cold_ttft_ms", Value::num(t.cold_ttft_s * 1e3)),
+                    ("warm_ttft_ms", Value::num(t.warm_ttft_s * 1e3)),
+                    ("speedup", Value::num(t.cold_ttft_s / t.warm_ttft_s)),
+                ])
+            })),
+        ),
+        ("min_warm_speedup", Value::num(min_speedup)),
+        ("hits", Value::num(s.hits as f64)),
+        ("misses", Value::num(s.misses as f64)),
+        ("matched_tokens", Value::num(s.matched_tokens as f64)),
+        ("byte_identical", Value::Bool(true)),
+        ("smoke", Value::Bool(smoke)),
+    ]);
+    match merge_into_file(&report_path(), "prefix_reuse", section) {
+        Ok(()) => println!("\nwrote BENCH_PR8.json §prefix_reuse"),
+        Err(e) => eprintln!("\ncould not write BENCH_PR8.json: {e}"),
+    }
+
+    let mut failed = false;
+    if s.hits != (N_TURNS - 1) as u64 || s.misses != 1 {
+        eprintln!(
+            "FAIL: every turn past the first must reuse parked KV \
+             (hits {} misses {}, want {} / 1)",
+            s.hits,
+            s.misses,
+            N_TURNS - 1
+        );
+        failed = true;
+    }
+    if !smoke && min_speedup < 5.0 {
+        eprintln!(
+            "FAIL: warm-turn TTFT speedup {min_speedup:.2}x below the 5x acceptance bar"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("prefix_reuse OK");
+}

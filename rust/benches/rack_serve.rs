@@ -94,6 +94,7 @@ fn run_fleet(cfg: &ToyConfig, n_instances: usize, n_requests: usize) -> Measured
                     reply_to: 90_000 + i as u64,
                     retries: 0,
                     resume_from: 0,
+                    prefix_hash: 0,
                 },
             )
         })
@@ -114,6 +115,7 @@ fn run_fleet(cfg: &ToyConfig, n_instances: usize, n_requests: usize) -> Measured
                     reply_to: 10_000 + i as u64,
                     retries: 0,
                     resume_from: 0,
+                    prefix_hash: 0,
                 },
             )
         })
@@ -196,6 +198,7 @@ fn run_autoscaled(cfg: &ToyConfig, n_requests: usize) -> Measured {
                     reply_to: 80_000 + i as u64,
                     retries: 0,
                     resume_from: 0,
+                    prefix_hash: 0,
                 },
             )
         })
@@ -236,6 +239,7 @@ fn run_autoscaled(cfg: &ToyConfig, n_requests: usize) -> Measured {
                     reply_to: 10_000 + i as u64,
                     retries: 0,
                     resume_from: 0,
+                    prefix_hash: 0,
                 },
             )
         })
@@ -312,6 +316,7 @@ fn run_fault_chaos(cfg: &ToyConfig, n_requests: usize, kill_at: u64) -> (Measure
                     reply_to: 90_000 + i as u64,
                     retries: 0,
                     resume_from: 0,
+                    prefix_hash: 0,
                 },
             )
         })
@@ -334,6 +339,7 @@ fn run_fault_chaos(cfg: &ToyConfig, n_requests: usize, kill_at: u64) -> (Measure
                     reply_to: 10_000 + i as u64,
                     retries: 0,
                     resume_from: 0,
+                    prefix_hash: 0,
                 },
             )
         })
@@ -391,6 +397,7 @@ fn run_fault_chaos(cfg: &ToyConfig, n_requests: usize, kill_at: u64) -> (Measure
                     reply_to: 20_000 + i as u64,
                     retries: 0,
                     resume_from: 0,
+                    prefix_hash: 0,
                 },
             )
         })

@@ -57,7 +57,7 @@ fn main() {
     let mut id = 0u64;
     bench("broker post+consume (priority queue)", 10_000, || {
         id += 1;
-        broker.post("q", Task { id, priority: (id % 3) as u8, body: "x".into(), reply_to: id, retries: 0, resume_from: 0 });
+        broker.post("q", Task { id, priority: (id % 3) as u8, body: "x".into(), reply_to: id, retries: 0, resume_from: 0, prefix_hash: 0 });
         broker.try_consume("q", &[0, 1, 2]).unwrap();
         broker.remove_response(id);
     });
@@ -116,6 +116,8 @@ fn main() {
             temperature: 0.0, top_k: 0, stop_byte: None,
             retries: 0,
             resume_from: 0,
+            prefix_hash: 0,
+            affinity: false,
         });
         inst.serve_until_drained();
     });

@@ -11,5 +11,5 @@ mod openai;
 pub use http::{http_request, HttpRequest, HttpResponse, HttpServer};
 pub use openai::{
     chat_completion_chunk, model_not_found_json, model_overloaded_json, parse_chat_request,
-    AdmitDecision, Admission, ApiServer, ChatRequest,
+    AdmitDecision, Admission, ApiServer, ChatRequest, PrefixRoute,
 };

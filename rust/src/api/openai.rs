@@ -8,6 +8,7 @@ use crate::anyhow;
 use crate::util::err::Result;
 
 use crate::broker::{Broker, Task};
+use crate::service::prefix_route_hash;
 use crate::util::json::Value;
 
 use super::http::{HttpRequest, HttpResponse, HttpServer};
@@ -35,6 +36,13 @@ pub enum AdmitDecision {
 /// the task is posted (rack::RackService::admission builds one from broker
 /// queue-depth introspection).
 pub type Admission = Arc<dyn Fn(&str) -> AdmitDecision + Send + Sync>;
+
+/// Session-affinity routing hook (ISSUE 8): maps (model, prefix hash) to
+/// the queue the task should be posted on — an instance's affinity side
+/// queue when that instance advertises the conversation's prefix, or None
+/// to fall back to the shared model queue
+/// (rack::RackService::affinity builds one from the rack's PrefixRouter).
+pub type PrefixRoute = Arc<dyn Fn(&str, u64) -> Option<String> + Send + Sync>;
 
 /// OpenAI-style error body for an unknown model (`model_not_found`).
 pub fn model_not_found_json(model: &str) -> String {
@@ -155,6 +163,21 @@ impl ApiServer {
         broker: Arc<Broker>,
         admission: Admission,
     ) -> Result<ApiServer> {
+        Self::serve_affinity(addr, broker, admission, Arc::new(|_: &str, _: u64| None))
+    }
+
+    /// Model-routed front door with session-affinity steering (ISSUE 8):
+    /// each admitted task carries a prefix hash over its opening bytes,
+    /// and when `route` names a queue for that (model, hash) — an
+    /// instance advertising the parked prefix KV — the task is posted
+    /// there instead of the shared model queue, so follow-up conversation
+    /// turns resume from resident KV rather than re-prefill from scratch.
+    pub fn serve_affinity(
+        addr: &str,
+        broker: Arc<Broker>,
+        admission: Admission,
+        route: PrefixRoute,
+    ) -> Result<ApiServer> {
         let next_id = Arc::new(AtomicU64::new(1));
         let handler = {
             let broker = broker.clone();
@@ -192,9 +215,16 @@ impl ApiServer {
                             }
                         }
                         let id = next_id.fetch_add(1, Ordering::Relaxed);
-                        // §IV: post an inference task with model + priority
+                        // §IV: post an inference task with model + priority.
+                        // The prefix hash is stamped here (over the
+                        // conversation's opening bytes) so every tier
+                        // downstream — router, broker, instance — agrees
+                        // on the session's identity without re-parsing.
+                        let phash = prefix_route_hash(&chat.prompt);
+                        let dest = route(&chat.model, phash)
+                            .unwrap_or_else(|| chat.model.clone());
                         let ch = broker.post(
-                            &chat.model,
+                            &dest,
                             Task {
                                 id,
                                 priority: chat.priority,
@@ -202,6 +232,7 @@ impl ApiServer {
                                 reply_to: id,
                                 retries: 0,
                                 resume_from: 0,
+                                prefix_hash: phash,
                             },
                         );
                         // Re-check after posting: a teardown can race the
@@ -215,9 +246,18 @@ impl ApiServer {
                         // (For the admit-all server the re-check is always
                         // Accept, preserving raw-consumer setups.)
                         if !matches!(admission(&chat.model), AdmitDecision::Accept)
-                            && broker.stats(&chat.model).consumers == 0
+                            && broker.stats(&dest).consumers == 0
                         {
-                            broker.abandon_all(&chat.model);
+                            broker.abandon_all(&dest);
+                        }
+                        // Same post-then-recheck for the affinity side
+                        // queue: if the steered-to instance deregistered
+                        // while we posted, its exit sweep may have run
+                        // before our task landed — migrate it to the
+                        // shared model queue (channel intact) instead of
+                        // stranding it on a queue nobody consumes.
+                        if dest != chat.model && broker.stats(&dest).consumers == 0 {
+                            broker.migrate(&dest, &chat.model);
                         }
                         let model = chat.model.clone();
                         if chat.stream {

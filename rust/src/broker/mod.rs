@@ -24,6 +24,11 @@ pub struct Task {
     /// serving instance suppresses re-emitting the first `resume_from`
     /// tokens so the client sees one seamless stream.
     pub resume_from: usize,
+    /// Route hash over the conversation's opening bytes (ISSUE 8): the
+    /// front door stamps it at admission so the rack can steer follow-up
+    /// turns to the instance holding the parked prefix KV. 0 = not
+    /// computed / no affinity.
+    pub prefix_hash: u64,
 }
 
 #[derive(Default)]
@@ -388,6 +393,37 @@ impl Broker {
         ConsumerGuard { q }
     }
 
+    /// Move every task queued on `from` to the back of `to`, preserving
+    /// priority classes and FIFO order within each (ISSUE 8). Response
+    /// channels are untouched — unlike `post`, which would install a fresh
+    /// channel and strand the original caller. The affinity-routing exit
+    /// path: when an instance's session side queue loses its last
+    /// consumer, steered-but-unserved tasks migrate back to the shared
+    /// model queue so a sibling serves them. Returns the number moved.
+    pub fn migrate(&self, from: &str, to: &str) -> usize {
+        if from == to {
+            return 0;
+        }
+        let Some(src) = self.queue_if_exists(from) else {
+            return 0;
+        };
+        let moved: Vec<Task> = {
+            let mut st = src.state.lock().unwrap();
+            st.by_priority.values_mut().flat_map(|f| f.drain(..)).collect()
+        };
+        let n = moved.len();
+        if n == 0 {
+            return 0;
+        }
+        let dst = self.queue(to);
+        let mut st = dst.state.lock().unwrap();
+        for t in moved {
+            st.by_priority.entry(t.priority).or_default().push_back(t);
+        }
+        dst.ready.notify_all();
+        n
+    }
+
     /// Drain every queued task (all priority levels) and finish its
     /// response channel, releasing clients blocked in `recv`. Called when
     /// a queue's last consumer departs — without it, tasks posted but
@@ -426,6 +462,7 @@ mod tests {
             reply_to: id,
             retries: 0,
             resume_from: 0,
+            prefix_hash: 0,
         }
     }
 
@@ -602,6 +639,33 @@ mod tests {
         assert_eq!(b.stats("m").consumers, 1);
         drop(g);
         assert_eq!(b.stats("m").consumers, 0);
+    }
+
+    /// ISSUE 8: migrating an affinity side queue back to the shared model
+    /// queue preserves priorities and FIFO order, leaves response channels
+    /// intact (the client keeps streaming), and never self-migrates.
+    #[test]
+    fn migrate_moves_tasks_preserving_order_and_channels() {
+        let b = Broker::new();
+        let ch1 = b.post("m::aff0", task(1, 0));
+        b.post("m::aff0", task(2, 2));
+        b.post("m::aff0", task(3, 0));
+        b.post("m", task(4, 0));
+        assert_eq!(b.migrate("m::aff0", "m::aff0"), 0, "self-migrate is a no-op");
+        assert_eq!(b.migrate("m::aff0", "m"), 3);
+        assert_eq!(b.depth("m::aff0"), 0);
+        assert_eq!(b.depth("m"), 4);
+        // priority dominates; within a class, earlier arrivals first
+        assert_eq!(b.consume("m", &[0, 1, 2]).unwrap().id, 2);
+        assert_eq!(b.consume("m", &[0, 1, 2]).unwrap().id, 4);
+        assert_eq!(b.consume("m", &[0, 1, 2]).unwrap().id, 1);
+        assert_eq!(b.consume("m", &[0, 1, 2]).unwrap().id, 3);
+        // the original response channel still works
+        b.response(1).unwrap().send("tok".into());
+        b.response(1).unwrap().finish();
+        assert_eq!(ch1.recv(), Some("tok".into()));
+        assert_eq!(ch1.recv(), None);
+        assert_eq!(b.migrate("nope", "m"), 0, "unknown source is a no-op");
     }
 
     /// Abandoning a queue releases every waiting client without closing

@@ -278,10 +278,13 @@ fn main() {
             }
             if live {
                 if let Some(addr) = flag(&args, "--addr") {
-                    let api = ApiServer::serve_routed(
+                    // session-affinity routing (ISSUE 8): conversations
+                    // land on the instance holding their parked prefix KV
+                    let api = ApiServer::serve_affinity(
                         &addr,
                         svc.broker().clone(),
                         svc.admission(),
+                        svc.affinity(),
                     )
                     .expect("bind");
                     println!(
@@ -307,6 +310,7 @@ fn main() {
                                 reply_to: 5000 + i as u64,
                                 retries: 0,
                                 resume_from: 0,
+                                prefix_hash: 0,
                             },
                         )
                     })
@@ -348,6 +352,8 @@ fn main() {
                 temperature: 0.0, top_k: 0, stop_byte: None,
                 retries: 0,
                 resume_from: 0,
+                prefix_hash: 0,
+                affinity: false,
             });
             let recs = inst.serve_until_drained();
             println!("generated {} tokens; selftest OK", recs[0].n_out);

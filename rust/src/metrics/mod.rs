@@ -146,7 +146,7 @@ impl FaultCounters {
             ChainError::BadFrame { .. } => {
                 self.bad_frames.fetch_add(1, Ordering::Relaxed);
             }
-            ChainError::CardDead { .. } => {}
+            ChainError::CardDead { .. } | ChainError::HostStage { .. } => {}
         }
     }
 
@@ -201,6 +201,127 @@ impl fmt::Display for FaultSnapshot {
     }
 }
 
+// --------------------------------------------------------- prefix counters
+
+/// Cumulative prefix-cache counters (ISSUE 8). Shared the same way as
+/// [`FaultCounters`]: one cell per rack, threaded into every instance via
+/// `ServeOptions`, so hit-rate history survives instance teardown.
+/// Counters are monotonic; `parked_slots`/`parked_bytes` are gauges kept
+/// by add/sub deltas (never overwritten — many instances share the cell).
+#[derive(Debug, Default)]
+pub struct PrefixCounters {
+    /// Admissions seeded from a parked prefix (KV reuse).
+    hits: AtomicU64,
+    /// Admissions that prefilled from token 0.
+    misses: AtomicU64,
+    /// Parked entries displaced by the LRU bound.
+    evictions: AtomicU64,
+    /// Parked entries discarded because their chain died (replay must
+    /// never attend KV written by a dead chain).
+    invalidations: AtomicU64,
+    /// Requests steered here by an affinity route whose parked KV was
+    /// gone on arrival (eviction/invalidation raced routing) — the loud
+    /// cold-path fallback.
+    stale_routes: AtomicU64,
+    /// Prompt tokens whose prefill was skipped via reuse.
+    matched_tokens: AtomicU64,
+    /// Slots currently holding parked KV (gauge).
+    parked_slots: AtomicU64,
+    /// Useful KV bytes currently parked (gauge; kv_len-proportional).
+    parked_bytes: AtomicU64,
+}
+
+impl PrefixCounters {
+    pub fn on_hit(&self, matched_tokens: u64) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.matched_tokens.fetch_add(matched_tokens, Ordering::Relaxed);
+    }
+
+    pub fn on_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_invalidated(&self, n: u64) {
+        self.invalidations.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn on_stale_route(&self) {
+        self.stale_routes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_park(&self, bytes: u64) {
+        self.parked_slots.fetch_add(1, Ordering::Relaxed);
+        self.parked_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn on_unpark(&self, bytes: u64) {
+        self.parked_slots.fetch_sub(1, Ordering::Relaxed);
+        self.parked_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PrefixSnapshot {
+        PrefixSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            stale_routes: self.stale_routes.load(Ordering::Relaxed),
+            matched_tokens: self.matched_tokens.load(Ordering::Relaxed),
+            parked_slots: self.parked_slots.load(Ordering::Relaxed),
+            parked_bytes: self.parked_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`PrefixCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub invalidations: u64,
+    pub stale_routes: u64,
+    pub matched_tokens: u64,
+    pub parked_slots: u64,
+    pub parked_bytes: u64,
+}
+
+impl PrefixSnapshot {
+    /// Fraction of admissions that reused a parked prefix.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl fmt::Display for PrefixSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "hits {} / misses {} ({:.0}% hit rate), {} toks reused | \
+             evictions {}, invalidations {}, stale routes {} | \
+             parked {} slots / {} B",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate(),
+            self.matched_tokens,
+            self.evictions,
+            self.invalidations,
+            self.stale_routes,
+            self.parked_slots,
+            self.parked_bytes,
+        )
+    }
+}
+
 // ------------------------------------------------------------- fleet view
 
 /// One registered instance's slice of the rack (rack::RackService).
@@ -225,6 +346,8 @@ pub struct FleetMetrics {
     /// Rack-cumulative fault-plane tally (ISSUE 7) — survives instance
     /// teardown because the counters live on the rack, not the instance.
     pub faults: FaultSnapshot,
+    /// Rack-cumulative prefix-cache tally (ISSUE 8), same lifetime rules.
+    pub prefix: PrefixSnapshot,
 }
 
 impl FleetMetrics {
@@ -305,6 +428,9 @@ impl FleetMetrics {
         }
         if self.faults != FaultSnapshot::default() {
             out.push_str(&format!("faults: {}\n", self.faults));
+        }
+        if self.prefix != PrefixSnapshot::default() {
+            out.push_str(&format!("prefix: {}\n", self.prefix));
         }
         out.push_str(&format!(
             "fleet: {} seqs | TTFT {:.1} ms | ITL {:.2} ms | OTPS {:.0} | \
@@ -533,6 +659,7 @@ mod tests {
             cards_total: 288,
             cards_leased: 32,
             faults: FaultSnapshot::default(),
+            prefix: PrefixSnapshot::default(),
         };
         // the only ITL evidence in the fleet is the 0.1 s gaps
         assert!((f.mean_itl() - 0.1).abs() < 1e-12, "deflated: {}", f.mean_itl());
@@ -543,6 +670,7 @@ mod tests {
             cards_total: 288,
             cards_leased: 16,
             faults: FaultSnapshot::default(),
+            prefix: PrefixSnapshot::default(),
         };
         assert_eq!(empty_itl.mean_itl(), 0.0);
     }
@@ -619,6 +747,7 @@ mod tests {
             cards_total: 288,
             cards_leased: 32,
             faults: FaultSnapshot::default(),
+            prefix: PrefixSnapshot::default(),
         };
         assert_eq!(f.n_seqs(), 2);
         assert!((f.otps() - (4.0 / 0.3 + 5.0 / 0.5)).abs() < 1e-9);
@@ -635,10 +764,53 @@ mod tests {
             cards_total: 288,
             cards_leased: 0,
             faults: FaultSnapshot::default(),
+            prefix: PrefixSnapshot::default(),
         };
         assert_eq!(empty.otps(), 0.0);
         assert_eq!(empty.mean_ttft(), 0.0);
         assert_eq!(empty.card_utilization(), 0.0);
+    }
+
+    #[test]
+    fn prefix_counters_accumulate_and_report() {
+        let c = PrefixCounters::default();
+        assert_eq!(c.snapshot(), PrefixSnapshot::default());
+        assert_eq!(c.snapshot().hit_rate(), 0.0); // no evidence => 0, not NaN
+
+        c.on_park(256);
+        c.on_park(128);
+        c.on_hit(24);
+        c.on_unpark(256); // the hit claimed the parked slot
+        c.on_miss();
+        c.on_miss();
+        c.on_miss();
+        c.on_eviction();
+        c.on_unpark(128);
+        c.on_invalidated(2);
+        c.on_stale_route();
+
+        let s = c.snapshot();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.matched_tokens, 24);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.invalidations, 2);
+        assert_eq!(s.stale_routes, 1);
+        assert_eq!(s.parked_slots, 0);
+        assert_eq!(s.parked_bytes, 0);
+        assert!((s.hit_rate() - 0.25).abs() < 1e-12);
+        let line = s.to_string();
+        assert!(line.contains("hits 1"), "{line}");
+        assert!(line.contains("stale routes 1"), "{line}");
+        // and the fleet report surfaces it only when non-default
+        let f = FleetMetrics {
+            instances: vec![],
+            cards_total: 288,
+            cards_leased: 0,
+            faults: FaultSnapshot::default(),
+            prefix: s,
+        };
+        assert!(f.report().contains("prefix:"), "{}", f.report());
     }
 
     #[test]
@@ -650,6 +822,7 @@ mod tests {
         c.on_chain_fault(&ChainError::CardDead { card: 3, cause: "x".into() });
         c.on_chain_fault(&ChainError::PacketTimeout { tag: 7, waited_ms: 90 });
         c.on_chain_fault(&ChainError::BadFrame { tag: 8, cause: "checksum".into() });
+        c.on_chain_fault(&ChainError::HostStage { stage: "embed".into(), cause: "oob".into() });
         c.on_requeued();
         c.on_requeued();
         c.on_recovered();
@@ -659,7 +832,7 @@ mod tests {
         assert_eq!(
             s,
             FaultSnapshot {
-                chain_deaths: 3,
+                chain_deaths: 4,
                 packet_timeouts: 1,
                 bad_frames: 1,
                 sequences_requeued: 2,
@@ -669,7 +842,7 @@ mod tests {
         );
         // the Display form is what `FleetMetrics::report` prints
         let line = s.to_string();
-        assert!(line.contains("chain deaths 3"), "{line}");
+        assert!(line.contains("chain deaths 4"), "{line}");
         assert!(line.contains("requeued 2"), "{line}");
     }
 }

@@ -64,6 +64,12 @@ pub enum ChainError {
     /// A completion frame reached the host but failed to decode (e.g. a
     /// corrupted header caught by the codec checksum).
     BadFrame { tag: u64, cause: String },
+    /// A host-side stage of the serving loop failed (e.g. the embedding
+    /// lookup before injection). Routed through the same chain-death
+    /// recovery path as on-card faults so in-flight sequences are
+    /// captured and requeued instead of panicking the serve thread
+    /// (ISSUE 8 satellite).
+    HostStage { stage: String, cause: String },
 }
 
 impl std::fmt::Display for ChainError {
@@ -77,6 +83,9 @@ impl std::fmt::Display for ChainError {
             }
             ChainError::BadFrame { tag, cause } => {
                 write!(f, "bad completion frame tag {tag}: {cause}")
+            }
+            ChainError::HostStage { stage, cause } => {
+                write!(f, "host stage {stage} failed: {cause}")
             }
         }
     }

@@ -575,6 +575,7 @@ mod tests {
                     reply_to: base + i as u64,
                     retries: 0,
                     resume_from: 0,
+                    prefix_hash: 0,
                 },
             );
         }

@@ -15,14 +15,18 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::api::{AdmitDecision, Admission};
+use crate::api::{AdmitDecision, Admission, PrefixRoute};
 use crate::broker::Broker;
 use crate::config::hw::RackSpec;
 use crate::config::models::find_model;
 use crate::driver::Driver;
 use crate::mapper::{map_model, Mapping};
-use crate::metrics::{BatchMetrics, FaultCounters, FleetMetrics, InstanceReport};
-use crate::service::{build_chain, LlmInstance, ServeOptions, SharedEngine};
+use crate::metrics::{
+    BatchMetrics, FaultCounters, FleetMetrics, InstanceReport, PrefixCounters,
+};
+use crate::service::{
+    build_chain, LlmInstance, PrefixRouter, ServeOptions, SharedEngine,
+};
 
 use super::inventory::{CardInventory, CardLease, RackError};
 
@@ -105,6 +109,10 @@ struct InstanceEntry {
     instance: Option<Arc<LlmInstance>>,
     worker: Option<JoinHandle<usize>>,
     batch_slots: usize,
+    /// Session-affinity side queue this instance consumes (ISSUE 8);
+    /// steered-but-unserved tasks migrate back to the shared model queue
+    /// at teardown.
+    affinity_queue: Option<String>,
 }
 
 impl InstanceEntry {
@@ -168,6 +176,13 @@ pub struct RackService {
     /// instance this service deploys, so chain deaths and recoveries stay
     /// visible after the faulty instance is reaped and torn down.
     faults: Arc<FaultCounters>,
+    /// Rack-wide prefix advertisement table (ISSUE 8): instances publish
+    /// the route hashes of their parked KV; the front door's affinity hook
+    /// reads it to steer follow-up conversation turns.
+    prefix_router: Arc<PrefixRouter>,
+    /// Rack-cumulative prefix-reuse counters, shared with every deployed
+    /// instance (hit/miss/eviction/parked-bytes survive teardown).
+    prefix_counters: Arc<PrefixCounters>,
 }
 
 impl RackService {
@@ -185,12 +200,24 @@ impl RackService {
             reg: Mutex::new(BTreeMap::new()),
             next_id: AtomicU64::new(1),
             faults: Arc::new(FaultCounters::default()),
+            prefix_router: Arc::new(PrefixRouter::default()),
+            prefix_counters: Arc::new(PrefixCounters::default()),
         })
     }
 
     /// The rack's cumulative fault-plane counters.
     pub fn fault_counters(&self) -> &Arc<FaultCounters> {
         &self.faults
+    }
+
+    /// The rack's cumulative prefix-reuse counters (ISSUE 8).
+    pub fn prefix_counters(&self) -> &Arc<PrefixCounters> {
+        &self.prefix_counters
+    }
+
+    /// The rack's prefix advertisement table (ISSUE 8).
+    pub fn prefix_router(&self) -> &Arc<PrefixRouter> {
+        &self.prefix_router
     }
 
     pub fn broker(&self) -> &Arc<Broker> {
@@ -212,6 +239,12 @@ impl RackService {
         spec.opts.counters = self.faults.clone();
         let lease = self.inventory.lease(&spec.model, spec.cards)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // wire the prefix tier (ISSUE 8): shared counters + router, and a
+        // per-instance affinity side queue the front door steers into
+        let affinity_queue = format!("{}::aff{id}", spec.model);
+        spec.opts.prefix.counters = self.prefix_counters.clone();
+        spec.opts.prefix.router = Some(self.prefix_router.clone());
+        spec.opts.prefix.affinity_queue = Some(affinity_queue.clone());
         let entry = match spec.engine {
             None => InstanceEntry {
                 model: spec.model,
@@ -220,6 +253,7 @@ impl RackService {
                 instance: None,
                 worker: None,
                 batch_slots: 0,
+                affinity_queue: None,
             },
             Some(engine) => {
                 let batch_slots = engine.manifest.batch_slots;
@@ -238,6 +272,7 @@ impl RackService {
                     instance: Some(inst),
                     worker: Some(worker),
                     batch_slots,
+                    affinity_queue: Some(affinity_queue),
                 }
             }
         };
@@ -366,6 +401,42 @@ impl RackService {
         Arc::new(move |model: &str| svc.admit(model))
     }
 
+    /// Session-affinity route for one (model, prefix-hash) pair (ISSUE 8):
+    /// the affinity side queue of the instance advertising the prefix —
+    /// provided the advertisement belongs to this model, the queue still
+    /// has a live consumer, and the instance isn't already drowning in
+    /// steered work (imbalance guard: beyond the same depth bound the
+    /// shared queue admits against, fall back to shared-queue balancing;
+    /// a cold prefill on a sibling beats queueing behind a hot spot).
+    pub fn route(&self, model: &str, prefix_hash: u64) -> Option<String> {
+        let q = self.prefix_router.lookup(prefix_hash)?;
+        if !q.starts_with(&format!("{model}::aff")) {
+            return None;
+        }
+        let st = self.broker.stats(&q);
+        if st.consumers == 0 || st.closed {
+            return None;
+        }
+        let slots = {
+            let reg = self.reg.lock().unwrap();
+            reg.values()
+                .find(|e| e.affinity_queue.as_deref() == Some(q.as_str()))
+                .map(|e| e.serving_slots())
+                .unwrap_or(0)
+        };
+        if slots == 0 || st.depth >= slots * ADMIT_QUEUE_FACTOR {
+            return None;
+        }
+        Some(q)
+    }
+
+    /// The affinity-routing closure the API server plugs in
+    /// ([`ApiServer::serve_affinity`]'s `route` hook).
+    pub fn affinity(self: &Arc<Self>) -> PrefixRoute {
+        let svc = self.clone();
+        Arc::new(move |model: &str, hash: u64| svc.route(model, hash))
+    }
+
     /// Stop an instance from taking new tasks; its current batch finishes.
     pub fn drain(&self, id: u64) -> Result<(), RackError> {
         self.drain_as(id, InstanceState::Draining)
@@ -454,6 +525,15 @@ impl RackService {
             Some(w) => w.join().unwrap_or(0),
             None => 0,
         };
+        // Prefix tier teardown (ISSUE 8): stop advertising this instance's
+        // parked KV and hand steered-but-unserved tasks back to the shared
+        // model queue so a sibling serves them cold. (The departing worker
+        // normally does both; this covers a worker that died without its
+        // exit sweep.)
+        if let Some(aq) = &entry.affinity_queue {
+            self.prefix_router.retract_queue(aq);
+            self.broker.migrate(aq, &entry.model);
+        }
         // The departing worker already swept the queue if it was the last
         // consumer; re-check here (broker-wide, so instances of the same
         // model on *other* racks sharing this broker count) to cover a
@@ -510,6 +590,7 @@ impl RackService {
             cards_total: self.inventory.total(),
             cards_leased: self.inventory.in_use(),
             faults: self.faults.snapshot(),
+            prefix: self.prefix_counters.snapshot(),
         }
     }
 }

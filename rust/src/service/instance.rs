@@ -23,14 +23,16 @@ use crate::broker::{Broker, Consumed, Task};
 use crate::consensus::Ring;
 use crate::driver::Driver;
 use crate::fault::FaultPlan;
-use crate::metrics::FaultCounters;
+use crate::metrics::{FaultCounters, PrefixCounters};
 use crate::npruntime::{ChainError, NpRuntime, StageExecutor};
 use crate::pipeline::sim::SeqRecord;
 use crate::runtime::{Tensor, WireEncode};
 use crate::tokenizer::ByteTokenizer;
+use crate::util::sync::lock_clean;
 
 use super::codec::PacketHeader;
 use super::executors::{HeadExecutor, LayerExecutor, SharedEngine};
+use super::prefix::{prefix_route_hash, PrefixIndex, PrefixOptions};
 use super::sampler::Sampler;
 use super::scheduler::PacketScheduler;
 
@@ -52,6 +54,15 @@ pub struct GenRequest {
     /// the first `resume_from` sampled tokens are *not* re-streamed, so
     /// the client sees one seamless stream across the chain death.
     pub resume_from: usize,
+    /// Session-affinity route hash over the prompt's opening bytes
+    /// ([`prefix_route_hash`], ISSUE 8), computed at the front door; 0
+    /// means "not computed" and the instance derives it locally when
+    /// parking the retired slot's KV.
+    pub prefix_hash: u64,
+    /// True when the request arrived over this instance's affinity queue
+    /// (it was steered here expecting a parked prefix) — a miss is then
+    /// a stale route and the cold-prefill fallback is counted loudly.
+    pub affinity: bool,
 }
 
 /// Streaming updates for a request.
@@ -96,6 +107,9 @@ pub struct ServeOptions {
     /// instance it deploys so the tally survives instance teardown;
     /// standalone instances default to a private cell.
     pub counters: Arc<FaultCounters>,
+    /// Prefix-cache / KV-reuse tier (ISSUE 8): parking, resume, and
+    /// session-affinity advertisement knobs.
+    pub prefix: PrefixOptions,
 }
 
 impl Default for ServeOptions {
@@ -107,6 +121,7 @@ impl Default for ServeOptions {
             packet_deadline: Some(Duration::from_secs(5)),
             faults: None,
             counters: Arc::new(FaultCounters::default()),
+            prefix: PrefixOptions::default(),
         }
     }
 }
@@ -125,15 +140,19 @@ pub struct LostSeq {
 /// a typed `recoverable_error` instead of retrying forever.
 pub const MAX_SEQ_RETRIES: u32 = 3;
 
-/// Prompt tokens not yet injected into the chain.
+/// Remaining prefill injection work. `next_pos` is the absolute prompt
+/// position the next chunk starts at — 0 for a cold admission, the
+/// (chunk-aligned) matched-prefix length for a resumed one: the skipped
+/// chunks' KV rows are already resident in the slot (ISSUE 8).
 struct FillState {
-    toks: Vec<i32>,
-    next_chunk: usize,
-    n_chunks: usize,
+    next_pos: usize,
 }
 
 struct SlotState {
     req: GenRequest,
+    /// Clamped, truncated prompt tokens (length = `n_in`). Kept past
+    /// injection so the retiring slot can be parked in the prefix index.
+    toks: Vec<i32>,
     /// Remaining prefill injection work (None once every chunk entered the
     /// chain; the final chunk may still be in flight).
     fill: Option<FillState>,
@@ -228,6 +247,12 @@ pub struct LlmInstance {
     /// `serve_until_drained`'s exit path and consumed (`take_lost`) by
     /// `serve_broker`, which requeues their tasks (ISSUE 7).
     lost: Mutex<Vec<LostSeq>>,
+    /// Prefix index (ISSUE 8): slot → parked resident-KV tokens. Locked
+    /// transiently per admission/retirement, never across a wait.
+    prefix_ix: Mutex<PrefixIndex>,
+    /// Useful KV bytes one cached token occupies across all layers
+    /// (2 sides × Hkv × Dh × layers, int8) — the parked-bytes gauge unit.
+    kv_tok_bytes: u64,
     /// Requests admitted (`submit`) and not yet retired (`finish_slot`).
     /// A stop abandons its window without retiring, so after `shutdown`/
     /// `retire` the counter may stay nonzero — it is meaningful for live
@@ -312,6 +337,18 @@ impl LlmInstance {
             );
             opts.per_seq_decode = false;
         }
+        // resolve the prefix-tier defaults against the model geometry:
+        // the in-place design can park at most one prefix per batch slot,
+        // and a match shorter than one prefill chunk saves nothing
+        if opts.prefix.max_parked == 0 {
+            opts.prefix.max_parked = engine.manifest.batch_slots;
+        }
+        if opts.prefix.min_match == 0 {
+            opts.prefix.min_match = engine.manifest.prefill_chunk.max(1);
+        }
+        let prefix_ix = PrefixIndex::new(opts.prefix.max_parked, opts.prefix.min_match);
+        let m = &engine.manifest;
+        let kv_tok_bytes = (2 * m.n_kv_heads * m.d_head * m.n_layers) as u64;
         let sched = PacketScheduler::new(chain.clone());
         let (utx, urx) = mpsc::channel();
         Arc::new(LlmInstance {
@@ -325,6 +362,8 @@ impl LlmInstance {
             records: Mutex::new(Vec::new()),
             subscriptions: Mutex::new(Vec::new()),
             lost: Mutex::new(Vec::new()),
+            prefix_ix: Mutex::new(prefix_ix),
+            kv_tok_bytes,
             opts,
             stop: AtomicBool::new(false),
             draining: AtomicBool::new(false),
@@ -344,14 +383,14 @@ impl LlmInstance {
 
     pub fn submit(&self, req: GenRequest) {
         self.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.queue.lock().unwrap().push_back(req);
+        lock_clean(&self.queue).push_back(req);
     }
 
     /// Sequences the last chain fault took down, cleared on read. The
     /// serve_broker worker requeues them; standalone callers inspect them
     /// after `serve_until_drained` returns early.
     pub fn take_lost(&self) -> Vec<LostSeq> {
-        std::mem::take(&mut *self.lost.lock().unwrap())
+        std::mem::take(&mut *lock_clean(&self.lost))
     }
 
     /// The chain's recorded fault, if it died (delegates to the runtime's
@@ -366,8 +405,33 @@ impl LlmInstance {
         &self.opts.counters
     }
 
+    /// Parked prefix entries currently held (test/diagnostic probe).
+    pub fn parked_prefixes(&self) -> usize {
+        lock_clean(&self.prefix_ix).len()
+    }
+
+    /// This instance's prefix-cache counters (rack-shared when deployed
+    /// by `rack::RackService`).
+    pub fn prefix_counters(&self) -> &Arc<PrefixCounters> {
+        &self.opts.prefix.counters
+    }
+
+    /// Drop every parked prefix: gauges release, advertisements retract.
+    /// Called on retire/shutdown (the slots are about to vanish with the
+    /// instance); chain-death invalidation runs its own accounting in the
+    /// fault-capture path.
+    pub fn clear_parked(&self) {
+        let px = &self.opts.prefix;
+        for (_, e) in lock_clean(&self.prefix_ix).clear() {
+            px.counters.on_unpark(e.kv_len() as u64 * self.kv_tok_bytes);
+            if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+                r.retract(e.route_hash, q);
+            }
+        }
+    }
+
     pub fn pending(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        lock_clean(&self.queue).len()
     }
 
     /// Requests admitted and not yet completed (queued + occupying slots).
@@ -377,11 +441,11 @@ impl LlmInstance {
         self.in_flight.load(Ordering::SeqCst)
     }
 
-    /// Tokenize a request and stage it in a slot; injection happens later,
-    /// interleaved with in-flight decode packets.
-    fn admit(&self, req: GenRequest) -> SlotState {
+    /// Clamp + truncate a request's prompt to model tokens (the shared
+    /// front half of admission, split out so prefix matching can see the
+    /// tokens before a slot is chosen).
+    fn tokenize_prompt(&self, req: &GenRequest) -> Vec<i32> {
         let m = &self.engine.manifest;
-        let t_submit = Instant::now();
         let toks: Vec<i32> = self
             .tokenizer
             .encode(&req.prompt)
@@ -394,14 +458,24 @@ impl LlmInstance {
             .min(m.max_context.saturating_sub(req.max_tokens + 1))
             .max(1);
         toks.truncate(n_in);
-        let n_chunks = n_in.div_ceil(m.prefill_chunk).max(1);
+        toks
+    }
+
+    /// Stage a tokenized request in a slot; injection happens later,
+    /// interleaved with in-flight decode packets. `resume` is the
+    /// (chunk-aligned) number of leading prompt tokens whose KV is
+    /// already resident in the slot — 0 for a cold admission.
+    fn admit(&self, req: GenRequest, toks: Vec<i32>, resume: usize) -> SlotState {
+        let t_submit = Instant::now();
+        let n_in = toks.len();
         let sampler = if req.temperature > 0.0 {
             Sampler::new(req.temperature, req.top_k, req.id)
         } else {
             Sampler::greedy()
         };
         SlotState {
-            fill: Some(FillState { toks, next_chunk: 0, n_chunks }),
+            toks,
+            fill: Some(FillState { next_pos: resume }),
             decoding: false,
             position: 0,
             n_in,
@@ -417,22 +491,109 @@ impl LlmInstance {
         }
     }
 
-    /// Host-side embed of one prefill chunk, encoded into a pooled
-    /// `frame`. Returns whether this is the prompt's final chunk.
-    fn encode_prefill_chunk(&self, slot: usize, fill: &FillState, frame: &mut Vec<u8>) -> bool {
+    /// Place one queued request into a free slot, consulting the prefix
+    /// index (ISSUE 8): a hit claims the parked slot and resumes prefill
+    /// past the matched tokens; a miss takes an unparked free slot,
+    /// evicting the LRU parked entry only when every free slot is parked.
+    /// The caller guarantees at least one free slot exists.
+    fn place_request(&self, slots: &mut [Option<SlotState>], req: GenRequest) {
+        let px = &self.opts.prefix;
+        let chunk = self.engine.manifest.prefill_chunk.max(1);
+        let toks = self.tokenize_prompt(&req);
+        let mut ix = lock_clean(&self.prefix_ix);
+        if px.enabled {
+            // cap: at least one suffix token must re-prefill — the final
+            // chunk's completion carries the first-token logits row
+            if let Some((slot, matched)) = ix.best_match(&toks, toks.len().saturating_sub(1)) {
+                // resume on a chunk boundary: resumed chunks are then
+                // bit-identical to the cold prefill's chunks (same
+                // lo/valid/final headers), so reuse cannot perturb output
+                let matched = matched - matched % chunk;
+                if matched >= ix.min_match() && slots[slot].is_none() {
+                    if let Some(e) = ix.claim(slot) {
+                        px.counters.on_unpark(e.kv_len() as u64 * self.kv_tok_bytes);
+                        px.counters.on_hit(matched as u64);
+                        if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+                            // the slot is live again; re-advertised when
+                            // the new occupant retires
+                            r.retract(e.route_hash, q);
+                        }
+                        slots[slot] = Some(self.admit(req, toks, matched));
+                        return;
+                    }
+                }
+            }
+            // cold-path guard: a request steered here by an affinity route
+            // whose parked KV is gone (eviction or invalidation raced the
+            // routing decision) must never see stale KV — fall back to a
+            // full prefill, loudly.
+            if req.affinity && req.prefix_hash != 0 {
+                px.counters.on_stale_route();
+                eprintln!(
+                    "instance[{}]: affinity-routed request {} found no parked \
+                     prefix (evicted or invalidated); falling back to cold prefill",
+                    self.engine.manifest.model, req.id
+                );
+            }
+            px.counters.on_miss();
+        }
+        let slot = match (0..slots.len()).find(|&s| slots[s].is_none() && !ix.is_parked(s)) {
+            Some(s) => s,
+            None => match ix.evict_lru() {
+                // every free slot holds parked KV: displace the LRU entry
+                Some((s, e)) => {
+                    px.counters.on_eviction();
+                    px.counters.on_unpark(e.kv_len() as u64 * self.kv_tok_bytes);
+                    if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+                        r.retract(e.route_hash, q);
+                    }
+                    s
+                }
+                // unreachable while the caller holds a free slot; degrade
+                // to slot 0 rather than panic on the hot path
+                None => 0,
+            },
+        };
+        slots[slot] = Some(self.admit(req, toks, 0));
+    }
+
+    /// Host-side embed dispatch with a typed failure: an embed error is a
+    /// chain-death-class fault (the serving loop routes it through the
+    /// same capture/requeue path as an on-card fault), never a panic on
+    /// the hot path (ISSUE 8 satellite).
+    fn host_embed(&self, stage: &'static str, input: Tensor) -> Result<Tensor, ChainError> {
+        let mut outs =
+            self.engine.run(stage, &[input]).map_err(|e| ChainError::HostStage {
+                stage: stage.into(),
+                cause: e.to_string(),
+            })?;
+        if outs.is_empty() {
+            return Err(ChainError::HostStage {
+                stage: stage.into(),
+                cause: "no output tensor".into(),
+            });
+        }
+        Ok(outs.remove(0))
+    }
+
+    /// Host-side embed of one prefill chunk starting at absolute prompt
+    /// position `lo` (always chunk-aligned; resumed prompts start past
+    /// their reused prefix), encoded into a pooled `frame`. Returns
+    /// `(is_final, next_pos)`.
+    fn encode_prefill_chunk(
+        &self,
+        slot: usize,
+        toks: &[i32],
+        lo: usize,
+        frame: &mut Vec<u8>,
+    ) -> Result<(bool, usize), ChainError> {
         let t_chunk = self.engine.manifest.prefill_chunk;
-        let idx = fill.next_chunk;
-        let lo = idx * t_chunk;
-        let hi = (lo + t_chunk).min(fill.toks.len());
-        let mut chunk: Vec<i32> = fill.toks[lo..hi].to_vec();
+        let hi = (lo + t_chunk).min(toks.len());
+        let mut chunk: Vec<i32> = toks[lo.min(hi)..hi].to_vec();
         let valid = chunk.len();
         chunk.resize(t_chunk, 0);
-        let h = self
-            .engine
-            .run("embed_prefill", &[Tensor::i32(vec![1, t_chunk], chunk)])
-            .expect("embed_prefill")
-            .remove(0);
-        let is_final = idx + 1 == fill.n_chunks;
+        let h = self.host_embed("embed_prefill", Tensor::i32(vec![1, t_chunk], chunk))?;
+        let is_final = hi == toks.len();
         let hdr = PacketHeader::prefill(
             slot as i32,
             lo as i32,
@@ -440,55 +601,69 @@ impl LlmInstance {
             is_final,
         );
         hdr.encode_into(&[&h as &dyn WireEncode], frame);
-        is_final
+        Ok((is_final, hi))
     }
 
     /// Host-side embed of one batched decode round, encoded into a pooled
     /// `frame`.
-    fn encode_decode_round(&self, tokens: &[i32], positions: &[i32], frame: &mut Vec<u8>) {
+    fn encode_decode_round(
+        &self,
+        tokens: &[i32],
+        positions: &[i32],
+        frame: &mut Vec<u8>,
+    ) -> Result<(), ChainError> {
         let b = self.engine.manifest.batch_slots;
         debug_assert_eq!(tokens.len(), b);
-        let h = self
-            .engine
-            .run("embed_decode", &[Tensor::i32(vec![b], tokens.to_vec())])
-            .expect("embed_decode")
-            .remove(0);
+        let h = self.host_embed("embed_decode", Tensor::i32(vec![b], tokens.to_vec()))?;
         let pos = Tensor::i32(vec![b], positions.to_vec());
         PacketHeader::decode_step().encode_into(&[&h as &dyn WireEncode, &pos], frame);
+        Ok(())
     }
 
     /// Host-side embed of one sequence's decode step (micro-batch-1),
     /// encoded into a pooled `frame`: a [1,D] row plus a header carrying
     /// the slot and cache position — no masked dummy rows travel the
     /// chain.
-    fn encode_decode_seq(&self, token: i32, slot: usize, position: usize, frame: &mut Vec<u8>) {
-        let h = self
-            .engine
-            .run("embed_decode_seq", &[Tensor::i32(vec![1], vec![token])])
-            .expect("embed_decode_seq")
-            .remove(0);
+    fn encode_decode_seq(
+        &self,
+        token: i32,
+        slot: usize,
+        position: usize,
+        frame: &mut Vec<u8>,
+    ) -> Result<(), ChainError> {
+        let h = self.host_embed("embed_decode_seq", Tensor::i32(vec![1], vec![token]))?;
         PacketHeader::decode_seq(slot as i32, position as i32)
             .encode_into(&[&h as &dyn WireEncode], frame);
+        Ok(())
     }
 
     /// One decode completion for `slot`: sample its logits row, advance
     /// the cache position, stream the token, and retire the slot when
     /// finished. Shared by the batched round (per covered slot) and the
-    /// per-sequence path.
+    /// per-sequence path. A completion for an empty slot is a routing
+    /// corruption — a typed fault, not a panic.
     fn complete_decode_token(
         &self,
         slots: &mut [Option<SlotState>],
         slot: usize,
+        tag: u64,
         row: &[f32],
-    ) {
-        let st = slots[slot].as_mut().expect("decode for empty slot");
+    ) -> Result<(), ChainError> {
+        let Some(st) = slots[slot].as_mut() else {
+            return Err(ChainError::BadFrame {
+                tag,
+                cause: format!("decode completion for empty slot {slot}"),
+            });
+        };
         let tok = st.sampler.sample(row);
         st.position += 1;
         let full = self.push_token(st, tok);
         if full {
-            let st = slots[slot].take().unwrap();
-            self.finish_slot(st);
+            if let Some(st) = slots[slot].take() {
+                self.retire_slot(slot, st);
+            }
         }
+        Ok(())
     }
 
     /// Stream one sampled token and decide whether the slot is finished.
@@ -520,6 +695,50 @@ impl LlmInstance {
             || hit_stop
     }
 
+    /// Retire a slot: park its resident KV in the prefix index (zero-copy
+    /// — the rows stay on-device; the index just remembers which tokens
+    /// they encode), advertise the route for session affinity, then run
+    /// the normal completion bookkeeping. Never parks on a dead chain:
+    /// its KV must not seed a replay.
+    fn retire_slot(&self, slot: usize, st: SlotState) {
+        let px = &self.opts.prefix;
+        if px.enabled && self.chain.failure().is_none() {
+            // rows 0..position-1 hold the prompt plus every generated
+            // token except the last sampled one (its KV is never written)
+            let kv_len = st.position;
+            let mut parked: Vec<i32> = Vec::with_capacity(kv_len);
+            parked.extend_from_slice(&st.toks);
+            parked.extend(
+                st.generated
+                    .iter()
+                    .take(st.tokens_out.saturating_sub(1))
+                    .map(|&t| t as i32),
+            );
+            if parked.len() == kv_len && kv_len >= 2 {
+                let hash = if st.req.prefix_hash != 0 {
+                    st.req.prefix_hash
+                } else {
+                    prefix_route_hash(&st.req.prompt)
+                };
+                let mut ix = lock_clean(&self.prefix_ix);
+                if let Some((_, ev)) = ix.park(slot, parked, hash) {
+                    px.counters.on_eviction();
+                    px.counters.on_unpark(ev.kv_len() as u64 * self.kv_tok_bytes);
+                    if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+                        r.retract(ev.route_hash, q);
+                    }
+                }
+                if ix.is_parked(slot) {
+                    px.counters.on_park(kv_len as u64 * self.kv_tok_bytes);
+                    if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+                        r.advertise(hash, q);
+                    }
+                }
+            }
+        }
+        self.finish_slot(st);
+    }
+
     /// Emit the Done update + wall-clock record for a retired slot.
     fn finish_slot(&self, mut st: SlotState) {
         self.in_flight.fetch_sub(1, Ordering::SeqCst);
@@ -547,7 +766,7 @@ impl LlmInstance {
             itl_s: itl,
         });
         let base = self.t0;
-        self.records.lock().unwrap().push(SeqRecord {
+        lock_clean(&self.records).push(SeqRecord {
             id: st.req.id as u32,
             n_in: st.n_in as u32,
             n_out: st.tokens_out as u32,
@@ -582,7 +801,7 @@ impl LlmInstance {
         let b = self.engine.manifest.batch_slots;
         let vocab = self.engine.manifest.vocab;
         let max_ctx = self.engine.manifest.max_context;
-        let mut sched = self.sched.lock().unwrap();
+        let mut sched = lock_clean(&self.sched);
         let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
         // batched-round row buffers, reused across rounds — no per-round
         // allocation on the hot path (the embed tensor copy is
@@ -605,7 +824,7 @@ impl LlmInstance {
         let mut fault: Option<ChainError> = None;
         sched.set_packet_deadline(self.opts.packet_deadline);
 
-        loop {
+        'serve: loop {
             if self.stop.load(Ordering::Relaxed) {
                 sched.drain();
                 break;
@@ -621,14 +840,14 @@ impl LlmInstance {
             }
 
             // ---- continuous batching: refill free slots from the queue --
-            for s in 0..b {
-                if slots[s].is_some() {
-                    continue;
-                }
-                let Some(req) = self.queue.lock().unwrap().pop_front() else {
+            // placement is prefix-aware (ISSUE 8): a request whose leading
+            // tokens are parked in a free slot is admitted INTO that slot
+            // and prefills only its unmatched suffix
+            while slots.iter().any(|s| s.is_none()) {
+                let Some(req) = lock_clean(&self.queue).pop_front() else {
                     break;
                 };
-                slots[s] = Some(self.admit(req));
+                self.place_request(&mut slots, req);
             }
 
             // ---- inject decode work -------------------------------------
@@ -664,12 +883,13 @@ impl LlmInstance {
                         continue;
                     }
                     let mut frame = sched.frame();
-                    self.encode_decode_seq(
-                        st.last_token as i32,
-                        s,
-                        st.position,
-                        &mut frame,
-                    );
+                    if let Err(e) =
+                        self.encode_decode_seq(st.last_token as i32, s, st.position, &mut frame)
+                    {
+                        sched.recycle(frame);
+                        fault = Some(e);
+                        break 'serve;
+                    }
                     match sched.try_submit(0, frame, PendingOp::DecodeSeq { slot: s }) {
                         Ok(_) => {
                             seq_in_flight[s] = true;
@@ -692,15 +912,23 @@ impl LlmInstance {
                     // rows of filling/empty slots write their (masked, never
                     // attended) KV at the last cache line, not position 0 —
                     // position 0 may belong to a prefill chunk mid-chain.
+                    // Parked slots are safe too: a parked entry's valid rows
+                    // end at kv_len-1 ≤ max_context-2 (the retiring write
+                    // position is capped below max_context), so the masked
+                    // write at max_context-1 never lands on reusable KV.
                     tokens.fill(0);
                     positions.fill(max_ctx as i32 - 1);
                     for &s in &covered {
-                        let st = slots[s].as_ref().unwrap();
+                        let Some(st) = slots[s].as_ref() else { continue };
                         tokens[s] = st.last_token as i32;
                         positions[s] = st.position as i32;
                     }
                     let mut frame = sched.frame();
-                    self.encode_decode_round(&tokens, &positions, &mut frame);
+                    if let Err(e) = self.encode_decode_round(&tokens, &positions, &mut frame) {
+                        sched.recycle(frame);
+                        fault = Some(e);
+                        break 'serve;
+                    }
                     match sched.try_submit(0, frame, PendingOp::Decode { covered }) {
                         Ok(_) => {
                             decode_in_flight = true;
@@ -718,17 +946,26 @@ impl LlmInstance {
                     let s = (rr + off) % b;
                     let Some(st) = slots[s].as_mut() else { continue };
                     let Some(fill) = st.fill.as_ref() else { continue };
+                    let lo = fill.next_pos;
                     let mut payload = sched.frame();
-                    let is_final = self.encode_prefill_chunk(s, fill, &mut payload);
+                    let (is_final, hi) =
+                        match self.encode_prefill_chunk(s, &st.toks, lo, &mut payload) {
+                            Ok(v) => v,
+                            Err(e) => {
+                                sched.recycle(payload);
+                                fault = Some(e);
+                                break 'serve;
+                            }
+                        };
                     match sched
                         .try_submit(0, payload, PendingOp::Prefill { slot: s, is_final })
                     {
                         Err((payload, _)) => sched.recycle(payload),
                         Ok(_) => {
-                            let fill = st.fill.as_mut().unwrap();
-                            fill.next_chunk += 1;
-                            if fill.next_chunk == fill.n_chunks {
+                            if is_final {
                                 st.fill = None;
+                            } else if let Some(fill) = st.fill.as_mut() {
+                                fill.next_pos = hi;
                             }
                             rr = (s + 1) % b;
                             injected = true;
@@ -743,7 +980,7 @@ impl LlmInstance {
 
             // ---- drained? ----------------------------------------------
             if sched.in_flight() == 0 && slots.iter().all(|s| s.is_none()) {
-                if self.queue.lock().unwrap().is_empty() {
+                if lock_clean(&self.queue).is_empty() {
                     break;
                 }
                 continue; // new work arrived: admit on the next pass
@@ -766,13 +1003,20 @@ impl LlmInstance {
                             break;
                         }
                     };
-                    let st = slots[slot].as_mut().expect("prefill for empty slot");
+                    let Some(st) = slots[slot].as_mut() else {
+                        fault = Some(ChainError::BadFrame {
+                            tag,
+                            cause: format!("prefill completion for empty slot {slot}"),
+                        });
+                        break;
+                    };
                     st.position = st.n_in;
                     let first = st.sampler.sample(&logits);
                     let full = self.push_token(st, first);
                     if full {
-                        let st = slots[slot].take().unwrap();
-                        self.finish_slot(st);
+                        if let Some(st) = slots[slot].take() {
+                            self.retire_slot(slot, st);
+                        }
                     } else {
                         st.decoding = true;
                     }
@@ -788,11 +1032,15 @@ impl LlmInstance {
                         }
                     };
                     for &s in &covered {
-                        self.complete_decode_token(
+                        if let Err(e) = self.complete_decode_token(
                             &mut slots,
                             s,
+                            tag,
                             &logits[s * vocab..(s + 1) * vocab],
-                        );
+                        ) {
+                            fault = Some(e);
+                            break 'serve;
+                        }
                     }
                 }
                 PendingOp::DecodeSeq { slot } => {
@@ -806,7 +1054,10 @@ impl LlmInstance {
                             break;
                         }
                     };
-                    self.complete_decode_token(&mut slots, slot, &logits);
+                    if let Err(e) = self.complete_decode_token(&mut slots, slot, tag, &logits) {
+                        fault = Some(e);
+                        break 'serve;
+                    }
                 }
             }
         }
@@ -822,6 +1073,21 @@ impl LlmInstance {
         if let Some(e) = fault {
             self.chain.fail(e.clone());
             self.opts.counters.on_chain_fault(&e);
+            // Invalidate every parked prefix (ISSUE 8): those KV rows were
+            // written by a chain that is now dead — a replayed sequence
+            // must re-prefill from token 0 to stay byte-identical, and the
+            // router must stop steering conversations here.
+            let px = &self.opts.prefix;
+            let dropped = lock_clean(&self.prefix_ix).clear();
+            if !dropped.is_empty() {
+                px.counters.on_invalidated(dropped.len() as u64);
+                for (_, ev) in &dropped {
+                    px.counters.on_unpark(ev.kv_len() as u64 * self.kv_tok_bytes);
+                    if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+                        r.retract(ev.route_hash, q);
+                    }
+                }
+            }
             let mut lost = Vec::new();
             for s in slots.iter_mut() {
                 if let Some(st) = s.take() {
@@ -833,16 +1099,16 @@ impl LlmInstance {
                 }
             }
             loop {
-                let Some(req) = self.queue.lock().unwrap().pop_front() else {
+                let Some(req) = lock_clean(&self.queue).pop_front() else {
                     break;
                 };
                 lost.push(LostSeq { id: req.id, streamed: req.resume_from });
                 self.in_flight.fetch_sub(1, Ordering::SeqCst);
             }
             sched.drain();
-            self.lost.lock().unwrap().extend(lost);
+            lock_clean(&self.lost).extend(lost);
         }
-        self.records.lock().unwrap().clone()
+        lock_clean(&self.records).clone()
     }
 
     /// §IV: subscribe to a broker queue and serve tasks until it closes
@@ -875,10 +1141,24 @@ impl LlmInstance {
     ) -> JoinHandle<usize> {
         let inst = self.clone();
         let queue = queue.to_string();
-        self.subscriptions
-            .lock()
-            .unwrap()
-            .push((broker.clone(), queue.clone()));
+        // Session-affinity side queue (ISSUE 8): when the rack wired this
+        // instance with an affinity queue, consume it ahead of the shared
+        // model queue so steered conversation turns land on the instance
+        // that parked their prefix KV.
+        let aff_queue = if self.opts.prefix.enabled {
+            self.opts.prefix.affinity_queue.clone()
+        } else {
+            None
+        };
+        {
+            let mut subs = lock_clean(&self.subscriptions);
+            subs.push((broker.clone(), queue.clone()));
+            if let Some(aq) = &aff_queue {
+                if !subs.iter().any(|(_, q)| q == aq) {
+                    subs.push((broker.clone(), aq.clone()));
+                }
+            }
+        }
         // register synchronously, before the worker thread is scheduled:
         // consumer-count-based admission must see the model as served the
         // moment serve_broker returns, not when the OS first runs the
@@ -886,6 +1166,7 @@ impl LlmInstance {
         // can never report true between serve_broker returning and the OS
         // first scheduling the thread.
         let consumer = broker.register_consumer(&queue);
+        let aff_consumer = aff_queue.as_ref().map(|q| broker.register_consumer(q));
         self.active_workers.fetch_add(1, Ordering::SeqCst);
         std::thread::spawn(move || {
             // consumer registration guard: dropped (deregistered) when
@@ -983,31 +1264,48 @@ impl LlmInstance {
                 {
                     break;
                 }
-                // batch up available tasks, then drain the batch. The
-                // bounded wait (not a blocking consume) keeps stop/drain
-                // flags live even when several instances share one queue
-                // and no task ever arrives for this one.
-                let task = match broker.consume_deadline(
-                    &queue,
-                    &priorities,
-                    Duration::from_millis(20),
-                ) {
-                    Consumed::Task(t) => t,
-                    Consumed::Empty => continue,
-                    Consumed::Closed => break,
+                // batch up available tasks, then drain the batch — the
+                // affinity side queue first (its tasks were steered here
+                // to hit parked prefix KV), then the shared model queue.
+                // The bounded wait (not a blocking consume) keeps
+                // stop/drain flags live even when several instances share
+                // one queue and no task ever arrives for this one.
+                let aff_next = |broker: &Broker| {
+                    aff_queue
+                        .as_ref()
+                        .and_then(|q| broker.try_consume(q, &priorities))
+                };
+                let (task, from_aff) = if let Some(t) = aff_next(&broker) {
+                    (t, true)
+                } else {
+                    match broker.consume_deadline(
+                        &queue,
+                        &priorities,
+                        Duration::from_millis(20),
+                    ) {
+                        Consumed::Task(t) => (t, false),
+                        Consumed::Empty => continue,
+                        Consumed::Closed => break,
+                    }
                 };
                 if inst.stop.load(Ordering::Relaxed) {
                     interrupted.push(task.reply_to);
                     break;
                 }
-                let mut batch: Vec<Task> = vec![task];
-                while let Some(t) = broker.try_consume(&queue, &priorities) {
-                    batch.push(t);
+                let mut batch: Vec<(Task, bool)> = vec![(task, from_aff)];
+                loop {
                     if batch.len() >= inst.engine.manifest.batch_slots {
                         break;
                     }
+                    if let Some(t) = aff_next(&broker) {
+                        batch.push((t, true));
+                    } else if let Some(t) = broker.try_consume(&queue, &priorities) {
+                        batch.push((t, false));
+                    } else {
+                        break;
+                    }
                 }
-                for t in &batch {
+                for (t, from_aff) in &batch {
                     inst.submit(GenRequest {
                         id: t.reply_to,
                         prompt: t.body.clone(),
@@ -1017,6 +1315,8 @@ impl LlmInstance {
                         stop_byte: Some(b';'),
                         retries: t.retries,
                         resume_from: t.resume_from,
+                        prefix_hash: t.prefix_hash,
+                        affinity: *from_aff,
                     });
                 }
                 // tokens stream to the clients live from the streamer
@@ -1040,7 +1340,8 @@ impl LlmInstance {
                         .map(|e| e.to_string())
                         .unwrap_or_else(|| "chain fault".into());
                     for l in &lost_seqs {
-                        let Some(t) = batch.iter().find(|t| t.reply_to == l.id)
+                        let Some((t, _)) =
+                            batch.iter().find(|(t, _)| t.reply_to == l.id)
                         else {
                             continue;
                         };
@@ -1070,7 +1371,7 @@ impl LlmInstance {
                     // (tasks that completed have their channels removed by
                     // the streamer before the sweep below, so abandoning
                     // them is a no-op)
-                    interrupted.extend(batch.iter().map(|t| t.reply_to));
+                    interrupted.extend(batch.iter().map(|(t, _)| t.reply_to));
                     break;
                 }
             }
@@ -1106,6 +1407,19 @@ impl LlmInstance {
             // clients. When other consumers remain (rack drain/teardown of
             // one of several instances), queued tasks are left for them.
             drop(_consumer);
+            drop(aff_consumer);
+            // Affinity-queue release: once nobody consumes this instance's
+            // side queue, stop advertising its prefixes and hand any
+            // steered-but-unserved tasks back to the shared model queue so
+            // a sibling instance serves them (cold, but correct).
+            if let Some(aq) = &aff_queue {
+                if broker.stats(aq).consumers == 0 {
+                    if let Some(r) = &inst.opts.prefix.router {
+                        r.retract_queue(aq);
+                    }
+                    broker.migrate(aq, &queue);
+                }
+            }
             if (broker.is_closed(&queue) || broker.stats(&queue).consumers == 0)
                 && !recovery_pending
             {
@@ -1125,7 +1439,8 @@ impl LlmInstance {
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
         self.chain.request_stop();
-        for (broker, queue) in self.subscriptions.lock().unwrap().iter() {
+        self.clear_parked();
+        for (broker, queue) in lock_clean(&self.subscriptions).iter() {
             broker.close(queue);
             // Sweep tasks still queued: the worker may already have
             // observed the stop flag and exited before this close landed
@@ -1174,6 +1489,7 @@ impl LlmInstance {
     pub fn retire(&self) {
         self.stop.store(true, Ordering::Relaxed);
         self.chain.request_stop();
+        self.clear_parked();
     }
 
     pub fn manifest(&self) -> &crate::runtime::Manifest {

@@ -17,6 +17,7 @@
 mod codec;
 mod executors;
 mod instance;
+mod prefix;
 mod sampler;
 mod scheduler;
 
@@ -24,6 +25,9 @@ pub use codec::{PacketHeader, PacketKind};
 pub use executors::{HeadExecutor, LayerExecutor, SharedEngine};
 pub use instance::{
     build_chain, GenRequest, GenUpdate, LlmInstance, LostSeq, ServeOptions, MAX_SEQ_RETRIES,
+};
+pub use prefix::{
+    prefix_route_hash, ParkedKv, PrefixIndex, PrefixOptions, PrefixRouter, ROUTE_PREFIX_BYTES,
 };
 pub use sampler::Sampler;
 pub use scheduler::{CompletionRouter, PacketScheduler};

@@ -1,0 +1,406 @@
+//! Prefix-cache / KV-reuse tier (ISSUE 8).
+//!
+//! Agentic/chat traffic re-sends a long shared prefix every turn. The
+//! resident-KV work (PR 2) already keeps each slot's KV as a durable
+//! device tensor inside the layer executors, persistent across serve
+//! calls — so reuse needs no copy machinery at all: when a sequence
+//! retires, its slot is *parked in place* (the slot stays free for
+//! admission, but the index remembers which tokens its KV rows encode).
+//! A later request whose tokenization starts with those tokens is
+//! admitted **into the same slot** and prefills only the unmatched
+//! suffix; the donation path in `executors::attn` keeps the parked rows
+//! resident untouched.
+//!
+//! Why the reused rows are byte-identical to a cold prefill: per-position
+//! KV depends only on tokens `0..=p` (causal attention, and the prefill
+//! stage writes each row's KV at its absolute position regardless of
+//! chunk grouping), so rows `0..matched` written by the retired sequence
+//! are exactly the rows a cold prefill of the new prompt would write.
+//! Rows at positions `>= matched` are rewritten in order before anything
+//! attends them.
+//!
+//! Three actors, three structures:
+//! * [`PrefixIndex`] — per-instance, owned by the serve loop (no lock):
+//!   slot → parked tokens, LRU-bounded, integrated with slot admission.
+//! * [`PrefixRouter`] — rack-shared, advertises `route-hash → affinity
+//!   queue` so the front door can steer a conversation to the instance
+//!   holding its prefix (session affinity).
+//! * [`crate::metrics::PrefixCounters`] — rack-shared observability.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::PrefixCounters;
+use crate::util::sync::lock_clean;
+
+/// How much of the prompt the route hash covers. Routing only needs to
+/// identify a *conversation* (whose turns share their opening bytes), so
+/// a short window keeps the hash stable as the conversation grows. A
+/// collision merely steers a request to an instance that then match the
+/// exact token prefix (or falls back to a cold prefill) — never a
+/// correctness hazard.
+pub const ROUTE_PREFIX_BYTES: usize = 32;
+
+/// FNV-1a over the first [`ROUTE_PREFIX_BYTES`] of the *prompt string*
+/// (not token ids: the toy vocab clamps ids, strings are what the front
+/// door and the instance both see verbatim). Never returns 0 — 0 is the
+/// "no route computed" sentinel carried by `Task`/`GenRequest`.
+pub fn prefix_route_hash(prompt: &str) -> u64 {
+    let bytes = prompt.as_bytes();
+    let take = bytes.len().min(ROUTE_PREFIX_BYTES);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in &bytes[..take] {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+/// One parked slot: the tokens whose KV rows are resident in that slot.
+/// `toks.len()` is exactly the number of valid KV rows (`kv_len`).
+#[derive(Debug, Clone)]
+pub struct ParkedKv {
+    pub toks: Vec<i32>,
+    /// Route hash advertised for this entry (for retraction on evict).
+    pub route_hash: u64,
+    /// LRU stamp (monotonic park tick; smallest = oldest).
+    pub stamp: u64,
+}
+
+impl ParkedKv {
+    pub fn kv_len(&self) -> usize {
+        self.toks.len()
+    }
+}
+
+/// Per-instance prefix index. Owned and mutated only by the serve
+/// thread, so it needs no interior locking; races with routing decisions
+/// made at the front door are resolved at admission time (a routed
+/// request whose entry is gone falls back loudly to a cold prefill —
+/// the ISSUE 8 cold-path guard).
+#[derive(Debug)]
+pub struct PrefixIndex {
+    /// slot → parked state. Every entry refers to a currently-free slot:
+    /// admission either claims the entry (reuse) or evicts it before
+    /// occupying the slot.
+    entries: BTreeMap<usize, ParkedKv>,
+    tick: u64,
+    max_parked: usize,
+    min_match: usize,
+}
+
+impl PrefixIndex {
+    pub fn new(max_parked: usize, min_match: usize) -> PrefixIndex {
+        PrefixIndex { entries: BTreeMap::new(), tick: 0, max_parked, min_match }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn is_parked(&self, slot: usize) -> bool {
+        self.entries.contains_key(&slot)
+    }
+
+    pub fn min_match(&self) -> usize {
+        self.min_match
+    }
+
+    /// Park a retiring slot's KV. Returns the entry displaced by the LRU
+    /// bound, if any, so the caller can retract its advertisement and
+    /// count the eviction. Prefixes shorter than `min_match` are not
+    /// worth parking (a resumed prefill must still redo the last token).
+    pub fn park(&mut self, slot: usize, toks: Vec<i32>, route_hash: u64) -> Option<(usize, ParkedKv)> {
+        if toks.len() < self.min_match.max(2) || self.max_parked == 0 {
+            return None;
+        }
+        self.tick += 1;
+        self.entries.insert(slot, ParkedKv { toks, route_hash, stamp: self.tick });
+        if self.entries.len() > self.max_parked {
+            self.evict_lru_except(slot)
+        } else {
+            None
+        }
+    }
+
+    /// Longest-common-prefix match over all parked entries. `cap` bounds
+    /// the usable match (the caller passes `n_in - 1`: at least one
+    /// suffix token must re-prefill to produce the first-token logits).
+    /// Returns `(slot, matched_tokens)`; ties break toward the most
+    /// recently parked entry.
+    pub fn best_match(&self, toks: &[i32], cap: usize) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize, u64)> = None;
+        for (&slot, e) in &self.entries {
+            let lcp = e.toks.iter().zip(toks.iter()).take_while(|(a, b)| a == b).count();
+            let matched = lcp.min(cap).min(e.kv_len());
+            if matched < self.min_match.max(1) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, m, stamp)) => matched > m || (matched == m && e.stamp > stamp),
+            };
+            if better {
+                best = Some((slot, matched, e.stamp));
+            }
+        }
+        best.map(|(slot, matched, _)| (slot, matched))
+    }
+
+    /// Remove and return a parked entry (the admission claimed its slot,
+    /// for reuse or for cold occupation).
+    pub fn claim(&mut self, slot: usize) -> Option<ParkedKv> {
+        self.entries.remove(&slot)
+    }
+
+    /// Evict the least-recently-parked entry, returning it for counter
+    /// and router bookkeeping.
+    pub fn evict_lru(&mut self) -> Option<(usize, ParkedKv)> {
+        let slot = self.entries.iter().min_by_key(|(_, e)| e.stamp).map(|(&s, _)| s)?;
+        self.entries.remove(&slot).map(|e| (slot, e))
+    }
+
+    fn evict_lru_except(&mut self, keep: usize) -> Option<(usize, ParkedKv)> {
+        let slot = self
+            .entries
+            .iter()
+            .filter(|(&s, _)| s != keep)
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(&s, _)| s)?;
+        self.entries.remove(&slot).map(|e| (slot, e))
+    }
+
+    /// Drop every parked entry (chain death: the KV those rows hold was
+    /// written by a chain that is now dead — replay must re-prefill from
+    /// token 0 to stay byte-identical). Returns the dropped entries for
+    /// retraction and counting.
+    pub fn clear(&mut self) -> Vec<(usize, ParkedKv)> {
+        std::mem::take(&mut self.entries).into_iter().collect()
+    }
+}
+
+/// Rack-shared advertisement table: route-hash → affinity queue of the
+/// instance parking that prefix. The front door consults it per request;
+/// instances advertise on park and retract on evict/claim/teardown.
+#[derive(Debug, Default)]
+pub struct PrefixRouter {
+    routes: Mutex<HashMap<u64, String>>,
+}
+
+impl PrefixRouter {
+    pub fn advertise(&self, hash: u64, queue: &str) {
+        if hash == 0 {
+            return;
+        }
+        lock_clean(&self.routes).insert(hash, queue.to_string());
+    }
+
+    /// Retract `hash` only if it still points at `queue` (another
+    /// instance may have re-advertised the same conversation since).
+    pub fn retract(&self, hash: u64, queue: &str) {
+        let mut r = lock_clean(&self.routes);
+        if r.get(&hash).is_some_and(|q| q == queue) {
+            r.remove(&hash);
+        }
+    }
+
+    /// Drop every advertisement pointing at `queue` (instance teardown).
+    pub fn retract_queue(&self, queue: &str) -> usize {
+        let mut r = lock_clean(&self.routes);
+        let before = r.len();
+        r.retain(|_, q| q != queue);
+        before - r.len()
+    }
+
+    pub fn lookup(&self, hash: u64) -> Option<String> {
+        if hash == 0 {
+            return None;
+        }
+        lock_clean(&self.routes).get(&hash).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        lock_clean(&self.routes).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Prefix-tier knobs threaded through `ServeOptions`.
+#[derive(Clone)]
+pub struct PrefixOptions {
+    /// Master switch; off = PR 7 behavior exactly (no parking, no reuse).
+    pub enabled: bool,
+    /// Parked-entry bound; 0 = one per batch slot (the in-place design
+    /// can never hold more than `batch_slots` anyway).
+    pub max_parked: usize,
+    /// Smallest useful match; 0 = the engine's prefill chunk size (a
+    /// shorter match saves less than one chunk of prefill).
+    pub min_match: usize,
+    /// Shared observability cell (rack-shared when deployed via
+    /// `RackService`, private otherwise).
+    pub counters: Arc<PrefixCounters>,
+    /// Advertisement table for session-affinity routing (None for
+    /// standalone instances — parking still works, routing doesn't).
+    pub router: Option<Arc<PrefixRouter>>,
+    /// This instance's affinity queue name (what it advertises and
+    /// additionally consumes); None for standalone instances.
+    pub affinity_queue: Option<String>,
+}
+
+impl Default for PrefixOptions {
+    fn default() -> PrefixOptions {
+        PrefixOptions {
+            enabled: true,
+            max_parked: 0,
+            min_match: 0,
+            counters: Arc::new(PrefixCounters::default()),
+            router: None,
+            affinity_queue: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for PrefixOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixOptions")
+            .field("enabled", &self.enabled)
+            .field("max_parked", &self.max_parked)
+            .field("min_match", &self.min_match)
+            .field("affinity_queue", &self.affinity_queue)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_hash_is_stable_nonzero_and_windowed() {
+        let h = prefix_route_hash("system: you are a helpful assistant");
+        assert_eq!(h, prefix_route_hash("system: you are a helpful assistant"));
+        assert_ne!(h, 0);
+        assert_ne!(h, prefix_route_hash("system: you are a grumpy assistant"));
+        // only the first 32 bytes participate: turns of one conversation
+        // (same opening, different tails) share a route
+        let a = "0123456789abcdef0123456789abcdef TURN ONE text";
+        let b = "0123456789abcdef0123456789abcdef TURN TWO completely different";
+        assert_eq!(prefix_route_hash(a), prefix_route_hash(b));
+        assert_ne!(prefix_route_hash(""), 0);
+    }
+
+    #[test]
+    fn park_match_claim_roundtrip() {
+        let mut ix = PrefixIndex::new(4, 2);
+        assert!(ix.park(0, vec![5, 6, 7, 8], 11).is_none());
+        assert!(ix.is_parked(0));
+        assert_eq!(ix.len(), 1);
+
+        // exact-prefix query, cap leaves one token to prefill
+        let q = [5, 6, 7, 8, 9, 10];
+        let (slot, matched) = ix.best_match(&q, q.len() - 1).unwrap();
+        assert_eq!((slot, matched), (0, 4));
+
+        // cap below the full overlap truncates the match
+        assert_eq!(ix.best_match(&q, 3), Some((0, 3)));
+
+        // diverging tokens shrink the LCP
+        assert_eq!(ix.best_match(&[5, 6, 99, 8], 3), Some((0, 2)));
+        // too-short overlap (< min_match) is no match
+        assert_eq!(ix.best_match(&[5, 99, 99], 3), None);
+
+        let e = ix.claim(slot).unwrap();
+        assert_eq!(e.toks, vec![5, 6, 7, 8]);
+        assert!(ix.is_empty());
+        assert!(ix.claim(slot).is_none());
+    }
+
+    #[test]
+    fn longest_match_wins_ties_go_to_newest() {
+        let mut ix = PrefixIndex::new(4, 1);
+        ix.park(0, vec![1, 2, 3], 11);
+        ix.park(1, vec![1, 2, 3, 4, 5], 12);
+        ix.park(2, vec![1, 2], 13);
+        let q = [1, 2, 3, 4, 5, 6, 7];
+        assert_eq!(ix.best_match(&q, 6), Some((1, 5)));
+        // tie between slots 0 and 1 at cap=3: newest (slot 1) wins
+        assert_eq!(ix.best_match(&q, 3), Some((1, 3)));
+    }
+
+    #[test]
+    fn lru_bound_evicts_oldest_not_newest() {
+        let mut ix = PrefixIndex::new(2, 1);
+        assert!(ix.park(0, vec![1, 2], 11).is_none());
+        assert!(ix.park(1, vec![3, 4], 12).is_none());
+        let (slot, e) = ix.park(2, vec![5, 6], 13).unwrap();
+        assert_eq!(slot, 0);
+        assert_eq!(e.route_hash, 11);
+        assert_eq!(ix.len(), 2);
+        assert!(!ix.is_parked(0));
+        assert!(ix.is_parked(2));
+
+        // explicit LRU eviction picks the oldest remaining
+        let (slot, e) = ix.evict_lru().unwrap();
+        assert_eq!((slot, e.route_hash), (1, 12));
+    }
+
+    #[test]
+    fn short_prefixes_are_not_parked() {
+        let mut ix = PrefixIndex::new(4, 3);
+        assert!(ix.park(0, vec![1, 2], 11).is_none());
+        assert!(ix.is_empty(), "below min_match must not park");
+        let mut ix = PrefixIndex::new(0, 1);
+        ix.park(0, vec![1, 2, 3, 4], 11);
+        assert!(ix.is_empty(), "max_parked=0 disables parking");
+    }
+
+    #[test]
+    fn clear_returns_all_for_retraction() {
+        let mut ix = PrefixIndex::new(4, 1);
+        ix.park(0, vec![1, 2], 11);
+        ix.park(3, vec![3, 4], 12);
+        let dropped = ix.clear();
+        assert_eq!(dropped.len(), 2);
+        assert!(ix.is_empty());
+        let hashes: Vec<u64> = dropped.iter().map(|(_, e)| e.route_hash).collect();
+        assert!(hashes.contains(&11) && hashes.contains(&12));
+    }
+
+    #[test]
+    fn router_advertise_retract_lookup() {
+        let r = PrefixRouter::default();
+        assert_eq!(r.lookup(7), None);
+        r.advertise(7, "m::aff1");
+        r.advertise(9, "m::aff1");
+        r.advertise(8, "m::aff2");
+        assert_eq!(r.lookup(7).as_deref(), Some("m::aff1"));
+        assert_eq!(r.len(), 3);
+
+        // hash 0 is the no-route sentinel on both sides
+        r.advertise(0, "m::aff1");
+        assert_eq!(r.lookup(0), None);
+        assert_eq!(r.len(), 3);
+
+        // retract only drops a hash still owned by the caller
+        r.retract(7, "m::aff2");
+        assert_eq!(r.lookup(7).as_deref(), Some("m::aff1"));
+        r.retract(7, "m::aff1");
+        assert_eq!(r.lookup(7), None);
+
+        // teardown retracts everything the instance advertised
+        assert_eq!(r.retract_queue("m::aff1"), 1);
+        assert_eq!(r.lookup(9), None);
+        assert_eq!(r.lookup(8).as_deref(), Some("m::aff2"));
+    }
+}

@@ -152,6 +152,38 @@ mod tests {
         }
     }
 
+    /// ISSUE 8: the KV-reuse tier assumes *prefix stability* —
+    /// `tokenize(a ++ b)` must begin with `tokenize(a)`, so a
+    /// conversation's turn-k prompt tokenizes to a strict extension of
+    /// turn k-1's and the parked KV rows keep describing a true token
+    /// prefix. Byte-level tokenization (what the serving path uses)
+    /// gives this unconditionally; exercised over seeded random
+    /// multi-turn conversations. (BPE does NOT guarantee it — a merge
+    /// can span the append boundary — which is exactly why the prefix
+    /// index matches on token ids, not on raw strings.)
+    #[test]
+    fn byte_tokenizer_is_prefix_stable_over_conversation_turns() {
+        let t = ByteTokenizer;
+        let mut r = Rng::seed(1008);
+        for _conv in 0..32 {
+            let mut history = String::new();
+            let mut prev: Vec<u32> = Vec::new();
+            for _turn in 0..6 {
+                let n = r.usize(1, 25);
+                let turn: String =
+                    (0..n).map(|_| (b' ' + r.usize(0, 95) as u8) as char).collect();
+                history.push_str(&turn);
+                let toks = t.encode(&history);
+                assert!(
+                    toks.len() >= prev.len() && toks[..prev.len()] == prev[..],
+                    "tokenize(history) must extend tokenize(prefix): \
+                     {prev:?} !< {toks:?}"
+                );
+                prev = toks;
+            }
+        }
+    }
+
     #[test]
     fn bpe_roundtrip_property() {
         let corpus: String = (0..400)

@@ -54,6 +54,7 @@ fn post_wave(svc: &RackService, prompts: &[String]) -> Wave {
                         reply_to: 100 + i as u64,
                         retries: 0,
                         resume_from: 0,
+                        prefix_hash: 0,
                     },
                 ),
             )
@@ -239,6 +240,8 @@ fn watchdog_catches_a_silent_frame_drop() {
             stop_byte: None,
             retries: 0,
             resume_from: 0,
+            prefix_hash: 0,
+            affinity: false,
         });
     }
     let records = inst.serve_until_drained();
@@ -291,6 +294,8 @@ fn seeded_fault_fuzz_accounts_for_every_sequence() {
                 stop_byte: None,
                 retries: 0,
                 resume_from: 0,
+                prefix_hash: 0,
+                affinity: false,
             });
         }
         let records = inst.serve_until_drained();

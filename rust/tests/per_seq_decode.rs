@@ -40,6 +40,8 @@ fn req(id: u64, prompt: &str, max_tokens: usize) -> GenRequest {
         stop_byte: None,
         retries: 0,
         resume_from: 0,
+        prefix_hash: 0,
+        affinity: false,
     }
 }
 
@@ -258,7 +260,7 @@ fn broker_client_sees_first_token_before_batch_done() {
     let broker = Broker::new();
     let ch = broker.post(
         "toy",
-        Task { id: 1, priority: 1, body: "stream me".into(), reply_to: 42, retries: 0, resume_from: 0 },
+        Task { id: 1, priority: 1, body: "stream me".into(), reply_to: 42, retries: 0, resume_from: 0, prefix_hash: 0 },
     );
     let max_tokens = (cfg.max_context - cfg.prefill_chunk).min(24);
     let handle = inst.serve_broker(broker.clone(), "toy", vec![0, 1, 2], max_tokens);

@@ -1,0 +1,330 @@
+//! Prefix-cache / KV-reuse tier (ISSUE 8), end to end over the stub
+//! backend.
+//!
+//! The contract under test: a conversation's turn-k prompt reuses the KV
+//! rows its turn k-1 left parked in the slot — prefill runs only over the
+//! unmatched suffix — and reuse is *invisible* in the output bytes: every
+//! stream is identical to a cold full-prefill run. The cache may only
+//! ever change latency, never tokens. Stale KV is never served: evicted
+//! or invalidated entries fall back loudly to a full prefill, and a dead
+//! chain drops every parked entry before replay.
+//!
+//! The toy model's vocabulary is 32, so prompts are built from bytes
+//! `1..=30` — distinct token ids that survive the vocab clamp. Printable
+//! ASCII would all clamp to token 31 and every prompt would alias.
+
+use std::sync::Arc;
+
+use npserve::broker::Task;
+use npserve::config::hw::RackSpec;
+use npserve::fault::FaultPlan;
+use npserve::rack::{InstanceSpec, RackService};
+use npserve::runtime::testmodel::ToyConfig;
+use npserve::service::{
+    prefix_route_hash, GenRequest, LlmInstance, PrefixOptions, ServeOptions, SharedEngine,
+};
+use npserve::tokenizer::ByteTokenizer;
+
+fn toy_engine() -> SharedEngine {
+    SharedEngine(Arc::new(ToyConfig::small().engine()))
+}
+
+/// A prompt of distinct sub-vocab token ids (see module docs).
+fn p(ids: &[u8]) -> String {
+    ids.iter().map(|&b| b as char).collect()
+}
+
+fn request(id: u64, prompt: &str, n: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: prompt.into(),
+        max_tokens: n,
+        temperature: 0.0,
+        top_k: 0,
+        stop_byte: None,
+        retries: 0,
+        resume_from: 0,
+        prefix_hash: 0,
+        affinity: false,
+    }
+}
+
+fn gen(inst: &Arc<LlmInstance>, id: u64, prompt: &str, n: usize) -> Vec<u32> {
+    inst.submit(request(id, prompt, n));
+    inst.serve_until_drained();
+    let updates = inst.updates.lock().unwrap();
+    let mut toks = Vec::new();
+    while let Ok(u) = updates.try_recv() {
+        if let npserve::service::GenUpdate::Token { id: uid, token, .. } = u {
+            if uid == id {
+                toks.push(token);
+            }
+        }
+    }
+    toks
+}
+
+/// Multi-turn conversation: turn k's prompt extends turn k-1's prompt
+/// plus its generated reply, so every warm turn resumes from parked KV.
+/// The warm instance must produce byte-identical streams to a cold
+/// (prefix-disabled) control, and its counters must account for every
+/// reuse exactly.
+#[test]
+fn multi_turn_reuse_is_byte_identical_and_counted() {
+    let warm = LlmInstance::start(toy_engine());
+    let cold = LlmInstance::start_with(
+        toy_engine(),
+        ServeOptions {
+            prefix: PrefixOptions { enabled: false, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let t = ByteTokenizer;
+
+    // turn 1: 8 prompt tokens, 4 generated; kv_len 11 parks (last
+    // sampled token's KV is never written)
+    let mut history = p(&[1, 2, 3, 4, 5, 6, 7, 8]);
+    let user_turns: [&[u8]; 3] = [&[], &[9, 10, 11, 12], &[13, 14]];
+    for (k, next) in user_turns.iter().enumerate() {
+        history.push_str(&p(next));
+        let id = 10 + k as u64;
+        let w = gen(&warm, id, &history, 4);
+        let c = gen(&cold, id, &history, 4);
+        assert_eq!(w.len(), 4, "turn {k} truncated");
+        assert_eq!(w, c, "turn {k}: reuse changed the output bytes");
+        // the assistant reply joins the conversation history
+        history.push_str(&t.decode(&w));
+    }
+
+    // turn 2 matched 11 tokens chunk-aligned to 8; turn 3 matched 19
+    // aligned to 16 (prefill_chunk = 4)
+    let s = warm.prefix_counters().snapshot();
+    assert_eq!(s.hits, 2, "turns 2 and 3 must both reuse parked KV: {s}");
+    assert_eq!(s.misses, 1, "only turn 1 prefills from scratch: {s}");
+    assert_eq!(s.matched_tokens, 8 + 16, "chunk-aligned reuse lengths: {s}");
+    assert_eq!(s.parked_slots, 1, "only turn 3's retirement stays parked: {s}");
+    assert!(s.parked_bytes > 0, "parked gauge must track KV bytes: {s}");
+    assert_eq!(warm.parked_prefixes(), 1);
+
+    // the control instance's cache path never ran
+    let c = cold.prefix_counters().snapshot();
+    assert_eq!((c.hits, c.misses, c.parked_slots), (0, 0, 0), "{c}");
+
+    warm.shutdown();
+    cold.shutdown();
+}
+
+/// ISSUE 8 satellite: the eviction/routing race. Conversation A's parked
+/// KV is displaced (max_parked = 1) by conversation B before A's turn 2
+/// arrives — carrying `affinity` + its prefix hash as if routing had
+/// already promised it a warm slot. The serve path must fall back to a
+/// full cold prefill (counted as a stale route, never a hit) and still
+/// produce bytes identical to a never-cached run.
+#[test]
+fn evicted_prefix_falls_back_to_cold_prefill() {
+    let inst = LlmInstance::start_with(
+        toy_engine(),
+        ServeOptions {
+            prefix: PrefixOptions { max_parked: 1, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let a1 = p(&[1, 2, 3, 4, 5, 6, 7, 8]);
+    let out_a1 = gen(&inst, 1, &a1, 4);
+    assert_eq!(inst.parked_prefixes(), 1);
+
+    // B shares no prefix with A; its retirement displaces A's entry
+    let out_b = gen(&inst, 2, &p(&[20, 21, 22, 23, 24, 25, 26, 27]), 4);
+    assert_eq!(out_b.len(), 4);
+    let s = inst.prefix_counters().snapshot();
+    assert_eq!(s.evictions, 1, "max_parked=1 must displace A: {s}");
+    assert_eq!(inst.parked_prefixes(), 1, "only B's entry survives");
+
+    // A's turn 2 arrives with a (now stale) affinity promise
+    let a2 = format!("{a1}{}{}", ByteTokenizer.decode(&out_a1), p(&[9, 10]));
+    let mut req = request(3, &a2, 4);
+    req.affinity = true;
+    req.prefix_hash = prefix_route_hash(&a2);
+    inst.submit(req);
+    inst.serve_until_drained();
+
+    let s = inst.prefix_counters().snapshot();
+    assert_eq!(s.hits, 0, "no parked prefix matches A's turn 2: {s}");
+    assert_eq!(s.stale_routes, 1, "the cold fallback must be loud: {s}");
+    assert_eq!(s.misses, 3, "{s}");
+
+    // bytes must match a never-cached control run of the same prompt
+    let control = LlmInstance::start_with(
+        toy_engine(),
+        ServeOptions {
+            prefix: PrefixOptions { enabled: false, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let want = gen(&control, 3, &a2, 4);
+    let updates = inst.updates.lock().unwrap();
+    let mut got = Vec::new();
+    while let Ok(u) = updates.try_recv() {
+        if let npserve::service::GenUpdate::Token { id: 3, token, .. } = u {
+            got.push(token);
+        }
+    }
+    drop(updates);
+    assert_eq!(got, want, "stale-route fallback served wrong bytes");
+    inst.shutdown();
+    control.shutdown();
+}
+
+/// An affinity-routed request arriving at an instance that parked nothing
+/// (fresh deploy, or full invalidation) is the same race in its purest
+/// form: loud stale-route counter, cold prefill, full output.
+#[test]
+fn affinity_request_on_cold_instance_is_a_stale_route() {
+    let inst = LlmInstance::start(toy_engine());
+    let prompt = p(&[3, 1, 4, 1, 5]);
+    let mut req = request(9, &prompt, 4);
+    req.affinity = true;
+    req.prefix_hash = prefix_route_hash(&prompt);
+    inst.submit(req);
+    let recs = inst.serve_until_drained();
+    assert_eq!(recs.len(), 1);
+    assert_eq!(recs[0].n_out, 4);
+    let s = inst.prefix_counters().snapshot();
+    assert_eq!((s.hits, s.misses, s.stale_routes), (0, 1, 1), "{s}");
+    inst.shutdown();
+}
+
+/// Chain death drops every parked entry: KV written by a dead chain must
+/// never seed a replay (the survivor re-prefills from the tokens). The
+/// parked gauges return to zero and the invalidations counter accounts
+/// for each dropped entry.
+#[test]
+fn chain_death_invalidates_all_parked_kv() {
+    // conversations A and B complete on a healthy chain and park their KV;
+    // C's long serve then trips the scheduled card death. Wave 1 costs
+    // card 0 exactly 10 packets (2 prefill chunks + 3 decode steps per
+    // sequence); C alone costs 11 more (4 chunks + 7 steps), so packet 15
+    // lands mid-C even if scheduling drift shifts the wave-1 total.
+    let plan = FaultPlan::kill_card(0, 15);
+    let inst = LlmInstance::start_with(
+        toy_engine(),
+        ServeOptions { faults: Some(plan.clone()), ..Default::default() },
+    );
+    inst.submit(request(1, &p(&[1, 2, 3, 4, 5, 6, 7, 8]), 4));
+    inst.submit(request(2, &p(&[20, 21, 22, 23, 24, 25, 26, 27]), 4));
+    let recs = inst.serve_until_drained();
+    assert_eq!(recs.len(), 2, "wave 1 must complete before the fault");
+    assert_eq!(inst.parked_prefixes(), 2, "both conversations park");
+    let parked_bytes = inst.prefix_counters().snapshot().parked_bytes;
+    assert!(parked_bytes > 0);
+
+    inst.submit(request(3, &p(&[11, 12, 13, 14, 15, 16, 17, 18, 11, 12, 13, 14, 15, 16, 17, 18]), 8));
+    inst.serve_until_drained();
+
+    assert!(inst.chain_failure().is_some(), "the scheduled fault must fire");
+    assert_eq!(plan.injected(), 1);
+    let lost = inst.take_lost();
+    assert_eq!(lost.len(), 1, "C is captured for requeue, not dropped");
+    assert_eq!(lost[0].id, 3);
+
+    let s = inst.prefix_counters().snapshot();
+    assert_eq!(inst.parked_prefixes(), 0, "dead-chain KV must not linger");
+    assert_eq!(s.invalidations, 2, "both parked entries dropped: {s}");
+    assert_eq!(s.parked_slots, 0, "gauge must release on invalidation: {s}");
+    assert_eq!(s.parked_bytes, 0, "gauge must release on invalidation: {s}");
+    inst.shutdown();
+}
+
+// ------------------------------------------------------------- rack level
+
+const MODEL: &str = "toy-testmodel";
+
+/// A roomier toy context so conversations share a ≥32-byte prefix (the
+/// route hash's window) while still leaving growth room for later turns.
+fn big_engine() -> SharedEngine {
+    let mut c = ToyConfig::small();
+    c.max_context = 128;
+    SharedEngine(Arc::new(c.engine()))
+}
+
+fn spec(engine: SharedEngine) -> InstanceSpec {
+    let mut spec = InstanceSpec::live(MODEL, 4, engine);
+    spec.max_tokens = 8;
+    spec
+}
+
+/// Post one conversation turn to `queue` (the shared model queue, or an
+/// affinity side queue the router steered us to) and collect the stream.
+fn ask(svc: &RackService, queue: &str, id: u64, prompt: &str, hash: u64) -> String {
+    let ch = svc.broker().post(
+        queue,
+        Task {
+            id,
+            priority: 1,
+            body: prompt.into(),
+            reply_to: id,
+            retries: 0,
+            resume_from: 0,
+            prefix_hash: hash,
+        },
+    );
+    let mut text = String::new();
+    while let Some(t) = ch.recv() {
+        text.push_str(&t);
+    }
+    text
+}
+
+/// Session-affinity routing at the rack level: after turn 1 completes,
+/// the rack's prefix router advertises the conversation's route hash on
+/// the serving instance's affinity queue; `RackService::route` steers
+/// turn 2 there, the instance consumes the side queue first, reuses the
+/// parked KV, and the shared fleet counters expose the hit.
+#[test]
+fn rack_routes_conversation_turns_to_the_parked_instance() {
+    let svc = RackService::new(RackSpec::northpole_42u());
+    let id = svc.deploy(spec(big_engine())).unwrap();
+
+    // control rack: identical model, prefix tier disabled
+    let ctl = RackService::new(RackSpec::northpole_42u());
+    let mut cspec = spec(big_engine());
+    cspec.opts.prefix.enabled = false;
+    ctl.deploy(cspec).unwrap();
+
+    // the conversation's stable head spans the whole 32-byte route window
+    let head: Vec<u8> = (1..=30).chain(1..=4).collect();
+    let turn1 = p(&head);
+    let h1 = prefix_route_hash(&turn1);
+    assert!(svc.route(MODEL, h1).is_none(), "nothing advertised yet");
+
+    let w1 = ask(&svc, MODEL, 100, &turn1, h1);
+    let c1 = ask(&ctl, MODEL, 100, &turn1, h1);
+    assert!(!w1.is_empty());
+    assert_eq!(w1, c1, "turn 1 must be cache-neutral");
+
+    // turn 2 extends the same conversation: same first 32 bytes, same hash
+    let turn2 = format!("{turn1}{w1}{}", p(&[5, 6, 7]));
+    let h2 = prefix_route_hash(&turn2);
+    assert_eq!(h2, h1, "route hash must be stable across turns");
+    let aff = svc.route(MODEL, h2).expect("turn 1's retirement must advertise");
+    assert_eq!(aff, format!("{MODEL}::aff{id}"));
+
+    let w2 = ask(&svc, &aff, 101, &turn2, h2);
+    let c2 = ask(&ctl, MODEL, 101, &turn2, h2);
+    assert_eq!(w2, c2, "affinity-steered turn 2 changed the bytes");
+
+    // the hit is visible in the rack's shared fleet metrics
+    let s = svc.fleet_metrics().prefix;
+    assert_eq!(s.hits, 1, "turn 2 must reuse turn 1's parked KV: {s}");
+    assert_eq!(s.misses, 1, "{s}");
+    assert!(s.matched_tokens >= 32, "the whole head re-prefilled?: {s}");
+
+    // unknown conversations are never steered
+    assert!(svc.route(MODEL, prefix_route_hash("unrelated")).is_none());
+    // the control rack advertised nothing
+    assert!(ctl.route(MODEL, h1).is_none());
+    assert_eq!(ctl.fleet_metrics().prefix.hits, 0);
+
+    svc.shutdown_all();
+    ctl.shutdown_all();
+}

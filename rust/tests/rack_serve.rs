@@ -54,6 +54,7 @@ fn roundtrip(svc: &RackService, prompts: &[String]) -> BTreeMap<u64, String> {
                         reply_to: 100 + i as u64,
                         retries: 0,
                         resume_from: 0,
+                        prefix_hash: 0,
                     },
                 ),
             )
@@ -174,6 +175,7 @@ fn paper_3x8b_runs_live_on_the_testmodel_backend() {
                     reply_to: 700 + i,
                     retries: 0,
                     resume_from: 0,
+                    prefix_hash: 0,
                 },
             )
         })

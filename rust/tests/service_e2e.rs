@@ -30,6 +30,8 @@ fn gen(inst: &Arc<LlmInstance>, id: u64, prompt: &str, n: usize) -> Vec<u32> {
         stop_byte: None,
         retries: 0,
         resume_from: 0,
+        prefix_hash: 0,
+        affinity: false,
     });
     inst.serve_until_drained();
     let updates = inst.updates.lock().unwrap();
@@ -70,12 +72,16 @@ fn batched_generation_matches_solo() {
         temperature: 0.0, top_k: 0, stop_byte: None,
         retries: 0,
         resume_from: 0,
+        prefix_hash: 0,
+        affinity: false,
     });
     batch.submit(GenRequest {
         id: 12, prompt: "xyz9".into(), max_tokens: 5,
         temperature: 0.0, top_k: 0, stop_byte: None,
         retries: 0,
         resume_from: 0,
+        prefix_hash: 0,
+        affinity: false,
     });
     batch.serve_until_drained();
     let updates = batch.updates.lock().unwrap();
@@ -105,6 +111,8 @@ fn more_requests_than_slots_all_complete() {
             stop_byte: None,
             retries: 0,
             resume_from: 0,
+            prefix_hash: 0,
+            affinity: false,
         });
     }
     let recs = inst.serve_until_drained();
@@ -123,7 +131,7 @@ fn broker_roundtrip_streams_tokens() {
     let broker = Broker::new();
     let ch = broker.post(
         "granite-test",
-        Task { id: 1, priority: 1, body: "3+4=".into(), reply_to: 71, retries: 0, resume_from: 0 },
+        Task { id: 1, priority: 1, body: "3+4=".into(), reply_to: 71, retries: 0, resume_from: 0, prefix_hash: 0 },
     );
     let handle = inst.serve_broker(broker.clone(), "granite-test", vec![0, 1, 2], 4);
     let mut got = Vec::new();
@@ -204,6 +212,8 @@ mod stub_backend {
                 stop_byte: None,
                 retries: 0,
                 resume_from: 0,
+                prefix_hash: 0,
+                affinity: false,
             });
         }
         let recs = inst.serve_until_drained();
