@@ -9,6 +9,8 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::sync::{lock_clean, wait_clean, wait_timeout_clean};
+
 /// A task posted by the API endpoint (§IV): model queue + priority + body.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Task {
@@ -160,7 +162,7 @@ pub struct ConsumerGuard {
 
 impl Drop for ConsumerGuard {
     fn drop(&mut self) {
-        let mut st = self.q.state.lock().unwrap();
+        let mut st = lock_clean(&self.q.state);
         st.consumers = st.consumers.saturating_sub(1);
     }
 }
@@ -181,20 +183,20 @@ pub struct ResponseChannel {
 
 impl ResponseChannel {
     pub fn send(&self, msg: String) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_clean(&self.state);
         g.0.push_back(msg);
         self.ready.notify_all();
     }
 
     pub fn finish(&self) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_clean(&self.state);
         g.1 = true;
         self.ready.notify_all();
     }
 
     /// Receive the next message; None once finished and drained.
     pub fn recv(&self) -> Option<String> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_clean(&self.state);
         loop {
             if let Some(m) = g.0.pop_front() {
                 return Some(m);
@@ -202,7 +204,7 @@ impl ResponseChannel {
             if g.1 {
                 return None;
             }
-            g = self.ready.wait(g).unwrap();
+            g = wait_clean(&self.ready, g);
         }
     }
 }
@@ -213,7 +215,7 @@ impl Broker {
     }
 
     fn queue(&self, name: &str) -> Arc<Queue> {
-        let mut qs = self.queues.lock().unwrap();
+        let mut qs = lock_clean(&self.queues);
         qs.entry(name.to_string())
             .or_insert_with(|| {
                 Arc::new(Queue { state: Mutex::new(QueueState::default()), ready: Condvar::new() })
@@ -225,7 +227,7 @@ impl Broker {
     /// (e.g. the front door probing a request's `model`) must not leak a
     /// queue entry per probe.
     fn queue_if_exists(&self, name: &str) -> Option<Arc<Queue>> {
-        self.queues.lock().unwrap().get(name).cloned()
+        lock_clean(&self.queues).get(name).cloned()
     }
 
     /// Post an inference task to a model's queue (§IV: "posts an inference
@@ -233,9 +235,9 @@ impl Broker {
     /// Returns the response channel for the caller to stream from.
     pub fn post(&self, queue: &str, task: Task) -> Arc<ResponseChannel> {
         let ch = Arc::new(ResponseChannel::default());
-        self.responses.lock().unwrap().insert(task.reply_to, ch.clone());
+        lock_clean(&self.responses).insert(task.reply_to, ch.clone());
         let q = self.queue(queue);
-        let mut st = q.state.lock().unwrap();
+        let mut st = lock_clean(&q.state);
         st.by_priority.entry(task.priority).or_default().push_back(task);
         // notify_all, not notify_one: consumers may subscribe to disjoint
         // priority subsets, and a single wakeup could land on one not
@@ -255,7 +257,7 @@ impl Broker {
     pub fn requeue(&self, queue: &str, mut task: Task) {
         task.retries += 1;
         let q = self.queue(queue);
-        let mut st = q.state.lock().unwrap();
+        let mut st = lock_clean(&q.state);
         st.retried += 1;
         st.by_priority.entry(task.priority).or_default().push_front(task);
         q.ready.notify_all();
@@ -265,7 +267,7 @@ impl Broker {
     /// highest priority first; blocks until available or the queue closes.
     pub fn consume(&self, queue: &str, priorities: &[u8]) -> Option<Task> {
         let q = self.queue(queue);
-        let mut st = q.state.lock().unwrap();
+        let mut st = lock_clean(&q.state);
         loop {
             if let Some(t) = Self::pop_highest(&mut st, priorities) {
                 return Some(t);
@@ -273,7 +275,7 @@ impl Broker {
             if st.closed {
                 return None;
             }
-            st = q.ready.wait(st).unwrap();
+            st = wait_clean(&q.ready, st);
         }
     }
 
@@ -289,7 +291,7 @@ impl Broker {
     ) -> Consumed {
         let q = self.queue(queue);
         let deadline = Instant::now() + timeout;
-        let mut st = q.state.lock().unwrap();
+        let mut st = lock_clean(&q.state);
         loop {
             if let Some(t) = Self::pop_highest(&mut st, priorities) {
                 return Consumed::Task(t);
@@ -301,7 +303,7 @@ impl Broker {
             if left.is_zero() {
                 return Consumed::Empty;
             }
-            let (guard, _) = q.ready.wait_timeout(st, left).unwrap();
+            let (guard, _timed_out) = wait_timeout_clean(&q.ready, st, left);
             st = guard;
         }
     }
@@ -323,25 +325,25 @@ impl Broker {
     /// Non-blocking variant.
     pub fn try_consume(&self, queue: &str, priorities: &[u8]) -> Option<Task> {
         let q = self.queue(queue);
-        let mut st = q.state.lock().unwrap();
+        let mut st = lock_clean(&q.state);
         Self::pop_highest(&mut st, priorities)
     }
 
     /// Close a queue: blocked consumers drain and then receive None.
     pub fn close(&self, queue: &str) {
         let q = self.queue(queue);
-        q.state.lock().unwrap().closed = true;
+        lock_clean(&q.state).closed = true;
         q.ready.notify_all();
     }
 
     /// The response channel for a task (used by the LLM instance side).
     pub fn response(&self, reply_to: u64) -> Option<Arc<ResponseChannel>> {
-        self.responses.lock().unwrap().get(&reply_to).cloned()
+        lock_clean(&self.responses).get(&reply_to).cloned()
     }
 
     /// Drop a completed response channel.
     pub fn remove_response(&self, reply_to: u64) {
-        self.responses.lock().unwrap().remove(&reply_to);
+        lock_clean(&self.responses).remove(&reply_to);
     }
 
     pub fn depth(&self, queue: &str) -> usize {
@@ -360,7 +362,7 @@ impl Broker {
                 retried: 0,
             };
         };
-        let st = q.state.lock().unwrap();
+        let st = lock_clean(&q.state);
         QueueStats {
             depth: st.by_priority.values().map(|f| f.len()).sum(),
             consumers: st.consumers,
@@ -381,7 +383,7 @@ impl Broker {
 
     pub fn is_closed(&self, queue: &str) -> bool {
         self.queue_if_exists(queue)
-            .map(|q| q.state.lock().unwrap().closed)
+            .map(|q| lock_clean(&q.state).closed)
             .unwrap_or(false)
     }
 
@@ -389,7 +391,7 @@ impl Broker {
     /// thread may still call `consume`). The guard deregisters on drop.
     pub fn register_consumer(&self, queue: &str) -> ConsumerGuard {
         let q = self.queue(queue);
-        q.state.lock().unwrap().consumers += 1;
+        lock_clean(&q.state).consumers += 1;
         ConsumerGuard { q }
     }
 
@@ -408,7 +410,7 @@ impl Broker {
             return 0;
         };
         let moved: Vec<Task> = {
-            let mut st = src.state.lock().unwrap();
+            let mut st = lock_clean(&src.state);
             st.by_priority.values_mut().flat_map(|f| f.drain(..)).collect()
         };
         let n = moved.len();
@@ -416,7 +418,7 @@ impl Broker {
             return 0;
         }
         let dst = self.queue(to);
-        let mut st = dst.state.lock().unwrap();
+        let mut st = lock_clean(&dst.state);
         for t in moved {
             st.by_priority.entry(t.priority).or_default().push_back(t);
         }
@@ -435,7 +437,7 @@ impl Broker {
             return 0;
         };
         let drained: Vec<Task> = {
-            let mut st = q.state.lock().unwrap();
+            let mut st = lock_clean(&q.state);
             st.by_priority.values_mut().flat_map(|f| f.drain(..)).collect()
         };
         let n = drained.len();

@@ -464,7 +464,7 @@ mod tests {
         for _ in 0..5 {
             pool.put(Vec::with_capacity(64));
         }
-        assert_eq!(pool.frames.lock().unwrap().len(), 2);
+        assert_eq!(lock_clean(&pool.frames).len(), 2);
     }
 
     #[test]

@@ -10,6 +10,8 @@
 
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::util::sync::{lock_clean, wait_clean};
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum RingState {
     Collecting,
@@ -48,7 +50,7 @@ impl Ring {
 
     /// Member `i` reports that its cards are configured.
     pub fn report_ready(&self, i: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.ready[i] = true;
         // pass the token around: if all stamps present, commit
         g.token_pos = (g.token_pos + 1) % self.n;
@@ -63,18 +65,18 @@ impl Ring {
 
     /// Block until consensus commits (all members configured).
     pub fn wait_committed(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         while g.state != RingState::Committed {
-            g = self.cv.wait(g).unwrap();
+            g = wait_clean(&self.cv, g);
         }
     }
 
     pub fn is_committed(&self) -> bool {
-        self.inner.lock().unwrap().state == RingState::Committed
+        lock_clean(&self.inner).state == RingState::Committed
     }
 
     pub fn ready_count(&self) -> usize {
-        self.inner.lock().unwrap().ready.iter().filter(|&&r| r).count()
+        lock_clean(&self.inner).ready.iter().filter(|&&r| r).count()
     }
 }
 

@@ -10,6 +10,8 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+use crate::util::sync::lock_clean;
+
 /// A DMA-able buffer in "host" memory, identified by an IOVA when mapped.
 #[derive(Debug, Clone)]
 pub struct DmaBuffer {
@@ -81,7 +83,7 @@ impl Driver {
 
     /// Allocate a memory-mapped buffer and map it into the IOVA space.
     pub fn alloc(&self, len: usize) -> DmaBuffer {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         let iova = g.next_iova;
         g.next_iova += (len as u64 + 0xfff) & !0xfff; // page align
         let buf = DmaBuffer { iova, data: Arc::new(Mutex::new(vec![0u8; len])) };
@@ -97,7 +99,7 @@ impl Driver {
         // The IOVA table hands out shared handles: cloning a `DmaBuffer`
         // clones an `Arc`, never the mapped bytes.
         let (src, dst) = {
-            let g = self.inner.lock().unwrap();
+            let g = lock_clean(&self.inner);
             (
                 g.mappings.get(&d.src).cloned().ok_or(DriverError::UnmappedIova(d.src))?,
                 g.mappings.get(&d.dst).cloned().ok_or(DriverError::UnmappedIova(d.dst))?,
@@ -105,7 +107,7 @@ impl Driver {
         };
         if Arc::ptr_eq(&src.data, &dst.data) {
             // same mapping: one lock, overlap-safe copy_within
-            let mut data = src.data.lock().unwrap();
+            let mut data = lock_clean(&src.data);
             let size = data.len();
             if d.src_off + d.len > size {
                 return Err(DriverError::OutOfBounds {
@@ -123,8 +125,8 @@ impl Driver {
             // over the same buffer pair cannot deadlock
             let src_first = src.iova < dst.iova;
             let (first, second) = if src_first { (&src, &dst) } else { (&dst, &src) };
-            let ga = first.data.lock().unwrap();
-            let gb = second.data.lock().unwrap();
+            let ga = lock_clean(&first.data);
+            let gb = lock_clean(&second.data);
             let (src_g, mut dst_g) = if src_first { (ga, gb) } else { (gb, ga) };
             if d.src_off + d.len > src_g.len() {
                 return Err(DriverError::OutOfBounds {
@@ -139,7 +141,7 @@ impl Driver {
             dst_g[d.dst_off..d.dst_off + d.len]
                 .copy_from_slice(&src_g[d.src_off..d.src_off + d.len]);
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.dma_count += 1;
         g.bytes_moved += d.len as u64;
         Ok(())
@@ -154,16 +156,16 @@ impl Driver {
     }
 
     pub fn mmio_write(&self, card: u32, reg: u64, val: u64) {
-        self.inner.lock().unwrap().mmio.insert((card, reg), val);
+        lock_clean(&self.inner).mmio.insert((card, reg), val);
     }
 
     pub fn mmio_read(&self, card: u32, reg: u64) -> u64 {
-        *self.inner.lock().unwrap().mmio.get(&(card, reg)).unwrap_or(&0)
+        *lock_clean(&self.inner).mmio.get(&(card, reg)).unwrap_or(&0)
     }
 
     /// (descriptors executed, bytes moved) — used by perf accounting.
     pub fn dma_stats(&self) -> (u64, u64) {
-        let g = self.inner.lock().unwrap();
+        let g = lock_clean(&self.inner);
         (g.dma_count, g.bytes_moved)
     }
 }
@@ -177,10 +179,10 @@ mod tests {
         let drv = Driver::new();
         let a = drv.alloc(64);
         let b = drv.alloc(64);
-        a.data.lock().unwrap()[..4].copy_from_slice(&[1, 2, 3, 4]);
+        lock_clean(&a.data)[..4].copy_from_slice(&[1, 2, 3, 4]);
         drv.dma(&DmaDescriptor { src: a.iova, dst: b.iova, len: 4, src_off: 0, dst_off: 8 })
             .unwrap();
-        assert_eq!(&b.data.lock().unwrap()[8..12], &[1, 2, 3, 4]);
+        assert_eq!(&lock_clean(&b.data)[8..12], &[1, 2, 3, 4]);
         assert_eq!(drv.dma_stats(), (1, 4));
     }
 
@@ -200,25 +202,25 @@ mod tests {
         let a = drv.alloc(8);
         let b = drv.alloc(8);
         let c = drv.alloc(8);
-        a.data.lock().unwrap().copy_from_slice(&[9; 8]);
+        lock_clean(&a.data).copy_from_slice(&[9; 8]);
         // a -> b -> c
         drv.dma_chain(&[
             DmaDescriptor { src: a.iova, dst: b.iova, len: 8, src_off: 0, dst_off: 0 },
             DmaDescriptor { src: b.iova, dst: c.iova, len: 8, src_off: 0, dst_off: 0 },
         ])
         .unwrap();
-        assert_eq!(*c.data.lock().unwrap(), vec![9; 8]);
+        assert_eq!(*lock_clean(&c.data), vec![9; 8]);
     }
 
     #[test]
     fn same_buffer_dma_copies_within() {
         let drv = Driver::new();
         let a = drv.alloc(16);
-        a.data.lock().unwrap()[..4].copy_from_slice(&[1, 2, 3, 4]);
+        lock_clean(&a.data)[..4].copy_from_slice(&[1, 2, 3, 4]);
         // overlapping forward copy within one mapping must not deadlock
         drv.dma(&DmaDescriptor { src: a.iova, dst: a.iova, len: 4, src_off: 0, dst_off: 2 })
             .unwrap();
-        assert_eq!(&a.data.lock().unwrap()[..6], &[1, 2, 1, 2, 3, 4]);
+        assert_eq!(&lock_clean(&a.data)[..6], &[1, 2, 1, 2, 3, 4]);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use std::sync::Mutex;
 use crate::pipeline::sim::SeqRecord;
 use crate::util::json::Value;
 use crate::util::stats::Summary;
+use crate::util::sync::lock_clean;
 
 /// Batch-level metrics over a set of served sequences.
 #[derive(Debug, Clone)]
@@ -558,27 +559,27 @@ pub struct AutoscaleLog {
 
 impl AutoscaleLog {
     pub fn push(&self, ev: AutoscaleEvent) {
-        self.events.lock().unwrap().push(ev);
+        lock_clean(&self.events).push(ev);
     }
 
     pub fn events(&self) -> Vec<AutoscaleEvent> {
-        self.events.lock().unwrap().clone()
+        lock_clean(&self.events).clone()
     }
 
     pub fn kinds(&self) -> Vec<String> {
-        self.events.lock().unwrap().iter().map(|e| e.kind()).collect()
+        lock_clean(&self.events).iter().map(|e| e.kind()).collect()
     }
 
     pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+        lock_clean(&self.events).len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.events.lock().unwrap().is_empty()
+        lock_clean(&self.events).is_empty()
     }
 
     pub fn to_json(&self) -> Value {
-        Value::arr(self.events.lock().unwrap().iter().map(|e| e.to_json()))
+        Value::arr(lock_clean(&self.events).iter().map(|e| e.to_json()))
     }
 
     pub fn write_json(&self, path: &Path) -> std::io::Result<()> {

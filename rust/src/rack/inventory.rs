@@ -12,6 +12,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::hw::RackSpec;
 use crate::mapper::{MapError, Mapping};
+use crate::util::sync::lock_clean;
 
 /// Rack orchestration errors. `Overcommit` is the §I capacity wall:
 /// a placement that does not fit the remaining card pool.
@@ -119,7 +120,7 @@ impl fmt::Debug for CardLease {
 
 impl Drop for CardLease {
     fn drop(&mut self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_clean(&self.shared.state);
         st.leases.retain(|l| l.id != self.id);
     }
 }
@@ -148,7 +149,7 @@ impl CardInventory {
 
     /// Lease `count` contiguous cards (first-fit over the free gaps).
     pub fn lease(&self, model: &str, count: usize) -> Result<CardLease, RackError> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_clean(&self.shared.state);
         if count == 0 || count > self.shared.total {
             return Err(self.overcommit_err(&st, model, count));
         }
@@ -211,7 +212,7 @@ impl CardInventory {
     }
 
     pub fn in_use(&self) -> usize {
-        self.shared.state.lock().unwrap().leases.iter().map(|l| l.count).sum()
+        lock_clean(&self.shared.state).leases.iter().map(|l| l.count).sum()
     }
 
     pub fn available(&self) -> usize {
@@ -219,7 +220,7 @@ impl CardInventory {
     }
 
     pub fn largest_gap(&self) -> usize {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock_clean(&self.shared.state);
         Self::largest_gap_of(&st, self.shared.total)
     }
 
@@ -230,17 +231,14 @@ impl CardInventory {
     /// remains the authority and may still return `Overcommit`.
     pub fn can_fit(&self, count: usize) -> bool {
         count > 0 && {
-            let st = self.shared.state.lock().unwrap();
+            let st = lock_clean(&self.shared.state);
             Self::largest_gap_of(&st, self.shared.total) >= count
         }
     }
 
     /// Snapshot of active leases as (lease id, first card, count, model).
     pub fn leases(&self) -> Vec<(u64, usize, usize, String)> {
-        self.shared
-            .state
-            .lock()
-            .unwrap()
+        lock_clean(&self.shared.state)
             .leases
             .iter()
             .map(|l| (l.id, l.first, l.count, l.model.clone()))

@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::api::{AdmitDecision, Admission, PrefixRoute};
+use crate::util::sync::lock_clean;
 use crate::broker::Broker;
 use crate::config::hw::RackSpec;
 use crate::config::models::find_model;
@@ -276,7 +277,7 @@ impl RackService {
                 }
             }
         };
-        self.reg.lock().unwrap().insert(id, entry);
+        lock_clean(&self.reg).insert(id, entry);
         Ok(id)
     }
 
@@ -289,9 +290,7 @@ impl RackService {
     }
 
     pub fn instances(&self) -> Vec<InstanceInfo> {
-        self.reg
-            .lock()
-            .unwrap()
+        lock_clean(&self.reg)
             .iter()
             .map(|(id, e)| InstanceInfo {
                 id: *id,
@@ -309,9 +308,7 @@ impl RackService {
     /// registry state *and* the instance's own flag — see
     /// [`InstanceEntry::serving_slots`].
     pub fn capacity_of(&self, model: &str) -> usize {
-        self.reg
-            .lock()
-            .unwrap()
+        lock_clean(&self.reg)
             .values()
             .filter(|e| e.model == model)
             .map(|e| e.serving_slots())
@@ -335,7 +332,7 @@ impl RackService {
     /// deploy or drain concurrently (four separate lock acquisitions
     /// could mix old-fleet capacity with new-fleet counts).
     pub fn load_of(&self, model: &str) -> ModelLoad {
-        let reg = self.reg.lock().unwrap();
+        let reg = lock_clean(&self.reg);
         let mut l = ModelLoad { capacity: 0, serving: 0, live: 0, in_flight: 0 };
         for e in reg.values().filter(|e| e.model == model) {
             l.live += 1;
@@ -360,7 +357,7 @@ impl RackService {
 
     /// The live instance behind a registry id (tests and diagnostics).
     pub fn instance_handle(&self, id: u64) -> Option<Arc<LlmInstance>> {
-        self.reg.lock().unwrap().get(&id).and_then(|e| e.instance.clone())
+        lock_clean(&self.reg).get(&id).and_then(|e| e.instance.clone())
     }
 
     /// Capacity-aware admission for the front door. A model nobody ever
@@ -371,7 +368,7 @@ impl RackService {
     /// immediately (503: retryable, unlike an unknown model).
     pub fn admit(&self, model: &str) -> AdmitDecision {
         let (known, capacity) = {
-            let reg = self.reg.lock().unwrap();
+            let reg = lock_clean(&self.reg);
             let mut known = false;
             let mut cap = 0usize;
             for e in reg.values() {
@@ -418,7 +415,7 @@ impl RackService {
             return None;
         }
         let slots = {
-            let reg = self.reg.lock().unwrap();
+            let reg = lock_clean(&self.reg);
             reg.values()
                 .find(|e| e.affinity_queue.as_deref() == Some(q.as_str()))
                 .map(|e| e.serving_slots())
@@ -452,7 +449,7 @@ impl RackService {
 
     fn drain_as(&self, id: u64, state: InstanceState) -> Result<(), RackError> {
         debug_assert!(state.is_draining());
-        let mut reg = self.reg.lock().unwrap();
+        let mut reg = lock_clean(&self.reg);
         let e = reg.get_mut(&id).ok_or(RackError::NoSuchInstance(id))?;
         let inst = e.instance.as_ref().ok_or(RackError::NotServing(id))?;
         inst.request_drain();
@@ -466,7 +463,7 @@ impl RackService {
     /// are vacuously complete. Non-blocking: the autoscaler polls this
     /// each control tick instead of parking on a worker join.
     pub fn drain_complete(&self, id: u64) -> Result<bool, RackError> {
-        let reg = self.reg.lock().unwrap();
+        let reg = lock_clean(&self.reg);
         let e = reg.get(&id).ok_or(RackError::NoSuchInstance(id))?;
         Ok(e.instance.as_ref().map_or(true, |i| i.drain_complete()))
     }
@@ -475,9 +472,7 @@ impl RackService {
     /// newest (highest-id) one still serving. Newest-first keeps the
     /// longest-lived instances (warm pools, stable leases) in place.
     pub fn scale_down_candidate(&self, model: &str) -> Option<u64> {
-        self.reg
-            .lock()
-            .unwrap()
+        lock_clean(&self.reg)
             .iter()
             .rev()
             .find(|(_, e)| e.model == model && e.serving_slots() > 0)
@@ -493,9 +488,7 @@ impl RackService {
     /// `Draining`/`ScalingDown` entries are excluded: those drains have
     /// an owner (operator or scaler) who will tear them down.
     pub fn dead_instance_of(&self, model: &str) -> Option<u64> {
-        self.reg
-            .lock()
-            .unwrap()
+        lock_clean(&self.reg)
             .iter()
             .find(|(_, e)| {
                 e.model == model
@@ -512,12 +505,16 @@ impl RackService {
     /// a queue nobody consumes. Returns the number of tasks the instance
     /// served.
     pub fn teardown(&self, id: u64) -> Result<usize, RackError> {
-        let entry = self
-            .reg
-            .lock()
-            .unwrap()
-            .remove(&id)
-            .ok_or(RackError::NoSuchInstance(id))?;
+        // Remove the entry in its own scope: the registry guard must be
+        // provably dead before the worker join below — a join under the
+        // registry lock would stall every admit/route/fleet_metrics call
+        // for as long as the worker takes to exit (npslint:
+        // block-under-lock).
+        let entry = {
+            let mut reg = lock_clean(&self.reg);
+            reg.remove(&id)
+        }
+        .ok_or(RackError::NoSuchInstance(id))?;
         if let Some(inst) = &entry.instance {
             inst.retire();
         }
@@ -558,7 +555,13 @@ impl RackService {
 
     /// Tear down every registered instance (placement-only ones included).
     pub fn shutdown_all(&self) {
-        let ids: Vec<u64> = self.reg.lock().unwrap().keys().copied().collect();
+        // Collect ids in their own scope: teardown() re-locks the
+        // registry, so the id-snapshot guard must be dead before the loop
+        // (npslint: lock-order same-class reacquire).
+        let ids: Vec<u64> = {
+            let reg = lock_clean(&self.reg);
+            reg.keys().copied().collect()
+        };
         for id in ids {
             let _ = self.teardown(id);
         }
@@ -567,14 +570,14 @@ impl RackService {
     /// Rack-aggregated serving metrics: per-instance batch metrics plus
     /// the fleet view (metrics::FleetMetrics).
     pub fn fleet_metrics(&self) -> FleetMetrics {
-        let reg = self.reg.lock().unwrap();
+        let reg = lock_clean(&self.reg);
         let instances = reg
             .iter()
             .map(|(id, e)| {
                 let recs = e
                     .instance
                     .as_ref()
-                    .map(|i| i.records.lock().unwrap().clone())
+                    .map(|i| lock_clean(&i.records).clone())
                     .unwrap_or_default();
                 InstanceReport {
                     id: *id,

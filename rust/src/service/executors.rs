@@ -16,6 +16,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::npruntime::{StageError, StageExecutor};
+use crate::util::sync::lock_clean;
 use crate::runtime::{
     DType, DeviceTensor, Engine, F32Slice, StageArg, Tensor, TensorView, WireEncode,
 };
@@ -117,12 +118,12 @@ impl LayerExecutor {
 
     /// True when the KV cache lives on the device.
     pub fn is_resident(&self) -> bool {
-        matches!(&*self.cache.lock().unwrap(), KvCache::Resident(..))
+        matches!(&*lock_clean(&self.cache), KvCache::Resident(..))
     }
 
     /// KV bytes resident on this card (both caches).
     pub fn kv_bytes(&self) -> usize {
-        match &*self.cache.lock().unwrap() {
+        match &*lock_clean(&self.cache) {
             KvCache::Resident(k, v) => k.nbytes() + v.nbytes(),
             KvCache::Host(k, v) => k.data.len() + v.data.len(),
         }

@@ -28,7 +28,7 @@ use crate::npruntime::{ChainError, NpRuntime, StageExecutor};
 use crate::pipeline::sim::SeqRecord;
 use crate::runtime::{Tensor, WireEncode};
 use crate::tokenizer::ByteTokenizer;
-use crate::util::sync::lock_clean;
+use crate::util::sync::{lock_clean, try_lock_clean};
 
 use super::codec::PacketHeader;
 use super::executors::{HeadExecutor, LayerExecutor, SharedEngine};
@@ -422,7 +422,13 @@ impl LlmInstance {
     /// fault-capture path.
     pub fn clear_parked(&self) {
         let px = &self.opts.prefix;
-        for (_, e) in lock_clean(&self.prefix_ix).clear() {
+        // take the cleared entries first: the router lives in the same
+        // prefix lock tier as the index, so retracts run guard-free
+        let cleared = {
+            let mut ix = lock_clean(&self.prefix_ix);
+            ix.clear()
+        };
+        for (_, e) in cleared {
             px.counters.on_unpark(e.kv_len() as u64 * self.kv_tok_bytes);
             if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
                 r.retract(e.route_hash, q);
@@ -465,7 +471,7 @@ impl LlmInstance {
     /// interleaved with in-flight decode packets. `resume` is the
     /// (chunk-aligned) number of leading prompt tokens whose KV is
     /// already resident in the slot — 0 for a cold admission.
-    fn admit(&self, req: GenRequest, toks: Vec<i32>, resume: usize) -> SlotState {
+    fn stage_request(&self, req: GenRequest, toks: Vec<i32>, resume: usize) -> SlotState {
         let t_submit = Instant::now();
         let n_in = toks.len();
         let sampler = if req.temperature > 0.0 {
@@ -500,61 +506,84 @@ impl LlmInstance {
         let px = &self.opts.prefix;
         let chunk = self.engine.manifest.prefill_chunk.max(1);
         let toks = self.tokenize_prompt(&req);
-        let mut ix = lock_clean(&self.prefix_ix);
-        if px.enabled {
-            // cap: at least one suffix token must re-prefill — the final
-            // chunk's completion carries the first-token logits row
-            if let Some((slot, matched)) = ix.best_match(&toks, toks.len().saturating_sub(1)) {
-                // resume on a chunk boundary: resumed chunks are then
-                // bit-identical to the cold prefill's chunks (same
-                // lo/valid/final headers), so reuse cannot perturb output
-                let matched = matched - matched % chunk;
-                if matched >= ix.min_match() && slots[slot].is_none() {
-                    if let Some(e) = ix.claim(slot) {
-                        px.counters.on_unpark(e.kv_len() as u64 * self.kv_tok_bytes);
-                        px.counters.on_hit(matched as u64);
-                        if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+        // Slot choice happens under the index guard; router retracts are
+        // deferred past it — the router shares the prefix lock tier, so a
+        // rack-shared routes lock must never nest under a per-instance
+        // index lock.
+        let mut retracts: Vec<u64> = Vec::new();
+        let (slot, resume) = {
+            let mut ix = lock_clean(&self.prefix_ix);
+            let mut hit = None;
+            if px.enabled {
+                // cap: at least one suffix token must re-prefill — the final
+                // chunk's completion carries the first-token logits row
+                if let Some((slot, matched)) =
+                    ix.best_match(&toks, toks.len().saturating_sub(1))
+                {
+                    // resume on a chunk boundary: resumed chunks are then
+                    // bit-identical to the cold prefill's chunks (same
+                    // lo/valid/final headers), so reuse cannot perturb output
+                    let matched = matched - matched % chunk;
+                    if matched >= ix.min_match() && slots[slot].is_none() {
+                        if let Some(e) = ix.claim(slot) {
+                            px.counters.on_unpark(e.kv_len() as u64 * self.kv_tok_bytes);
+                            px.counters.on_hit(matched as u64);
                             // the slot is live again; re-advertised when
                             // the new occupant retires
-                            r.retract(e.route_hash, q);
+                            retracts.push(e.route_hash);
+                            hit = Some((slot, matched));
                         }
-                        slots[slot] = Some(self.admit(req, toks, matched));
-                        return;
                     }
                 }
-            }
-            // cold-path guard: a request steered here by an affinity route
-            // whose parked KV is gone (eviction or invalidation raced the
-            // routing decision) must never see stale KV — fall back to a
-            // full prefill, loudly.
-            if req.affinity && req.prefix_hash != 0 {
-                px.counters.on_stale_route();
-                eprintln!(
-                    "instance[{}]: affinity-routed request {} found no parked \
-                     prefix (evicted or invalidated); falling back to cold prefill",
-                    self.engine.manifest.model, req.id
-                );
-            }
-            px.counters.on_miss();
-        }
-        let slot = match (0..slots.len()).find(|&s| slots[s].is_none() && !ix.is_parked(s)) {
-            Some(s) => s,
-            None => match ix.evict_lru() {
-                // every free slot holds parked KV: displace the LRU entry
-                Some((s, e)) => {
-                    px.counters.on_eviction();
-                    px.counters.on_unpark(e.kv_len() as u64 * self.kv_tok_bytes);
-                    if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
-                        r.retract(e.route_hash, q);
+                if hit.is_none() {
+                    // cold-path guard: a request steered here by an affinity
+                    // route whose parked KV is gone (eviction or
+                    // invalidation raced the routing decision) must never
+                    // see stale KV — fall back to a full prefill, loudly.
+                    if req.affinity && req.prefix_hash != 0 {
+                        px.counters.on_stale_route();
+                        eprintln!(
+                            "instance[{}]: affinity-routed request {} found no parked \
+                             prefix (evicted or invalidated); falling back to cold prefill",
+                            self.engine.manifest.model, req.id
+                        );
                     }
-                    s
+                    px.counters.on_miss();
                 }
-                // unreachable while the caller holds a free slot; degrade
-                // to slot 0 rather than panic on the hot path
-                None => 0,
-            },
+            }
+            match hit {
+                Some(placed) => placed,
+                None => {
+                    let slot = match (0..slots.len())
+                        .find(|&s| slots[s].is_none() && !ix.is_parked(s))
+                    {
+                        Some(s) => s,
+                        None => match ix.evict_lru() {
+                            // every free slot holds parked KV: displace the
+                            // LRU entry
+                            Some((s, e)) => {
+                                px.counters.on_eviction();
+                                px.counters
+                                    .on_unpark(e.kv_len() as u64 * self.kv_tok_bytes);
+                                retracts.push(e.route_hash);
+                                s
+                            }
+                            // unreachable while the caller holds a free
+                            // slot; degrade to slot 0 rather than panic on
+                            // the hot path
+                            None => 0,
+                        },
+                    };
+                    (slot, 0)
+                }
+            }
         };
-        slots[slot] = Some(self.admit(req, toks, 0));
+        if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+            for hash in retracts {
+                r.retract(hash, q);
+            }
+        }
+        slots[slot] = Some(self.stage_request(req, toks, resume));
     }
 
     /// Host-side embed dispatch with a typed failure: an embed error is a
@@ -720,17 +749,28 @@ impl LlmInstance {
                 } else {
                     prefix_route_hash(&st.req.prompt)
                 };
-                let mut ix = lock_clean(&self.prefix_ix);
-                if let Some((_, ev)) = ix.park(slot, parked, hash) {
-                    px.counters.on_eviction();
-                    px.counters.on_unpark(ev.kv_len() as u64 * self.kv_tok_bytes);
-                    if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
-                        r.retract(ev.route_hash, q);
+                // park under the index guard; router calls deferred past
+                // it (the rack-shared routes lock must not nest under the
+                // per-instance index lock)
+                let (retract_hash, advertised) = {
+                    let mut ix = lock_clean(&self.prefix_ix);
+                    let mut retract_hash = None;
+                    if let Some((_, ev)) = ix.park(slot, parked, hash) {
+                        px.counters.on_eviction();
+                        px.counters.on_unpark(ev.kv_len() as u64 * self.kv_tok_bytes);
+                        retract_hash = Some(ev.route_hash);
                     }
-                }
-                if ix.is_parked(slot) {
-                    px.counters.on_park(kv_len as u64 * self.kv_tok_bytes);
-                    if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+                    let advertised = ix.is_parked(slot);
+                    if advertised {
+                        px.counters.on_park(kv_len as u64 * self.kv_tok_bytes);
+                    }
+                    (retract_hash, advertised)
+                };
+                if let (Some(r), Some(q)) = (&px.router, &px.affinity_queue) {
+                    if let Some(h) = retract_hash {
+                        r.retract(h, q);
+                    }
+                    if advertised {
                         r.advertise(hash, q);
                     }
                 }
@@ -1078,7 +1118,10 @@ impl LlmInstance {
             // must re-prefill from token 0 to stay byte-identical, and the
             // router must stop steering conversations here.
             let px = &self.opts.prefix;
-            let dropped = lock_clean(&self.prefix_ix).clear();
+            let dropped = {
+                let mut ix = lock_clean(&self.prefix_ix);
+                ix.clear()
+            };
             if !dropped.is_empty() {
                 px.counters.on_invalidated(dropped.len() as u64);
                 for (_, ev) in &dropped {
@@ -1207,7 +1250,7 @@ impl LlmInstance {
                     // worker's streamer.join() would hang for the other
                     // worker's whole lifetime.
                     loop {
-                        if let Ok(updates) = inst.updates.try_lock() {
+                        if let Some(updates) = try_lock_clean(&inst.updates) {
                             loop {
                                 // read BEFORE the recv, applied after it:
                                 // a steady token stream from another
@@ -1389,7 +1432,7 @@ impl LlmInstance {
             // not abandoned with its tokens still queued. Bounded: an
             // abandoned client must never wait on an unbounded handoff.
             for _ in 0..4 {
-                if let Ok(updates) = inst.updates.try_lock() {
+                if let Some(updates) = try_lock_clean(&inst.updates) {
                     while let Ok(u) = updates.try_recv() {
                         pump_update(&broker, &served, u);
                     }

@@ -1,0 +1,392 @@
+//! Comment/string-aware lexer for the lint pass.
+//!
+//! Produces a flat significant-token stream (identifiers, numbers, single
+//! punctuation characters) with line numbers, plus the `npslint:allow(...)`
+//! directives found in comments. A post-pass marks tokens that belong to
+//! `#[cfg(test)]` / `#[test]` items so rules can exempt test code at item
+//! granularity — the old CI shell grep cut the file at the *first*
+//! `#[cfg(test)]` marker, which silently skipped every non-test line below
+//! an inline test-only helper (broker/mod.rs hid 21 raw lock sites that
+//! way).
+
+/// One significant token.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub line: u32,
+    /// Inside a `#[cfg(test)]` / `#[test]` item (attributes included).
+    pub is_test: bool,
+}
+
+/// An inline `// npslint:allow(rule-a, rule-b)` directive. It silences the
+/// listed rules on its own line and on the line directly below (so it can
+/// sit above the flagged statement).
+#[derive(Debug, Clone)]
+pub struct AllowDirective {
+    pub line: u32,
+    pub rules: Vec<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<AllowDirective>,
+}
+
+impl Lexed {
+    /// Is `rule` allowed at `line` by an inline directive?
+    pub fn allowed(&self, rule: &str, line: u32) -> bool {
+        self.allows.iter().any(|a| {
+            (a.line == line || a.line + 1 == line)
+                && a.rules.iter().any(|r| r == rule || r == "all")
+        })
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Extract `npslint:allow(a, b)` out of a comment's text.
+fn parse_allow(comment: &str, line: u32, out: &mut Vec<AllowDirective>) {
+    let Some(at) = comment.find("npslint:allow(") else {
+        return;
+    };
+    let rest = &comment[at + "npslint:allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        return;
+    };
+    let rules = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect::<Vec<_>>();
+    if !rules.is_empty() {
+        out.push(AllowDirective { line, rules });
+    }
+}
+
+/// Lex `src` into significant tokens. Comments never produce tokens and
+/// string/char literal *contents* never leak (a `.lock()` inside a doc
+/// comment or a format string is not a lock call); each string literal
+/// collapses to one opaque `""` token and each char literal to `''`, so
+/// call-arity checks still see the argument (`v.join(", ")` is not a bare
+/// `join()`). Raw strings, nested block comments, lifetimes, and escapes
+/// are handled.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut allows = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = b.len();
+    let bump = |c: char, line: &mut u32| {
+        if c == '\n' {
+            *line += 1;
+        }
+    };
+    while i < n {
+        let c = b[i];
+        if c.is_whitespace() {
+            bump(c, &mut line);
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            parse_allow(&text, line, &mut allows);
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let comment_line = line;
+            let mut depth = 1;
+            let start = i;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    bump(b[i], &mut line);
+                    i += 1;
+                }
+            }
+            let text: String = b[start..i.min(n)].iter().collect();
+            parse_allow(&text, comment_line, &mut allows);
+            continue;
+        }
+        // raw / byte string prefixes: r"", r#""#, br"", b""
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let is_raw = c == 'r' || (c == 'b' && b[i + 1] == 'r');
+            let mut j = if c == 'b' && b[i + 1] == 'r' { i + 2 } else { i + 1 };
+            let mut hashes = 0usize;
+            while is_raw && j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if is_raw && j < n && b[j] == '"' {
+                // raw string: scan to closing quote followed by `hashes` #s
+                let lit_line = line;
+                i = j + 1;
+                'raw: while i < n {
+                    if b[i] == '"' {
+                        let mut k = 0;
+                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            i += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    bump(b[i], &mut line);
+                    i += 1;
+                }
+                toks.push(Tok { text: "\"\"".to_string(), line: lit_line, is_test: false });
+                continue;
+            }
+            if c == 'b' && b[i + 1] == '"' {
+                // plain byte string: skip the prefix, the ordinary string
+                // scanner below handles the rest
+                i += 1;
+            }
+        }
+        // string literal
+        if b[i] == '"' {
+            let lit_line = line;
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    bump(b[i + 1], &mut line);
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                bump(b[i], &mut line);
+                i += 1;
+            }
+            toks.push(Tok { text: "\"\"".to_string(), line: lit_line, is_test: false });
+            continue;
+        }
+        // char literal vs lifetime
+        if b[i] == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // escaped char literal
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                toks.push(Tok { text: "''".to_string(), line, is_test: false });
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                // plain char literal 'x'
+                i += 3;
+                toks.push(Tok { text: "''".to_string(), line, is_test: false });
+                continue;
+            }
+            // lifetime: consume quote + identifier, no token emitted
+            i += 1;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            continue;
+        }
+        // identifier / keyword
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { text: b[start..i].iter().collect(), line, is_test: false });
+            continue;
+        }
+        // number (dots excluded on purpose: `1.5` lexes as 1 . 5, which is
+        // harmless here and keeps `0..10` ranges unambiguous)
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { text: b[start..i].iter().collect(), line, is_test: false });
+            continue;
+        }
+        // single punctuation char
+        toks.push(Tok { text: c.to_string(), line, is_test: false });
+        i += 1;
+    }
+    let mut lexed = Lexed { toks, allows };
+    mark_test_items(&mut lexed.toks);
+    lexed
+}
+
+/// Does the attribute token range `[start, end)` (between `#[` and `]`)
+/// gate the following item to test builds?
+fn attr_is_test(toks: &[Tok], start: usize, end: usize) -> bool {
+    toks[start..end].iter().any(|t| t.text == "test")
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` / `#[test]` item
+/// (including the attribute itself, stacked attributes, and the item's
+/// full brace-matched body).
+fn mark_test_items(toks: &mut Vec<Tok>) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        // outer attribute `#[ ... ]` (NOT inner `#![ ... ]`)
+        if toks[i].text == "#" && i + 1 < toks.len() && toks[i + 1].text == "[" {
+            let attr_start = i;
+            let mut j = i + 2;
+            let mut depth = 1i32;
+            while j < toks.len() && depth > 0 {
+                match toks[j].text.as_str() {
+                    "[" => depth += 1,
+                    "]" => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            let attr_end = j; // one past `]`
+            if attr_is_test(toks, attr_start + 2, attr_end.saturating_sub(1)) {
+                // skip any further stacked attributes
+                let mut k = attr_end;
+                loop {
+                    if k + 1 < toks.len() && toks[k].text == "#" && toks[k + 1].text == "[" {
+                        let mut d = 1i32;
+                        let mut m = k + 2;
+                        while m < toks.len() && d > 0 {
+                            match toks[m].text.as_str() {
+                                "[" => d += 1,
+                                "]" => d -= 1,
+                                _ => {}
+                            }
+                            m += 1;
+                        }
+                        k = m;
+                    } else {
+                        break;
+                    }
+                }
+                // the item: ends at `;` before any brace, or at the close
+                // of its first top-level brace block
+                let mut d = 0i32;
+                let mut m = k;
+                while m < toks.len() {
+                    match toks[m].text.as_str() {
+                        "{" => d += 1,
+                        "}" => {
+                            d -= 1;
+                            if d == 0 {
+                                m += 1;
+                                break;
+                            }
+                        }
+                        ";" if d == 0 => {
+                            m += 1;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    m += 1;
+                }
+                for t in toks[attr_start..m.min(toks.len())].iter_mut() {
+                    t.is_test = true;
+                }
+                i = m;
+                continue;
+            }
+            i = attr_end;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let toks = texts(
+            r#"fn f() { // a .lock() in a comment
+                let s = "x.lock()"; /* and /* nested */ .lock() */ s.len()
+            }"#,
+        );
+        assert!(!toks.iter().any(|t| t == "lock"));
+        assert!(toks.iter().any(|t| t == "len"));
+    }
+
+    #[test]
+    fn handles_lifetimes_and_chars() {
+        let toks = texts("fn f<'a>(p: &'a str) -> char { 'x' }");
+        assert!(toks.iter().any(|t| t == "str"));
+        // lifetimes vanish entirely; char literals collapse to an opaque
+        // placeholder so call arity stays visible
+        assert!(!toks.iter().any(|t| t == "a" || t == "x"));
+        assert!(toks.iter().any(|t| t == "''"));
+    }
+
+    #[test]
+    fn literals_keep_call_arity_visible() {
+        // `v.join(", ")` must not lex as a bare `join()` — the blocking
+        // rule keys thread-join on zero-arg calls
+        let toks = texts(r#"fn f(v: &[&str]) { v.join(", "); }"#);
+        let at = toks.iter().position(|t| t == "join").unwrap();
+        assert_eq!(toks[at + 1], "(");
+        assert_eq!(toks[at + 2], "\"\"");
+        assert_eq!(toks[at + 3], ")");
+    }
+
+    #[test]
+    fn raw_strings_do_not_leak_tokens() {
+        let toks = texts(r##"fn f() { let s = r#"m.lock()"#; s }"##);
+        assert!(!toks.iter().any(|t| t == "lock"));
+    }
+
+    #[test]
+    fn marks_inline_test_items_not_rest_of_file() {
+        // regression for the CI-grep blind spot: a test-only helper early
+        // in the file must not exempt the non-test code after it
+        let l = lex(
+            "impl W {\n #[cfg(test)]\n fn last(&self) -> usize { self.x.lock() }\n\
+             fn live(&self) { self.x.lock(); }\n}",
+        );
+        let lock_flags: Vec<bool> = l
+            .toks
+            .iter()
+            .filter(|t| t.text == "lock")
+            .map(|t| t.is_test)
+            .collect();
+        assert_eq!(lock_flags, vec![true, false]);
+    }
+
+    #[test]
+    fn allow_directives_are_parsed_and_scoped() {
+        let l = lex("// npslint:allow(panic-path, lock-order)\nfn f() {}\nfn g() {}\n");
+        assert!(l.allowed("panic-path", 1));
+        assert!(l.allowed("lock-order", 2));
+        assert!(!l.allowed("panic-path", 3), "directive covers only its line and the next");
+        assert!(!l.allowed("lock-discipline", 2));
+    }
+}

@@ -1,0 +1,14 @@
+//! `npslint` — repo-local static analysis for the npserve tree.
+//!
+//! Zero dependencies, no rustc plugin: a comment/string-aware lexer
+//! ([`lexer`]) feeds a set of lexical rules ([`rules`]) that enforce the
+//! repo's concurrency invariants — poison-recovering lock discipline, the
+//! declared lock hierarchy, no blocking while a guard is live, the panic
+//! denylist, and metrics registration. See `rust/src/util/sync.rs` for the
+//! canonical lock order and EXPERIMENTS.md §Static-analysis for the rule
+//! table.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_files, lint_tree, Finding, Rule};

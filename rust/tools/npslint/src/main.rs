@@ -1,0 +1,37 @@
+//! CLI: `npslint [PATH ...]` — lint each path (file or directory tree),
+//! print findings as `file:line: [rule] message`, exit 1 if any.
+//!
+//! With no arguments it lints `rust/src` relative to the current directory
+//! (the repo-root invocation CI uses).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut paths: Vec<PathBuf> = std::env::args_os().skip(1).map(PathBuf::from).collect();
+    if paths.is_empty() {
+        paths.push(PathBuf::from("rust/src"));
+    }
+    let mut total = 0usize;
+    for root in &paths {
+        match npslint::lint_tree(root) {
+            Ok(findings) => {
+                for f in &findings {
+                    println!("{f}");
+                }
+                total += findings.len();
+            }
+            Err(e) => {
+                eprintln!("npslint: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if total > 0 {
+        eprintln!("npslint: {total} finding(s)");
+        ExitCode::FAILURE
+    } else {
+        println!("npslint: clean");
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,810 @@
+//! The lint rules. All are lexical — they work on the token stream from
+//! [`crate::lexer`], with brace-matched function bodies and a conservative
+//! guard-lifetime model (no type information, so a guard whose lifetime a
+//! reader cannot see at a glance is assumed live until its enclosing block
+//! closes).
+//!
+//! Rules:
+//!   * `lock-discipline` — raw `.lock()` / `.try_lock()` / `.wait()` /
+//!     `.wait_timeout()` are denied everywhere outside `util/sync.rs`;
+//!     code must go through `lock_clean` / `try_lock_clean` / `wait_clean`
+//!     / `wait_timeout_clean`, which recover poisoned mutexes so one
+//!     panicked worker can't deadlock the rack. Applies to test code too.
+//!   * `lock-order` — the declared hierarchy (registry → broker →
+//!     inventory → prefix → metrics; see `util/sync.rs`) must be acquired
+//!     in rank order within a function body: taking an earlier-rank or
+//!     same-rank lock while a later-or-equal-rank guard is live is an
+//!     inversion (same-rank reacquire self-deadlocks on std's
+//!     non-reentrant Mutex).
+//!   * `block-under-lock` — unbounded blocking calls (`join`, deadline-less
+//!     `recv`, `sleep`, `park`, broker `consume`, `wait_committed`) are
+//!     denied while any guard is (conservatively) live.
+//!   * `panic-path` — `panic!` / `.unwrap()` / `.expect(` / `todo!` /
+//!     `unimplemented!` are denied in non-test code of the concurrent
+//!     serving modules (npruntime, card, fault, broker, rack/*,
+//!     service/*). Exempt: `#[cfg(test)]` items, `// npslint:allow(...)`.
+//!   * `metrics-reg` — every `*Counters` type must surface in
+//!     `FleetMetrics` as its `*Snapshot`, so new counters can't silently
+//!     vanish from fleet observability.
+
+use std::path::Path;
+
+use crate::lexer::{lex, Lexed, Tok};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    LockDiscipline,
+    LockOrder,
+    BlockUnderLock,
+    PanicPath,
+    MetricsReg,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::LockDiscipline => "lock-discipline",
+            Rule::LockOrder => "lock-order",
+            Rule::BlockUnderLock => "block-under-lock",
+            Rule::PanicPath => "panic-path",
+            Rule::MetricsReg => "metrics-reg",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.id(), self.msg)
+    }
+}
+
+// ------------------------------------------------------------ lock classes
+
+/// The declared lock hierarchy. Rank order IS acquisition order: while
+/// holding a lock of rank r you may only acquire ranks > r.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Class {
+    Registry = 0,
+    Broker = 1,
+    Inventory = 2,
+    Prefix = 3,
+    Metrics = 4,
+}
+
+impl Class {
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Registry => "registry",
+            Class::Broker => "broker",
+            Class::Inventory => "inventory",
+            Class::Prefix => "prefix",
+            Class::Metrics => "metrics",
+        }
+    }
+}
+
+/// Classify a lock by the final field identifier of the mutex expression
+/// (`lock_clean(&self.shared.state)` → `state`), disambiguated by file
+/// where field names collide. Locks outside the table are unclassified:
+/// exempt from ordering, still subject to `block-under-lock`.
+fn classify(file: &str, field: &str) -> Option<Class> {
+    match field {
+        "reg" => Some(Class::Registry),
+        "queues" | "responses" => Some(Class::Broker),
+        "routes" | "prefix_ix" => Some(Class::Prefix),
+        "records" | "events" => Some(Class::Metrics),
+        "state" if file.ends_with("broker/mod.rs") => Some(Class::Broker),
+        "state" if file.ends_with("rack/inventory.rs") => Some(Class::Inventory),
+        _ => None,
+    }
+}
+
+/// Methods that acquire a classified lock inside their callee (transient:
+/// taken and released before returning). This is how the intra-function
+/// pass sees cross-module nesting like `broker.stats(..)` under a live
+/// registry guard.
+fn method_class(name: &str) -> Option<Class> {
+    match name {
+        // rack::RackService (all lock self.reg). NOTE: the table is keyed
+        // by bare method name, so names listed here must stay unique
+        // repo-wide (`drain_complete` is deliberately absent —
+        // LlmInstance has a lock-free method of the same name).
+        "admit" | "load_of" | "capacity_of" | "in_flight_of" | "instance_counts_of"
+        | "fleet_metrics" | "scale_down_candidate" | "dead_instance_of"
+        | "teardown" | "shutdown_all" => Some(Class::Registry),
+        // broker::Broker / Queue (all lock queue or broker maps)
+        "post" | "requeue" | "consume" | "consume_deadline" | "try_consume" | "close"
+        | "stats" | "depth" | "sample_depth" | "is_closed" | "register_consumer" | "migrate"
+        | "abandon_all" | "response" | "remove_response" => Some(Class::Broker),
+        // rack::CardInventory
+        "lease" | "lease_for" | "in_use" | "available" | "largest_gap" | "can_fit"
+        | "leases" => Some(Class::Inventory),
+        // service::PrefixRouter
+        "advertise" | "retract" | "retract_queue" | "lookup" => Some(Class::Prefix),
+        _ => None,
+    }
+}
+
+/// Unbounded blocking method calls (by method name, called as `.name(`).
+/// `join` and `recv` additionally require a bare call — `v.join(", ")` is
+/// slice join and `recv_timeout` is a different token; `thread::park` is
+/// matched as a path, never a method (`PrefixIndex::park` parks KV).
+fn blocking_method(name: &str) -> bool {
+    matches!(name, "join" | "recv" | "consume" | "wait_committed")
+}
+
+/// Files the panic denylist covers: the concurrent serving fabric.
+fn panic_scope(file: &str) -> bool {
+    // findings use root-relative paths like `broker/mod.rs`; prepend a
+    // slash so `/broker/` matches top-level directories too
+    let f = format!("/{}", file.replace('\\', "/"));
+    f.contains("/npruntime/")
+        || f.contains("/card/")
+        || f.contains("/fault/")
+        || f.contains("/broker/")
+        || f.contains("/rack/")
+        || f.contains("/service/")
+}
+
+fn in_util_sync(file: &str) -> bool {
+    file.replace('\\', "/").ends_with("util/sync.rs")
+}
+
+// -------------------------------------------------------------- guard model
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Scope {
+    /// Dies at the end of the current statement.
+    Stmt,
+    /// Dies when the enclosing block closes (named `let g = lock_clean(..)`
+    /// bindings, and — conservatively — `let x = lock_clean(..).chain()`
+    /// bindings, whose guard lifetime a lexical pass cannot prove short).
+    Block,
+    /// Scrutinee temporary of `if let` / `while let` / `for` / `match`:
+    /// lives through the construct's body block(s), carried across `else`.
+    Construct,
+}
+
+#[derive(Debug, Clone)]
+struct Guard {
+    name: Option<String>,
+    class: Option<Class>,
+    line: u32,
+    scope: Scope,
+    /// What the guard lexically locks, for messages.
+    expr: String,
+}
+
+#[derive(Debug, Default)]
+struct Block {
+    guards: Vec<Guard>,
+    /// Closure body: guards of outer blocks are not live in here (the
+    /// closure runs on another thread / at another time).
+    closure: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StmtKind {
+    None,
+    Let,
+    /// `if` / `while` / `for` / `match` — scrutinee temporaries live
+    /// through the construct's body blocks.
+    Construct,
+    Expr,
+}
+
+struct FnWalker<'a> {
+    file: &'a str,
+    lexed: &'a Lexed,
+    findings: &'a mut Vec<Finding>,
+    blocks: Vec<Block>,
+    /// Construct-scrutinee guards waiting for the construct's body block.
+    pending_construct: Vec<Guard>,
+    stmt_kind: StmtKind,
+    /// Block depth at which the current statement started.
+    stmt_depth: usize,
+    /// Candidate binding name for `let <ident> = ...`.
+    let_name: Option<String>,
+    seen_eq: bool,
+    fn_name: String,
+}
+
+impl<'a> FnWalker<'a> {
+    /// Guards live at the current point: pending construct scrutinees plus
+    /// everything in blocks at or above the innermost closure boundary.
+    fn live_guards(&self) -> Vec<&Guard> {
+        let mut out: Vec<&Guard> = self.pending_construct.iter().collect();
+        for b in self.blocks.iter().rev() {
+            out.extend(b.guards.iter());
+            if b.closure {
+                break;
+            }
+        }
+        out
+    }
+
+    /// File a new guard where its scope dictates.
+    fn add_guard(&mut self, guard: Guard) {
+        if guard.scope == Scope::Construct {
+            self.pending_construct.push(guard);
+        } else if let Some(b) = self.blocks.last_mut() {
+            b.guards.push(guard);
+        }
+    }
+
+    fn reset_stmt(&mut self) {
+        self.stmt_kind = StmtKind::None;
+        self.let_name = None;
+        self.seen_eq = false;
+    }
+
+    fn kill_stmt_guards(&mut self) {
+        if let Some(b) = self.blocks.last_mut() {
+            b.guards.retain(|g| g.scope != Scope::Stmt);
+        }
+    }
+
+    fn allowed(&self, rule: Rule, line: u32) -> bool {
+        self.lexed.allowed(rule.id(), line)
+    }
+
+    fn report(&mut self, rule: Rule, line: u32, msg: String) {
+        if !self.allowed(rule, line) {
+            self.findings.push(Finding { file: self.file.to_string(), line, rule, msg });
+        }
+    }
+
+    /// Ordering check for acquiring `class` (directly or via a callee) at
+    /// `line` while other guards are live.
+    fn check_order(&mut self, class: Class, line: u32, what: &str) {
+        let conflict = self
+            .live_guards()
+            .iter()
+            .filter_map(|g| g.class.map(|c| (c, g.line, g.expr.clone())))
+            .find(|(held, _, _)| *held >= class);
+        if let Some((held, held_line, held_expr)) = conflict {
+            let how = if held == class { "same-class reacquire" } else { "inverted order" };
+            let msg = format!(
+                "{how}: acquiring {}-class lock ({what}) while {}-class guard \
+                 ({held_expr}, line {held_line}) is live; declared order is \
+                 registry → broker → inventory → prefix → metrics (util/sync.rs)",
+                class.name(),
+                held.name(),
+            );
+            self.report(Rule::LockOrder, line, msg);
+        }
+    }
+
+    fn check_blocking(&mut self, line: u32, what: &str) {
+        let held: Vec<String> = self
+            .live_guards()
+            .iter()
+            .map(|g| format!("{} (line {})", g.expr, g.line))
+            .collect();
+        if !held.is_empty() {
+            let msg = format!(
+                "blocking call `{what}` in `{}` while a lock guard is live: {}; \
+                 release the guard (explicit scope or drop()) before blocking",
+                self.fn_name,
+                held.join(", "),
+            );
+            self.report(Rule::BlockUnderLock, line, msg);
+        }
+    }
+}
+
+/// Extract the last field identifier from the argument tokens of a
+/// `lock_clean(&self.shared.state)`-style call.
+fn last_field(arg: &[Tok]) -> String {
+    arg.iter()
+        .rev()
+        .find(|t| t.text.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_'))
+        .map(|t| t.text.clone())
+        .unwrap_or_default()
+}
+
+fn render(arg: &[Tok]) -> String {
+    let mut s = String::new();
+    for t in arg {
+        s.push_str(&t.text);
+    }
+    s
+}
+
+/// Walk one function body (token range `[start, end)` covering the outer
+/// braces) applying the lock rules.
+#[allow(clippy::too_many_arguments)]
+fn walk_body(
+    file: &str,
+    lexed: &Lexed,
+    toks: &[Tok],
+    start: usize,
+    end: usize,
+    fn_name: &str,
+    findings: &mut Vec<Finding>,
+) {
+    let mut w = FnWalker {
+        file,
+        lexed,
+        findings,
+        blocks: Vec::new(),
+        pending_construct: Vec::new(),
+        stmt_kind: StmtKind::None,
+        stmt_depth: 0,
+        let_name: None,
+        seen_eq: false,
+        fn_name: fn_name.to_string(),
+    };
+    // pending closure-body marker: the NEXT `{` opens a closure body
+    let mut pending_closure = false;
+    let mut i = start;
+    while i < end {
+        let t = &toks[i].text;
+        match t.as_str() {
+            "{" => {
+                let mut blk = Block { guards: Vec::new(), closure: pending_closure };
+                pending_closure = false;
+                // a construct's scrutinee guards live inside its body
+                blk.guards.append(&mut w.pending_construct);
+                w.blocks.push(blk);
+                w.reset_stmt();
+                i += 1;
+                continue;
+            }
+            "}" => {
+                let popped = w.blocks.pop().unwrap_or_default();
+                let next = toks.get(i + 1).map(|t| t.text.as_str());
+                if next == Some("else") {
+                    // if-let scrutinee temporaries live through the else
+                    // branch; re-queue them for its block
+                    w.pending_construct
+                        .extend(popped.guards.into_iter().filter(|g| g.scope == Scope::Construct));
+                }
+                i += 1;
+                continue;
+            }
+            ";" => {
+                w.kill_stmt_guards();
+                w.reset_stmt();
+                i += 1;
+                continue;
+            }
+            _ => {}
+        }
+        // statement-kind bookkeeping
+        if w.stmt_kind == StmtKind::None {
+            w.stmt_depth = w.blocks.len();
+            w.stmt_kind = match t.as_str() {
+                "let" => StmtKind::Let,
+                "if" | "while" | "for" | "match" => StmtKind::Construct,
+                _ => StmtKind::Expr,
+            };
+            if w.stmt_kind == StmtKind::Let {
+                // `let [mut] <ident> =` captures a simple binding name
+                let mut j = i + 1;
+                if toks.get(j).is_some_and(|t| t.text == "mut") {
+                    j += 1;
+                }
+                if toks.get(j).map(|t| t.text.as_str()) > Some("")
+                    && toks.get(j).is_some_and(|t| {
+                        t.text.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+                    })
+                    && toks.get(j + 1).is_some_and(|t| t.text == "=" || t.text == ":")
+                {
+                    w.let_name = Some(toks[j].text.clone());
+                }
+                i += 1;
+                continue;
+            }
+        }
+        if t == "=" && w.stmt_kind == StmtKind::Let {
+            w.seen_eq = true;
+            i += 1;
+            continue;
+        }
+        // closure start: `|` after a token that cannot be a binary operand
+        if t == "|" {
+            let prev = if i == start { "" } else { toks[i - 1].text.as_str() };
+            if matches!(prev, "(" | "," | "=" | "move" | ">" | "{" | ";" | "&" | "return")
+                || prev.is_empty()
+            {
+                // scan params to the matching `|`
+                let mut j = i + 1;
+                while j < end && toks[j].text != "|" {
+                    j += 1;
+                }
+                if toks.get(j + 1).is_some_and(|t| t.text == "{") {
+                    pending_closure = true;
+                }
+                i = j + 1;
+                continue;
+            }
+        }
+        // drop(name): guard released early
+        if t == "drop"
+            && toks.get(i + 1).is_some_and(|t| t.text == "(")
+            && toks.get(i + 3).is_some_and(|t| t.text == ")")
+        {
+            let name = toks[i + 2].text.clone();
+            for b in w.blocks.iter_mut() {
+                b.guards.retain(|g| g.name.as_deref() != Some(name.as_str()));
+            }
+            i += 4;
+            continue;
+        }
+        // sanctioned lock helpers create guards
+        if (t == "lock_clean" || t == "try_lock_clean")
+            && toks.get(i + 1).is_some_and(|t| t.text == "(")
+        {
+            let line = toks[i].line;
+            // argument tokens to the matching `)`
+            let mut depth = 1i32;
+            let mut j = i + 2;
+            let arg_start = j;
+            while j < end && depth > 0 {
+                match toks[j].text.as_str() {
+                    "(" => depth += 1,
+                    ")" => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            let arg = &toks[arg_start..j.saturating_sub(1)];
+            let class = classify(file, &last_field(arg));
+            if let Some(c) = class {
+                w.check_order(c, line, &render(arg));
+            }
+            let after = toks.get(j).map(|t| t.text.as_str());
+            let (scope, name) = if w.stmt_kind == StmtKind::Let
+                && w.seen_eq
+                && w.blocks.len() == w.stmt_depth
+            {
+                if after == Some(";") {
+                    // `let g = lock_clean(&m);` — named, block-scoped
+                    (Scope::Block, w.let_name.clone())
+                } else {
+                    // `let x = lock_clean(&m).method()...;` — without type
+                    // info the binding may borrow the guard: conservatively
+                    // block-scoped and anonymous (undroppable). Use an
+                    // explicit `{ }` scope to bound it.
+                    (Scope::Block, None)
+                }
+            } else if w.stmt_kind == StmtKind::Construct && w.blocks.len() == w.stmt_depth {
+                // scrutinee temporary: lives through the construct body
+                (Scope::Construct, None)
+            } else {
+                (Scope::Stmt, None)
+            };
+            w.add_guard(Guard { name, class, line, scope, expr: render(arg) });
+            i = j;
+            continue;
+        }
+        // raw lock / wait calls: lock-discipline violations
+        if (t == "lock" || t == "try_lock" || t == "wait" || t == "wait_timeout")
+            && i > start
+            && toks[i - 1].text == "."
+            && toks.get(i + 1).is_some_and(|t| t.text == "(")
+            && !in_util_sync(file)
+        {
+            let line = toks[i].line;
+            let replacement = match t.as_str() {
+                "lock" => "util::sync::lock_clean",
+                "try_lock" => "util::sync::try_lock_clean",
+                "wait" => "util::sync::wait_clean",
+                _ => "util::sync::wait_timeout_clean",
+            };
+            w.report(
+                Rule::LockDiscipline,
+                line,
+                format!(
+                    "raw `.{t}()` in `{fn_name}` bypasses poison recovery; use {replacement}"
+                ),
+            );
+            // model `.lock()`/`.try_lock()` as a guard anyway so the other
+            // rules still see it (fixtures, unswept branches)
+            if t == "lock" || t == "try_lock" {
+                // receiver: walk back over `ident . ident . …`
+                let mut k = i - 1; // at `.`
+                let mut first = k;
+                while k >= 1 {
+                    let prev = &toks[k - 1].text;
+                    let is_part = prev == "."
+                        || prev == "self"
+                        || prev
+                            .chars()
+                            .next()
+                            .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+                    if is_part {
+                        first = k - 1;
+                        k -= 1;
+                    } else {
+                        break;
+                    }
+                }
+                let recv = &toks[first..i.saturating_sub(1).max(first)];
+                let field = last_field(recv);
+                let class = classify(file, &field);
+                if let Some(c) = class {
+                    w.check_order(c, line, &render(recv));
+                }
+                let scope = if w.stmt_kind == StmtKind::Let && w.seen_eq {
+                    Scope::Block
+                } else if w.stmt_kind == StmtKind::Construct && w.blocks.len() == w.stmt_depth {
+                    Scope::Construct
+                } else {
+                    Scope::Stmt
+                };
+                w.add_guard(Guard { name: None, class, line, scope, expr: render(recv) });
+            }
+            i += 1;
+            continue;
+        }
+        // method calls: transient classified acquisitions + blocking calls
+        if i > start
+            && toks[i - 1].text == "."
+            && toks.get(i + 1).is_some_and(|t| t.text == "(")
+        {
+            let line = toks[i].line;
+            if let Some(c) = method_class(t) {
+                w.check_order(c, line, &format!(".{t}(..)"));
+            }
+            if blocking_method(t) {
+                // join/recv have non-blocking namesakes taking args
+                // (slice::join(sep); recv_timeout is a different token);
+                // consume/wait_committed block regardless of arity
+                let bare_call = toks.get(i + 2).is_some_and(|t| t.text == ")");
+                if matches!(t.as_str(), "consume" | "wait_committed") || bare_call {
+                    let what = format!(".{t}()");
+                    w.check_blocking(line, &what);
+                }
+            }
+        }
+        // path blocking calls: thread::sleep / thread::park
+        if (t == "sleep" || t == "park")
+            && i >= 2
+            && toks[i - 1].text == ":"
+            && toks[i - 2].text == ":"
+            && toks.get(i + 1).is_some_and(|t| t.text == "(")
+        {
+            let line = toks[i].line;
+            let what = format!("thread::{t}()");
+            w.check_blocking(line, &what);
+        }
+        i += 1;
+    }
+}
+
+// ------------------------------------------------------------ per-file pass
+
+/// Lint one file's token stream (lock rules + panic rule). `rel` is the
+/// path as reported in findings and used for scope decisions.
+fn lint_tokens(rel: &str, lexed: &Lexed, findings: &mut Vec<Finding>) {
+    let toks = &lexed.toks;
+    // ---- panic denylist (non-test tokens in scoped files)
+    if panic_scope(rel) {
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if !t.is_test {
+                let bang = toks.get(i + 1).is_some_and(|n| n.text == "!");
+                let call = toks.get(i + 1).is_some_and(|n| n.text == "(");
+                let dotted = i > 0 && toks[i - 1].text == ".";
+                let hit = match t.text.as_str() {
+                    "panic" | "todo" | "unimplemented" => bang,
+                    "unwrap" | "expect" => dotted && call,
+                    _ => false,
+                };
+                if hit && !lexed.allowed(Rule::PanicPath.id(), t.line) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: t.line,
+                        rule: Rule::PanicPath,
+                        msg: format!(
+                            "`{}` on the packet hot path: a panicking worker poisons its \
+                             mutexes and takes the instance down; fail typed \
+                             (ChainError/RackError) instead",
+                            if bang { format!("{}!", t.text) } else { format!(".{}(", t.text) }
+                        ),
+                    });
+                }
+            }
+            i += 1;
+        }
+    }
+    // ---- lock rules, per function body (test code included: discipline is
+    // uniform, and tests poison locks more than anyone)
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text == "fn" {
+            let name = toks
+                .get(i + 1)
+                .map(|t| t.text.clone())
+                .unwrap_or_else(|| "?".to_string());
+            // body: first `{` not inside parens (generics carry no braces)
+            let mut j = i + 1;
+            let mut paren = 0i32;
+            let mut body_start = None;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "(" => paren += 1,
+                    ")" => paren -= 1,
+                    ";" if paren == 0 => break, // trait method decl, no body
+                    "{" if paren == 0 => {
+                        body_start = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(bs) = body_start {
+                let mut depth = 0i32;
+                let mut k = bs;
+                while k < toks.len() {
+                    match toks[k].text.as_str() {
+                        "{" => depth += 1,
+                        "}" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                k += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                walk_body(rel, lexed, toks, bs, k, &name, findings);
+                // nested fns are rare and re-walked harmlessly; skip only
+                // past the header so inner `fn` tokens get their own walk
+                i += 1;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+// -------------------------------------------------------- metrics-reg rule
+
+#[derive(Default)]
+struct MetricsInventory {
+    /// (file, line, stem) for each `struct <stem>Counters` in non-test code.
+    counters: Vec<(String, u32, String)>,
+    /// Identifiers appearing inside `struct FleetMetrics { .. }`.
+    fleet_fields: Vec<String>,
+    fleet_seen: bool,
+}
+
+fn collect_metrics(rel: &str, lexed: &Lexed, inv: &mut MetricsInventory) {
+    let toks = &lexed.toks;
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        if toks[i].text == "struct" && !toks[i].is_test {
+            let name = &toks[i + 1].text;
+            if let Some(stem) = name.strip_suffix("Counters") {
+                if !stem.is_empty() {
+                    inv.counters.push((rel.to_string(), toks[i + 1].line, stem.to_string()));
+                }
+            }
+            if name == "FleetMetrics" {
+                inv.fleet_seen = true;
+                // capture idents inside the struct body
+                let mut j = i + 2;
+                while j < toks.len() && toks[j].text != "{" {
+                    j += 1;
+                }
+                let mut depth = 0i32;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "{" => depth += 1,
+                        "}" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => inv.fleet_fields.push(toks[j].text.clone()),
+                    }
+                    j += 1;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+// ------------------------------------------------------------- entry points
+
+/// Lint a set of files as one tree (the metrics rule is cross-file).
+/// `display_base` trims finding paths for readability.
+pub fn lint_files(files: &[std::path::PathBuf], display_base: Option<&Path>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut metrics = MetricsInventory::default();
+    let mut metrics_allowed: Vec<(String, u32)> = Vec::new();
+    for path in files {
+        let Ok(src) = std::fs::read_to_string(path) else {
+            continue;
+        };
+        let rel = display_base
+            .and_then(|b| path.strip_prefix(b).ok())
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let lexed = lex(&src);
+        lint_tokens(&rel, &lexed, &mut findings);
+        let before = metrics.counters.len();
+        collect_metrics(&rel, &lexed, &mut metrics);
+        for (f, l, _) in &metrics.counters[before..] {
+            if lexed.allowed(Rule::MetricsReg.id(), *l) {
+                metrics_allowed.push((f.clone(), *l));
+            }
+        }
+    }
+    for (file, line, stem) in &metrics.counters {
+        if metrics_allowed.iter().any(|(f, l)| f == file && l == line) {
+            continue;
+        }
+        let snapshot = format!("{stem}Snapshot");
+        let registered = metrics.fleet_seen && metrics.fleet_fields.iter().any(|t| t == &snapshot);
+        if !registered {
+            findings.push(Finding {
+                file: file.clone(),
+                line: *line,
+                rule: Rule::MetricsReg,
+                msg: if metrics.fleet_seen {
+                    format!(
+                        "`{stem}Counters` is not rolled into FleetMetrics (no `{snapshot}` \
+                         field): its tallies are invisible to fleet observability"
+                    )
+                } else {
+                    format!(
+                        "`{stem}Counters` found but no `FleetMetrics` struct in the tree \
+                         to register it in"
+                    )
+                },
+            });
+        }
+    }
+    findings
+}
+
+/// Recursively collect `.rs` files under `root` (sorted for stable output)
+/// and lint them as one tree.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files).map_err(|e| format!("{}: {e}", root.display()))?;
+    if files.is_empty() {
+        return Err(format!("{}: no .rs files found", root.display()));
+    }
+    files.sort();
+    Ok(lint_files(&files, Some(root)))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    if dir.is_file() {
+        if dir.extension().is_some_and(|e| e == "rs") {
+            out.push(dir.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Fixture-driven rule proofs: every rule is demonstrated by a violating
+//! fixture (exact lines asserted) and a clean fixture (zero findings),
+//! and the self-check pins the real `rust/src` tree to a clean lint with
+//! no `lock-discipline` allowlist escapes.
+
+use std::path::{Path, PathBuf};
+
+use npslint::{lint_files, lint_tree, Finding, Rule};
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn lint_fixture(rel: &str) -> Vec<Finding> {
+    let base = fixtures();
+    lint_files(&[base.join(rel)], Some(base.as_path()))
+}
+
+/// Every finding carries `rule`, and the finding lines match exactly.
+fn assert_findings(findings: &[Finding], rule: Rule, lines: &[u32]) {
+    let got: Vec<u32> = findings.iter().map(|f| f.line).collect();
+    assert_eq!(got, lines, "unexpected finding lines: {findings:#?}");
+    for f in findings {
+        assert_eq!(f.rule, rule, "unexpected rule in {f}");
+    }
+}
+
+#[test]
+fn lock_discipline_flags_every_raw_primitive() {
+    let f = lint_fixture("lock_discipline_bad.rs");
+    assert_findings(&f, Rule::LockDiscipline, &[11, 15, 19, 21, 26, 27]);
+}
+
+#[test]
+fn lock_discipline_accepts_the_clean_wrappers() {
+    assert!(lint_fixture("lock_discipline_clean.rs").is_empty());
+}
+
+#[test]
+fn lock_order_flags_inversion_and_reacquire() {
+    let f = lint_fixture("lock_order_bad.rs");
+    assert_findings(&f, Rule::LockOrder, &[16, 23]);
+    assert!(f[0].msg.contains("inverted order"), "{}", f[0]);
+    assert!(f[1].msg.contains("same-class reacquire"), "{}", f[1]);
+}
+
+#[test]
+fn lock_order_accepts_rank_order_nesting() {
+    assert!(lint_fixture("lock_order_clean.rs").is_empty());
+}
+
+#[test]
+fn block_under_lock_flags_join_sleep_recv() {
+    let f = lint_fixture("block_under_lock_bad.rs");
+    assert_findings(&f, Rule::BlockUnderLock, &[14, 20, 26]);
+}
+
+#[test]
+fn block_under_lock_accepts_released_guards_and_namesakes() {
+    // covers: scope/drop release, `recv_timeout`, slice `join(sep)`, and
+    // the closure boundary (outer guards are not live in a spawned body)
+    assert!(lint_fixture("block_under_lock_clean.rs").is_empty());
+}
+
+#[test]
+fn panic_path_flags_unwrap_expect_panic_todo() {
+    let f = lint_fixture("broker/panic_bad.rs");
+    assert_findings(&f, Rule::PanicPath, &[5, 9, 13, 17]);
+}
+
+#[test]
+fn panic_path_exempts_tests_and_inline_allows() {
+    assert!(lint_fixture("broker/panic_clean.rs").is_empty());
+}
+
+#[test]
+fn panic_path_scopes_to_serving_modules() {
+    // same violating source outside the denylisted directories is fine:
+    // the rule covers the concurrent serving fabric, not the whole tree
+    let base = fixtures();
+    let broker = base.join("broker");
+    let in_scope = lint_files(&[base.join("broker/panic_bad.rs")], Some(base.as_path()));
+    let out_of_scope = lint_files(&[base.join("broker/panic_bad.rs")], Some(broker.as_path()));
+    assert!(!in_scope.is_empty());
+    assert!(out_of_scope.is_empty());
+}
+
+#[test]
+fn metrics_reg_flags_unregistered_counters() {
+    let f = lint_fixture("metrics_bad.rs");
+    assert_findings(&f, Rule::MetricsReg, &[5]);
+    assert!(f[0].msg.contains("RetryCounters"), "{}", f[0]);
+}
+
+#[test]
+fn metrics_reg_accepts_registered_counters() {
+    assert!(lint_fixture("metrics_clean.rs").is_empty());
+}
+
+// ---------------------------------------------------------- self-check
+
+fn real_src() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src")
+}
+
+/// The tree this lint ships with must pass it — CI runs the binary, this
+/// test keeps `cargo test` sufficient to catch a regression locally.
+#[test]
+fn real_tree_lints_clean() {
+    let findings = lint_tree(&real_src()).expect("lint rust/src");
+    assert!(
+        findings.is_empty(),
+        "rust/src must lint clean:\n{}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+/// Lock discipline holds with zero allowlist escapes: nothing in rust/src
+/// silences `lock-discipline` (or wildcards it) via `npslint:allow`.
+#[test]
+fn real_tree_has_no_lock_discipline_allows() {
+    fn walk(dir: &Path, hits: &mut Vec<String>) {
+        for entry in std::fs::read_dir(dir).expect("read_dir") {
+            let p = entry.expect("entry").path();
+            if p.is_dir() {
+                walk(&p, hits);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                let src = std::fs::read_to_string(&p).expect("read");
+                for (n, l) in src.lines().enumerate() {
+                    if let Some(at) = l.find("npslint:allow(") {
+                        let directive = &l[at..];
+                        if directive.contains("lock-discipline") || directive.contains("all") {
+                            hits.push(format!("{}:{}: {}", p.display(), n + 1, l.trim()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut hits = Vec::new();
+    walk(&real_src(), &mut hits);
+    assert!(hits.is_empty(), "lock-discipline allowlist must stay empty:\n{}", hits.join("\n"));
+}

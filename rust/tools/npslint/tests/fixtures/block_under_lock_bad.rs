@@ -1,0 +1,29 @@
+//! Violating fixture: unbounded blocking while a guard is live.
+use std::sync::Mutex;
+
+use crate::util::sync::lock_clean;
+
+struct S {
+    reg: Mutex<u32>,
+    state: Mutex<u32>,
+}
+
+impl S {
+    fn joins_under_guard(&self, h: std::thread::JoinHandle<()>) {
+        let g = lock_clean(&self.reg);
+        let _ = h.join();
+        drop(g);
+    }
+
+    fn sleeps_under_guard(&self) {
+        let g = lock_clean(&self.state);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        drop(g);
+    }
+
+    fn recvs_under_guard(&self, rx: &std::sync::mpsc::Receiver<u32>) {
+        let g = lock_clean(&self.state);
+        let _ = rx.recv();
+        drop(g);
+    }
+}

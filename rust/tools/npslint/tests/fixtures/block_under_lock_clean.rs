@@ -1,0 +1,44 @@
+//! Clean fixture: guards released (scope or drop) before blocking, and
+//! the non-blocking namesakes (`recv_timeout`, slice `join(sep)`) are
+//! fine even under a guard.
+use std::sync::Mutex;
+
+use crate::util::sync::lock_clean;
+
+struct S {
+    reg: Mutex<u32>,
+    state: Mutex<u32>,
+}
+
+impl S {
+    fn joins_after_release(&self, h: std::thread::JoinHandle<()>) {
+        {
+            let g = lock_clean(&self.reg);
+            let _ = g;
+        }
+        let _ = h.join();
+    }
+
+    fn drops_before_sleep(&self) {
+        let g = lock_clean(&self.state);
+        drop(g);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+
+    fn bounded_namesakes_are_fine(&self, rx: &std::sync::mpsc::Receiver<u32>) {
+        let g = lock_clean(&self.reg);
+        let _ = rx.recv_timeout(std::time::Duration::from_millis(5));
+        let _ = ["a", "b"].join(", ");
+        drop(g);
+    }
+
+    /// A closure body runs elsewhere: outer guards are not live in it.
+    fn spawns_worker_under_guard(&self) -> std::thread::JoinHandle<()> {
+        let g = lock_clean(&self.state);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        drop(g);
+        h
+    }
+}

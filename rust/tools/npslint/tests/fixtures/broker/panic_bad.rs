@@ -1,0 +1,18 @@
+//! Violating fixture (lives under `broker/` so the denylist applies):
+//! panicking constructs in non-test serving code.
+
+fn parse(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+fn pick(v: Option<u32>) -> u32 {
+    v.expect("must be set")
+}
+
+fn explode() {
+    panic!("boom");
+}
+
+fn later() {
+    todo!()
+}

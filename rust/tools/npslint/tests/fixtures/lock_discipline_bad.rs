@@ -1,0 +1,29 @@
+//! Violating fixture: raw lock/wait primitives outside util::sync.
+use std::sync::{Condvar, Mutex};
+
+struct S {
+    inner: Mutex<Vec<u32>>,
+    cv: Condvar,
+}
+
+impl S {
+    fn push(&self, v: u32) {
+        self.inner.lock().unwrap().push(v);
+    }
+
+    fn probe(&self) -> bool {
+        self.inner.try_lock().is_ok()
+    }
+
+    fn wait_nonempty(&self) {
+        let mut g = self.inner.lock().unwrap();
+        while g.is_empty() {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn wait_bounded(&self) {
+        let g = self.inner.lock().unwrap();
+        let _ = self.cv.wait_timeout(g, std::time::Duration::from_millis(5));
+    }
+}

@@ -1,0 +1,31 @@
+//! Clean fixture: the sanctioned poison-recovering wrappers.
+use std::sync::{Condvar, Mutex};
+
+use crate::util::sync::{lock_clean, try_lock_clean, wait_clean, wait_timeout_clean};
+
+struct S {
+    inner: Mutex<Vec<u32>>,
+    cv: Condvar,
+}
+
+impl S {
+    fn push(&self, v: u32) {
+        lock_clean(&self.inner).push(v);
+    }
+
+    fn probe(&self) -> bool {
+        try_lock_clean(&self.inner).is_some()
+    }
+
+    fn wait_nonempty(&self) {
+        let mut g = lock_clean(&self.inner);
+        while g.is_empty() {
+            g = wait_clean(&self.cv, g);
+        }
+    }
+
+    fn wait_bounded(&self) {
+        let g = lock_clean(&self.inner);
+        let _ = wait_timeout_clean(&self.cv, g, std::time::Duration::from_millis(5));
+    }
+}

@@ -1,0 +1,27 @@
+//! Violating fixture: acquisitions against the declared rank order
+//! (registry → broker → inventory → prefix → metrics).
+use std::sync::Mutex;
+
+use crate::util::sync::lock_clean;
+
+struct S {
+    reg: Mutex<u32>,
+    prefix_ix: Mutex<u32>,
+}
+
+impl S {
+    /// Broker-class call while a prefix-class guard is live: inversion.
+    fn inverted(&self, broker: &Broker) {
+        let ix = lock_clean(&self.prefix_ix);
+        broker.post(1);
+        drop(ix);
+    }
+
+    /// Same-class reacquire self-deadlocks on std's non-reentrant Mutex.
+    fn reacquire(&self) {
+        let a = lock_clean(&self.reg);
+        let b = lock_clean(&self.reg);
+        drop(b);
+        drop(a);
+    }
+}

@@ -1,0 +1,28 @@
+//! Clean fixture: rank-order nesting and release-before-crossing.
+use std::sync::Mutex;
+
+use crate::util::sync::lock_clean;
+
+struct S {
+    reg: Mutex<u32>,
+    prefix_ix: Mutex<u32>,
+}
+
+impl S {
+    /// Registry before prefix is the declared order.
+    fn nested_in_rank_order(&self) {
+        let reg = lock_clean(&self.reg);
+        let ix = lock_clean(&self.prefix_ix);
+        drop(ix);
+        drop(reg);
+    }
+
+    /// Scope the earlier guard out before a lower-rank call.
+    fn released_before_crossing(&self, broker: &Broker) {
+        {
+            let ix = lock_clean(&self.prefix_ix);
+            let _ = ix;
+        }
+        broker.post(1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Violating fixture: a `*Counters` type with no `*Snapshot` field in
+//! `FleetMetrics` — its tallies never reach fleet observability.
+use std::sync::atomic::AtomicU64;
+
+pub struct RetryCounters {
+    pub retries: AtomicU64,
+}
+
+pub struct FaultSnapshot {
+    pub chain_faults: u64,
+}
+
+pub struct FleetMetrics {
+    pub faults: FaultSnapshot,
+}

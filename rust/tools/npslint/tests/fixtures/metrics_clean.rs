@@ -1,0 +1,15 @@
+//! Clean fixture: every `*Counters` surfaces in `FleetMetrics` as its
+//! `*Snapshot`.
+use std::sync::atomic::AtomicU64;
+
+pub struct RetryCounters {
+    pub retries: AtomicU64,
+}
+
+pub struct RetrySnapshot {
+    pub retries: u64,
+}
+
+pub struct FleetMetrics {
+    pub retry: RetrySnapshot,
+}
