@@ -68,6 +68,7 @@ fn run(cfg: &ToyConfig, resident: bool, max_tokens: usize) -> Measured {
         resume_from: 0,
         prefix_hash: 0,
         affinity: false,
+        cancel: None,
     };
     // warmup: primes the frame pool and the serving loop's row buffers
     inst.submit(req(1000, 2));

@@ -70,6 +70,7 @@ fn run(cfg: &ToyConfig, per_seq: bool, gen_lens: &[usize]) -> Measured {
         resume_from: 0,
         prefix_hash: 0,
         affinity: false,
+        cancel: None,
     };
     // warmup: primes the frame pool and the serving loop's row buffers
     inst.submit(req(1000, 2));

@@ -1,0 +1,321 @@
+//! Front-door SLO harness (EXPERIMENTS.md §Front-door, ISSUE 10): the
+//! open-loop load harness the ROADMAP calls "the harness every other item
+//! on this list gets measured against", pointed at the rebuilt HTTP front
+//! door on a testmodel rack.
+//!
+//! Three phases, all recorded in BENCH_PR10.json §front_door:
+//!
+//! **A. Connection storm.** A Poisson burst of streaming requests larger
+//! than the worker pool + accept queue. Gates: ≥256 concurrently open SSE
+//! streams (the paper's §IV cloud story is connection scale), every
+//! overflow connection shed with 429/503 in <50 ms p99 (honest
+//! backpressure: saying "no" must be instant, hanging is forbidden), zero
+//! transport errors, and the fleet fully drained afterwards.
+//!
+//! **B. Poisson SLO wave.** Mixed prompt/generation lengths over a
+//! three-class tenant mix at a sustainable arrival rate. Gates: p50/p99
+//! TTFT and p99 ITL inside declared bounds, no sheds at this rate, and
+//! the per-tenant admission tally consistent with the outcomes.
+//!
+//! **C. Mid-stream disconnect.** Clients drop their sockets two tokens
+//! into a long generation. Gate: the server detects the dead client,
+//! cancels generation (slot retired early), and fleet in-flight returns
+//! to 0 — abandoned work must not leak capacity.
+//!
+//!   cargo bench --bench front_door                 full run
+//!   FRONT_DOOR_SMOKE=1 cargo bench --bench front_door   CI smoke
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use npserve::api::loadgen::{self, LoadSpec, TenantMix};
+use npserve::api::{ApiOptions, ApiServer, ServerOptions};
+use npserve::config::hw::RackSpec;
+use npserve::rack::{InstanceSpec, RackService};
+use npserve::runtime::testmodel::ToyConfig;
+use npserve::service::SharedEngine;
+use npserve::util::json::{merge_into_file, Value};
+
+fn report_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_PR10.json")
+}
+
+const MODEL: &str = "toy-testmodel";
+
+fn fail(msg: &str) -> ! {
+    eprintln!("FAIL: {msg}");
+    std::process::exit(1);
+}
+
+/// Wait for the fleet to drain; returns seconds waited.
+fn await_drain(svc: &Arc<RackService>, within: Duration) -> f64 {
+    let t0 = Instant::now();
+    while svc.in_flight_of(MODEL) > 0 {
+        if t0.elapsed() > within {
+            fail(&format!(
+                "fleet in-flight stuck at {} after {:?}",
+                svc.in_flight_of(MODEL),
+                within
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let smoke = std::env::var("FRONT_DOOR_SMOKE").is_ok();
+    let (storm_n, slo_n) = if smoke { (448, 96) } else { (512, 192) };
+
+    // testmodel rack: 8 instances x 16 batch slots = 128 concurrent
+    // decode slots behind one broker and one front door
+    let mut cfg = ToyConfig::small();
+    cfg.batch_slots = 16;
+    cfg.max_context = 64;
+    // pace decode like real hardware: ~24 ms per 16-slot round (16 rows x
+    // 3 layers x 0.5 ms), so the fleet serves ~1.3k req/s — fast enough to
+    // drain, slow enough that an 8k/s storm genuinely overflows the door
+    cfg.row_work_ns = 500_000;
+    let svc = RackService::new(RackSpec::northpole_42u());
+    for _ in 0..8 {
+        let mut spec = InstanceSpec::live(MODEL, 16, SharedEngine(Arc::new(cfg.engine())));
+        spec.max_tokens = 8;
+        svc.deploy(spec).expect("toy placement");
+    }
+    let counters = svc.front_door_counters().clone();
+    // the worker pool is the concurrency ceiling (an open SSE stream pins
+    // its worker): 280 workers + 24 queued < the storm => MUST overflow
+    let opts = ApiOptions {
+        server: ServerOptions {
+            workers: 280,
+            queue_cap: 24,
+            counters: counters.clone(),
+            ..ServerOptions::default()
+        },
+        gen_deadline: Duration::from_secs(30),
+        ..ApiOptions::default()
+    };
+    let api = ApiServer::serve_with(
+        "127.0.0.1:0",
+        svc.broker().clone(),
+        svc.admission(),
+        svc.affinity(),
+        opts,
+    )
+    .expect("bind front door");
+    let addr = api.addr().to_string();
+
+    // ---- phase A: connection storm ------------------------------------
+    println!(
+        "== front_door A: storm of {storm_n} streaming conns (pool 280 + queue 24, \
+         128 decode slots) =="
+    );
+    let storm = loadgen::run(&LoadSpec {
+        addr: addr.clone(),
+        model: MODEL.into(),
+        n_requests: storm_n,
+        rate_per_s: 8_000.0, // the whole storm lands inside ~60 ms
+        seed: 11,
+        tenants: Vec::new(),
+        prompt_bytes: (8, 24),
+        max_tokens: (2, 4),
+        stream: true,
+        io_timeout: Duration::from_secs(60),
+        disconnect_after: None,
+    });
+    let shed = storm.count_status(429) + storm.count_status(503);
+    let served = storm.count_status(200);
+    let shed_lat = storm.shed_latency();
+    let shed_p99_ms = if shed_lat.count() > 0 { shed_lat.percentile(99.0) * 1e3 } else { 0.0 };
+    println!(
+        "  served {served} | shed {shed} (429 {} / 503 {}) | conc HWM {} | \
+         shed p99 {shed_p99_ms:.1} ms",
+        storm.count_status(429),
+        storm.count_status(503),
+        storm.conc_hwm,
+    );
+    if storm.errors() > 0 {
+        for o in storm.outcomes.iter().filter(|o| o.error.is_some()).take(5) {
+            eprintln!("  error: {o:?}");
+        }
+        fail(&format!("{} transport errors in the storm", storm.errors()));
+    }
+    if storm.conc_hwm < 256 {
+        fail(&format!(
+            "concurrency high-water mark {} < 256 concurrent streams",
+            storm.conc_hwm
+        ));
+    }
+    if shed == 0 {
+        fail("storm never overflowed: shed path (429/503) unexercised");
+    }
+    if shed_p99_ms >= 50.0 {
+        fail(&format!(
+            "shed p99 {shed_p99_ms:.1} ms >= 50 ms — rejection must be instant, never a hang"
+        ));
+    }
+    if served + shed != storm_n {
+        fail(&format!(
+            "storm accounting: {served} served + {shed} shed != {storm_n} offered"
+        ));
+    }
+    let storm_drain_s = await_drain(&svc, Duration::from_secs(30));
+
+    // ---- phase B: Poisson SLO wave over a tenant mix ------------------
+    println!("\n== front_door B: Poisson SLO wave, {slo_n} reqs @ 120/s, 3 tenant classes ==");
+    let before = counters.snapshot();
+    let tenants = vec![
+        TenantMix { id: "free".into(), weight: 3.0, priority: 0 },
+        TenantMix { id: "pro".into(), weight: 2.0, priority: 1 },
+        TenantMix { id: "enterprise".into(), weight: 1.0, priority: 2 },
+    ];
+    let wave = loadgen::run(&LoadSpec {
+        addr: addr.clone(),
+        model: MODEL.into(),
+        n_requests: slo_n,
+        rate_per_s: 120.0,
+        seed: 23,
+        tenants,
+        prompt_bytes: (16, 48),
+        max_tokens: (4, 8),
+        stream: true,
+        io_timeout: Duration::from_secs(60),
+        disconnect_after: None,
+    });
+    let ttft = wave.ttft();
+    let itl = wave.itl();
+    let (p50_ttft_ms, p99_ttft_ms) =
+        (ttft.percentile(50.0) * 1e3, ttft.percentile(99.0) * 1e3);
+    let p99_itl_ms = if itl.count() > 0 { itl.percentile(99.0) * 1e3 } else { 0.0 };
+    println!(
+        "  {} ok | TTFT p50 {p50_ttft_ms:.1} ms p99 {p99_ttft_ms:.1} ms | ITL p99 {p99_itl_ms:.2} ms",
+        wave.count_status(200),
+    );
+    if wave.errors() > 0 || wave.count_status(200) != slo_n {
+        fail(&format!(
+            "SLO wave must fully succeed at this rate: {} ok, {} errors",
+            wave.count_status(200),
+            wave.errors()
+        ));
+    }
+    // declared SLO bounds — generous enough for a loaded CI runner, tight
+    // enough that a hang, a lost wakeup, or an accidental O(n^2) trips them
+    if p50_ttft_ms >= 2_000.0 {
+        fail(&format!("TTFT p50 {p50_ttft_ms:.1} ms >= 2000 ms SLO"));
+    }
+    if p99_ttft_ms >= 10_000.0 {
+        fail(&format!("TTFT p99 {p99_ttft_ms:.1} ms >= 10000 ms SLO"));
+    }
+    if p99_itl_ms >= 1_000.0 {
+        fail(&format!("ITL p99 {p99_itl_ms:.2} ms >= 1000 ms SLO"));
+    }
+    // per-tenant accounting: every admitted request is tallied to its tenant
+    let after = counters.snapshot();
+    let tally = |snap: &npserve::metrics::FrontDoorSnapshot, id: &str| {
+        snap.per_tenant
+            .iter()
+            .find(|(t, _)| t == id)
+            .map(|(_, c)| c.accepted)
+            .unwrap_or(0)
+    };
+    let accepted_delta: u64 = ["free", "pro", "enterprise"]
+        .iter()
+        .map(|id| tally(&after, id) - tally(&before, id))
+        .sum();
+    if accepted_delta != slo_n as u64 {
+        fail(&format!(
+            "per-tenant tally {accepted_delta} != {slo_n} admitted requests"
+        ));
+    }
+    // fleet-side percentile rollups exist for the same distribution
+    let fleet = svc.fleet_metrics();
+    println!(
+        "  fleet-side: TTFT p99 {:.1} ms | ITL p99 {:.2} ms ({} seqs)",
+        fleet.ttft_percentile(99.0) * 1e3,
+        fleet.itl_percentile(99.0) * 1e3,
+        fleet.n_seqs(),
+    );
+    await_drain(&svc, Duration::from_secs(30));
+
+    // ---- phase C: mid-stream disconnect releases the slot -------------
+    println!("\n== front_door C: clients vanish 2 tokens into a paced generation ==");
+    // a second, slow rack: row_work paces tokens to ~ms so the disconnect
+    // is detected mid-generation, not after it already finished
+    let mut slow_cfg = ToyConfig::small();
+    slow_cfg.batch_slots = 8;
+    slow_cfg.max_context = 64;
+    slow_cfg.row_work_ns = 500_000;
+    let svc2 = RackService::new(RackSpec::northpole_42u());
+    let mut spec = InstanceSpec::live(MODEL, 16, SharedEngine(Arc::new(slow_cfg.engine())));
+    spec.max_tokens = 24;
+    svc2.deploy(spec).expect("slow toy placement");
+    let counters2 = svc2.front_door_counters().clone();
+    let opts2 = ApiOptions {
+        server: ServerOptions { counters: counters2.clone(), ..ServerOptions::default() },
+        gen_deadline: Duration::from_secs(30),
+        ..ApiOptions::default()
+    };
+    let api2 = ApiServer::serve_with(
+        "127.0.0.1:0",
+        svc2.broker().clone(),
+        svc2.admission(),
+        svc2.affinity(),
+        opts2,
+    )
+    .expect("bind disconnect door");
+    let drop_run = loadgen::run(&LoadSpec {
+        addr: api2.addr().to_string(),
+        model: MODEL.into(),
+        n_requests: 8,
+        rate_per_s: 500.0,
+        seed: 31,
+        tenants: Vec::new(),
+        prompt_bytes: (8, 16),
+        max_tokens: (24, 24),
+        stream: true,
+        io_timeout: Duration::from_secs(60),
+        disconnect_after: Some(2),
+    });
+    let dropped = drop_run.outcomes.iter().filter(|o| o.disconnected).count();
+    if dropped != 8 {
+        fail(&format!("expected 8 mid-stream disconnects, saw {dropped}"));
+    }
+    let release_s = await_drain(&svc2, Duration::from_secs(20));
+    let disconnects = counters2.snapshot().disconnects;
+    println!(
+        "  8 clients dropped | server detected {disconnects} | in-flight -> 0 in {:.0} ms",
+        release_s * 1e3
+    );
+    if disconnects == 0 {
+        fail("server never detected a client disconnect (cancel path unexercised)");
+    }
+
+    // ---- report -------------------------------------------------------
+    let report = Value::obj(vec![
+        ("smoke", Value::num(if smoke { 1.0 } else { 0.0 })),
+        ("storm_offered", Value::num(storm_n as f64)),
+        ("storm_served", Value::num(served as f64)),
+        ("storm_shed", Value::num(shed as f64)),
+        ("storm_conc_hwm", Value::num(storm.conc_hwm as f64)),
+        ("storm_shed_p99_ms", Value::num(shed_p99_ms)),
+        ("storm_drain_s", Value::num(storm_drain_s)),
+        ("slo_requests", Value::num(slo_n as f64)),
+        ("slo_rate_per_s", Value::num(120.0)),
+        ("ttft_p50_ms", Value::num(p50_ttft_ms)),
+        ("ttft_p99_ms", Value::num(p99_ttft_ms)),
+        ("itl_p99_ms", Value::num(p99_itl_ms)),
+        ("fleet_ttft_p99_ms", Value::num(fleet.ttft_percentile(99.0) * 1e3)),
+        ("fleet_itl_p99_ms", Value::num(fleet.itl_percentile(99.0) * 1e3)),
+        ("disconnects_detected", Value::num(disconnects as f64)),
+        ("disconnect_release_ms", Value::num(release_s * 1e3)),
+    ]);
+    match merge_into_file(&report_path(), "front_door", report) {
+        Ok(()) => println!("\nwrote BENCH_PR10.json §front_door"),
+        Err(e) => eprintln!("\ncould not write BENCH_PR10.json: {e}"),
+    }
+
+    svc.shutdown_all();
+    svc2.shutdown_all();
+    println!("front_door OK (storm + SLO wave + disconnect release)");
+}

@@ -62,6 +62,7 @@ fn turn(inst: &Arc<LlmInstance>, id: u64, prompt: &str) -> (Vec<u32>, f64) {
         resume_from: 0,
         prefix_hash: 0,
         affinity: false,
+        cancel: None,
     });
     let recs = inst.serve_until_drained();
     let rec = recs

@@ -95,6 +95,7 @@ fn run_fleet(cfg: &ToyConfig, n_instances: usize, n_requests: usize) -> Measured
                     retries: 0,
                     resume_from: 0,
                     prefix_hash: 0,
+                    max_tokens: 0,
                 },
             )
         })
@@ -116,6 +117,7 @@ fn run_fleet(cfg: &ToyConfig, n_instances: usize, n_requests: usize) -> Measured
                     retries: 0,
                     resume_from: 0,
                     prefix_hash: 0,
+                    max_tokens: 0,
                 },
             )
         })
@@ -199,6 +201,7 @@ fn run_autoscaled(cfg: &ToyConfig, n_requests: usize) -> Measured {
                     retries: 0,
                     resume_from: 0,
                     prefix_hash: 0,
+                    max_tokens: 0,
                 },
             )
         })
@@ -240,6 +243,7 @@ fn run_autoscaled(cfg: &ToyConfig, n_requests: usize) -> Measured {
                     retries: 0,
                     resume_from: 0,
                     prefix_hash: 0,
+                    max_tokens: 0,
                 },
             )
         })
@@ -317,6 +321,7 @@ fn run_fault_chaos(cfg: &ToyConfig, n_requests: usize, kill_at: u64) -> (Measure
                     retries: 0,
                     resume_from: 0,
                     prefix_hash: 0,
+                    max_tokens: 0,
                 },
             )
         })
@@ -340,6 +345,7 @@ fn run_fault_chaos(cfg: &ToyConfig, n_requests: usize, kill_at: u64) -> (Measure
                     retries: 0,
                     resume_from: 0,
                     prefix_hash: 0,
+                    max_tokens: 0,
                 },
             )
         })
@@ -398,6 +404,7 @@ fn run_fault_chaos(cfg: &ToyConfig, n_requests: usize, kill_at: u64) -> (Measure
                     retries: 0,
                     resume_from: 0,
                     prefix_hash: 0,
+                    max_tokens: 0,
                 },
             )
         })

@@ -57,7 +57,7 @@ fn main() {
     let mut id = 0u64;
     bench("broker post+consume (priority queue)", 10_000, || {
         id += 1;
-        broker.post("q", Task { id, priority: (id % 3) as u8, body: "x".into(), reply_to: id, retries: 0, resume_from: 0, prefix_hash: 0 });
+        broker.post("q", Task { id, priority: (id % 3) as u8, body: "x".into(), reply_to: id, retries: 0, resume_from: 0, prefix_hash: 0, max_tokens: 0 });
         broker.try_consume("q", &[0, 1, 2]).unwrap();
         broker.remove_response(id);
     });
@@ -118,6 +118,7 @@ fn main() {
             resume_from: 0,
             prefix_hash: 0,
             affinity: false,
+            cancel: None,
         });
         inst.serve_until_drained();
     });

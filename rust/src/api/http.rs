@@ -1,14 +1,118 @@
 //! Minimal HTTP/1.1 server substrate: request parsing, responses, SSE.
+//!
+//! ISSUE 10 rebuilt the front door for connection scale and honest
+//! backpressure. The old server spawned one thread per accepted
+//! connection with no bound and no deadlines: a connection flood stacked
+//! threads without limit, a client that sent half a request pinned its
+//! thread forever, and a request claiming a 100 GB `content-length` got
+//! its 100 GB allocation. The rebuilt server runs a **bounded
+//! connection-worker pool** (default ~4× cores) fed from a bounded
+//! accept queue; when the queue is full the accept thread sheds the
+//! connection immediately with `429` + `Retry-After` instead of letting
+//! it queue into an unbounded hang. Every socket carries read/write
+//! deadlines, request bodies and header sections are capped (413/431),
+//! and connections are kept alive between requests so a multi-turn
+//! conversation reuses its socket (SSE responses remain close-delimited).
 
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
+use crate::anyhow;
+use crate::metrics::FrontDoorCounters;
 use crate::util::err::Result;
-use crate::{anyhow, bail};
+use crate::util::json::Value;
+use crate::util::sync::{lock_clean, wait_timeout_clean};
+
+/// Front-door tuning knobs (ISSUE 10). `Default` is sized for a rack
+/// front door; benches and tests override per scenario.
+#[derive(Clone)]
+pub struct ServerOptions {
+    /// Connection workers. Each worker serves one connection at a time
+    /// (an SSE stream pins its worker for the stream's life), so this is
+    /// the concurrent-connection ceiling. 0 = use the default (4× cores).
+    pub workers: usize,
+    /// Accepted-but-unserved connections the accept queue will hold
+    /// before shedding with 429.
+    pub queue_cap: usize,
+    /// Per-read deadline while a request is in flight (slow peer).
+    pub read_timeout: Duration,
+    /// Per-write deadline for responses and SSE events.
+    pub write_timeout: Duration,
+    /// How long a kept-alive connection may sit idle awaiting its next
+    /// request before the worker closes it and moves on.
+    pub keep_alive_idle: Duration,
+    /// Request-body cap; a `content-length` beyond it is answered 413
+    /// **before** any allocation.
+    pub max_body: usize,
+    /// Longest accepted request/header line, in bytes (431 beyond).
+    pub max_header_line: usize,
+    /// Most header lines accepted per request (431 beyond).
+    pub max_headers: usize,
+    /// Requests served per connection before it is closed (bounds how
+    /// long one client can monopolize a worker via keep-alive).
+    pub max_requests_per_conn: usize,
+    /// `Retry-After` seconds advertised on shed (429) responses.
+    pub retry_after_s: u32,
+    /// Shared front-door counters (sheds, caps, rejects); the rack passes
+    /// its cell so the tally lands in `FleetMetrics`.
+    pub counters: Arc<FrontDoorCounters>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ServerOptions {
+            workers: 4 * cores,
+            queue_cap: 8 * cores,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            keep_alive_idle: Duration::from_secs(2),
+            max_body: 1 << 20, // 1 MiB of JSON is a very long conversation
+            max_header_line: 8 << 10,
+            max_headers: 64,
+            max_requests_per_conn: 256,
+            retry_after_s: 1,
+            counters: Arc::new(FrontDoorCounters::default()),
+        }
+    }
+}
+
+/// Typed connection-handling failure: every malformed, oversized, or
+/// stalled request maps to exactly one of these (satellite: the fuzz test
+/// asserts no input panics or leaks a worker).
+#[derive(Debug)]
+pub enum HttpError {
+    /// Peer closed cleanly between requests (EOF at a request boundary).
+    Closed,
+    /// A read or write deadline expired.
+    Timeout,
+    /// Malformed request line, header, or framing → 400.
+    BadRequest(String),
+    /// Declared body exceeds `max_body` → 413.
+    BodyTooLarge(String),
+    /// Header line/count bounds exceeded → 431.
+    HeadersTooLarge(String),
+    /// Any other socket error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => write!(f, "connection closed"),
+            HttpError::Timeout => write!(f, "socket deadline expired"),
+            HttpError::BadRequest(m) => write!(f, "bad request: {m}"),
+            HttpError::BodyTooLarge(m) => write!(f, "body too large: {m}"),
+            HttpError::HeadersTooLarge(m) => write!(f, "headers too large: {m}"),
+            HttpError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct HttpRequest {
@@ -19,71 +123,264 @@ pub struct HttpRequest {
 }
 
 impl HttpRequest {
+    /// Parse one request with the default bounds. Kept for compatibility;
+    /// the server itself uses [`parse_request`] with its own options.
     pub fn parse(stream: &mut BufReader<TcpStream>) -> Result<HttpRequest> {
-        let mut line = String::new();
-        stream.read_line(&mut line)?;
-        let mut parts = line.split_whitespace();
-        let method = parts.next().ok_or_else(|| anyhow!("empty request"))?.to_string();
-        let path = parts.next().ok_or_else(|| anyhow!("no path"))?.to_string();
-        let mut headers = BTreeMap::new();
-        loop {
-            let mut h = String::new();
-            stream.read_line(&mut h)?;
-            let h = h.trim_end();
-            if h.is_empty() {
-                break;
-            }
-            let Some((k, v)) = h.split_once(':') else {
-                bail!("bad header line");
-            };
-            headers.insert(k.trim().to_lowercase(), v.trim().to_string());
-        }
-        let len: usize = headers
-            .get("content-length")
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(0);
-        let mut body = vec![0u8; len];
-        if len > 0 {
-            stream.read_exact(&mut body)?;
-        }
-        Ok(HttpRequest { method, path, headers, body })
+        parse_request(stream, &ServerOptions::default()).map_err(|e| anyhow!("{e}"))
     }
+}
+
+/// Read one CRLF-terminated line without letting the peer choose the
+/// allocation: the line is capped at `max` bytes, and a read deadline
+/// expiry surfaces as `Timeout` rather than blocking forever.
+fn read_line_bounded(
+    r: &mut BufReader<TcpStream>,
+    max: usize,
+) -> std::result::Result<String, HttpError> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (take, found_nl) = {
+            let buf = match r.fill_buf() {
+                Ok(b) => b,
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    return Err(HttpError::Timeout)
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(HttpError::Io(e)),
+            };
+            if buf.is_empty() {
+                // EOF: clean only at a line boundary with nothing read
+                if line.is_empty() {
+                    return Err(HttpError::Closed);
+                }
+                return Err(HttpError::BadRequest("truncated line at EOF".into()));
+            }
+            let nl = buf.iter().position(|&b| b == b'\n');
+            let take = nl.map(|i| i + 1).unwrap_or(buf.len());
+            if line.len() + take > max {
+                return Err(HttpError::HeadersTooLarge(format!("line exceeds {max} bytes")));
+            }
+            line.extend_from_slice(&buf[..take]);
+            (take, nl.is_some())
+        };
+        r.consume(take);
+        if found_nl {
+            let s = String::from_utf8_lossy(&line);
+            return Ok(s.trim_end_matches(['\r', '\n']).to_string());
+        }
+    }
+}
+
+/// Parse one request under `opts`' bounds. The caller owns the socket's
+/// read deadline (first request vs keep-alive idle differ).
+fn parse_request(
+    reader: &mut BufReader<TcpStream>,
+    opts: &ServerOptions,
+) -> std::result::Result<HttpRequest, HttpError> {
+    let line = read_line_bounded(reader, opts.max_header_line)?;
+    let mut parts = line.split_whitespace();
+    let method = match parts.next() {
+        Some(m) if !m.is_empty() => m.to_string(),
+        _ => return Err(HttpError::BadRequest("empty request line".into())),
+    };
+    let path = match parts.next() {
+        Some(p) => p.to_string(),
+        None => return Err(HttpError::BadRequest("request line has no path".into())),
+    };
+    let mut headers = BTreeMap::new();
+    loop {
+        let h = match read_line_bounded(reader, opts.max_header_line) {
+            Ok(h) => h,
+            // EOF inside the header block is a truncated request, not a
+            // clean close
+            Err(HttpError::Closed) => {
+                return Err(HttpError::BadRequest("truncated header block".into()))
+            }
+            Err(e) => return Err(e),
+        };
+        if h.is_empty() {
+            break;
+        }
+        if headers.len() >= opts.max_headers {
+            return Err(HttpError::HeadersTooLarge(format!(
+                "more than {} header lines",
+                opts.max_headers
+            )));
+        }
+        let Some((k, v)) = h.split_once(':') else {
+            return Err(HttpError::BadRequest("header line without ':'".into()));
+        };
+        headers.insert(k.trim().to_lowercase(), v.trim().to_string());
+    }
+    let len: usize = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| HttpError::BadRequest("unparseable content-length".into()))?,
+    };
+    // the cap is enforced BEFORE the allocation: a request claiming
+    // 100 GB gets a 413, not a 100 GB buffer
+    if len > opts.max_body {
+        return Err(HttpError::BodyTooLarge(format!(
+            "content-length {len} exceeds cap {}",
+            opts.max_body
+        )));
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body).map_err(|e| match e.kind() {
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => HttpError::Timeout,
+            ErrorKind::UnexpectedEof => {
+                HttpError::BadRequest("body shorter than content-length".into())
+            }
+            _ => HttpError::Io(e),
+        })?;
+    }
+    Ok(HttpRequest { method, path, headers, body })
 }
 
 /// A response: either a complete body or a streaming (SSE) writer.
 pub enum HttpResponse {
-    Full { status: u16, content_type: &'static str, body: Vec<u8> },
+    Full {
+        status: u16,
+        content_type: &'static str,
+        /// Extra response headers, e.g. `retry-after` on a 429.
+        headers: Vec<(String, String)>,
+        body: Vec<u8>,
+    },
     /// SSE stream: the handler receives a writer callback for events.
     Sse(Box<dyn FnOnce(&mut dyn Write) + Send>),
 }
 
 impl HttpResponse {
     pub fn json(status: u16, body: String) -> HttpResponse {
-        HttpResponse::Full { status, content_type: "application/json", body: body.into_bytes() }
+        HttpResponse::Full {
+            status,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body: body.into_bytes(),
+        }
+    }
+
+    /// JSON response with extra headers (e.g. `retry-after`).
+    pub fn json_with(status: u16, body: String, headers: Vec<(String, String)>) -> HttpResponse {
+        HttpResponse::Full {
+            status,
+            content_type: "application/json",
+            headers,
+            body: body.into_bytes(),
+        }
     }
 
     pub fn text(status: u16, body: &str) -> HttpResponse {
-        HttpResponse::Full { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+        HttpResponse::Full {
+            status,
+            content_type: "text/plain",
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
     }
 }
 
 type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
 
-/// Thread-per-connection HTTP server.
+/// Bounded queue of accepted-but-unserved connections between the accept
+/// thread and the worker pool. Hand-rolled on Condvar so the wait is a
+/// `wait_timeout_clean` (lint-visible, bounded) rather than a channel
+/// `recv`, and so overflow hands the socket *back* for an immediate shed.
+#[derive(Default)]
+struct ConnQueue {
+    conns: Mutex<(VecDeque<TcpStream>, bool)>, // (pending, sealed)
+    ready: Condvar,
+}
+
+enum Dequeued {
+    Conn(TcpStream),
+    Empty,
+    Sealed,
+}
+
+impl ConnQueue {
+    /// Enqueue under `cap`; a full or sealed queue returns the socket so
+    /// the accept thread can shed it with a 429.
+    fn enqueue(&self, cap: usize, sock: TcpStream) -> std::result::Result<(), TcpStream> {
+        let mut g = lock_clean(&self.conns);
+        if g.1 || g.0.len() >= cap {
+            return Err(sock);
+        }
+        g.0.push_back(sock);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Pop one connection, waiting up to `patience`. Pending connections
+    /// still drain after a seal; `Sealed` means sealed *and* empty.
+    fn dequeue(&self, patience: Duration) -> Dequeued {
+        let mut g = lock_clean(&self.conns);
+        if g.0.is_empty() && !g.1 {
+            let (guard, _) = wait_timeout_clean(&self.ready, g, patience);
+            g = guard;
+        }
+        if let Some(s) = g.0.pop_front() {
+            return Dequeued::Conn(s);
+        }
+        if g.1 {
+            return Dequeued::Sealed;
+        }
+        Dequeued::Empty
+    }
+
+    /// Stop accepting new connections and release idle workers.
+    fn seal(&self) {
+        let mut g = lock_clean(&self.conns);
+        g.1 = true;
+        self.ready.notify_all();
+    }
+}
+
+/// Bounded-worker-pool HTTP server (ISSUE 10).
 pub struct HttpServer {
     pub addr: String,
     stop: Arc<AtomicBool>,
+    pending: Arc<ConnQueue>,
     handle: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl HttpServer {
-    /// Bind and serve on a background thread. `addr` like "127.0.0.1:0".
+    /// Bind and serve on a background accept thread + worker pool with
+    /// default options. `addr` like "127.0.0.1:0".
     pub fn serve(addr: &str, handler: Handler) -> Result<HttpServer> {
+        Self::serve_with(addr, handler, ServerOptions::default())
+    }
+
+    /// Bind and serve with explicit front-door options.
+    pub fn serve_with(addr: &str, handler: Handler, opts: ServerOptions) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?.to_string();
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+        let pending = Arc::new(ConnQueue::default());
+        let n_workers = if opts.workers == 0 {
+            ServerOptions::default().workers
+        } else {
+            opts.workers
+        };
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let q = pending.clone();
+            let h = handler.clone();
+            let o = opts.clone();
+            workers.push(std::thread::spawn(move || loop {
+                match q.dequeue(Duration::from_millis(100)) {
+                    Dequeued::Conn(sock) => handle_conn(sock, &h, &o),
+                    Dequeued::Empty => {}
+                    Dequeued::Sealed => break,
+                }
+            }));
+        }
         let stop2 = stop.clone();
+        let q2 = pending.clone();
         let handle = std::thread::spawn(move || {
             loop {
                 if stop2.load(Ordering::Relaxed) {
@@ -91,25 +388,33 @@ impl HttpServer {
                 }
                 match listener.accept() {
                     Ok((sock, _)) => {
-                        let h = handler.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(sock, h);
-                        });
+                        if let Err(sock) = q2.enqueue(opts.queue_cap, sock) {
+                            // accept-queue overflow: shed NOW with 429 +
+                            // Retry-After — honest backpressure beats an
+                            // unbounded thread pile or a silent hang
+                            opts.counters.on_shed();
+                            shed_overflow(sock, opts.retry_after_s);
+                        }
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
                     }
                     Err(_) => break,
                 }
             }
+            q2.seal();
         });
-        Ok(HttpServer { addr: local, stop, handle: Some(handle) })
+        Ok(HttpServer { addr: local, stop, pending, handle: Some(handle), workers })
     }
 
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
+        }
+        self.pending.seal();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
 }
@@ -120,30 +425,130 @@ impl Drop for HttpServer {
     }
 }
 
-fn handle_conn(sock: TcpStream, handler: Handler) -> Result<()> {
-    sock.set_nodelay(true)?;
-    let mut reader = BufReader::new(sock.try_clone()?);
-    let req = HttpRequest::parse(&mut reader)?;
+/// 429 written straight from the accept thread on queue overflow. A short
+/// write deadline keeps a slow-reading flood from stalling accepts.
+fn shed_overflow(mut sock: TcpStream, retry_after_s: u32) {
+    let _ = sock.set_write_timeout(Some(Duration::from_millis(200)));
+    let body = error_body("server accept queue is full; retry shortly", "overloaded");
+    let head = format!(
+        "HTTP/1.1 429 {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nretry-after: {retry_after_s}\r\nconnection: close\r\n\r\n",
+        status_text(429),
+        body.len(),
+    );
+    let _ = sock.write_all(head.as_bytes());
+    let _ = sock.write_all(body.as_bytes());
+    let _ = sock.flush();
+}
+
+fn error_body(message: &str, code: &str) -> String {
+    Value::obj(vec![(
+        "error",
+        Value::obj(vec![
+            ("message", Value::str(message)),
+            ("type", Value::str("invalid_request_error")),
+            ("code", Value::str(code)),
+        ]),
+    )])
+    .to_string()
+}
+
+/// Serve one connection: parse → handle → respond, looping while
+/// keep-alive holds. SSE responses are close-delimited and end the loop.
+fn handle_conn(sock: TcpStream, handler: &Handler, opts: &ServerOptions) {
+    if sock.set_nodelay(true).is_err() || sock.set_write_timeout(Some(opts.write_timeout)).is_err()
+    {
+        return;
+    }
+    let Ok(peer) = sock.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(peer);
     let mut out = sock;
-    match handler(&req) {
-        HttpResponse::Full { status, content_type, body } => {
-            let head = format!(
-                "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
-                status_text(status),
-                body.len()
-            );
-            out.write_all(head.as_bytes())?;
-            out.write_all(&body)?;
+    for served in 0..opts.max_requests_per_conn {
+        // the first request gets the full read deadline; follow-ups on a
+        // kept-alive connection get the (shorter) idle window, so parked
+        // idle connections cannot pin workers indefinitely
+        let idle = if served == 0 { opts.read_timeout } else { opts.keep_alive_idle };
+        if reader.get_ref().set_read_timeout(Some(idle)).is_err() {
+            return;
         }
-        HttpResponse::Sse(f) => {
-            out.write_all(
-                b"HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-cache\r\nconnection: close\r\n\r\n",
-            )?;
-            f(&mut out);
+        let req = match parse_request(&mut reader, opts) {
+            Ok(r) => r,
+            Err(HttpError::Closed) | Err(HttpError::Timeout) | Err(HttpError::Io(_)) => return,
+            Err(HttpError::BadRequest(m)) => {
+                opts.counters.on_bad_request();
+                write_simple(&mut out, 400, &error_body(&m, "bad_request"));
+                return;
+            }
+            Err(HttpError::BodyTooLarge(m)) => {
+                opts.counters.on_too_large();
+                write_simple(&mut out, 413, &error_body(&m, "request_too_large"));
+                return;
+            }
+            Err(HttpError::HeadersTooLarge(m)) => {
+                opts.counters.on_too_large();
+                write_simple(&mut out, 431, &error_body(&m, "headers_too_large"));
+                return;
+            }
+        };
+        let client_close = req
+            .headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false);
+        let keep = served + 1 < opts.max_requests_per_conn && !client_close;
+        match handler(&req) {
+            HttpResponse::Full { status, content_type, headers, body } => {
+                let mut head = format!(
+                    "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\n",
+                    status_text(status),
+                    body.len(),
+                );
+                for (k, v) in &headers {
+                    head.push_str(&format!("{k}: {v}\r\n"));
+                }
+                head.push_str(if keep {
+                    "connection: keep-alive\r\n\r\n"
+                } else {
+                    "connection: close\r\n\r\n"
+                });
+                if out.write_all(head.as_bytes()).is_err()
+                    || out.write_all(&body).is_err()
+                    || out.flush().is_err()
+                {
+                    return;
+                }
+            }
+            HttpResponse::Sse(f) => {
+                if out
+                    .write_all(
+                        b"HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-cache\r\nconnection: close\r\n\r\n",
+                    )
+                    .is_err()
+                {
+                    return;
+                }
+                f(&mut out);
+                let _ = out.flush();
+                return; // close-delimited
+            }
+        }
+        if !keep {
+            return;
         }
     }
-    out.flush()?;
-    Ok(())
+}
+
+/// Best-effort error response on a connection being closed.
+fn write_simple(out: &mut TcpStream, status: u16, body: &str) {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        status_text(status),
+        body.len(),
+    );
+    let _ = out.write_all(head.as_bytes());
+    let _ = out.write_all(body.as_bytes());
+    let _ = out.flush();
 }
 
 fn status_text(code: u16) -> &'static str {
@@ -152,7 +557,13 @@ fn status_text(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Internal Server Error",
     }
 }
@@ -201,6 +612,29 @@ pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<
 mod tests {
     use super::*;
 
+    fn echo_handler() -> Handler {
+        Arc::new(|req: &HttpRequest| HttpResponse::Full {
+            status: 200,
+            content_type: "application/octet-stream",
+            headers: Vec::new(),
+            body: req.body.clone(),
+        })
+    }
+
+    /// Tight bounds for the cap/shed tests.
+    fn tiny_opts() -> ServerOptions {
+        ServerOptions {
+            workers: 2,
+            queue_cap: 2,
+            read_timeout: Duration::from_millis(500),
+            keep_alive_idle: Duration::from_millis(300),
+            max_body: 256,
+            max_header_line: 128,
+            max_headers: 8,
+            ..ServerOptions::default()
+        }
+    }
+
     #[test]
     fn serves_full_responses() {
         let mut srv = HttpServer::serve(
@@ -224,17 +658,7 @@ mod tests {
 
     #[test]
     fn echoes_post_bodies() {
-        let mut srv = HttpServer::serve(
-            "127.0.0.1:0",
-            Arc::new(|req: &HttpRequest| {
-                HttpResponse::Full {
-                    status: 200,
-                    content_type: "application/octet-stream",
-                    body: req.body.clone(),
-                }
-            }),
-        )
-        .unwrap();
+        let mut srv = HttpServer::serve("127.0.0.1:0", echo_handler()).unwrap();
         let (st, body) = http_request(&srv.addr, "POST", "/echo", "hello world").unwrap();
         assert_eq!(st, 200);
         assert_eq!(body, b"hello world");
@@ -262,5 +686,198 @@ mod tests {
         assert!(text.contains("data: ev0"));
         assert!(text.contains("data: [DONE]"));
         srv.shutdown();
+    }
+
+    /// ISSUE 10: a multi-turn conversation reuses its connection — two
+    /// requests down one socket, two responses back, first one marked
+    /// keep-alive.
+    #[test]
+    fn keep_alive_reuses_one_connection() {
+        let mut srv = HttpServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        let mut sock = TcpStream::connect(&srv.addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        for (i, msg) in ["turn-one", "turn-two"].iter().enumerate() {
+            let req = format!(
+                "POST /echo HTTP/1.1\r\nhost: x\r\ncontent-length: {}\r\n\r\n{msg}",
+                msg.len()
+            );
+            sock.write_all(req.as_bytes()).unwrap();
+            // read exactly one response off the shared socket
+            let mut buf = Vec::new();
+            let mut byte = [0u8; 1];
+            while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+                sock.read_exact(&mut byte).unwrap();
+                buf.push(byte[0]);
+            }
+            let head = String::from_utf8_lossy(&buf).to_string();
+            assert!(head.starts_with("HTTP/1.1 200"), "turn {i}: {head}");
+            assert!(head.contains("connection: keep-alive"), "turn {i}: {head}");
+            let clen: usize = head
+                .lines()
+                .find_map(|l| l.strip_prefix("content-length: "))
+                .unwrap()
+                .trim()
+                .parse()
+                .unwrap();
+            let mut body = vec![0u8; clen];
+            sock.read_exact(&mut body).unwrap();
+            assert_eq!(body, msg.as_bytes(), "turn {i}");
+        }
+        srv.shutdown();
+    }
+
+    /// ISSUE 10 satellite: a request whose content-length exceeds the cap
+    /// is answered 413 — before this PR the server allocated whatever the
+    /// client claimed.
+    #[test]
+    fn oversized_body_is_413_not_an_allocation() {
+        let mut srv =
+            HttpServer::serve_with("127.0.0.1:0", echo_handler(), tiny_opts()).unwrap();
+        let mut sock = TcpStream::connect(&srv.addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // claim 100 GB, send nothing — the 413 must come from the header
+        sock.write_all(b"POST /echo HTTP/1.1\r\nhost: x\r\ncontent-length: 107374182400\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        let mut r = BufReader::new(sock);
+        r.read_line(&mut resp).unwrap();
+        assert!(resp.contains("413"), "{resp}");
+        assert!(resp.contains("Payload Too Large"), "{resp}");
+        srv.shutdown();
+    }
+
+    /// ISSUE 10 satellite: header count and line-length bounds.
+    #[test]
+    fn header_bounds_are_431() {
+        let mut srv =
+            HttpServer::serve_with("127.0.0.1:0", echo_handler(), tiny_opts()).unwrap();
+        // too many header lines
+        let mut sock = TcpStream::connect(&srv.addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut req = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..16 {
+            req.push_str(&format!("x-h{i}: v\r\n"));
+        }
+        req.push_str("\r\n");
+        sock.write_all(req.as_bytes()).unwrap();
+        let mut line = String::new();
+        BufReader::new(sock).read_line(&mut line).unwrap();
+        assert!(line.contains("431"), "{line}");
+
+        // one absurdly long header line
+        let mut sock = TcpStream::connect(&srv.addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let long = "y".repeat(4096);
+        sock.write_all(format!("GET / HTTP/1.1\r\nx-long: {long}\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut line = String::new();
+        BufReader::new(sock).read_line(&mut line).unwrap();
+        assert!(line.contains("431"), "{line}");
+        srv.shutdown();
+    }
+
+    /// ISSUE 10: with every worker pinned and the accept queue full, the
+    /// next connection is shed immediately with 429 + Retry-After — never
+    /// queued into an unbounded hang.
+    #[test]
+    fn overflow_is_shed_with_429_retry_after() {
+        let gate = Arc::new(ConnQueue::default());
+        let g2 = gate.clone();
+        let opts = ServerOptions { workers: 1, queue_cap: 1, ..tiny_opts() };
+        let counters = opts.counters.clone();
+        let mut srv = HttpServer::serve_with(
+            "127.0.0.1:0",
+            Arc::new(move |_req: &HttpRequest| {
+                // park the worker until the test releases it
+                let _ = g2.dequeue(Duration::from_secs(10));
+                HttpResponse::text(200, "slow")
+            }),
+            opts,
+        )
+        .unwrap();
+        // conn A occupies the only worker
+        let mut a = TcpStream::connect(&srv.addr).unwrap();
+        a.write_all(b"GET /slow HTTP/1.1\r\nhost: x\r\n\r\n").unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        // conn B fills the queue (never sends a request)
+        let _b = TcpStream::connect(&srv.addr).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        // conn C must be shed fast with 429 + retry-after
+        let t0 = std::time::Instant::now();
+        let mut c = TcpStream::connect(&srv.addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut resp = String::new();
+        let mut r = BufReader::new(c);
+        r.read_line(&mut resp).unwrap();
+        let shed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(resp.contains("429"), "{resp}");
+        let mut saw_retry_after = false;
+        loop {
+            let mut h = String::new();
+            r.read_line(&mut h).unwrap();
+            if h.trim().is_empty() {
+                break;
+            }
+            if h.to_lowercase().starts_with("retry-after:") {
+                saw_retry_after = true;
+            }
+        }
+        assert!(saw_retry_after, "shed response must advertise Retry-After");
+        assert!(shed_ms < 1000.0, "shed took {shed_ms:.0} ms");
+        assert!(counters.snapshot().shed >= 1);
+        // release the parked worker so shutdown can join it
+        gate.seal();
+        srv.shutdown();
+    }
+
+    /// ISSUE 10 satellite: malformed-HTTP fuzz. Every probe must produce a
+    /// typed error or a clean close — never a panic or a leaked worker
+    /// (proven by the server still answering afterwards on a 2-worker
+    /// pool fed more garbage than it has workers).
+    #[test]
+    fn malformed_http_never_kills_the_server() {
+        let mut srv =
+            HttpServer::serve_with("127.0.0.1:0", echo_handler(), tiny_opts()).unwrap();
+        let probes: Vec<Vec<u8>> = vec![
+            b"".to_vec(),                                       // connect + close
+            b"GET".to_vec(),                                    // truncated request line
+            b"GET /\r\n\r\n".to_vec(),                          // no version is fine, parse tolerates
+            b"\r\n\r\n".to_vec(),                               // empty request line
+            b"GARBAGE NONSENSE\r\nno-colon-header\r\n\r\n".to_vec(), // bad header
+            b"POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc".to_vec(), // short body
+            b"POST / HTTP/1.1\r\ncontent-length: banana\r\n\r\n".to_vec(), // bad length
+            [b"GET / HTTP/1.1\r\nx: ".to_vec(), vec![0xffu8; 512]].concat(), // binary garbage
+        ];
+        for (i, p) in probes.iter().enumerate() {
+            let mut sock = TcpStream::connect(&srv.addr).unwrap();
+            let _ = sock.write_all(p);
+            drop(sock); // mid-request disconnect
+            // and once more, half-open: write then linger briefly
+            let mut sock = TcpStream::connect(&srv.addr).unwrap();
+            let _ = sock.write_all(p);
+            std::thread::sleep(Duration::from_millis(10));
+            drop(sock);
+            let _ = i;
+        }
+        // mid-SSE disconnect: a streaming handler whose client vanishes
+        let (st, _) = http_request(&srv.addr, "GET", "/x", "").unwrap();
+        assert_eq!(st, 200, "server must still answer after the fuzz");
+        let (st, body) = http_request(&srv.addr, "POST", "/echo", "still alive").unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(body, b"still alive");
+        srv.shutdown();
+    }
+
+    /// ISSUE 10 satellite: the new front-door statuses carry their real
+    /// reason phrases (they mapped to "Internal Server Error" before).
+    #[test]
+    fn status_text_covers_front_door_statuses() {
+        assert_eq!(status_text(413), "Payload Too Large");
+        assert_eq!(status_text(429), "Too Many Requests");
+        assert_eq!(status_text(431), "Request Header Fields Too Large");
+        assert_eq!(status_text(504), "Gateway Timeout");
+        assert_eq!(status_text(408), "Request Timeout");
+        assert_eq!(status_text(200), "OK");
+        assert_eq!(status_text(999), "Internal Server Error");
     }
 }

@@ -1,0 +1,495 @@
+//! Open-loop load generator for the front door (ISSUE 10).
+//!
+//! Open-loop means arrivals follow a Poisson process that does NOT slow
+//! down when the server does — the generator keeps firing at the offered
+//! rate, so queueing delay shows up in the measured tail instead of being
+//! hidden by a closed loop that politely waits. This is the load model
+//! the compound-AI serving literature (PAPERS.md) insists on for p99
+//! TTFT/ITL claims, and the harness every rack-level SLO in this repo is
+//! measured against.
+//!
+//! Each planned request runs on its own thread: sleep until its arrival
+//! offset (absolute against one shared epoch), connect, POST a chat
+//! completion (optionally SSE), and record a
+//! [`RequestOutcome`] with per-event timestamps. A shared gauge tracks the
+//! high-water mark of concurrently open streams, and `disconnect_after`
+//! drops the socket mid-stream to exercise the server's client-disconnect
+//! cancellation path.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::prng::Rng;
+use crate::util::stats::Summary;
+use crate::util::sync::lock_clean;
+
+/// One tenant's share of the offered load.
+#[derive(Debug, Clone)]
+pub struct TenantMix {
+    pub id: String,
+    /// Relative share of requests (weights need not sum to 1).
+    pub weight: f64,
+    /// `priority` field stamped on this tenant's requests.
+    pub priority: u8,
+}
+
+/// Offered-load description.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    pub addr: String,
+    pub model: String,
+    pub n_requests: usize,
+    /// Poisson arrival rate (requests/second).
+    pub rate_per_s: f64,
+    pub seed: u64,
+    /// Tenant mix; empty = every request anonymous at priority 1.
+    pub tenants: Vec<TenantMix>,
+    /// Prompt length range in bytes (uniform).
+    pub prompt_bytes: (usize, usize),
+    /// `max_tokens` range (uniform).
+    pub max_tokens: (usize, usize),
+    pub stream: bool,
+    /// Socket read/write deadline — a hung request fails loudly here
+    /// instead of wedging the generator.
+    pub io_timeout: Duration,
+    /// Drop the socket after this many SSE content events (mid-stream
+    /// client disconnect). None = read to completion.
+    pub disconnect_after: Option<usize>,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            addr: String::new(),
+            model: String::new(),
+            n_requests: 64,
+            rate_per_s: 100.0,
+            seed: 7,
+            tenants: Vec::new(),
+            prompt_bytes: (8, 32),
+            max_tokens: (4, 8),
+            stream: true,
+            io_timeout: Duration::from_secs(30),
+            disconnect_after: None,
+        }
+    }
+}
+
+/// What one request experienced.
+#[derive(Debug, Clone, Default)]
+pub struct RequestOutcome {
+    /// HTTP status (0 = the request never got a status line).
+    pub status: u16,
+    pub tenant: String,
+    /// Request sent → first SSE content event (or full body for
+    /// non-stream) in seconds.
+    pub ttft_s: f64,
+    /// Gaps between consecutive SSE content events.
+    pub itl_gaps_s: Vec<f64>,
+    /// Content events observed.
+    pub tokens: usize,
+    /// Connect → last byte (for sheds/throttles: connect → rejection).
+    pub turnaround_s: f64,
+    /// This request intentionally dropped its socket mid-stream.
+    pub disconnected: bool,
+    pub error: Option<String>,
+}
+
+/// Aggregate view over one run.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    pub outcomes: Vec<RequestOutcome>,
+    /// High-water mark of concurrently open streaming responses.
+    pub conc_hwm: usize,
+}
+
+impl LoadReport {
+    pub fn count_status(&self, status: u16) -> usize {
+        self.outcomes.iter().filter(|o| o.status == status).count()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.error.is_some()).count()
+    }
+
+    /// Completed-successfully outcomes (200, no error, not an intentional
+    /// disconnect).
+    pub fn ok(&self) -> impl Iterator<Item = &RequestOutcome> {
+        self.outcomes
+            .iter()
+            .filter(|o| o.status == 200 && o.error.is_none() && !o.disconnected)
+    }
+
+    /// TTFT distribution over successful requests.
+    pub fn ttft(&self) -> Summary {
+        let mut s = Summary::new();
+        for o in self.ok() {
+            s.add(o.ttft_s);
+        }
+        s
+    }
+
+    /// Pooled inter-token gaps over successful requests.
+    pub fn itl(&self) -> Summary {
+        let mut s = Summary::new();
+        for o in self.ok() {
+            s.extend(&o.itl_gaps_s);
+        }
+        s
+    }
+
+    /// Connect→rejection latency for shed/throttled requests (429/503):
+    /// the SLO is that saying "no" is FAST — never a hang.
+    pub fn shed_latency(&self) -> Summary {
+        let mut s = Summary::new();
+        for o in &self.outcomes {
+            if o.status == 429 || o.status == 503 {
+                s.add(o.turnaround_s);
+            }
+        }
+        s
+    }
+}
+
+struct Plan {
+    at_s: f64,
+    prompt_len: usize,
+    max_tokens: usize,
+    tenant: Option<TenantMix>,
+    index: usize,
+}
+
+/// Run the offered load and collect outcomes. Blocks until every request
+/// resolved (completed, rejected, errored, or intentionally dropped).
+pub fn run(spec: &LoadSpec) -> LoadReport {
+    let mut rng = Rng::seed(spec.seed);
+    let total_w: f64 = spec.tenants.iter().map(|t| t.weight).sum();
+    let mut plans = Vec::with_capacity(spec.n_requests);
+    let mut t = 0.0;
+    for index in 0..spec.n_requests {
+        t += rng.exponential(spec.rate_per_s);
+        let tenant = if spec.tenants.is_empty() {
+            None
+        } else {
+            // weighted draw over the mix
+            let mut pick = rng.f64() * total_w;
+            let mut chosen = spec.tenants.len() - 1;
+            for (i, tn) in spec.tenants.iter().enumerate() {
+                if pick < tn.weight {
+                    chosen = i;
+                    break;
+                }
+                pick -= tn.weight;
+            }
+            Some(spec.tenants[chosen].clone())
+        };
+        plans.push(Plan {
+            at_s: t,
+            prompt_len: rng.range(spec.prompt_bytes.0 as u64, spec.prompt_bytes.1 as u64 + 1)
+                as usize,
+            max_tokens: rng.range(spec.max_tokens.0 as u64, spec.max_tokens.1 as u64 + 1)
+                as usize,
+            tenant,
+            index,
+        });
+    }
+
+    let outcomes = Arc::new(Mutex::new(Vec::with_capacity(spec.n_requests)));
+    let conc = Arc::new(AtomicUsize::new(0));
+    let hwm = Arc::new(AtomicUsize::new(0));
+    // arrival offsets are absolute against one shared epoch; a thread
+    // that spawns after its offset fires immediately — open-loop arrivals
+    // never slow down for a tardy generator, let alone a tardy server
+    let epoch = Instant::now();
+    let mut handles = Vec::with_capacity(plans.len());
+    for plan in plans {
+        let spec = spec.clone();
+        let outcomes = outcomes.clone();
+        let conc = conc.clone();
+        let hwm = hwm.clone();
+        handles.push(std::thread::spawn(move || {
+            let target = Duration::from_secs_f64(plan.at_s);
+            if let Some(d) = target.checked_sub(epoch.elapsed()) {
+                std::thread::sleep(d);
+            }
+            let outcome = fire(&spec, &plan, &conc, &hwm);
+            lock_clean(&outcomes).push(outcome);
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let collected = std::mem::take(&mut *lock_clean(&outcomes));
+    LoadReport { outcomes: collected, conc_hwm: hwm.load(Ordering::SeqCst) }
+}
+
+/// Issue one request and observe what comes back.
+fn fire(spec: &LoadSpec, plan: &Plan, conc: &AtomicUsize, hwm: &AtomicUsize) -> RequestOutcome {
+    let mut out = RequestOutcome {
+        tenant: plan.tenant.as_ref().map(|t| t.id.clone()).unwrap_or_default(),
+        ..RequestOutcome::default()
+    };
+    let t0 = Instant::now();
+    let sock = match TcpStream::connect(&spec.addr) {
+        Ok(s) => s,
+        Err(e) => {
+            out.error = Some(format!("connect: {e}"));
+            return out;
+        }
+    };
+    if sock.set_read_timeout(Some(spec.io_timeout)).is_err()
+        || sock.set_write_timeout(Some(spec.io_timeout)).is_err()
+    {
+        out.error = Some("socket deadline setup failed".into());
+        return out;
+    }
+    let _ = sock.set_nodelay(true);
+
+    // the request index leads the prompt so each conversation has a
+    // distinct prefix hash (no accidental affinity pileup on one queue)
+    let mut prompt = format!("req {} ", plan.index);
+    while prompt.len() < plan.prompt_len {
+        prompt.push_str("np ");
+    }
+    let priority = plan.tenant.as_ref().map(|t| t.priority).unwrap_or(1);
+    let body = format!(
+        r#"{{"model":"{}","stream":{},"max_tokens":{},"priority":{},"messages":[{{"role":"user","content":"{}"}}]}}"#,
+        spec.model, spec.stream, plan.max_tokens, priority, prompt,
+    );
+    let tenant_header = plan
+        .tenant
+        .as_ref()
+        .map(|t| format!("x-tenant-id: {}\r\n", t.id))
+        .unwrap_or_default();
+    let req = format!(
+        "POST /v1/chat/completions HTTP/1.1\r\nhost: lg\r\n{tenant_header}connection: close\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len(),
+    );
+    let mut reader = BufReader::new(sock);
+    if reader.get_mut().write_all(req.as_bytes()).is_err() {
+        out.error = Some("request write failed".into());
+        out.turnaround_s = t0.elapsed().as_secs_f64();
+        return out;
+    }
+
+    // status line + headers
+    let mut status_line = String::new();
+    if reader.read_line(&mut status_line).is_err() || status_line.is_empty() {
+        out.error = Some("no status line".into());
+        out.turnaround_s = t0.elapsed().as_secs_f64();
+        return out;
+    }
+    out.status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut content_length: Option<usize> = None;
+    let mut is_sse = false;
+    loop {
+        let mut h = String::new();
+        match reader.read_line(&mut h) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        let lower = h.to_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length = v.trim().parse().ok();
+        }
+        if lower.starts_with("content-type:") && lower.contains("text/event-stream") {
+            is_sse = true;
+        }
+    }
+
+    if out.status != 200 || !is_sse {
+        // full-body response: read it, stamp TTFT as end-to-end
+        let mut body = Vec::new();
+        match content_length {
+            Some(n) => {
+                body.resize(n, 0);
+                if reader.read_exact(&mut body).is_err() {
+                    out.error = Some("short response body".into());
+                }
+            }
+            None => {
+                let _ = reader.read_to_end(&mut body);
+            }
+        }
+        out.ttft_s = t0.elapsed().as_secs_f64();
+        out.turnaround_s = out.ttft_s;
+        if out.status == 200 {
+            out.tokens = 1;
+        }
+        return out;
+    }
+
+    // streaming: the response head is open — this connection now counts
+    // toward the concurrency gauge until the stream resolves
+    let open = conc.fetch_add(1, Ordering::SeqCst) + 1;
+    hwm.fetch_max(open, Ordering::SeqCst);
+    let mut last_event: Option<Instant> = None;
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e) => {
+                out.error = Some(format!("stream read: {e}"));
+                break;
+            }
+        }
+        let line = line.trim_end();
+        let Some(payload) = line.strip_prefix("data: ") else {
+            continue;
+        };
+        if payload == "[DONE]" {
+            break;
+        }
+        if payload.contains("generation_timeout") {
+            out.error = Some("generation_timeout".into());
+            break;
+        }
+        if !payload.contains("\"content\"") {
+            continue; // finish chunk (empty delta) or keep-alive noise
+        }
+        let now = Instant::now();
+        if let Some(prev) = last_event {
+            out.itl_gaps_s.push(now.duration_since(prev).as_secs_f64());
+        } else {
+            out.ttft_s = now.duration_since(t0).as_secs_f64();
+        }
+        last_event = Some(now);
+        out.tokens += 1;
+        if spec.disconnect_after.is_some_and(|n| out.tokens >= n) {
+            out.disconnected = true;
+            break; // drop the socket mid-stream on return
+        }
+    }
+    conc.fetch_sub(1, Ordering::SeqCst);
+    out.turnaround_s = t0.elapsed().as_secs_f64();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::http::{HttpRequest, HttpResponse, HttpServer};
+    use std::sync::Arc;
+
+    /// The generator measures what the server actually does: statuses,
+    /// TTFT/ITL from SSE timestamps, concurrency HWM, shed latency.
+    #[test]
+    fn loadgen_measures_sse_and_rejections() {
+        let mut srv = HttpServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|req: &HttpRequest| {
+                let body = String::from_utf8_lossy(&req.body).to_string();
+                if body.contains("\"reject\"") {
+                    return HttpResponse::json(503, r#"{"error":"overloaded"}"#.into());
+                }
+                HttpResponse::Sse(Box::new(|w| {
+                    for i in 0..3 {
+                        let chunk = format!(
+                            r#"{{"choices":[{{"delta":{{"content":"t{i}"}}}}]}}"#
+                        );
+                        if write!(w, "data: {chunk}\n\n").is_err() {
+                            return;
+                        }
+                        let _ = w.flush();
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    let _ = write!(w, "data: [DONE]\n\n");
+                }))
+            }),
+        )
+        .unwrap();
+        let report = run(&LoadSpec {
+            addr: srv.addr.clone(),
+            model: "m".into(),
+            n_requests: 8,
+            rate_per_s: 400.0,
+            seed: 3,
+            stream: true,
+            io_timeout: Duration::from_secs(5),
+            ..LoadSpec::default()
+        });
+        assert_eq!(report.outcomes.len(), 8);
+        assert_eq!(report.count_status(200), 8);
+        assert_eq!(report.errors(), 0);
+        assert!(report.conc_hwm >= 1);
+        let ttft = report.ttft();
+        assert_eq!(ttft.count(), 8);
+        assert!(ttft.min() > 0.0);
+        // 3 content events -> 2 gaps each, paced at ~5 ms
+        let itl = report.itl();
+        assert_eq!(itl.count(), 16);
+        assert!(itl.mean() > 1e-3, "{}", itl.mean());
+        for o in &report.outcomes {
+            assert_eq!(o.tokens, 3);
+        }
+
+        // rejection path: the model name trips the 503 branch
+        let report = run(&LoadSpec {
+            addr: srv.addr.clone(),
+            model: "reject".into(),
+            n_requests: 4,
+            rate_per_s: 400.0,
+            seed: 4,
+            stream: true,
+            io_timeout: Duration::from_secs(5),
+            ..LoadSpec::default()
+        });
+        assert_eq!(report.count_status(503), 4);
+        assert_eq!(report.shed_latency().count(), 4);
+        assert!(report.shed_latency().max() < 1.0);
+        srv.shutdown();
+    }
+
+    /// `disconnect_after` drops the socket mid-stream and marks the
+    /// outcome, so harnesses can assert the server released the slot.
+    #[test]
+    fn loadgen_mid_stream_disconnect() {
+        let mut srv = HttpServer::serve(
+            "127.0.0.1:0",
+            Arc::new(|_req: &HttpRequest| {
+                HttpResponse::Sse(Box::new(|w| {
+                    for i in 0..50 {
+                        let chunk = format!(
+                            r#"{{"choices":[{{"delta":{{"content":"t{i}"}}}}]}}"#
+                        );
+                        if write!(w, "data: {chunk}\n\n").is_err() {
+                            return;
+                        }
+                        let _ = w.flush();
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    let _ = write!(w, "data: [DONE]\n\n");
+                }))
+            }),
+        )
+        .unwrap();
+        let report = run(&LoadSpec {
+            addr: srv.addr.clone(),
+            model: "m".into(),
+            n_requests: 2,
+            rate_per_s: 400.0,
+            seed: 5,
+            stream: true,
+            io_timeout: Duration::from_secs(5),
+            disconnect_after: Some(2),
+            ..LoadSpec::default()
+        });
+        for o in &report.outcomes {
+            assert!(o.disconnected, "{o:?}");
+            assert_eq!(o.tokens, 2);
+        }
+        srv.shutdown();
+    }
+}

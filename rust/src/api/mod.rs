@@ -3,13 +3,20 @@
 //! the paper's API endpoint component does.
 //!
 //! Hand-rolled HTTP/1.1 over std::net (no hyper in this environment):
-//! thread per connection, SSE (`text/event-stream`) for streaming.
+//! bounded connection-worker pool with accept-queue overflow shedding
+//! (429/Retry-After), socket deadlines, request-size caps, keep-alive, and
+//! SSE (`text/event-stream`) for streaming — ISSUE 10's honest-backpressure
+//! front door, proved by the open-loop load generator in [`loadgen`].
 
 pub mod http;
+pub mod loadgen;
 mod openai;
 
-pub use http::{http_request, HttpRequest, HttpResponse, HttpServer};
+pub use http::{
+    http_request, HttpError, HttpRequest, HttpResponse, HttpServer, ServerOptions,
+};
 pub use openai::{
-    chat_completion_chunk, model_not_found_json, model_overloaded_json, parse_chat_request,
-    AdmitDecision, Admission, ApiServer, ChatRequest, PrefixRoute,
+    chat_completion_chunk, gen_timeout_json, model_not_found_json, model_overloaded_json,
+    parse_chat_request, tenant_throttled_json, AdmitDecision, Admission, ApiOptions, ApiServer,
+    ChatRequest, PrefixRoute, TenantClass, TenantPolicy, TenantVerdict, MAX_PRIORITY,
 };

@@ -1,17 +1,23 @@
 //! OpenAI streaming chat-completions protocol (§IV: "endpoints that
 //! implement OpenAI's streaming chat completions protocol").
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::anyhow;
 use crate::util::err::Result;
 
-use crate::broker::{Broker, Task};
+use crate::broker::{Broker, Recv, Task};
 use crate::service::prefix_route_hash;
 use crate::util::json::Value;
+use crate::util::sync::lock_clean;
 
-use super::http::{HttpRequest, HttpResponse, HttpServer};
+use super::http::{HttpRequest, HttpResponse, HttpServer, ServerOptions};
+
+/// Highest broker priority class a client may request (classes 0..=2).
+pub const MAX_PRIORITY: u8 = 2;
 
 #[derive(Debug, Clone)]
 pub struct ChatRequest {
@@ -82,6 +88,43 @@ pub fn model_overloaded_json(model: &str) -> String {
     .to_string()
 }
 
+/// OpenAI-style error body for a generation that blew its deadline (504).
+pub fn gen_timeout_json(model: &str) -> String {
+    Value::obj(vec![(
+        "error",
+        Value::obj(vec![
+            (
+                "message",
+                Value::str(format!(
+                    "Generation on `{model}` exceeded the server deadline and was cancelled"
+                )),
+            ),
+            ("type", Value::str("server_error")),
+            ("param", Value::str("model")),
+            ("code", Value::str("generation_timeout")),
+        ]),
+    )])
+    .to_string()
+}
+
+/// OpenAI-style error body for a rate-limited tenant (429).
+pub fn tenant_throttled_json(tenant: &str) -> String {
+    Value::obj(vec![(
+        "error",
+        Value::obj(vec![
+            (
+                "message",
+                Value::str(format!(
+                    "Tenant `{tenant}` exceeded its request rate; retry after the advertised delay"
+                )),
+            ),
+            ("type", Value::str("rate_limit_error")),
+            ("code", Value::str("tenant_throttled")),
+        ]),
+    )])
+    .to_string()
+}
+
 /// Parse a chat-completions body: {"model", "messages": [...], ...}.
 pub fn parse_chat_request(body: &str) -> Result<ChatRequest> {
     let v = Value::parse(body).map_err(|e| anyhow!("bad json: {e}"))?;
@@ -101,18 +144,41 @@ pub fn parse_chat_request(body: &str) -> Result<ChatRequest> {
             prompt.push_str(c);
         }
     }
+    // ISSUE 10 satellite: `max_tokens` and `priority` used to go through
+    // `as_usize().unwrap_or(default)`, which floors floats and silently
+    // falls back on garbage; `priority` was then truncated `as u8`, so
+    // `"priority": 256` wrapped to 0 and jumped the queue. Non-integers
+    // are now a 400; out-of-range priorities clamp to the class range.
+    let max_tokens = match v.get("max_tokens") {
+        None | Some(Value::Null) => 16,
+        Some(m) => {
+            let n = m
+                .as_f64()
+                .ok_or_else(|| anyhow!("max_tokens must be a positive integer"))?;
+            if n.fract() != 0.0 || n < 1.0 {
+                return Err(anyhow!("max_tokens must be a positive integer, got {n}"));
+            }
+            n as usize
+        }
+    };
+    let priority = match v.get("priority") {
+        None | Some(Value::Null) => 1,
+        Some(p) => {
+            let n = p
+                .as_f64()
+                .ok_or_else(|| anyhow!("priority must be an integer"))?;
+            if n.fract() != 0.0 || n < 0.0 {
+                return Err(anyhow!("priority must be a non-negative integer, got {n}"));
+            }
+            (n as u64).min(MAX_PRIORITY as u64) as u8
+        }
+    };
     Ok(ChatRequest {
         model,
         prompt,
         stream: v.get("stream").and_then(|s| s.as_bool()).unwrap_or(false),
-        max_tokens: v
-            .get("max_tokens")
-            .and_then(|s| s.as_usize())
-            .unwrap_or(16),
-        priority: v
-            .get("priority")
-            .and_then(|s| s.as_usize())
-            .unwrap_or(1) as u8,
+        max_tokens,
+        priority,
     })
 }
 
@@ -138,6 +204,113 @@ pub fn chat_completion_chunk(id: u64, model: &str, delta: &str, done: bool) -> S
         ("choices", Value::arr([choice])),
     ])
     .to_string()
+}
+
+// ---------------------------------------------------------- tenant policy
+
+/// One tenant class: priority ceiling + token-bucket rate limit
+/// (ISSUE 10). `rate_per_s <= 0` means unlimited.
+#[derive(Debug, Clone)]
+pub struct TenantClass {
+    /// Highest broker priority class requests from this tenant may claim;
+    /// a client asking for more is clamped, not rejected.
+    pub max_priority: u8,
+    /// Sustained admission rate (requests/second). `<= 0` = unlimited.
+    pub rate_per_s: f64,
+    /// Bucket depth: how many requests may burst above the sustained rate.
+    pub burst: f64,
+}
+
+impl Default for TenantClass {
+    fn default() -> Self {
+        TenantClass { max_priority: MAX_PRIORITY, rate_per_s: 0.0, burst: 1.0 }
+    }
+}
+
+/// Per-request verdict from [`TenantPolicy::admit_tenant`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TenantVerdict {
+    Admit { max_priority: u8 },
+    /// Token bucket empty: 429 with this `Retry-After`.
+    Throttle { retry_after_s: u32 },
+}
+
+/// Per-tenant admission classes (ISSUE 10): the `x-tenant-id` header maps
+/// to a class; unknown tenants get `fallback`. Token buckets refill
+/// continuously, so one tenant flooding the door drains only its own
+/// bucket — it cannot starve the rest (the paper's 28-users-per-instance
+/// story assumes the users actually share).
+pub struct TenantPolicy {
+    classes: BTreeMap<String, TenantClass>,
+    fallback: TenantClass,
+    /// tenant -> (tokens remaining, last refill instant).
+    buckets: Mutex<BTreeMap<String, (f64, Instant)>>,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        Self::open()
+    }
+}
+
+impl TenantPolicy {
+    /// No limits: every tenant admitted at full priority range.
+    pub fn open() -> TenantPolicy {
+        TenantPolicy {
+            classes: BTreeMap::new(),
+            fallback: TenantClass::default(),
+            buckets: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn new(classes: BTreeMap<String, TenantClass>, fallback: TenantClass) -> TenantPolicy {
+        TenantPolicy { classes, fallback, buckets: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Charge one request against `tenant`'s bucket.
+    pub fn admit_tenant(&self, tenant: &str) -> TenantVerdict {
+        let class = self.classes.get(tenant).unwrap_or(&self.fallback);
+        if class.rate_per_s <= 0.0 {
+            return TenantVerdict::Admit { max_priority: class.max_priority };
+        }
+        let now = Instant::now();
+        let mut g = lock_clean(&self.buckets);
+        let (tokens, last) = g.entry(tenant.to_string()).or_insert((class.burst, now));
+        let elapsed = now.duration_since(*last).as_secs_f64();
+        *tokens = (*tokens + elapsed * class.rate_per_s).min(class.burst);
+        *last = now;
+        if *tokens >= 1.0 {
+            *tokens -= 1.0;
+            TenantVerdict::Admit { max_priority: class.max_priority }
+        } else {
+            let wait_s = (1.0 - *tokens) / class.rate_per_s;
+            TenantVerdict::Throttle { retry_after_s: wait_s.ceil().max(1.0) as u32 }
+        }
+    }
+}
+
+/// Front-door options above the HTTP layer (ISSUE 10).
+#[derive(Clone)]
+pub struct ApiOptions {
+    /// Connection-level knobs (worker pool, accept queue, socket caps).
+    pub server: ServerOptions,
+    /// Generation deadline: an SSE stream that produces nothing for this
+    /// long — or a non-stream aggregation that exceeds it end-to-end — is
+    /// cancelled (slot retired) and the client gets a typed 504 instead
+    /// of hanging on a wedged instance forever.
+    pub gen_deadline: Duration,
+    /// Per-tenant admission classes.
+    pub tenants: Arc<TenantPolicy>,
+}
+
+impl Default for ApiOptions {
+    fn default() -> Self {
+        ApiOptions {
+            server: ServerOptions::default(),
+            gen_deadline: Duration::from_secs(30),
+            tenants: Arc::new(TenantPolicy::open()),
+        }
+    }
 }
 
 /// The API endpoint component: HTTP server that posts tasks to the broker
@@ -178,7 +351,23 @@ impl ApiServer {
         admission: Admission,
         route: PrefixRoute,
     ) -> Result<ApiServer> {
+        Self::serve_with(addr, broker, admission, route, ApiOptions::default())
+    }
+
+    /// Fully-optioned front door (ISSUE 10): connection-level backpressure
+    /// knobs, per-tenant admission classes, and the generation deadline.
+    pub fn serve_with(
+        addr: &str,
+        broker: Arc<Broker>,
+        admission: Admission,
+        route: PrefixRoute,
+        opts: ApiOptions,
+    ) -> Result<ApiServer> {
         let next_id = Arc::new(AtomicU64::new(1));
+        let counters = opts.server.counters.clone();
+        let gen_deadline = opts.gen_deadline;
+        let tenants = opts.tenants.clone();
+        let server_opts = opts.server;
         let handler = {
             let broker = broker.clone();
             move |req: &HttpRequest| -> HttpResponse {
@@ -192,11 +381,33 @@ impl ApiServer {
                         let chat = match parse_chat_request(&body) {
                             Ok(c) => c,
                             Err(e) => {
+                                counters.on_bad_request();
                                 return HttpResponse::json(
                                     400,
                                     Value::obj(vec![("error", Value::str(e.to_string()))])
                                         .to_string(),
                                 )
+                            }
+                        };
+                        // tenant gate (ISSUE 10): identity from the
+                        // x-tenant-id header, class = priority ceiling +
+                        // token bucket, checked before capacity admission
+                        // so a flooding tenant drains only its own bucket
+                        let tenant = req
+                            .headers
+                            .get("x-tenant-id")
+                            .map(|s| s.as_str())
+                            .unwrap_or("anonymous")
+                            .to_string();
+                        let max_priority = match tenants.admit_tenant(&tenant) {
+                            TenantVerdict::Admit { max_priority } => max_priority,
+                            TenantVerdict::Throttle { retry_after_s } => {
+                                counters.on_throttled(&tenant);
+                                return HttpResponse::json_with(
+                                    429,
+                                    tenant_throttled_json(&tenant),
+                                    vec![("retry-after".into(), retry_after_s.to_string())],
+                                );
                             }
                         };
                         match admission(&chat.model) {
@@ -214,6 +425,7 @@ impl ApiServer {
                                 )
                             }
                         }
+                        counters.on_accept(&tenant);
                         let id = next_id.fetch_add(1, Ordering::Relaxed);
                         // §IV: post an inference task with model + priority.
                         // The prefix hash is stamped here (over the
@@ -227,12 +439,19 @@ impl ApiServer {
                             &dest,
                             Task {
                                 id,
-                                priority: chat.priority,
+                                // the tenant's class caps the claimable
+                                // priority; a greedy client is clamped
+                                priority: chat.priority.min(max_priority),
                                 body: chat.prompt.clone(),
                                 reply_to: id,
                                 retries: 0,
                                 resume_from: 0,
                                 prefix_hash: phash,
+                                // ISSUE 10 satellite: the client's length
+                                // cap rides the task to the instance's
+                                // retirement check (it used to be parsed
+                                // and then dropped on the floor here)
+                                max_tokens: chat.max_tokens,
                             },
                         );
                         // Re-check after posting: a teardown can race the
@@ -261,22 +480,76 @@ impl ApiServer {
                         }
                         let model = chat.model.clone();
                         if chat.stream {
+                            let b3 = broker.clone();
+                            let c3 = counters.clone();
                             HttpResponse::Sse(Box::new(move |w| {
-                                while let Some(text) = ch.recv() {
-                                    let chunk = chat_completion_chunk(id, &model, &text, false);
-                                    if write!(w, "data: {chunk}\n\n").is_err() {
-                                        return;
+                                loop {
+                                    match ch.recv_deadline(gen_deadline) {
+                                        Recv::Msg(text) => {
+                                            let chunk =
+                                                chat_completion_chunk(id, &model, &text, false);
+                                            if write!(w, "data: {chunk}\n\n").is_err()
+                                                || w.flush().is_err()
+                                            {
+                                                // client disconnected
+                                                // mid-stream: cancel the
+                                                // generation so the
+                                                // instance retires the
+                                                // slot early instead of
+                                                // decoding for nobody
+                                                ch.cancel();
+                                                c3.on_disconnect();
+                                                return;
+                                            }
+                                        }
+                                        Recv::Finished => break,
+                                        Recv::TimedOut => {
+                                            // wedged instance: no token
+                                            // for gen_deadline — cancel,
+                                            // drop the channel, tell the
+                                            // client why the stream ends
+                                            ch.cancel();
+                                            b3.remove_response(id);
+                                            c3.on_timeout();
+                                            let _ = write!(
+                                                w,
+                                                "data: {}\n\n",
+                                                gen_timeout_json(&model)
+                                            );
+                                            return;
+                                        }
                                     }
-                                    let _ = w.flush();
                                 }
                                 let fin = chat_completion_chunk(id, &model, "", true);
                                 let _ = write!(w, "data: {fin}\n\ndata: [DONE]\n\n");
                             }))
                         } else {
-                            // aggregate the stream into one completion
+                            // aggregate the stream into one completion,
+                            // under an end-to-end generation deadline: a
+                            // wedged instance yields a typed 504, never a
+                            // client hung forever (ISSUE 10)
+                            let deadline = Instant::now() + gen_deadline;
                             let mut full = String::new();
-                            while let Some(text) = ch.recv() {
-                                full.push_str(&text);
+                            loop {
+                                let left = deadline.saturating_duration_since(Instant::now());
+                                let verdict = if left.is_zero() {
+                                    Recv::TimedOut
+                                } else {
+                                    ch.recv_deadline(left)
+                                };
+                                match verdict {
+                                    Recv::Msg(text) => full.push_str(&text),
+                                    Recv::Finished => break,
+                                    Recv::TimedOut => {
+                                        ch.cancel();
+                                        broker.remove_response(id);
+                                        counters.on_timeout();
+                                        return HttpResponse::json(
+                                            504,
+                                            gen_timeout_json(&model),
+                                        );
+                                    }
+                                }
                             }
                             let resp = Value::obj(vec![
                                 ("id", Value::str(format!("chatcmpl-{id}"))),
@@ -304,7 +577,7 @@ impl ApiServer {
                 }
             }
         };
-        let http = HttpServer::serve(addr, Arc::new(handler))?;
+        let http = HttpServer::serve_with(addr, Arc::new(handler), server_opts)?;
         Ok(ApiServer { http })
     }
 
@@ -337,6 +610,171 @@ mod tests {
         assert!(parse_chat_request("{}").is_err());
         assert!(parse_chat_request("not json").is_err());
         assert!(parse_chat_request(r#"{"model":"x"}"#).is_err());
+    }
+
+    /// ISSUE 10 satellite: `"priority": 256` used to truncate `as u8` to
+    /// 0 — the lowest-priority class — silently jumping the queue the
+    /// wrong way for some values and the right way for others. It now
+    /// clamps to the top class; non-integers and negatives are rejected
+    /// (the handler turns the Err into a 400).
+    #[test]
+    fn priority_and_max_tokens_are_validated() {
+        let c = parse_chat_request(
+            r#"{"model":"m","priority":256,"messages":[{"role":"user","content":"x"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.priority, MAX_PRIORITY, "256 must clamp, not wrap to 0");
+        let c = parse_chat_request(
+            r#"{"model":"m","messages":[{"role":"user","content":"x"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.priority, 1);
+        assert_eq!(c.max_tokens, 16);
+        for bad in [
+            r#"{"model":"m","priority":2.5,"messages":[]}"#,
+            r#"{"model":"m","priority":-1,"messages":[]}"#,
+            r#"{"model":"m","priority":"high","messages":[]}"#,
+            r#"{"model":"m","max_tokens":2.5,"messages":[]}"#,
+            r#"{"model":"m","max_tokens":0,"messages":[]}"#,
+            r#"{"model":"m","max_tokens":-3,"messages":[]}"#,
+        ] {
+            assert!(parse_chat_request(bad).is_err(), "{bad}");
+        }
+    }
+
+    /// ISSUE 10 satellite: the client's `max_tokens` used to be parsed and
+    /// then dropped on the floor — the posted Task carried no cap at all.
+    /// It must ride the Task (and the tenant class must cap priority).
+    #[test]
+    fn posted_task_carries_max_tokens_and_clamped_priority() {
+        let broker = Broker::new();
+        let api = ApiServer::serve("127.0.0.1:0", broker.clone()).unwrap();
+        let b2 = broker.clone();
+        let worker = std::thread::spawn(move || {
+            let task = b2.consume("m", &[0, 1, 2]).unwrap();
+            let ch = b2.response(task.reply_to).unwrap();
+            ch.send("ok".into());
+            ch.finish();
+            task
+        });
+        let (st, _) = http_request(
+            api.addr(),
+            "POST",
+            "/v1/chat/completions",
+            r#"{"model":"m","max_tokens":3,"priority":256,
+                "messages":[{"role":"user","content":"hi"}]}"#,
+        )
+        .unwrap();
+        let task = worker.join().unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(task.max_tokens, 3, "client cap must reach the broker task");
+        assert_eq!(task.priority, MAX_PRIORITY, "256 clamps to the top class");
+    }
+
+    /// ISSUE 10: a wedged instance (here: no consumer at all) must yield a
+    /// typed 504 at the generation deadline, never hang the client, and
+    /// must not leak the response channel.
+    #[test]
+    fn wedged_generation_returns_typed_504() {
+        let broker = Broker::new();
+        let opts = ApiOptions {
+            gen_deadline: Duration::from_millis(100),
+            ..ApiOptions::default()
+        };
+        let counters = opts.server.counters.clone();
+        let api = ApiServer::serve_with(
+            "127.0.0.1:0",
+            broker.clone(),
+            Arc::new(|_: &str| AdmitDecision::Accept),
+            Arc::new(|_: &str, _: u64| None),
+            opts,
+        )
+        .unwrap();
+        let (st, body) = http_request(
+            api.addr(),
+            "POST",
+            "/v1/chat/completions",
+            r#"{"model":"m","messages":[{"role":"user","content":"hi"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(st, 504);
+        let v = Value::parse(&String::from_utf8_lossy(&body)).unwrap();
+        assert_eq!(
+            v.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("generation_timeout")
+        );
+        assert_eq!(counters.snapshot().timeouts, 1);
+        // the response channel was removed, not leaked
+        assert!(broker.response(1).is_none());
+    }
+
+    fn request_with_tenant(addr: &str, tenant: &str, body: &str) -> (u16, String) {
+        use std::io::{Read, Write};
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let req = format!(
+            "POST /v1/chat/completions HTTP/1.1\r\nhost: x\r\nx-tenant-id: {tenant}\r\n\
+             connection: close\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        sock.write_all(req.as_bytes()).unwrap();
+        let mut resp = String::new();
+        sock.read_to_string(&mut resp).unwrap();
+        let status = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+        (status, resp)
+    }
+
+    /// ISSUE 10: tenant classes — the class caps claimable priority, and
+    /// an empty token bucket yields 429 + Retry-After, tallied per tenant.
+    #[test]
+    fn tenant_rate_limit_throttles_with_429_retry_after() {
+        let broker = Broker::new();
+        let mut classes = BTreeMap::new();
+        classes.insert(
+            "acme".to_string(),
+            TenantClass { max_priority: 1, rate_per_s: 0.001, burst: 1.0 },
+        );
+        let opts = ApiOptions {
+            tenants: Arc::new(TenantPolicy::new(classes, TenantClass::default())),
+            ..ApiOptions::default()
+        };
+        let counters = opts.server.counters.clone();
+        let api = ApiServer::serve_with(
+            "127.0.0.1:0",
+            broker.clone(),
+            Arc::new(|_: &str| AdmitDecision::Accept),
+            Arc::new(|_: &str, _: u64| None),
+            opts,
+        )
+        .unwrap();
+        let body = r#"{"model":"m","priority":2,"messages":[{"role":"user","content":"hi"}]}"#;
+        // first request drains acme's single-token bucket; serve it
+        let b2 = broker.clone();
+        let worker = std::thread::spawn(move || {
+            let task = b2.consume("m", &[0, 1, 2]).unwrap();
+            let ch = b2.response(task.reply_to).unwrap();
+            ch.send("ok".into());
+            ch.finish();
+            task
+        });
+        let (st, _) = request_with_tenant(api.addr(), "acme", body);
+        assert_eq!(st, 200);
+        let task = worker.join().unwrap();
+        assert_eq!(task.priority, 1, "acme's class caps priority 2 -> 1");
+        // second request: bucket empty (refill is 0.001/s) -> throttled
+        let (st, resp) = request_with_tenant(api.addr(), "acme", body);
+        assert_eq!(st, 429, "{resp}");
+        assert!(resp.to_lowercase().contains("retry-after:"), "{resp}");
+        assert!(resp.contains("tenant_throttled"), "{resp}");
+        let snap = counters.snapshot();
+        assert_eq!(snap.throttled, 1);
+        assert_eq!(snap.per_tenant.len(), 1);
+        assert_eq!(snap.per_tenant[0].0, "acme");
+        assert_eq!(snap.per_tenant[0].1.accepted, 1);
+        assert_eq!(snap.per_tenant[0].1.throttled, 1);
+        // an unknown tenant rides the (open) fallback class
+        let verdict = TenantPolicy::open().admit_tenant("stranger");
+        assert!(matches!(verdict, TenantVerdict::Admit { max_priority: MAX_PRIORITY }));
     }
 
     #[test]

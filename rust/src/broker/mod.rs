@@ -31,6 +31,10 @@ pub struct Task {
     /// turns to the instance holding the parked prefix KV. 0 = not
     /// computed / no affinity.
     pub prefix_hash: u64,
+    /// Client-requested generation cap (ISSUE 10): the `max_tokens` field
+    /// of the chat request, carried through to the instance's retirement
+    /// check. 0 = no client cap, serve at the worker's configured default.
+    pub max_tokens: usize,
 }
 
 #[derive(Default)]
@@ -179,6 +183,22 @@ pub struct Broker {
 pub struct ResponseChannel {
     state: Mutex<(VecDeque<String>, bool)>, // (messages, finished)
     ready: Condvar,
+    /// Client-abandonment flag (ISSUE 10): the front door sets it when the
+    /// SSE writer hits a write error (peer closed) or the aggregation
+    /// deadline expires. Shared with the serving instance via
+    /// [`ResponseChannel::cancel_flag`] so an in-flight generation retires
+    /// its slot early instead of generating to completion for nobody.
+    cancelled: Arc<std::sync::atomic::AtomicBool>,
+}
+
+/// Result of one bounded-wait receive on a [`ResponseChannel`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Recv {
+    Msg(String),
+    /// Finished and drained — the stream is complete.
+    Finished,
+    /// The deadline expired with the stream still open.
+    TimedOut,
 }
 
 impl ResponseChannel {
@@ -194,6 +214,24 @@ impl ResponseChannel {
         self.ready.notify_all();
     }
 
+    /// Mark the client as gone: the serving instance polls the shared
+    /// flag at every token boundary and retires the slot early.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, std::sync::atomic::Ordering::Relaxed);
+        // wake any receiver still parked on the channel
+        self.ready.notify_all();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// The shared cancellation flag, for threading into a `GenRequest`
+    /// without holding the whole channel alive.
+    pub fn cancel_flag(&self) -> Arc<std::sync::atomic::AtomicBool> {
+        self.cancelled.clone()
+    }
+
     /// Receive the next message; None once finished and drained.
     pub fn recv(&self) -> Option<String> {
         let mut g = lock_clean(&self.state);
@@ -205,6 +243,28 @@ impl ResponseChannel {
                 return None;
             }
             g = wait_clean(&self.ready, g);
+        }
+    }
+
+    /// Bounded-wait receive (ISSUE 10): like [`recv`](Self::recv) but gives
+    /// up after `timeout`, so a wedged instance yields a typed timeout at
+    /// the front door instead of hanging the client forever.
+    pub fn recv_deadline(&self, timeout: Duration) -> Recv {
+        let deadline = Instant::now() + timeout;
+        let mut g = lock_clean(&self.state);
+        loop {
+            if let Some(m) = g.0.pop_front() {
+                return Recv::Msg(m);
+            }
+            if g.1 {
+                return Recv::Finished;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Recv::TimedOut;
+            }
+            let (guard, _) = wait_timeout_clean(&self.ready, g, left);
+            g = guard;
         }
     }
 }
@@ -465,6 +525,7 @@ mod tests {
             retries: 0,
             resume_from: 0,
             prefix_hash: 0,
+            max_tokens: 0,
         }
     }
 
@@ -760,5 +821,58 @@ mod tests {
         thread::sleep(std::time::Duration::from_millis(20));
         b.close("m");
         assert!(t.join().unwrap().is_none());
+    }
+
+    /// ISSUE 10: the front door's cancellation flag is shared between the
+    /// response channel and whatever `cancel_flag` handed it to (the
+    /// serving instance's GenRequest).
+    #[test]
+    fn response_channel_cancel_is_shared() {
+        let ch = ResponseChannel::default();
+        let flag = ch.cancel_flag();
+        assert!(!ch.is_cancelled());
+        assert!(!flag.load(std::sync::atomic::Ordering::Relaxed));
+        ch.cancel();
+        assert!(ch.is_cancelled());
+        assert!(flag.load(std::sync::atomic::Ordering::Relaxed));
+        // sends after a cancel are harmless (instance may still be
+        // draining a token it already sampled)
+        ch.send("late".into());
+        ch.finish();
+        assert_eq!(ch.recv(), Some("late".into()));
+        assert_eq!(ch.recv(), None);
+    }
+
+    /// ISSUE 10: recv_deadline yields messages / finish like recv, but
+    /// gives up with TimedOut instead of parking forever on a wedged
+    /// producer.
+    #[test]
+    fn recv_deadline_times_out_delivers_and_finishes() {
+        let ch = Arc::new(ResponseChannel::default());
+        assert_eq!(
+            ch.recv_deadline(std::time::Duration::from_millis(5)),
+            Recv::TimedOut
+        );
+        ch.send("a".into());
+        assert_eq!(
+            ch.recv_deadline(std::time::Duration::from_millis(5)),
+            Recv::Msg("a".into())
+        );
+        // a send from another thread wakes a parked deadline-receiver
+        let ch2 = ch.clone();
+        let t = thread::spawn(move || {
+            thread::sleep(std::time::Duration::from_millis(20));
+            ch2.send("b".into());
+            ch2.finish();
+        });
+        assert_eq!(
+            ch.recv_deadline(std::time::Duration::from_secs(5)),
+            Recv::Msg("b".into())
+        );
+        assert_eq!(
+            ch.recv_deadline(std::time::Duration::from_secs(5)),
+            Recv::Finished
+        );
+        t.join().unwrap();
     }
 }

@@ -311,6 +311,7 @@ fn main() {
                                 retries: 0,
                                 resume_from: 0,
                                 prefix_hash: 0,
+                                max_tokens: 0,
                             },
                         )
                     })
@@ -354,6 +355,7 @@ fn main() {
                 resume_from: 0,
                 prefix_hash: 0,
                 affinity: false,
+                cancel: None,
             });
             let recs = inst.serve_until_drained();
             println!("generated {} tokens; selftest OK", recs[0].n_out);

@@ -323,6 +323,122 @@ impl fmt::Display for PrefixSnapshot {
     }
 }
 
+// ----------------------------------------------------- front-door counters
+
+/// Per-tenant admission tally (ISSUE 10).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantTally {
+    pub accepted: u64,
+    pub throttled: u64,
+}
+
+/// Cumulative front-door counters (ISSUE 10). One cell per rack, shared
+/// with the HTTP server options and the OpenAI handler so sheds, caps,
+/// throttles, timeouts, and client disconnects land in `FleetMetrics`
+/// next to the serving numbers they explain: a rack that looks idle
+/// because the front door shed half its load should *say so*.
+#[derive(Debug, Default)]
+pub struct FrontDoorCounters {
+    /// Requests admitted past tenant policy into the broker.
+    accepted: AtomicU64,
+    /// Connections shed at the accept queue (429, never served).
+    shed: AtomicU64,
+    /// Requests bounced by a tenant token bucket (429 + Retry-After).
+    throttled: AtomicU64,
+    /// Requests rejected by the body/header caps (413/431).
+    too_large: AtomicU64,
+    /// Malformed requests (400 from the parser).
+    bad_requests: AtomicU64,
+    /// Generations cancelled by the deadline (SSE stall or 504).
+    timeouts: AtomicU64,
+    /// Generations cancelled because the client vanished mid-stream.
+    disconnects: AtomicU64,
+    /// Per-tenant accepted/throttled tallies.
+    tenant_tally: Mutex<std::collections::BTreeMap<String, TenantTally>>,
+}
+
+impl FrontDoorCounters {
+    pub fn on_accept(&self, tenant: &str) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        lock_clean(&self.tenant_tally).entry(tenant.to_string()).or_default().accepted += 1;
+    }
+
+    pub fn on_throttled(&self, tenant: &str) {
+        self.throttled.fetch_add(1, Ordering::Relaxed);
+        lock_clean(&self.tenant_tally).entry(tenant.to_string()).or_default().throttled += 1;
+    }
+
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_too_large(&self) {
+        self.too_large.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_bad_request(&self) {
+        self.bad_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_disconnect(&self) {
+        self.disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> FrontDoorSnapshot {
+        FrontDoorSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            throttled: self.throttled.load(Ordering::Relaxed),
+            too_large: self.too_large.load(Ordering::Relaxed),
+            bad_requests: self.bad_requests.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+            per_tenant: lock_clean(&self.tenant_tally)
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of [`FrontDoorCounters`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FrontDoorSnapshot {
+    pub accepted: u64,
+    pub shed: u64,
+    pub throttled: u64,
+    pub too_large: u64,
+    pub bad_requests: u64,
+    pub timeouts: u64,
+    pub disconnects: u64,
+    pub per_tenant: Vec<(String, TenantTally)>,
+}
+
+impl fmt::Display for FrontDoorSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "accepted {} | shed {}, throttled {}, too large {}, bad {} | \
+             timeouts {}, disconnects {}",
+            self.accepted,
+            self.shed,
+            self.throttled,
+            self.too_large,
+            self.bad_requests,
+            self.timeouts,
+            self.disconnects,
+        )?;
+        for (tenant, t) in &self.per_tenant {
+            write!(f, " | {tenant}: {}+{}", t.accepted, t.throttled)?;
+        }
+        Ok(())
+    }
+}
+
 // ------------------------------------------------------------- fleet view
 
 /// One registered instance's slice of the rack (rack::RackService).
@@ -349,6 +465,9 @@ pub struct FleetMetrics {
     pub faults: FaultSnapshot,
     /// Rack-cumulative prefix-cache tally (ISSUE 8), same lifetime rules.
     pub prefix: PrefixSnapshot,
+    /// Rack-cumulative front-door tally (ISSUE 10): sheds, caps, tenant
+    /// throttles, deadline timeouts, client disconnects.
+    pub front_door: FrontDoorSnapshot,
 }
 
 impl FleetMetrics {
@@ -372,6 +491,30 @@ impl FleetMetrics {
     /// Fleet mean ITL, weighted by per-instance ITL sample counts.
     pub fn mean_itl(&self) -> f64 {
         self.weighted_mean(|m| (m.itl.sum(), m.itl.count()))
+    }
+
+    /// Fleet TTFT percentile (ISSUE 10): pools every instance's raw
+    /// per-sequence samples — SLOs are judged at p99, and a mean hides
+    /// exactly the tail the paper's §IV latency story is about.
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        self.pooled_percentile(p, |m| m.ttft.values())
+    }
+
+    /// Fleet per-sequence mean-ITL percentile, pooled the same way.
+    pub fn itl_percentile(&self, p: f64) -> f64 {
+        self.pooled_percentile(p, |m| m.itl.values())
+    }
+
+    fn pooled_percentile(&self, p: f64, pick: impl Fn(&BatchMetrics) -> &[f64]) -> f64 {
+        let mut pooled = Summary::new();
+        for i in &self.instances {
+            pooled.extend(pick(&i.metrics));
+        }
+        if pooled.count() == 0 {
+            0.0
+        } else {
+            pooled.percentile(p)
+        }
     }
 
     fn weighted_mean(&self, pick: impl Fn(&BatchMetrics) -> (f64, usize)) -> f64 {
@@ -432,6 +575,9 @@ impl FleetMetrics {
         }
         if self.prefix != PrefixSnapshot::default() {
             out.push_str(&format!("prefix: {}\n", self.prefix));
+        }
+        if self.front_door != FrontDoorSnapshot::default() {
+            out.push_str(&format!("front door: {}\n", self.front_door));
         }
         out.push_str(&format!(
             "fleet: {} seqs | TTFT {:.1} ms | ITL {:.2} ms | OTPS {:.0} | \
@@ -661,6 +807,7 @@ mod tests {
             cards_leased: 32,
             faults: FaultSnapshot::default(),
             prefix: PrefixSnapshot::default(),
+            front_door: FrontDoorSnapshot::default(),
         };
         // the only ITL evidence in the fleet is the 0.1 s gaps
         assert!((f.mean_itl() - 0.1).abs() < 1e-12, "deflated: {}", f.mean_itl());
@@ -672,6 +819,7 @@ mod tests {
             cards_leased: 16,
             faults: FaultSnapshot::default(),
             prefix: PrefixSnapshot::default(),
+            front_door: FrontDoorSnapshot::default(),
         };
         assert_eq!(empty_itl.mean_itl(), 0.0);
     }
@@ -749,6 +897,7 @@ mod tests {
             cards_leased: 32,
             faults: FaultSnapshot::default(),
             prefix: PrefixSnapshot::default(),
+            front_door: FrontDoorSnapshot::default(),
         };
         assert_eq!(f.n_seqs(), 2);
         assert!((f.otps() - (4.0 / 0.3 + 5.0 / 0.5)).abs() < 1e-9);
@@ -766,6 +915,7 @@ mod tests {
             cards_leased: 0,
             faults: FaultSnapshot::default(),
             prefix: PrefixSnapshot::default(),
+            front_door: FrontDoorSnapshot::default(),
         };
         assert_eq!(empty.otps(), 0.0);
         assert_eq!(empty.mean_ttft(), 0.0);
@@ -810,8 +960,74 @@ mod tests {
             cards_leased: 0,
             faults: FaultSnapshot::default(),
             prefix: s,
+            front_door: FrontDoorSnapshot::default(),
         };
         assert!(f.report().contains("prefix:"), "{}", f.report());
+    }
+
+    /// ISSUE 10: front-door counters accumulate per-tenant and surface in
+    /// the fleet report; percentile rollups pool raw per-instance samples.
+    #[test]
+    fn front_door_counters_and_percentiles() {
+        let c = FrontDoorCounters::default();
+        assert_eq!(c.snapshot(), FrontDoorSnapshot::default());
+        c.on_accept("acme");
+        c.on_accept("acme");
+        c.on_accept("globex");
+        c.on_throttled("globex");
+        c.on_shed();
+        c.on_too_large();
+        c.on_bad_request();
+        c.on_timeout();
+        c.on_disconnect();
+        let s = c.snapshot();
+        assert_eq!(s.accepted, 3);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.throttled, 1);
+        assert_eq!(
+            s.per_tenant,
+            vec![
+                ("acme".to_string(), TenantTally { accepted: 2, throttled: 0 }),
+                ("globex".to_string(), TenantTally { accepted: 1, throttled: 1 }),
+            ]
+        );
+        let line = s.to_string();
+        assert!(line.contains("accepted 3"), "{line}");
+        assert!(line.contains("acme: 2+0"), "{line}");
+
+        // fleet report prints the tally only when non-default, and
+        // percentiles pool samples across instances (p99 sees the slow
+        // instance's tail, which a mean-of-means would dilute)
+        let fast = [rec(0, 0.0, 0.01, 0.5, 10, vec![0.01; 9])];
+        let slow = [rec(1, 0.0, 0.5, 2.0, 10, vec![0.2; 9])];
+        let inst = |id: u64, recs: &[SeqRecord]| InstanceReport {
+            id,
+            model: "m".into(),
+            first_card: 0,
+            n_cards: 16,
+            metrics: BatchMetrics::from_records(recs),
+        };
+        let f = FleetMetrics {
+            instances: vec![inst(1, &fast), inst(2, &slow)],
+            cards_total: 288,
+            cards_leased: 32,
+            faults: FaultSnapshot::default(),
+            prefix: PrefixSnapshot::default(),
+            front_door: s,
+        };
+        assert!(f.report().contains("front door:"), "{}", f.report());
+        assert!((f.ttft_percentile(99.0) - 0.4951).abs() < 1e-9, "{}", f.ttft_percentile(99.0));
+        assert!(f.itl_percentile(99.0) > 0.19, "{}", f.itl_percentile(99.0));
+        // no samples => 0.0, never NaN
+        let empty = FleetMetrics {
+            instances: vec![],
+            cards_total: 288,
+            cards_leased: 0,
+            faults: FaultSnapshot::default(),
+            prefix: PrefixSnapshot::default(),
+            front_door: FrontDoorSnapshot::default(),
+        };
+        assert_eq!(empty.ttft_percentile(99.0), 0.0);
     }
 
     #[test]

@@ -576,6 +576,7 @@ mod tests {
                     retries: 0,
                     resume_from: 0,
                     prefix_hash: 0,
+                    max_tokens: 0,
                 },
             );
         }

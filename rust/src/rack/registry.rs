@@ -23,7 +23,7 @@ use crate::config::models::find_model;
 use crate::driver::Driver;
 use crate::mapper::{map_model, Mapping};
 use crate::metrics::{
-    BatchMetrics, FaultCounters, FleetMetrics, InstanceReport, PrefixCounters,
+    BatchMetrics, FaultCounters, FleetMetrics, FrontDoorCounters, InstanceReport, PrefixCounters,
 };
 use crate::service::{
     build_chain, LlmInstance, PrefixRouter, ServeOptions, SharedEngine,
@@ -184,6 +184,11 @@ pub struct RackService {
     /// Rack-cumulative prefix-reuse counters, shared with every deployed
     /// instance (hit/miss/eviction/parked-bytes survive teardown).
     prefix_counters: Arc<PrefixCounters>,
+    /// Rack-cumulative front-door counters (ISSUE 10): the HTTP server and
+    /// OpenAI handler record sheds, caps, tenant throttles, deadline
+    /// timeouts, and client disconnects here so they surface in
+    /// `fleet_metrics` next to the serving numbers they explain.
+    front_door: Arc<FrontDoorCounters>,
 }
 
 impl RackService {
@@ -203,6 +208,7 @@ impl RackService {
             faults: Arc::new(FaultCounters::default()),
             prefix_router: Arc::new(PrefixRouter::default()),
             prefix_counters: Arc::new(PrefixCounters::default()),
+            front_door: Arc::new(FrontDoorCounters::default()),
         })
     }
 
@@ -219,6 +225,11 @@ impl RackService {
     /// The rack's prefix advertisement table (ISSUE 8).
     pub fn prefix_router(&self) -> &Arc<PrefixRouter> {
         &self.prefix_router
+    }
+
+    /// The rack's cumulative front-door counters (ISSUE 10).
+    pub fn front_door_counters(&self) -> &Arc<FrontDoorCounters> {
+        &self.front_door
     }
 
     pub fn broker(&self) -> &Arc<Broker> {
@@ -594,6 +605,7 @@ impl RackService {
             cards_leased: self.inventory.in_use(),
             faults: self.faults.snapshot(),
             prefix: self.prefix_counters.snapshot(),
+            front_door: self.front_door.snapshot(),
         }
     }
 }

@@ -63,6 +63,22 @@ pub struct GenRequest {
     /// (it was steered here expecting a parked prefix) — a miss is then
     /// a stale route and the cold-prefill fallback is counted loudly.
     pub affinity: bool,
+    /// Client-abandonment flag (ISSUE 10), shared with the front door's
+    /// response channel: when the SSE writer sees the peer close, it sets
+    /// the flag and the instance retires the slot at the next token
+    /// boundary instead of generating to completion for nobody. `None`
+    /// for direct (non-broker) submissions.
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl GenRequest {
+    /// True when the client abandoned this request (ISSUE 10).
+    pub fn cancelled(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(false)
+    }
 }
 
 /// Streaming updates for a request.
@@ -719,9 +735,12 @@ impl LlmInstance {
             });
         }
         let hit_stop = st.req.stop_byte.map(|sb| tok == sb as u32).unwrap_or(false);
+        // a cancelled request (client disconnected, ISSUE 10) retires at
+        // the next token boundary — the slot frees for a live client
         st.tokens_out >= st.req.max_tokens
             || st.position + 1 >= self.engine.manifest.max_context
             || hit_stop
+            || st.req.cancelled()
     }
 
     /// Retire a slot: park its resident KV in the prefix index (zero-copy
@@ -887,6 +906,21 @@ impl LlmInstance {
                 let Some(req) = lock_clean(&self.queue).pop_front() else {
                     break;
                 };
+                // client gone before placement (ISSUE 10): release the
+                // admission slot and finish the response channel (Done
+                // routes through pump_update, which removes it) without
+                // spending a single prefill chunk on it
+                if req.cancelled() {
+                    self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = self.updates_tx.send(GenUpdate::Done {
+                        id: req.id,
+                        n_in: 0,
+                        n_out: 0,
+                        ttft_s: 0.0,
+                        itl_s: None,
+                    });
+                    continue;
+                }
                 self.place_request(&mut slots, req);
             }
 
@@ -1349,10 +1383,20 @@ impl LlmInstance {
                     }
                 }
                 for (t, from_aff) in &batch {
+                    // the client's cap (ISSUE 10) wins over the worker
+                    // default when set; either way the context window
+                    // bounds it (push_token's position check)
+                    let cap = if t.max_tokens > 0 { t.max_tokens } else { max_tokens }
+                        // clamp to the context window so an absurd client
+                        // cap cannot truncate the prompt to nothing in
+                        // tokenize_prompt (the position check would bound
+                        // generation anyway)
+                        .min(inst.engine.manifest.max_context.saturating_sub(1))
+                        .max(1);
                     inst.submit(GenRequest {
                         id: t.reply_to,
                         prompt: t.body.clone(),
-                        max_tokens,
+                        max_tokens: cap,
                         temperature: 0.0,
                         top_k: 0,
                         stop_byte: Some(b';'),
@@ -1360,6 +1404,7 @@ impl LlmInstance {
                         resume_from: t.resume_from,
                         prefix_hash: t.prefix_hash,
                         affinity: *from_aff,
+                        cancel: broker.response(t.reply_to).map(|ch| ch.cancel_flag()),
                     });
                 }
                 // tokens stream to the clients live from the streamer

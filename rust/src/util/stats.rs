@@ -19,6 +19,13 @@ impl Summary {
         self.samples.extend_from_slice(xs);
     }
 
+    /// Raw retained samples (ISSUE 10): fleet rollups pool per-instance
+    /// samples so percentiles are computed over the true distribution,
+    /// not a mean-of-means.
+    pub fn values(&self) -> &[f64] {
+        &self.samples
+    }
+
     pub fn count(&self) -> usize {
         self.samples.len()
     }

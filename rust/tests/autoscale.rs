@@ -75,6 +75,7 @@ fn post_synthetic(svc: &RackService, n: usize, base: u64) {
                 retries: 0,
                 resume_from: 0,
                 prefix_hash: 0,
+                max_tokens: 0,
             },
         );
     }
@@ -94,7 +95,7 @@ fn post_wave(svc: &RackService, prompts: &[String]) -> Vec<(u64, Arc<ResponseCha
                 id,
                 svc.broker().post(
                     MODEL,
-                    Task { id: i as u64, priority: (i % 3) as u8, body: p.clone(), reply_to: id, retries: 0, resume_from: 0, prefix_hash: 0 },
+                    Task { id: i as u64, priority: (i % 3) as u8, body: p.clone(), reply_to: id, retries: 0, resume_from: 0, prefix_hash: 0, max_tokens: 0 },
                 ),
             )
         })

@@ -55,6 +55,7 @@ fn post_wave(svc: &RackService, prompts: &[String]) -> Wave {
                         retries: 0,
                         resume_from: 0,
                         prefix_hash: 0,
+                        max_tokens: 0,
                     },
                 ),
             )
@@ -242,6 +243,7 @@ fn watchdog_catches_a_silent_frame_drop() {
             resume_from: 0,
             prefix_hash: 0,
             affinity: false,
+            cancel: None,
         });
     }
     let records = inst.serve_until_drained();
@@ -296,6 +298,7 @@ fn seeded_fault_fuzz_accounts_for_every_sequence() {
                 resume_from: 0,
                 prefix_hash: 0,
                 affinity: false,
+                cancel: None,
             });
         }
         let records = inst.serve_until_drained();

@@ -1,0 +1,128 @@
+//! Integration: the rebuilt front door over a live toy rack (ISSUE 10).
+//!
+//! Regression coverage for the client-contract sweep, end to end through
+//! real sockets — API server → broker → instance → SSE back out:
+//!
+//! - `max_tokens` is honored: the seed parsed it and then dropped it on
+//!   the floor (every request ran to the server-side cap), so a client
+//!   asking for 3 tokens got 8. The toy vocab (32 symbols) never emits
+//!   the stop byte, so the count is deterministic.
+//! - a client vanishing mid-stream cancels generation: the instance
+//!   retires the slot early and fleet in-flight returns to 0 — abandoned
+//!   streams must not leak decode capacity.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use npserve::api::loadgen::{self, LoadSpec};
+use npserve::api::{ApiOptions, ApiServer, ServerOptions};
+use npserve::config::hw::RackSpec;
+use npserve::rack::{InstanceSpec, RackService};
+use npserve::runtime::testmodel::ToyConfig;
+use npserve::service::SharedEngine;
+
+const MODEL: &str = "toy-testmodel";
+
+fn rack(cfg: ToyConfig, server_max_tokens: usize) -> (Arc<RackService>, ApiServer) {
+    let svc = RackService::new(RackSpec::northpole_42u());
+    let mut spec = InstanceSpec::live(MODEL, 16, SharedEngine(Arc::new(cfg.engine())));
+    spec.max_tokens = server_max_tokens;
+    svc.deploy(spec).unwrap();
+    let opts = ApiOptions {
+        server: ServerOptions {
+            counters: svc.front_door_counters().clone(),
+            ..ServerOptions::default()
+        },
+        ..ApiOptions::default()
+    };
+    let api = ApiServer::serve_with(
+        "127.0.0.1:0",
+        svc.broker().clone(),
+        svc.admission(),
+        svc.affinity(),
+        opts,
+    )
+    .unwrap();
+    (svc, api)
+}
+
+fn await_drained(svc: &Arc<RackService>) {
+    let t0 = Instant::now();
+    while svc.in_flight_of(MODEL) > 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "fleet in-flight stuck at {}",
+            svc.in_flight_of(MODEL)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The bug this regresses: `parse_chat_request` read `max_tokens` but the
+/// posted `Task` never carried it, so generation always ran to the
+/// server-side default (8 here). Now a request for 3 tokens streams
+/// exactly 3 content events.
+#[test]
+fn client_max_tokens_is_honored_end_to_end() {
+    let mut cfg = ToyConfig::small();
+    cfg.batch_slots = 4;
+    let (svc, api) = rack(cfg, 8);
+    let report = loadgen::run(&LoadSpec {
+        addr: api.addr().to_string(),
+        model: MODEL.into(),
+        n_requests: 3,
+        rate_per_s: 200.0,
+        seed: 9,
+        prompt_bytes: (8, 12),
+        max_tokens: (3, 3),
+        stream: true,
+        io_timeout: Duration::from_secs(20),
+        ..LoadSpec::default()
+    });
+    assert_eq!(report.errors(), 0, "{:?}", report.outcomes);
+    assert_eq!(report.count_status(200), 3);
+    for o in &report.outcomes {
+        assert_eq!(
+            o.tokens, 3,
+            "asked for exactly 3 tokens, streamed {}: {o:?}",
+            o.tokens
+        );
+    }
+    await_drained(&svc);
+    svc.shutdown_all();
+}
+
+/// Mid-stream client disconnect: the SSE writer hits a broken pipe,
+/// cancels the response channel, and the instance retires the slot early
+/// instead of decoding the remaining tokens for nobody.
+#[test]
+fn mid_stream_disconnect_releases_the_slot() {
+    let mut cfg = ToyConfig::small();
+    cfg.batch_slots = 4;
+    // pace tokens to ~4 ms so the disconnect lands mid-generation
+    cfg.row_work_ns = 300_000;
+    let (svc, api) = rack(cfg, 16);
+    let report = loadgen::run(&LoadSpec {
+        addr: api.addr().to_string(),
+        model: MODEL.into(),
+        n_requests: 2,
+        rate_per_s: 200.0,
+        seed: 13,
+        prompt_bytes: (8, 12),
+        max_tokens: (16, 16),
+        stream: true,
+        io_timeout: Duration::from_secs(20),
+        disconnect_after: Some(1),
+        ..LoadSpec::default()
+    });
+    for o in &report.outcomes {
+        assert!(o.disconnected, "{o:?}");
+    }
+    // the released slots are the assertion: a leak wedges this forever
+    await_drained(&svc);
+    assert!(
+        svc.front_door_counters().snapshot().disconnects >= 1,
+        "server never noticed the dead clients"
+    );
+    svc.shutdown_all();
+}

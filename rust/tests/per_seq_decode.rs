@@ -42,6 +42,7 @@ fn req(id: u64, prompt: &str, max_tokens: usize) -> GenRequest {
         resume_from: 0,
         prefix_hash: 0,
         affinity: false,
+        cancel: None,
     }
 }
 
@@ -260,7 +261,7 @@ fn broker_client_sees_first_token_before_batch_done() {
     let broker = Broker::new();
     let ch = broker.post(
         "toy",
-        Task { id: 1, priority: 1, body: "stream me".into(), reply_to: 42, retries: 0, resume_from: 0, prefix_hash: 0 },
+        Task { id: 1, priority: 1, body: "stream me".into(), reply_to: 42, retries: 0, resume_from: 0, prefix_hash: 0, max_tokens: 0 },
     );
     let max_tokens = (cfg.max_context - cfg.prefill_chunk).min(24);
     let handle = inst.serve_broker(broker.clone(), "toy", vec![0, 1, 2], max_tokens);

@@ -46,6 +46,7 @@ fn request(id: u64, prompt: &str, n: usize) -> GenRequest {
         resume_from: 0,
         prefix_hash: 0,
         affinity: false,
+        cancel: None,
     }
 }
 
@@ -266,6 +267,7 @@ fn ask(svc: &RackService, queue: &str, id: u64, prompt: &str, hash: u64) -> Stri
             retries: 0,
             resume_from: 0,
             prefix_hash: hash,
+            max_tokens: 0,
         },
     );
     let mut text = String::new();

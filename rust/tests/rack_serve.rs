@@ -55,6 +55,7 @@ fn roundtrip(svc: &RackService, prompts: &[String]) -> BTreeMap<u64, String> {
                         retries: 0,
                         resume_from: 0,
                         prefix_hash: 0,
+                        max_tokens: 0,
                     },
                 ),
             )
@@ -176,6 +177,7 @@ fn paper_3x8b_runs_live_on_the_testmodel_backend() {
                     retries: 0,
                     resume_from: 0,
                     prefix_hash: 0,
+                    max_tokens: 0,
                 },
             )
         })

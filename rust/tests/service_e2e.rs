@@ -32,6 +32,7 @@ fn gen(inst: &Arc<LlmInstance>, id: u64, prompt: &str, n: usize) -> Vec<u32> {
         resume_from: 0,
         prefix_hash: 0,
         affinity: false,
+        cancel: None,
     });
     inst.serve_until_drained();
     let updates = inst.updates.lock().unwrap();
@@ -74,6 +75,7 @@ fn batched_generation_matches_solo() {
         resume_from: 0,
         prefix_hash: 0,
         affinity: false,
+        cancel: None,
     });
     batch.submit(GenRequest {
         id: 12, prompt: "xyz9".into(), max_tokens: 5,
@@ -82,6 +84,7 @@ fn batched_generation_matches_solo() {
         resume_from: 0,
         prefix_hash: 0,
         affinity: false,
+        cancel: None,
     });
     batch.serve_until_drained();
     let updates = batch.updates.lock().unwrap();
@@ -113,6 +116,7 @@ fn more_requests_than_slots_all_complete() {
             resume_from: 0,
             prefix_hash: 0,
             affinity: false,
+            cancel: None,
         });
     }
     let recs = inst.serve_until_drained();
@@ -131,7 +135,7 @@ fn broker_roundtrip_streams_tokens() {
     let broker = Broker::new();
     let ch = broker.post(
         "granite-test",
-        Task { id: 1, priority: 1, body: "3+4=".into(), reply_to: 71, retries: 0, resume_from: 0, prefix_hash: 0 },
+        Task { id: 1, priority: 1, body: "3+4=".into(), reply_to: 71, retries: 0, resume_from: 0, prefix_hash: 0, max_tokens: 0 },
     );
     let handle = inst.serve_broker(broker.clone(), "granite-test", vec![0, 1, 2], 4);
     let mut got = Vec::new();
@@ -214,6 +218,7 @@ mod stub_backend {
                 resume_from: 0,
                 prefix_hash: 0,
                 affinity: false,
+                cancel: None,
             });
         }
         let recs = inst.serve_until_drained();

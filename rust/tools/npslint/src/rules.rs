@@ -152,6 +152,7 @@ fn panic_scope(file: &str) -> bool {
         || f.contains("/broker/")
         || f.contains("/rack/")
         || f.contains("/service/")
+        || f.contains("/api/")
 }
 
 fn in_util_sync(file: &str) -> bool {
